@@ -1,0 +1,69 @@
+//! JPEG codec microbenchmarks — the baseline pipelines' hot path (Fig 11's
+//! decode slice for PyTorch/DALI) and a §Perf L3 target: DCT, full
+//! encode/decode throughput, Huffman stage, and parallel decode scaling.
+//!
+//! Run: `cargo bench --bench codec_hotpath`
+
+use std::sync::Arc;
+
+use residual_inr::bench_support::{bench, report};
+use residual_inr::codec::jpeg::{self, dct};
+use residual_inr::data::{generate_sequence, Profile};
+use residual_inr::pipeline::baseline::{decode_jpeg_batch, JpegPipeline};
+use residual_inr::util::rng::Pcg32;
+
+fn main() {
+    let seq = generate_sequence(Profile::Uav123, 7, 0);
+    let img = &seq.frames[0];
+    let px = (img.width * img.height) as f64;
+
+    println!("== 8x8 DCT kernel ==");
+    let mut rng = Pcg32::seeded(1);
+    let mut block = [0f32; 64];
+    for v in block.iter_mut() {
+        *v = rng.range_f32(-128.0, 128.0);
+    }
+    let r = bench("fdct8x8 (separable)", 100, 2000, || {
+        std::hint::black_box(dct::fdct8x8(std::hint::black_box(&block)));
+    });
+    report(&r);
+    let r = bench("fdct8x8_reference (O(n^4))", 20, 200, || {
+        std::hint::black_box(dct::fdct8x8_reference(std::hint::black_box(&block)));
+    });
+    report(&r);
+    let r = bench("idct8x8", 100, 2000, || {
+        std::hint::black_box(dct::idct8x8(std::hint::black_box(&block)));
+    });
+    report(&r);
+
+    println!("\n== full-frame encode/decode (128x96) ==");
+    for q in [50u8, 85] {
+        let r = bench(&format!("encode q{q}"), 3, 30, || {
+            std::hint::black_box(jpeg::encode(img, q));
+        });
+        report(&r);
+        println!("{:<44} {:>10.1} Mpx/s", "", px / r.stats.mean / 1e6);
+        let bytes = jpeg::encode(img, q);
+        let r = bench(&format!("decode q{q}"), 3, 30, || {
+            std::hint::black_box(jpeg::decode(&bytes).unwrap());
+        });
+        report(&r);
+        println!("{:<44} {:>10.1} Mpx/s", "", px / r.stats.mean / 1e6);
+    }
+
+    println!("\n== batch decode: PyTorch-like (serial) vs DALI-like (parallel) ==");
+    let items: Vec<Arc<Vec<u8>>> =
+        seq.frames.iter().take(16).map(|f| Arc::new(jpeg::encode(f, 95))).collect();
+    let r = bench("16 frames serial", 1, 10, || {
+        decode_jpeg_batch(&items, JpegPipeline::PyTorchLike).unwrap();
+    });
+    report(&r);
+    let serial = r.stats.mean;
+    for workers in [2usize, 4, 8] {
+        let r = bench(&format!("16 frames parallel x{workers}"), 1, 10, || {
+            decode_jpeg_batch(&items, JpegPipeline::DaliLike { workers }).unwrap();
+        });
+        report(&r);
+        println!("{:<44} {:>9.2}x vs serial", "", serial / r.stats.mean);
+    }
+}

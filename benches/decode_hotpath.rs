@@ -1,0 +1,117 @@
+//! Decode hot-path microbenchmarks (the §Perf L3/L1 targets): per-call
+//! latency of the fused Pallas MLP decode artifacts across architectures,
+//! batched-group decode throughput, grouped vs ungrouped scheduling, and
+//! pool-size scaling.
+//!
+//! Run: `cargo bench --bench decode_hotpath`
+
+use std::sync::Arc;
+
+use residual_inr::bench_support::{bench, report};
+use residual_inr::config::ArchConfig;
+use residual_inr::data::BBox;
+use residual_inr::pipeline::decoder;
+use residual_inr::pipeline::group::{decode_batch, ObjOverlay, StoredImage};
+use residual_inr::runtime::{Pool, Session};
+use residual_inr::training::siren_init;
+use residual_inr::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ArchConfig::load_default()?;
+    let session = Session::open_default()?;
+    let profile = cfg.rapid(residual_inr::data::Profile::Uav123);
+    let mut rng = Pcg32::seeded(3);
+
+    println!("== single-artifact decode latency (fused Pallas MLP) ==");
+    let cases = [
+        ("background", &profile.background, cfg.frame_w * cfg.frame_h),
+        ("baseline", &profile.baseline, cfg.frame_w * cfg.frame_h),
+        ("object bin0", &profile.object_bins[0].arch, profile.object_bins[0].max_pixels()),
+        ("object bin3", &profile.object_bins[3].arch, profile.object_bins[3].max_pixels()),
+    ];
+    for (role, arch, n) in cases {
+        let label = format!("{role} {}x{} ({} px)", arch.layers, arch.hidden, n);
+        let ws = siren_init(&arch.param_shapes(), &mut rng);
+        let label = label.as_str();
+        let (name, inputs) = if n == cfg.frame_w * cfg.frame_h {
+            decoder::rapid_decode_job(arch, &ws, cfg.frame_w, cfg.frame_h)
+        } else {
+            let bin = profile.object_bins.iter().find(|b| b.max_pixels() == n).unwrap();
+            decoder::object_decode_job(bin, &ws, bin.max_side, bin.max_side)
+        };
+        session.execute(&name, &inputs)?; // warm the executable cache
+        let r = bench(label, 3, 15, || {
+            session.execute(&name, &inputs).unwrap();
+        });
+        report(&r);
+        let px_per_s = n as f64 / r.stats.mean;
+        println!("{:<44} {:>10.1} Mpx/s", "", px_per_s / 1e6);
+    }
+
+    println!("\n== NeRV chunk decode (4 frames/call) ==");
+    let nerv = &cfg.nerv_bins[0].background;
+    let nerv_ws = siren_init(&nerv.param_shapes(), &mut rng);
+    let ts = [0.1f32, 0.35, 0.6, 0.85];
+    let (name, inputs) = decoder::nerv_decode_job(nerv, &nerv_ws, &ts);
+    session.execute(&name, &inputs)?;
+    let r = bench("nerv background_small chunk", 2, 10, || {
+        session.execute(&name, &inputs).unwrap();
+    });
+    report(&r);
+
+    println!("\n== batched group decode: grouped vs ungrouped, pool scaling ==");
+    // A realistic mixed batch: 8 Res-Rapid images across object bins +
+    // 8 NeRV frames from 2 sequences.
+    let mk_items = |rng: &mut Pcg32| -> Vec<StoredImage> {
+        let mut items = Vec::new();
+        for i in 0..8usize {
+            let bin = profile.object_bins[i % 4].clone();
+            items.push(StoredImage::ResRapid {
+                bg_arch: profile.background.clone(),
+                bg: Arc::new(siren_init(&profile.background.param_shapes(), rng)),
+                obj: Some(ObjOverlay {
+                    padded: BBox::new(8, 8, bin.max_side.min(20), bin.max_side.min(16)),
+                    ws: Arc::new(siren_init(&bin.arch.param_shapes(), rng)),
+                    bin,
+                    direct: false,
+                }),
+            });
+        }
+        for i in 0..8usize {
+            let seq = (i / 4) as u64;
+            items.push(StoredImage::NervFrame {
+                arch: nerv.clone(),
+                ws: Arc::new(siren_init(&nerv.param_shapes(), rng)),
+                seq_key: seq,
+                t: 0.1 + 0.1 * i as f32,
+                obj: None,
+            });
+        }
+        items
+    };
+    let items = mk_items(&mut rng);
+    for workers in [1usize, 2, 4] {
+        let pool = Pool::open_default(workers)?;
+        // Warm all executables on every worker.
+        let names: Vec<String> = pool.manifest().entries.keys()
+            .filter(|n| n.contains("decode"))
+            .cloned()
+            .collect();
+        pool.warmup(&names)?;
+        for grouped in [false, true] {
+            let label = format!(
+                "mixed batch x16, {} worker(s), {}",
+                workers,
+                if grouped { "grouped" } else { "ungrouped" }
+            );
+            let r = bench(&label, 1, 8, || {
+                decode_batch(&pool, cfg.frame_w, cfg.frame_h, cfg.nerv_decode_batch, &items, grouped)
+                    .unwrap();
+            });
+            report(&r);
+        }
+    }
+    println!("\n(grouping merges same-sequence NeRV frames into shared chunks and\n\
+              sorts same-size INR jobs together — the §3.2.2 workload balance)");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Fig 8 reproduction: total data transmission from the §4 analytical
+//! model. (a) all-to-all with varied device count; (b) fixed 11 devices
+//! with varied receivers per device. α defaults to the ratio family the
+//! paper measures; set ALPHA=x.x to use a measured value (the
+//! `fog_network` example measures one from live encodes).
+//!
+//! Run: `cargo bench --bench fig8_comm_model`
+
+use residual_inr::bench_support::Table;
+use residual_inr::commmodel as cm;
+
+fn main() {
+    let alpha: f64 =
+        std::env::var("ALPHA").ok().and_then(|v| v.parse().ok()).unwrap_or(0.15);
+    let m = 1e6; // 1 MB of JPEG per device
+
+    println!("== Fig 8(a): total transmission vs #devices (all-to-all, α = {alpha}) ==");
+    let mut t = Table::new(&["k", "serverless (MB)", "fog+INR (MB)", "reduction"]);
+    for k in [2usize, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12] {
+        let s = cm::serverless_total(&cm::uniform_all_to_all(k, m, false));
+        let f = cm::fog_total(&cm::uniform_all_to_all(k, m, true), alpha);
+        t.row(&[
+            k.to_string(),
+            format!("{:.1}", s / 1e6),
+            format!("{:.1}", f / 1e6),
+            format!("{:.2}x", s / f),
+        ]);
+    }
+    t.print();
+    let k = 10;
+    let s = cm::serverless_total(&cm::uniform_all_to_all(k, m, false));
+    let f = cm::fog_total(&cm::uniform_all_to_all(k, m, true), alpha);
+    println!("paper headline at k = 10: 3.43–5.16x; model gives {:.2}x at α = {alpha}\n", s / f);
+
+    println!("== Fig 8(b): k = 11 devices, receivers per device swept ==");
+    let mut t = Table::new(&["n receivers", "serverless (MB)", "fog+INR (MB)", "fog wins"]);
+    for n in 1..=10usize {
+        let s = cm::serverless_total(&cm::uniform_fixed_receivers(11, n, m, false));
+        let f = cm::fog_total(&cm::uniform_fixed_receivers(11, n, m, true), alpha);
+        t.row(&[
+            n.to_string(),
+            format!("{:.1}", s / 1e6),
+            format!("{:.1}", f / 1e6),
+            (if cm::fog_beneficial(n, alpha) { "yes" } else { "no" }).to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "crossover n_i > 1/(1-α) = {:.2} → fog wins from n = {:?} (strict)",
+        1.0 / (1.0 - alpha),
+        cm::min_receivers_for_fog(alpha)
+    );
+
+    // Sanity: the closed-form identity D_s - D_f = Σ m_i[(1-α)n_i - 1].
+    let devs = cm::uniform_all_to_all(10, m, true);
+    let identity: f64 =
+        devs.iter().map(|d| d.data_bytes * ((1.0 - alpha) * d.receivers as f64 - 1.0)).sum();
+    let direct = cm::serverless_total(&devs) - cm::fog_total(&devs, alpha);
+    assert!((identity - direct).abs() < 1e-6);
+    println!("\nclosed-form identity check: D_s - D_f matches Σ m_i[(1-α)n_i - 1] ✓");
+}

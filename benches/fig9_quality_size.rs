@@ -1,0 +1,153 @@
+//! Fig 9 reproduction: object PSNR vs average image size across
+//! compression techniques — JPEG quality ladder, Rapid-INR / NeRV
+//! baselines (16-bit), Res-Rapid-INR / Res-NeRV (bg 8-bit + obj 16-bit,
+//! the paper's chosen config), plus the residual-vs-direct ablation.
+//!
+//! Run: `cargo bench --bench fig9_quality_size` (FRAMES=n, PROFILE=name)
+
+use residual_inr::bench_support::Table;
+use residual_inr::config::ArchConfig;
+use residual_inr::coordinator::{EncoderConfig, FogEncoder};
+use residual_inr::codec::jpeg;
+use residual_inr::data::{generate_sequence, Profile};
+use residual_inr::inr::{dequantize, quantize, Bits};
+use residual_inr::metrics::psnr_region;
+use residual_inr::pipeline::decoder;
+use residual_inr::runtime::Session;
+
+fn main() -> anyhow::Result<()> {
+    let frames: usize =
+        std::env::var("FRAMES").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+    let profile = Profile::from_name(
+        &std::env::var("PROFILE").unwrap_or_else(|_| "uav123".into()),
+    )
+    .unwrap_or(Profile::Uav123);
+
+    let cfg = ArchConfig::load_default()?;
+    let session = Session::open_default()?;
+    let rp = cfg.rapid(profile);
+    let enc = FogEncoder::new(&session, &cfg, EncoderConfig::default());
+    let mut seq = generate_sequence(profile, 55, 0);
+    seq.frames.truncate(frames.max(4));
+    seq.boxes.truncate(frames.max(4));
+    let n = frames.min(seq.len());
+
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+
+    // Raw (upper bound) + JPEG ladder.
+    let raw_bytes = (cfg.frame_w * cfg.frame_h * 3) as f64;
+    rows.push(("raw RGB".into(), raw_bytes, f64::INFINITY));
+    for q in [20u8, 40, 60, 80, 95] {
+        let (mut b, mut p) = (0.0, 0.0);
+        for i in 0..n {
+            let img = &seq.frames[i];
+            let bytes = jpeg::encode(img, q);
+            p += psnr_region(img, &jpeg::decode(&bytes)?, &seq.boxes[i]);
+            b += bytes.len() as f64;
+        }
+        rows.push((format!("JPEG q{q}"), b / n as f64, p / n as f64));
+    }
+
+    // Rapid-INR baseline @16b.
+    let (mut b, mut p) = (0.0, 0.0);
+    for i in 0..n {
+        let img = &seq.frames[i];
+        let (ws, _) = enc.encode_rapid(img, &rp.baseline, i as u64)?;
+        let q = quantize(&ws, Bits::B16);
+        let dec =
+            decoder::decode_rapid(&session, &rp.baseline, &dequantize(&q), img.width, img.height)?;
+        b += q.byte_size() as f64;
+        p += psnr_region(img, &dec, &seq.boxes[i]);
+    }
+    rows.push(("Rapid-INR 16b".into(), b / n as f64, p / n as f64));
+
+    // Res-Rapid-INR: paper config (bg 8b / obj 16b), residual + direct.
+    for (label, direct) in
+        [("Res-Rapid-INR (residual)", false), ("Res-Rapid-INR (direct)", true)]
+    {
+        let (mut b, mut p) = (0.0, 0.0);
+        for i in 0..n {
+            let img = &seq.frames[i];
+            let r = enc.encode_res_rapid(img, &seq.boxes[i], rp, direct, 100 + i as u64)?;
+            let bin = &rp.object_bins[r.bin_idx];
+            let bg = decoder::decode_rapid(
+                &session, &rp.background, &dequantize(&r.bg), img.width, img.height)?;
+            let patch = decoder::decode_object_patch(
+                &session, bin, &dequantize(&r.obj), r.padded.w, r.padded.h)?;
+            let recon = if direct {
+                let mut out = bg.clone();
+                out.paste(&patch, r.padded.x, r.padded.y);
+                out.clamp01();
+                out
+            } else {
+                decoder::compose_residual(&bg, &patch, &r.padded)
+            };
+            b += (r.bg.byte_size() + r.obj.byte_size()) as f64;
+            p += psnr_region(img, &recon, &seq.boxes[i]);
+        }
+        rows.push((label.into(), b / n as f64, p / n as f64));
+    }
+
+    // NeRV baseline and Res-NeRV background (per-frame amortized bytes).
+    {
+        let mut clip = seq.clone();
+        clip.frames.truncate(8);
+        clip.boxes.truncate(8);
+        let arch = &cfg.nerv_bin(clip.len()).baseline;
+        let (ws, _) = enc.encode_nerv(&clip, arch, 500, 9)?;
+        let q = quantize(&ws, Bits::B16);
+        let times: Vec<f32> =
+            (0..clip.len()).map(|i| decoder::frame_time(i, clip.len())).collect();
+        let decs = decoder::decode_nerv_frames(
+            &session, arch, &dequantize(&q), &times, cfg.nerv_decode_batch)?;
+        let p: f64 = decs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| psnr_region(&clip.frames[i], d, &clip.boxes[i]))
+            .sum::<f64>()
+            / decs.len() as f64;
+        rows.push(("NeRV 16b (per frame)".into(), q.byte_size() as f64 / clip.len() as f64, p));
+
+        let (bg_q, objs, _) = enc.encode_res_nerv(&clip, rp, 27)?;
+        let bg_arch = &cfg.nerv_bin(clip.len()).background;
+        let bgs = decoder::decode_nerv_frames(
+            &session, bg_arch, &dequantize(&bg_q), &times, cfg.nerv_decode_batch)?;
+        let mut p = 0.0;
+        let mut bytes = bg_q.byte_size() as f64;
+        for o in &objs {
+            let bin = &rp.object_bins[o.bin_idx];
+            let patch = decoder::decode_object_patch(
+                &session, bin, &dequantize(&o.obj), o.padded.w, o.padded.h)?;
+            let recon = decoder::compose_residual(&bgs[o.frame_idx], &patch, &o.padded);
+            p += psnr_region(&clip.frames[o.frame_idx], &recon, &clip.boxes[o.frame_idx]);
+            bytes += o.obj.byte_size() as f64;
+        }
+        rows.push((
+            "Res-NeRV (per frame)".into(),
+            bytes / clip.len() as f64,
+            p / objs.len() as f64,
+        ));
+    }
+
+    println!("== Fig 9: object PSNR vs avg image size ({}, {} frames) ==", profile.name(), n);
+    let jpeg_ref = rows
+        .iter()
+        .find(|(name, _, _)| name == "JPEG q80")
+        .map(|(_, b, _)| *b)
+        .unwrap_or(raw_bytes);
+    let mut t = Table::new(&["technique", "avg bytes/frame", "% of JPEG q80", "PSNR(obj) dB"]);
+    for (name, bytes, p) in &rows {
+        t.row(&[
+            name.clone(),
+            format!("{:.0}", bytes),
+            format!("{:.1}%", 100.0 * bytes / jpeg_ref),
+            if p.is_finite() { format!("{p:.2}") } else { "inf".into() },
+        ]);
+    }
+    t.print();
+    println!(
+        "\n(paper Fig 9 shape: Res-* beat the single-INR baselines and low-quality \
+         JPEG on object PSNR at 8–18% of the JPEG size; residual > direct at equal size)"
+    );
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Tables 1 and 2 reproduction: the INR architecture configuration
+//! tables, scaled to the 128×96 synthetic frames (DESIGN.md) while
+//! preserving the paper's relative sizing — background INR < baseline,
+//! size-binned tiny object INRs, NeRV bins growing with sequence length.
+//! Also verifies the invariants the paper's design relies on.
+//!
+//! Run: `cargo bench --bench tab1_tab2_configs`
+
+use residual_inr::bench_support::Table;
+use residual_inr::config::ArchConfig;
+use residual_inr::data::Profile;
+use residual_inr::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ArchConfig::load_default()?;
+
+    println!("== Table 1 analogue: Res-Rapid-INR / Rapid-INR MLP configs ==");
+    let mut t = Table::new(&[
+        "profile", "role", "layers x hidden", "params", "8b size", "16b size",
+    ]);
+    for p in Profile::ALL {
+        let rp = cfg.rapid(p);
+        let mut add = |role: &str, a: &residual_inr::inr::MlpArch, extra: String| {
+            t.row(&[
+                p.name().to_string(),
+                role.to_string(),
+                format!("{}x{}{}", a.layers, a.hidden, extra),
+                a.param_count().to_string(),
+                fmt_bytes(a.param_count() as u64),
+                fmt_bytes(2 * a.param_count() as u64),
+            ]);
+        };
+        add("background", &rp.background, String::new());
+        for (i, b) in rp.object_bins.iter().enumerate() {
+            add(&format!("object bin {i}"), &b.arch, format!(" (≤{}px)", b.max_side));
+        }
+        add("baseline", &rp.baseline, String::new());
+    }
+    t.print();
+
+    println!("\n== Table 2 analogue: NeRV configs (by sequence-length bin) ==");
+    let mut t = Table::new(&[
+        "bin (≤frames)", "role", "dim1", "dim2", "channels", "params", "16b size",
+    ]);
+    for b in &cfg.nerv_bins {
+        for (role, a) in [("background", &b.background), ("baseline", &b.baseline)] {
+            t.row(&[
+                b.max_frames.to_string(),
+                role.to_string(),
+                a.dim1.to_string(),
+                a.dim2().to_string(),
+                format!("{:?}", a.channels),
+                a.param_count().to_string(),
+                fmt_bytes(2 * a.param_count() as u64),
+            ]);
+        }
+    }
+    t.print();
+
+    // Invariants the paper's design depends on.
+    println!("\ninvariants:");
+    for p in Profile::ALL {
+        let rp = cfg.rapid(p);
+        let max_combined = rp.background.param_count()
+            + rp.object_bins.iter().map(|b| b.arch.param_count()).max().unwrap();
+        assert!(
+            max_combined < rp.baseline.param_count(),
+            "{}: bg+obj must be smaller than the single baseline INR",
+            p.name()
+        );
+        println!(
+            "  {}: background+largest-object = {} params < baseline {} ✓",
+            p.name(),
+            max_combined,
+            rp.baseline.param_count()
+        );
+    }
+    for b in &cfg.nerv_bins {
+        assert!(b.background.param_count() < b.baseline.param_count());
+    }
+    println!("  all NeRV background nets smaller than same-bin baselines ✓");
+    Ok(())
+}

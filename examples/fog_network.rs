@@ -1,0 +1,102 @@
+//! Fog-network communication study (paper §4, Fig 8 + the headline
+//! "5.16× less data across 10 devices").
+//!
+//! Uses the measured INR compression ratio α from an actual encode of a
+//! synthetic dataset, then sweeps the analytical model: total bytes vs
+//! number of devices (all-to-all) and vs receivers-per-device, comparing
+//! serverless JPEG exchange against fog INR compression, and simulates
+//! the transfers over the 2 MB/s wireless medium.
+//!
+//! ```text
+//! cargo run --release --example fog_network
+//! ```
+
+use anyhow::Result;
+
+use residual_inr::commmodel as cm;
+use residual_inr::config::ArchConfig;
+use residual_inr::coordinator::{EncoderConfig, FogNode, Method};
+use residual_inr::data::{generate_dataset, Profile};
+use residual_inr::net::{NetSim, NodeId};
+use residual_inr::runtime::Session;
+use residual_inr::util::fmt_bytes;
+
+fn main() -> Result<()> {
+    // 1. Measure α = INR size / JPEG size on real encodes (8 frames).
+    let cfg = ArchConfig::load_default()?;
+    let session = Session::open_default()?;
+    let fog = FogNode::new(&session, &cfg, EncoderConfig::fast());
+    let mut ds = generate_dataset(Profile::Uav123, 11, 1);
+    ds.sequences[0].frames.truncate(8);
+    ds.sequences[0].boxes.truncate(8);
+    let jpeg = fog.compress(&ds, Method::Jpeg { quality: 95 })?;
+    let res = fog.compress(&ds, Method::ResRapid { direct: false })?;
+    let alpha = res.payload_bytes as f64 / jpeg.payload_bytes as f64;
+    println!(
+        "measured on {} frames: JPEG {} vs Res-Rapid-INR {}  →  α = {:.3}",
+        jpeg.n_frames,
+        fmt_bytes(jpeg.payload_bytes as u64),
+        fmt_bytes(res.payload_bytes as u64),
+        alpha
+    );
+
+    // 2. Fig 8(a): total transmission vs number of devices, all-to-all.
+    let m = jpeg.avg_frame_bytes() * 100.0; // 100 frames per device
+    println!("\nFig 8(a): all-to-all, {} per device", fmt_bytes(m as u64));
+    println!("{:>4} {:>14} {:>14} {:>9}", "k", "serverless", "fog+INR", "gain");
+    for k in [2usize, 4, 6, 8, 10, 12] {
+        let s = cm::serverless_total(&cm::uniform_all_to_all(k, m, false));
+        let f = cm::fog_total(&cm::uniform_all_to_all(k, m, true), alpha);
+        println!(
+            "{:>4} {:>14} {:>14} {:>8.2}x",
+            k,
+            fmt_bytes(s as u64),
+            fmt_bytes(f as u64),
+            s / f
+        );
+    }
+
+    // 3. Fig 8(b): k = 11 devices, sweep receivers per device.
+    println!("\nFig 8(b): k = 11 devices, receivers per device swept");
+    println!("{:>4} {:>14} {:>14} {:>9}  fog wins?", "n", "serverless", "fog+INR", "gain");
+    let thr = cm::min_receivers_for_fog(alpha);
+    for n in 1..=10usize {
+        let s = cm::serverless_total(&cm::uniform_fixed_receivers(11, n, m, false));
+        let f = cm::fog_total(&cm::uniform_fixed_receivers(11, n, m, true), alpha);
+        println!(
+            "{:>4} {:>14} {:>14} {:>8.2}x  {}",
+            n,
+            fmt_bytes(s as u64),
+            fmt_bytes(f as u64),
+            s / f,
+            if cm::fog_beneficial(n, alpha) { "yes" } else { "no " }
+        );
+    }
+    println!("crossover: fog wins from n_i >= {:?} (paper: n_i > 1/(1-α) = {:.2})",
+             thr, 1.0 / (1.0 - alpha));
+
+    // 4. Simulated wireless transfers at 2 MB/s for k = 10 (headline).
+    let k = 10;
+    let mut net = NetSim::paper_default();
+    let nodes: Vec<NodeId> = (0..k).map(NodeId::Edge).collect();
+    for &src in &nodes {
+        let rx: Vec<NodeId> = nodes.iter().copied().filter(|&n| n != src).collect();
+        net.broadcast(src, &rx, m as u64, "serverless");
+    }
+    let t_serverless = net.total_seconds();
+    let b_serverless = net.total_bytes();
+    net.reset();
+    for &src in &nodes {
+        net.send(src, NodeId::Fog, m as u64, "upload");
+        let rx: Vec<NodeId> = nodes.iter().copied().filter(|&n| n != src).collect();
+        net.broadcast(NodeId::Fog, &rx, (alpha * m) as u64, "inr");
+    }
+    let t_fog = net.total_seconds();
+    let b_fog = net.total_bytes();
+    println!("\nsimulated wireless @ 2 MB/s, k = {k}, all-to-all:");
+    println!("  serverless : {}  ({:.1} s airtime)", fmt_bytes(b_serverless), t_serverless);
+    println!("  fog + INR  : {}  ({:.1} s airtime)", fmt_bytes(b_fog), t_fog);
+    println!("  reduction  : {:.2}x  (paper reports 3.43–5.16x at k = 10)",
+             b_serverless as f64 / b_fog as f64);
+    Ok(())
+}

@@ -1,0 +1,210 @@
+"""AOT lowering: JAX/Pallas models → HLO text artifacts + manifest.
+
+Build-time only (`make artifacts`); never imported at runtime. For every
+architecture in ``configs/arch.json`` this script lowers the decode and
+train-step functions to **HLO text** and writes:
+
+* ``artifacts/<name>.hlo.txt`` — one per artifact;
+* ``artifacts/manifest.json`` — for each artifact, the exact positional
+  argument list (name, shape, dtype) and output list the rust runtime
+  must marshal.
+
+HLO *text* (not ``.serialize()``): jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the `xla`
+crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly. Lowered with ``return_tuple=True``; the rust side unwraps with
+``to_tuple``.
+
+Usage: ``cd python && python -m compile.aot [--out-dir ../artifacts] [--only substr]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def mlp_key(arch: dict) -> str:
+    s = "s" if arch["sigmoid_out"] else "r"
+    return f"l{arch['layers']}h{arch['hidden']}p{arch['posenc']}{s}"
+
+
+class Builder:
+    def __init__(self, out_dir: str, only: str | None):
+        self.out_dir = out_dir
+        self.only = only
+        self.manifest: dict = {}
+        self.n_lowered = 0
+
+    def add(self, name: str, fn, args: list, outputs: list, kind: str, meta: dict):
+        """args/outputs: list of (name, shape) in exact positional order."""
+        if name in self.manifest:
+            return  # deduplicated (identical arch shared across profiles)
+        entry = {
+            "file": f"{name}.hlo.txt",
+            "kind": kind,
+            "args": [[n, list(s)] for n, s in args],
+            "outputs": [[n, list(s)] for n, s in outputs],
+            "meta": meta,
+        }
+        self.manifest[name] = entry
+        if self.only and self.only not in name:
+            return
+        path = os.path.join(self.out_dir, entry["file"])
+        lowered = jax.jit(fn).lower(*[spec(s) for _, s in args])
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        self.n_lowered += 1
+        print(f"  [{self.n_lowered}] {name}: {len(args)} args -> "
+              f"{len(outputs)} outputs, {len(text) // 1024} KiB hlo")
+
+
+def train_io(shapes, extra_inputs):
+    """Positional signature of a fused-Adam train step: params, m, v,
+    step, extra inputs; outputs: new params/m/v + loss."""
+    args = [(n, s) for n, s in shapes]
+    args += [(f"m_{n}", s) for n, s in shapes]
+    args += [(f"v_{n}", s) for n, s in shapes]
+    args.append(("step", ()))
+    args += extra_inputs
+    outs = [(f"new_{n}", s) for n, s in shapes]
+    outs += [(f"new_m_{n}", s) for n, s in shapes]
+    outs += [(f"new_v_{n}", s) for n, s in shapes]
+    outs.append(("loss", ()))
+    return args, outs
+
+
+def build_all(cfg: dict, out_dir: str, only: str | None) -> Builder:
+    b = Builder(out_dir, only)
+    frame = cfg["frame"]
+    n_full = frame["width"] * frame["height"]
+
+    # ---- Rapid-INR family ------------------------------------------------
+    mlp_cases: list[tuple[dict, int]] = []
+    for prof in cfg["rapid"].values():
+        mlp_cases.append((prof["background"], n_full))
+        mlp_cases.append((prof["baseline"], n_full))
+        for bin_ in prof["object_bins"]:
+            mlp_cases.append((bin_["arch"], bin_["max_side"] ** 2))
+
+    for arch, n in mlp_cases:
+        key = mlp_key(arch)
+        shapes = model.mlp_param_shapes(arch)
+        meta = {"arch": arch, "n": n}
+        b.add(
+            f"rapid_decode_{key}_n{n}",
+            model.make_rapid_decode(arch),
+            [(nm, s) for nm, s in shapes] + [("coords", (n, 2))],
+            [("rgb", (n, 3))],
+            "rapid_decode",
+            meta,
+        )
+        args, outs = train_io(
+            shapes,
+            [("coords", (n, 2)), ("targets", (n, 3)), ("mask", (n,))],
+        )
+        b.add(
+            f"rapid_train_{key}_n{n}",
+            model.make_rapid_train_step(arch),
+            args,
+            outs,
+            "rapid_train",
+            meta,
+        )
+
+    # ---- NeRV family -------------------------------------------------------
+    bsz = cfg["nerv_decode_batch"]
+    h, w = frame["height"], frame["width"]
+    for name, arch in cfg["nerv"].items():
+        if not isinstance(arch, dict) or "dim1" not in arch:
+            continue
+        shapes = model.nerv_param_shapes(arch)
+        meta = {"arch": arch, "batch": bsz}
+        b.add(
+            f"nerv_decode_{name}_b{bsz}",
+            model.make_nerv_decode(arch),
+            [(nm, s) for nm, s in shapes] + [("t", (bsz,))],
+            [("frames", (bsz, h, w, 3))],
+            "nerv_decode",
+            meta,
+        )
+        args, outs = train_io(
+            shapes, [("t", (bsz,)), ("frames", (bsz, h, w, 3))]
+        )
+        b.add(
+            f"nerv_train_{name}_b{bsz}", model.make_nerv_train_step(arch),
+            args, outs, "nerv_train", meta,
+        )
+
+    # ---- TinyDet -----------------------------------------------------------
+    det = cfg["detect"]
+    db = det["batch"]
+    shapes = model.detect_param_shapes(det, frame)
+    meta = {"cfg": det}
+    b.add(
+        f"tinydet_fwd_b{db}",
+        model.make_tinydet_fwd(det),
+        [(nm, s) for nm, s in shapes] + [("images", (db, h, w, 3))],
+        [("box", (db, 4)), ("conf", (db,))],
+        "tinydet_fwd",
+        meta,
+    )
+    args, outs = train_io(
+        shapes, [("images", (db, h, w, 3)), ("boxes", (db, 4))]
+    )
+    b.add(
+        f"tinydet_train_b{db}",
+        model.make_tinydet_train_step(det, frame),
+        args, outs, "tinydet_train", meta,
+    )
+    return b
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=None)
+    ap.add_argument("--config", default=None)
+    ap.add_argument("--only", default=None, help="only lower artifacts whose name contains this substring (manifest still lists all)")
+    args = ap.parse_args()
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.dirname(os.path.dirname(here))
+    out_dir = args.out_dir or os.path.join(root, "artifacts")
+    cfg_path = args.config or os.path.join(root, "configs", "arch.json")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(cfg_path) as f:
+        cfg = json.load(f)
+
+    print(f"lowering artifacts -> {out_dir}")
+    b = build_all(cfg, out_dir, args.only)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(b.manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(b.manifest)} manifest entries ({b.n_lowered} lowered) "
+          f"-> {manifest_path}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,155 @@
+"""Layer-1 Pallas kernels: the INR decode hot path.
+
+``fused_mlp_decode`` runs the entire coordinate-MLP (positional encoding +
+all linear layers + activations) in ONE Pallas kernel, tiled over pixel
+blocks. This is the operation edge devices execute for every image of
+every training batch (paper §3.2), so it is the hot spot the paper
+accelerates on-device.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+decoder launches per-layer GEMMs over warps; on TPU we instead keep the
+*whole* (tiny, by design) weight stack resident in VMEM and stream only
+coordinates/outputs through HBM→VMEM with a `BlockSpec` over the pixel
+axis — no inter-layer HBM round-trips. Block size `BLOCK_N` trades VMEM
+footprint (BLOCK_N × max(posenc_dim, hidden) activations) against grid
+overhead; 512 keeps the largest config ≪ 1 MB of VMEM.
+
+All kernels use ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers to plain HLO so the AOT
+artifacts run anywhere (correctness path). TPU perf is estimated
+analytically in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Pixel-block tile. One grid step covers the whole 12288-pixel frame:
+# measured fastest on CPU-interpret (EXPERIMENTS.md §Perf L1); still <2 MB
+# VMEM per step on real TPU for the largest config.
+BLOCK_N = 2048
+
+
+def _decode_kernel(*refs, n_layers: int, freqs: int, sigmoid_out: bool):
+    """Kernel body: refs = (coords, w0, b0, ..., w{L-1}, b{L-1}, out)."""
+    coords_ref = refs[0]
+    out_ref = refs[-1]
+    wrefs = refs[1:-1]
+    x = coords_ref[...]  # (BN, 2)
+    # Positional encoding, unrolled (static freqs): [x, sin(2^k pi x), cos]
+    parts = [x]
+    for k in range(freqs):
+        w = (2.0 ** k) * jnp.pi
+        parts.append(jnp.sin(w * x))
+        parts.append(jnp.cos(w * x))
+    h = jnp.concatenate(parts, axis=-1)
+    # Fused MLP: every layer is a (BN, d_in) @ (d_in, d_out) MXU matmul with
+    # the sine VPU activation in between; weights stay resident.
+    for l in range(n_layers):
+        w = wrefs[2 * l][...]
+        b = wrefs[2 * l + 1][...]
+        h = jnp.dot(h, w, preferred_element_type=jnp.float32) + b
+        if l < n_layers - 1:
+            h = jnp.sin(h)
+    out_ref[...] = ref.jax_sigmoid(h) if sigmoid_out else h
+
+
+def fused_mlp_decode(params, coords, freqs: int, sigmoid_out: bool,
+                     block_n: int = BLOCK_N):
+    """Decode RGB (or residual) values for (N, 2) coords via one fused
+    Pallas kernel. N is padded to a multiple of ``block_n`` internally;
+    output is sliced back to N rows. Matches ``ref.mlp_decode``.
+    """
+    n = coords.shape[0]
+    n_layers = len(params) // 2
+    bn = min(block_n, _ceil_to(n, 8))
+    n_pad = _ceil_to(n, bn)
+    if n_pad != n:
+        coords = jnp.pad(coords, ((0, n_pad - n), (0, 0)))
+    grid = (n_pad // bn,)
+
+    in_specs = [pl.BlockSpec((bn, 2), lambda i: (i, 0))]
+    # Weights: whole-array blocks, same for every grid step (VMEM-resident).
+    for p in params:
+        if p.ndim == 2:
+            in_specs.append(pl.BlockSpec(p.shape, lambda i: (0, 0)))
+        else:
+            in_specs.append(pl.BlockSpec(p.shape, lambda i: (0,)))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_kernel, n_layers=n_layers, freqs=freqs,
+            sigmoid_out=sigmoid_out,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bn, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 3), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(coords, *params)
+    return out[:n]
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if activation == "sin":
+        y = jnp.sin(y)
+    elif activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "sigmoid":
+        y = ref.jax_sigmoid(y)
+    o_ref[...] = y
+
+
+def matmul_bias(x, w, b, activation: str = "none", block_m: int = 128):
+    """Generic Pallas `act(x @ w + b)` tiled over rows of x.
+
+    Used for the NeRV stem (the (B, dim1) @ (dim1, dim2) expansion — NeRV's
+    single largest matmul). Weights are whole-array VMEM-resident; rows of
+    `x` stream through the grid. Matches ``ref.matmul_bias``.
+    """
+    m, _k = x.shape
+    bm = min(block_m, _ceil_to(m, 8))
+    m_pad = _ceil_to(m, bm)
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, activation=activation),
+        grid=(m_pad // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, x.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, w.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, w.shape[1]), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+    return out[:m]
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def vmem_estimate_bytes(param_shapes, block_n: int, freqs: int) -> int:
+    """Estimated VMEM footprint of one fused-decode grid step: resident
+    weights + coordinate tile + widest activation tile (double-buffered
+    coords/out). Used by DESIGN.md / EXPERIMENTS.md §Perf TPU estimates."""
+    weight = sum(int(jnp.prod(jnp.array(s))) for s in param_shapes) * 4
+    widest = max(
+        ref.posenc_dim(2, freqs),
+        max(int(s[-1]) for s in param_shapes),
+    )
+    act = block_n * widest * 4
+    io = 2 * (block_n * 2 * 4 + block_n * 3 * 4)  # double-buffered in/out
+    return weight + act + io

@@ -1,0 +1,133 @@
+"""Pure-jnp reference implementations (correctness oracles).
+
+Every Pallas kernel in this package is checked against these functions by
+``python/tests`` (pytest + hypothesis). They are also the building blocks
+of the *training* paths in ``model.py``: encoding an INR happens on the fog
+node via jnp fwd/bwd (autodiff through ``pallas_call`` is not supported on
+the CPU interpret path), while the *decode* hot path — what edge devices
+run per training batch — goes through the fused Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def posenc(x: jnp.ndarray, freqs: int) -> jnp.ndarray:
+    """NeRF-style positional encoding.
+
+    x: (N, D) coordinates in [0, 1]. Output: (N, D + 2*D*freqs) —
+    ``[x, sin(2^k pi x), cos(2^k pi x) for k < freqs]``.
+    """
+    parts = [x]
+    for k in range(freqs):
+        w = (2.0 ** k) * jnp.pi
+        parts.append(jnp.sin(w * x))
+        parts.append(jnp.cos(w * x))
+    return jnp.concatenate(parts, axis=-1)
+
+
+def posenc_dim(in_dim: int, freqs: int) -> int:
+    return in_dim + 2 * in_dim * freqs
+
+
+def jax_sigmoid(x):
+    # Stable sigmoid without jax.nn import on the hot compile path.
+    return 0.5 * (jnp.tanh(0.5 * x) + 1.0)
+
+
+def mlp_decode(params, coords, freqs: int, sigmoid_out: bool):
+    """Coordinate-MLP forward pass (Rapid-INR family).
+
+    params: flat list [w0, b0, w1, b1, ...]; coords: (N, 2) in [0, 1].
+    Hidden activation: sine (SIREN-style); head: sigmoid for RGB nets,
+    linear for residual (object) nets. Returns (N, 3).
+    """
+    h = posenc(coords, freqs)
+    n_layers = len(params) // 2
+    for l in range(n_layers):
+        w, b = params[2 * l], params[2 * l + 1]
+        h = h @ w + b
+        if l < n_layers - 1:
+            h = jnp.sin(h)
+    return jax_sigmoid(h) if sigmoid_out else h
+
+
+def matmul_bias(x, w, b, activation: str = "none"):
+    """Reference for the generic Pallas matmul kernel: act(x @ w + b)."""
+    y = x @ w + b
+    if activation == "sin":
+        return jnp.sin(y)
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "sigmoid":
+        return jax_sigmoid(y)
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def frame_grid(width: int, height: int) -> jnp.ndarray:
+    """Pixel-center coordinates of a full frame, row-major (N, 2) in [0,1].
+
+    Order matches the rust image layout: index i = y * width + x,
+    coords[i] = [x_norm, y_norm].
+    """
+    ys, xs = jnp.meshgrid(
+        (jnp.arange(height) + 0.5) / height,
+        (jnp.arange(width) + 0.5) / width,
+        indexing="ij",
+    )
+    return jnp.stack([xs.reshape(-1), ys.reshape(-1)], axis=-1)
+
+
+def patch_grid(side: int) -> jnp.ndarray:
+    """Local coordinates of a side×side object patch (row-major, [0,1])."""
+    return frame_grid(side, side)
+
+
+def pixel_shuffle(x, r: int):
+    """Depth-to-space: (B, H, W, C*r^2) -> (B, H*r, W*r, C)."""
+    b, h, w, c = x.shape
+    assert c % (r * r) == 0
+    cout = c // (r * r)
+    x = x.reshape(b, h, w, r, r, cout)
+    x = x.transpose(0, 1, 3, 2, 4, 5)  # b, h, r, w, r, cout
+    return x.reshape(b, h * r, w * r, cout)
+
+
+def nerv_decode(params, t, arch):
+    """NeRV-style video INR forward (reference).
+
+    params: flat list matching ``NervArch.param_shapes()`` order:
+      [stem_w1, stem_b1, stem_w2, stem_b2,
+       conv0_w, conv0_b, ..., head_w, head_b]
+    t: (B,) normalized frame indices in [0, 1].
+    arch: dict with posenc, dim1, c0, channels, h0, w0.
+    Returns frames (B, H, W, 3) in [0, 1].
+    """
+    import jax
+
+    pe = posenc(t[:, None], arch["posenc"])  # (B, 1+2F)
+    h = jnp.sin(pe @ params[0] + params[1])  # (B, dim1)
+    h = h @ params[2] + params[3]  # (B, dim2)
+    b = t.shape[0]
+    c0, h0, w0 = arch["c0"], arch["h0"], arch["w0"]
+    x = h.reshape(b, h0, w0, c0)  # NHWC
+    idx = 4
+    for cout in arch["channels"]:
+        w, bias = params[idx], params[idx + 1]
+        idx += 2
+        x = jax.lax.conv_general_dilated(
+            x, w, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + bias
+        x = pixel_shuffle(x, 2)  # (B, 2h, 2w, cout)
+        x = jnp.maximum(x, 0.0)  # NeRV uses GELU; ReLU is the cheap analogue
+        assert x.shape[-1] == cout, (x.shape, cout)
+    w, bias = params[idx], params[idx + 1]
+    x = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + bias
+    return jax_sigmoid(x)

@@ -1,0 +1,297 @@
+"""Layer-2 JAX models: everything the rust coordinator executes via PJRT.
+
+Families (all lowered to HLO text by ``aot.py``; flat positional argument
+lists define the artifact parameter order the rust runtime marshals):
+
+* **Rapid-INR decode** — fused Pallas coordinate-MLP (`kernels.mlp_decode`),
+  the edge-device decode hot path.
+* **Rapid-INR train step** — one fused Adam step on (masked) MSE, run by
+  the fog node's encoder loop. jnp fwd/bwd (autodiff through interpret-mode
+  ``pallas_call`` is unsupported); numerics identical to the kernel path,
+  which pytest asserts.
+* **NeRV decode / train step** — video INR; decode uses the Pallas matmul
+  kernel for the stem (NeRV's dominant matmul), convs lower to XLA fusions.
+* **TinyDet fwd / train step** — the detection backbone stand-in for
+  YOLOv8 (DESIGN.md): conv pyramid + box/confidence regression head;
+  confidence is trained against the IoU of the predicted box (YOLO-style
+  objectness), making it a meaningful mAP ranking signal.
+
+Adam is fused into every train-step artifact: one PJRT call per step, no
+per-tensor dispatch from rust (L2 perf target, DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mlp_decode as kmlp
+from .kernels import ref
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+INR_LR = 1e-2  # lr sweep in EXPERIMENTS.md §Perf L2: +4dB over 2e-3 at equal steps
+DET_LR = 1e-3
+
+
+# --------------------------------------------------------------------------
+# Shared pieces
+# --------------------------------------------------------------------------
+
+def mlp_param_shapes(arch: dict) -> list[tuple[str, tuple[int, ...]]]:
+    """Mirror of rust `MlpArch::param_shapes` (same names, same order)."""
+    layers, hidden = arch["layers"], arch["hidden"]
+    in_dim = ref.posenc_dim(2, arch["posenc"])
+    dims = [in_dim] + [hidden] * (layers - 1) + [3]
+    shapes = []
+    for l in range(layers):
+        shapes.append((f"w{l}", (dims[l], dims[l + 1])))
+        shapes.append((f"b{l}", (dims[l + 1],)))
+    return shapes
+
+
+def nerv_param_shapes(arch: dict) -> list[tuple[str, tuple[int, ...]]]:
+    """Mirror of rust `NervArch::param_shapes`."""
+    t_dim = 1 + 2 * arch["posenc"]
+    dim2 = arch["c0"] * arch["h0"] * arch["w0"]
+    shapes = [
+        ("stem_w1", (t_dim, arch["dim1"])),
+        ("stem_b1", (arch["dim1"],)),
+        ("stem_w2", (arch["dim1"], dim2)),
+        ("stem_b2", (dim2,)),
+    ]
+    cin = arch["c0"]
+    for i, cout in enumerate(arch["channels"]):
+        shapes.append((f"conv{i}_w", (3, 3, cin, 4 * cout)))
+        shapes.append((f"conv{i}_b", (4 * cout,)))
+        cin = cout
+    shapes.append(("head_w", (3, 3, cin, 3)))
+    shapes.append(("head_b", (3,)))
+    return shapes
+
+
+def detect_param_shapes(cfg: dict, frame: dict) -> list[tuple[str, tuple[int, ...]]]:
+    """TinyDet parameter shapes: `stages` stride-2 3×3 convs doubling
+    channels from `base_channels`, the final feature map flattened
+    (preserving the spatial information a box regressor needs), then a
+    2-layer MLP head to 5 outputs."""
+    shapes = []
+    cin = 3
+    c = cfg["base_channels"]
+    for i in range(cfg["stages"]):
+        shapes.append((f"conv{i}_w", (3, 3, cin, c)))
+        shapes.append((f"conv{i}_b", (c,)))
+        cin = c
+        c *= 2
+    ds = 2 ** cfg["stages"]
+    fh = -(-frame["height"] // ds)  # ceil div (SAME padding)
+    fw = -(-frame["width"] // ds)
+    shapes.append(("head_w1", (fh * fw * cin, cfg["head_hidden"])))
+    shapes.append(("head_b1", (cfg["head_hidden"],)))
+    shapes.append(("head_w2", (cfg["head_hidden"], 5)))
+    shapes.append(("head_b2", (5,)))
+    return shapes
+
+
+def siren_init(key, shapes):
+    """SIREN-style uniform init: W ~ U(±sqrt(6/fan_in)), b ~ U(±1/sqrt(fan_in)).
+
+    The rust coordinator reproduces this distribution with its own RNG when
+    it initializes fresh INRs (`coordinator::encoder`).
+    """
+    params = []
+    for name, shape in shapes:
+        key, sub = jax.random.split(key)
+        if len(shape) >= 2:
+            fan_in = int(jnp.prod(jnp.array(shape[:-1])))
+            bound = (6.0 / fan_in) ** 0.5
+        else:
+            bound = 0.01
+        params.append(jax.random.uniform(sub, shape, jnp.float32, -bound, bound))
+    return params
+
+
+def adam_update(params, grads, m, v, step, lr):
+    """One fused Adam step over flat parameter lists."""
+    b1t = 1.0 - ADAM_B1 ** step
+    b2t = 1.0 - ADAM_B2 ** step
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        mhat = mi / b1t
+        vhat = vi / b2t
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+# --------------------------------------------------------------------------
+# Rapid-INR artifacts
+# --------------------------------------------------------------------------
+
+def make_rapid_decode(arch: dict):
+    """Artifact fn: (w0, b0, ..., coords[N,2]) -> rgb[N,3] (Pallas path)."""
+    freqs, sig = arch["posenc"], arch["sigmoid_out"]
+
+    def fn(*args):
+        params, coords = list(args[:-1]), args[-1]
+        return (kmlp.fused_mlp_decode(params, coords, freqs, sig),)
+
+    return fn
+
+
+def make_rapid_train_step(arch: dict, lr: float = INR_LR):
+    """Artifact fn: (params…, m…, v…, step, coords[N,2], targets[N,3],
+    mask[N]) -> (params'…, m'…, v'…, loss). Masked MSE; one Adam step."""
+    freqs, sig = arch["posenc"], arch["sigmoid_out"]
+    n_tensors = len(mlp_param_shapes(arch))
+
+    def loss_fn(params, coords, targets, mask):
+        pred = ref.mlp_decode(params, coords, freqs, sig)
+        se = jnp.sum((pred - targets) ** 2, axis=-1) * mask
+        return jnp.sum(se) / (jnp.maximum(jnp.sum(mask), 1.0) * 3.0)
+
+    def fn(*args):
+        params = list(args[:n_tensors])
+        m = list(args[n_tensors:2 * n_tensors])
+        v = list(args[2 * n_tensors:3 * n_tensors])
+        step, coords, targets, mask = args[3 * n_tensors:]
+        loss, grads = jax.value_and_grad(loss_fn)(params, coords, targets, mask)
+        new_p, new_m, new_v = adam_update(params, grads, m, v, step, lr)
+        return tuple(new_p + new_m + new_v + [loss])
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# NeRV artifacts
+# --------------------------------------------------------------------------
+
+def nerv_decode_pallas(params, t, arch):
+    """NeRV forward with the Pallas matmul kernel on the stem layers."""
+    pe = ref.posenc(t[:, None], arch["posenc"])
+    h = kmlp.matmul_bias(pe, params[0], params[1], "sin")
+    h = kmlp.matmul_bias(h, params[2], params[3], "none")
+    b = t.shape[0]
+    x = h.reshape(b, arch["h0"], arch["w0"], arch["c0"])
+    idx = 4
+    for cout in arch["channels"]:
+        w, bias = params[idx], params[idx + 1]
+        idx += 2
+        x = jax.lax.conv_general_dilated(
+            x, w, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + bias
+        x = ref.pixel_shuffle(x, 2)
+        x = jnp.maximum(x, 0.0)
+    w, bias = params[idx], params[idx + 1]
+    x = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + bias
+    return ref.jax_sigmoid(x)
+
+
+def make_nerv_decode(arch: dict):
+    """Artifact fn: (params…, t[B]) -> frames[B,H,W,3]."""
+
+    def fn(*args):
+        params, t = list(args[:-1]), args[-1]
+        return (nerv_decode_pallas(params, t, arch),)
+
+    return fn
+
+
+def make_nerv_train_step(arch: dict, lr: float = INR_LR):
+    """Artifact fn: (params…, m…, v…, step, t[B], frames[B,H,W,3])
+    -> (params'…, m'…, v'…, loss)."""
+    n_tensors = len(nerv_param_shapes(arch))
+
+    def loss_fn(params, t, frames):
+        pred = ref.nerv_decode(params, t, arch)
+        return jnp.mean((pred - frames) ** 2)
+
+    def fn(*args):
+        params = list(args[:n_tensors])
+        m = list(args[n_tensors:2 * n_tensors])
+        v = list(args[2 * n_tensors:3 * n_tensors])
+        step, t, frames = args[3 * n_tensors:]
+        loss, grads = jax.value_and_grad(loss_fn)(params, t, frames)
+        new_p, new_m, new_v = adam_update(params, grads, m, v, step, lr)
+        return tuple(new_p + new_m + new_v + [loss])
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# TinyDet (detection backbone)
+# --------------------------------------------------------------------------
+
+def tinydet_forward(params, images, cfg: dict):
+    """images (B,H,W,3) -> (box[B,4] in [0,1] cxcywh, conf[B] in [0,1])."""
+    x = images
+    idx = 0
+    for _ in range(cfg["stages"]):
+        w, b = params[idx], params[idx + 1]
+        idx += 2
+        x = jax.lax.conv_general_dilated(
+            x, w, window_strides=(2, 2), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + b
+        x = jnp.maximum(x, 0.0)
+    feat = x.reshape(x.shape[0], -1)  # flatten spatial grid (B, h*w*C)
+    h = jnp.maximum(feat @ params[idx] + params[idx + 1], 0.0)
+    out = h @ params[idx + 2] + params[idx + 3]
+    box = ref.jax_sigmoid(out[:, :4])
+    conf = ref.jax_sigmoid(out[:, 4])
+    return box, conf
+
+
+def iou_cxcywh(a, b):
+    """IoU of two (B, 4) center-format normalized box tensors."""
+    ax1, ay1 = a[:, 0] - a[:, 2] / 2, a[:, 1] - a[:, 3] / 2
+    ax2, ay2 = a[:, 0] + a[:, 2] / 2, a[:, 1] + a[:, 3] / 2
+    bx1, by1 = b[:, 0] - b[:, 2] / 2, b[:, 1] - b[:, 3] / 2
+    bx2, by2 = b[:, 0] + b[:, 2] / 2, b[:, 1] + b[:, 3] / 2
+    ix = jnp.maximum(jnp.minimum(ax2, bx2) - jnp.maximum(ax1, bx1), 0.0)
+    iy = jnp.maximum(jnp.minimum(ay2, by2) - jnp.maximum(ay1, by1), 0.0)
+    inter = ix * iy
+    union = a[:, 2] * a[:, 3] + b[:, 2] * b[:, 3] - inter
+    return inter / jnp.maximum(union, 1e-9)
+
+
+def make_tinydet_fwd(cfg: dict):
+    """Artifact fn: (params…, images[B,H,W,3]) -> (box[B,4], conf[B])."""
+
+    def fn(*args):
+        params, images = list(args[:-1]), args[-1]
+        return tinydet_forward(params, images, cfg)
+
+    return fn
+
+
+def make_tinydet_train_step(cfg: dict, frame: dict, lr: float = DET_LR):
+    """Artifact fn: (params…, m…, v…, step, images, boxes[B,4])
+    -> (params'…, m'…, v'…, loss). Box regression + IoU-target confidence."""
+    n_tensors = len(detect_param_shapes(cfg, frame))
+
+    def loss_fn(params, images, boxes):
+        pred_box, conf = tinydet_forward(params, images, cfg)
+        box_loss = jnp.mean(jnp.sum((pred_box - boxes) ** 2, axis=-1))
+        iou = jax.lax.stop_gradient(iou_cxcywh(pred_box, boxes))
+        conf_loss = jnp.mean((conf - iou) ** 2)
+        return box_loss + 0.2 * conf_loss
+
+    def fn(*args):
+        params = list(args[:n_tensors])
+        m = list(args[n_tensors:2 * n_tensors])
+        v = list(args[2 * n_tensors:3 * n_tensors])
+        step, images, boxes = args[3 * n_tensors:]
+        loss, grads = jax.value_and_grad(loss_fn)(params, images, boxes)
+        new_p, new_m, new_v = adam_update(params, grads, m, v, step, lr)
+        return tuple(new_p + new_m + new_v + [loss])
+
+    return fn

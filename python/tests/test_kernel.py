@@ -1,0 +1,139 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (`ref.py`).
+
+This is the core kernel correctness signal. Hypothesis sweeps shapes and
+value ranges; `assert_allclose` against `ref` at tight tolerances (both
+paths are f32; interpret-mode Pallas should match to reassociation-level
+error).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import mlp_decode as kmlp
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_mlp(rng, layers, hidden, freqs):
+    dims = [ref.posenc_dim(2, freqs)] + [hidden] * (layers - 1) + [3]
+    params = []
+    for i in range(layers):
+        fan_in = dims[i]
+        bound = (6.0 / fan_in) ** 0.5
+        params.append(jnp.asarray(
+            rng.uniform(-bound, bound, (dims[i], dims[i + 1])).astype(np.float32)))
+        params.append(jnp.asarray(
+            rng.uniform(-0.01, 0.01, (dims[i + 1],)).astype(np.float32)))
+    return params
+
+
+class TestFusedMlpDecode:
+    @pytest.mark.parametrize("layers,hidden,freqs,sigmoid", [
+        (2, 6, 4, False),
+        (3, 10, 4, False),
+        (6, 12, 6, True),
+        (10, 28, 6, True),
+    ])
+    def test_matches_ref_table1_archs(self, layers, hidden, freqs, sigmoid):
+        rng = np.random.default_rng(layers * 100 + hidden)
+        params = make_mlp(rng, layers, hidden, freqs)
+        coords = jnp.asarray(rng.uniform(0, 1, (777, 2)).astype(np.float32))
+        want = ref.mlp_decode(params, coords, freqs, sigmoid)
+        got = kmlp.fused_mlp_decode(params, coords, freqs, sigmoid)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 2000),
+        layers=st.integers(2, 6),
+        hidden=st.integers(4, 32),
+        freqs=st.integers(1, 8),
+        sigmoid=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, n, layers, hidden, freqs, sigmoid, seed):
+        rng = np.random.default_rng(seed)
+        params = make_mlp(rng, layers, hidden, freqs)
+        coords = jnp.asarray(rng.uniform(0, 1, (n, 2)).astype(np.float32))
+        want = ref.mlp_decode(params, coords, freqs, sigmoid)
+        got = kmlp.fused_mlp_decode(params, coords, freqs, sigmoid)
+        assert got.shape == (n, 3)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_block_size_invariance(self):
+        rng = np.random.default_rng(7)
+        params = make_mlp(rng, 4, 16, 6)
+        coords = jnp.asarray(rng.uniform(0, 1, (1000, 2)).astype(np.float32))
+        a = kmlp.fused_mlp_decode(params, coords, 6, True, block_n=64)
+        b = kmlp.fused_mlp_decode(params, coords, 6, True, block_n=512)
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+    def test_full_frame_grid(self):
+        # The exact shape the edge decode path uses: 128x96 frame.
+        rng = np.random.default_rng(3)
+        params = make_mlp(rng, 6, 12, 6)
+        coords = ref.frame_grid(128, 96)
+        out = kmlp.fused_mlp_decode(params, coords, 6, True)
+        assert out.shape == (128 * 96, 3)
+        assert bool(jnp.all((out >= 0) & (out <= 1)))
+
+    def test_output_finite_extreme_weights(self):
+        rng = np.random.default_rng(11)
+        params = [p * 100.0 for p in make_mlp(rng, 3, 8, 4)]
+        coords = jnp.asarray(rng.uniform(0, 1, (64, 2)).astype(np.float32))
+        out = kmlp.fused_mlp_decode(params, coords, 4, True)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+class TestMatmulBias:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 300),
+        k=st.integers(1, 64),
+        n=st.integers(1, 128),
+        act=st.sampled_from(["none", "sin", "relu", "sigmoid"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, m, k, n, act, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+        want = ref.matmul_bias(x, w, b, act)
+        got = kmlp.matmul_bias(x, w, b, act)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_nerv_stem_shape(self):
+        # The actual NeRV stem: (4, 13) @ (13, 64) then (4, 64) @ (64, 1152).
+        rng = np.random.default_rng(5)
+        pe = jnp.asarray(rng.normal(size=(4, 13)).astype(np.float32))
+        w1 = jnp.asarray(rng.normal(size=(13, 64)).astype(np.float32))
+        b1 = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+        h = kmlp.matmul_bias(pe, w1, b1, "sin")
+        assert_allclose(np.asarray(h), np.asarray(ref.matmul_bias(pe, w1, b1, "sin")),
+                        rtol=1e-5, atol=1e-5)
+
+
+class TestPosenc:
+    def test_dims(self):
+        x = jnp.zeros((5, 2))
+        assert ref.posenc(x, 6).shape == (5, ref.posenc_dim(2, 6))
+        assert ref.posenc_dim(2, 6) == 26
+
+    def test_grid_layout_row_major(self):
+        g = ref.frame_grid(4, 3)
+        assert g.shape == (12, 2)
+        # index i = y*width + x; coords = [x_norm, y_norm]
+        assert_allclose(np.asarray(g[0]), [0.5 / 4, 0.5 / 3], rtol=1e-6)
+        assert_allclose(np.asarray(g[1]), [1.5 / 4, 0.5 / 3], rtol=1e-6)
+        assert_allclose(np.asarray(g[4]), [0.5 / 4, 1.5 / 3], rtol=1e-6)
+
+    def test_vmem_estimate_reasonable(self):
+        shapes = [(26, 28), (28,), (28, 28), (28,), (28, 3), (3,)]
+        v = kmlp.vmem_estimate_bytes(shapes, 512, 6)
+        assert 0 < v < 16 * 2**20  # must fit VMEM comfortably

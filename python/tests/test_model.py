@@ -1,0 +1,238 @@
+"""L2 correctness: train steps actually learn, NeRV decodes, TinyDet
+regresses boxes, Adam matches a hand-rolled reference, and the artifact
+signatures in the manifest stay consistent with the model shapes."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import mlp_decode as kmlp
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    with open(os.path.join(ROOT, "configs", "arch.json")) as f:
+        return json.load(f)
+
+
+def init_state(shapes, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = model.siren_init(key, shapes)
+    zeros = [jnp.zeros_like(p) for p in params]
+    return params, zeros, [jnp.zeros_like(p) for p in params]
+
+
+class TestRapidTrainStep:
+    def test_loss_decreases_on_target_image(self):
+        arch = {"layers": 4, "hidden": 16, "posenc": 6, "sigmoid_out": True}
+        shapes = model.mlp_param_shapes(arch)
+        params, m, v = init_state(shapes, 1)
+        step_fn = jax.jit(model.make_rapid_train_step(arch))
+        n = 32 * 32
+        coords = ref.frame_grid(32, 32)
+        # Smooth target: a cheap stand-in for a background frame.
+        targets = jnp.stack([
+            0.5 + 0.4 * jnp.sin(4 * coords[:, 0]),
+            0.5 + 0.4 * jnp.cos(3 * coords[:, 1]),
+            0.5 + 0.2 * jnp.sin(5 * (coords[:, 0] + coords[:, 1])),
+        ], axis=-1)
+        mask = jnp.ones((n,))
+        losses = []
+        nt = len(shapes)
+        for step in range(60):
+            out = step_fn(*params, *m, *v, jnp.float32(step + 1), coords, targets, mask)
+            params = list(out[:nt])
+            m = list(out[nt:2 * nt])
+            v = list(out[2 * nt:3 * nt])
+            losses.append(float(out[-1]))
+        assert losses[-1] < losses[0] * 0.2, losses[::10]
+
+    def test_mask_excludes_pixels(self):
+        arch = {"layers": 3, "hidden": 8, "posenc": 4, "sigmoid_out": False}
+        shapes = model.mlp_param_shapes(arch)
+        params, m, v = init_state(shapes, 2)
+        step_fn = jax.jit(model.make_rapid_train_step(arch))
+        coords = ref.frame_grid(8, 8)
+        targets = jnp.zeros((64, 3))
+        # Poison the masked-out half with huge values: loss must ignore it.
+        targets = targets.at[32:].set(1e6)
+        mask = jnp.concatenate([jnp.ones(32), jnp.zeros(32)])
+        out = step_fn(*params, *m, *v, jnp.float32(1), coords, targets, mask)
+        assert float(out[-1]) < 1e3
+
+    def test_train_then_pallas_decode_consistent(self):
+        # What production does: train with the jnp path (fog), decode with
+        # the Pallas kernel (edge). The two forwards must agree.
+        arch = {"layers": 3, "hidden": 10, "posenc": 4, "sigmoid_out": False}
+        shapes = model.mlp_param_shapes(arch)
+        params, _, _ = init_state(shapes, 3)
+        coords = ref.patch_grid(18)
+        a = ref.mlp_decode(params, coords, 4, False)
+        b = kmlp.fused_mlp_decode(params, coords, 4, False)
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+class TestAdam:
+    def test_matches_manual_reference(self):
+        params = [jnp.array([1.0, -2.0]), jnp.array([[0.5]])]
+        grads = [jnp.array([0.1, -0.3]), jnp.array([[1.0]])]
+        m = [jnp.zeros(2), jnp.zeros((1, 1))]
+        v = [jnp.zeros(2), jnp.zeros((1, 1))]
+        lr = 1e-2
+        new_p, new_m, new_v = model.adam_update(params, grads, m, v, 1.0, lr)
+        for p, g, np_, nm, nv in zip(params, grads, new_p, new_m, new_v):
+            m1 = 0.1 * np.asarray(g)  # (1-b1)*g at step 1
+            v1 = 0.001 * np.asarray(g) ** 2
+            mhat = m1 / (1 - 0.9)
+            vhat = v1 / (1 - 0.999)
+            want = np.asarray(p) - lr * mhat / (np.sqrt(vhat) + model.ADAM_EPS)
+            assert_allclose(np.asarray(np_), want, rtol=1e-5)
+            assert_allclose(np.asarray(nm), m1, rtol=1e-6)
+            assert_allclose(np.asarray(nv), v1, rtol=1e-6)
+
+
+class TestNerv:
+    ARCH = {"posenc": 6, "dim1": 64, "c0": 6, "channels": [12, 10, 8],
+            "h0": 12, "w0": 16}
+
+    def test_decode_shape_and_range(self):
+        shapes = model.nerv_param_shapes(self.ARCH)
+        params, _, _ = init_state(shapes, 4)
+        t = jnp.array([0.0, 0.33, 0.66, 1.0])
+        frames = ref.nerv_decode(params, t, self.ARCH)
+        assert frames.shape == (4, 96, 128, 3)
+        assert bool(jnp.all((frames >= 0) & (frames <= 1)))
+
+    def test_pallas_stem_matches_ref(self):
+        shapes = model.nerv_param_shapes(self.ARCH)
+        params, _, _ = init_state(shapes, 5)
+        t = jnp.array([0.1, 0.5, 0.9, 0.2])
+        a = ref.nerv_decode(params, t, self.ARCH)
+        b = model.nerv_decode_pallas(params, t, self.ARCH)
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+    def test_train_reduces_loss(self):
+        shapes = model.nerv_param_shapes(self.ARCH)
+        params, m, v = init_state(shapes, 6)
+        step_fn = jax.jit(model.make_nerv_train_step(self.ARCH))
+        t = jnp.array([0.0, 0.33, 0.66, 1.0])
+        ys, xs = jnp.meshgrid(jnp.linspace(0, 1, 96), jnp.linspace(0, 1, 128),
+                              indexing="ij")
+        base = jnp.stack([xs, ys, 0.5 * (xs + ys)], axis=-1)
+        frames = jnp.stack([jnp.clip(base + 0.1 * i, 0, 1) for i in range(4)])
+        nt = len(shapes)
+        losses = []
+        for step in range(30):
+            out = step_fn(*params, *m, *v, jnp.float32(step + 1), t, frames)
+            params = list(out[:nt])
+            m = list(out[nt:2 * nt])
+            v = list(out[2 * nt:3 * nt])
+            losses.append(float(out[-1]))
+        assert losses[-1] < losses[0] * 0.5, losses[::6]
+
+
+class TestTinyDet:
+    CFG = {"batch": 8, "base_channels": 8, "stages": 3, "head_hidden": 32}
+    FRAME = {"width": 64, "height": 48}
+
+    def _images_boxes(self, seed, b=8):
+        rng = np.random.default_rng(seed)
+        h, w = self.FRAME["height"], self.FRAME["width"]
+        imgs = np.full((b, h, w, 3), 0.3, np.float32)
+        boxes = np.zeros((b, 4), np.float32)
+        for i in range(b):
+            bw, bh = rng.integers(8, 16), rng.integers(6, 12)
+            x = rng.integers(0, w - bw)
+            y = rng.integers(0, h - bh)
+            imgs[i, y:y + bh, x:x + bw] = [0.9, 0.1, 0.2]
+            boxes[i] = [(x + bw / 2) / w, (y + bh / 2) / h, bw / w, bh / h]
+        return jnp.asarray(imgs), jnp.asarray(boxes)
+
+    def test_forward_shapes(self):
+        shapes = model.detect_param_shapes(self.CFG, self.FRAME)
+        params, _, _ = init_state(shapes, 7)
+        imgs, _ = self._images_boxes(0)
+        box, conf = model.tinydet_forward(params, imgs, self.CFG)
+        assert box.shape == (8, 4) and conf.shape == (8,)
+        assert bool(jnp.all((box >= 0) & (box <= 1)))
+
+    def test_training_improves_iou(self):
+        shapes = model.detect_param_shapes(self.CFG, self.FRAME)
+        params, m, v = init_state(shapes, 8)
+        step_fn = jax.jit(model.make_tinydet_train_step(self.CFG, self.FRAME))
+        nt = len(shapes)
+        imgs, boxes = self._images_boxes(1)
+        first_loss = last_loss = None
+        for step in range(150):
+            out = step_fn(*params, *m, *v, jnp.float32(step + 1), imgs, boxes)
+            params = list(out[:nt])
+            m = list(out[nt:2 * nt])
+            v = list(out[2 * nt:3 * nt])
+            loss = float(out[-1])
+            first_loss = first_loss if first_loss is not None else loss
+            last_loss = loss
+        assert last_loss < first_loss * 0.5, (first_loss, last_loss)
+        pred, conf = model.tinydet_forward(params, imgs, self.CFG)
+        iou = model.iou_cxcywh(pred, boxes)
+        assert float(jnp.mean(iou)) > 0.25, float(jnp.mean(iou))
+
+    def test_iou_cxcywh_known_values(self):
+        a = jnp.array([[0.5, 0.5, 0.2, 0.2]])
+        assert_allclose(np.asarray(model.iou_cxcywh(a, a)), [1.0], rtol=1e-6)
+        b = jnp.array([[0.9, 0.9, 0.1, 0.1]])
+        assert float(model.iou_cxcywh(a, b)[0]) == 0.0
+
+
+class TestManifestConsistency:
+    def test_manifest_matches_model_shapes(self, cfg):
+        path = os.path.join(ROOT, "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            manifest = json.load(f)
+        assert len(manifest) >= 40
+        # Every rapid_decode artifact's weight args must match
+        # mlp_param_shapes of its meta arch.
+        for name, entry in manifest.items():
+            if entry["kind"] != "rapid_decode":
+                continue
+            arch = entry["meta"]["arch"]
+            shapes = model.mlp_param_shapes(arch)
+            got = entry["args"][:len(shapes)]
+            for (wn, ws), (gn, gs) in zip(shapes, got):
+                assert wn == gn and list(ws) == list(gs), (name, wn, ws, gn, gs)
+            n = entry["meta"]["n"]
+            assert entry["args"][-1] == ["coords", [n, 2]]
+            assert entry["outputs"] == [["rgb", [n, 3]]]
+
+    def test_train_artifacts_have_state_triplets(self, cfg):
+        path = os.path.join(ROOT, "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            manifest = json.load(f)
+        for name, entry in manifest.items():
+            if not entry["kind"].endswith("_train"):
+                continue
+            args = [a[0] for a in entry["args"]]
+            outs = [o[0] for o in entry["outputs"]]
+            n_params = sum(1 for a in args if not a.startswith(("m_", "v_"))
+                           and a not in ("step",) and not a.startswith(
+                               ("coords", "targets", "mask", "t", "frames",
+                                "images", "boxes")))
+            assert args.count("step") == 1
+            assert sum(a.startswith("m_") for a in args) == n_params
+            assert sum(a.startswith("v_") for a in args) == n_params
+            assert outs[-1] == "loss"
+            assert len(outs) == 3 * n_params + 1

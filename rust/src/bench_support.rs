@@ -1,0 +1,146 @@
+//! Micro-benchmark harness for the `harness = false` bench targets
+//! (no `criterion` in the vendored crate set). Provides warmup + timed
+//! iterations with summary statistics, and paper-style table printing
+//! shared by the per-figure bench binaries.
+
+use crate::metrics::stats::{summarize, Summary};
+use crate::util::Stopwatch;
+
+/// Result of timing one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time in seconds.
+    pub stats: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.stats.mean * 1e3
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.seconds());
+    }
+    BenchResult { name: name.to_string(), iters, stats: summarize(&samples) }
+}
+
+/// Time until at least `min_total_secs` has elapsed (at least 3 iters).
+pub fn bench_for<F: FnMut()>(name: &str, min_total_secs: f64, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let total = Stopwatch::start();
+    while samples.len() < 3 || total.seconds() < min_total_secs {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.seconds());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), iters: samples.len(), stats: summarize(&samples) }
+}
+
+/// Print a bench result in a compact fixed-width row.
+pub fn report(r: &BenchResult) {
+    println!(
+        "{:<44} {:>10.3} ms/iter  (±{:>7.3} ms, n={}, p95 {:.3} ms)",
+        r.name,
+        r.stats.mean * 1e3,
+        r.stats.std * 1e3,
+        r.iters,
+        r.stats.p95 * 1e3,
+    );
+}
+
+/// Fixed-width table printer for paper-style figure/table reproduction.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// ASCII bar for quick visual comparison in bench output.
+pub fn bar(value: f64, max: f64, width: usize) -> String {
+    let n = if max > 0.0 { ((value / max) * width as f64).round() as usize } else { 0 };
+    "#".repeat(n.min(width))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_expected_iters() {
+        let mut count = 0;
+        let r = bench("t", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.stats.mean >= 0.0);
+    }
+
+    #[test]
+    fn bench_for_hits_min_time() {
+        let r = bench_for("t", 0.01, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(r.iters >= 3);
+        assert!(r.stats.mean >= 0.0005);
+    }
+
+    #[test]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["only-one".into()])
+        }));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn bar_scales() {
+        assert_eq!(bar(5.0, 10.0, 10), "#####");
+        assert_eq!(bar(0.0, 10.0, 10), "");
+        assert_eq!(bar(20.0, 10.0, 10), "##########");
+    }
+}

@@ -1,0 +1,126 @@
+//! MSB-first bit writer/reader for the entropy-coded segment.
+
+/// Append-only MSB-first bit writer.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    cur: u8,
+    nbits: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `value`, MSB first. `n ≤ 32`.
+    pub fn write(&mut self, value: u32, n: u8) {
+        debug_assert!(n <= 32);
+        for i in (0..n).rev() {
+            let bit = ((value >> i) & 1) as u8;
+            self.cur = (self.cur << 1) | bit;
+            self.nbits += 1;
+            if self.nbits == 8 {
+                self.buf.push(self.cur);
+                self.cur = 0;
+                self.nbits = 0;
+            }
+        }
+    }
+
+    /// Pad with 1-bits to a byte boundary and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            let pad = 8 - self.nbits;
+            self.cur = (self.cur << pad) | ((1u16 << pad) as u8).wrapping_sub(1);
+            self.buf.push(self.cur);
+        }
+        self.buf
+    }
+
+    /// Bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+}
+
+/// MSB-first bit reader.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Read one bit; `None` at end of input.
+    #[inline]
+    pub fn bit(&mut self) -> Option<u8> {
+        let byte = self.buf.get(self.pos / 8)?;
+        let bit = (byte >> (7 - (self.pos % 8))) & 1;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    /// Read `n` bits MSB-first into a u32.
+    pub fn bits(&mut self, n: u8) -> Option<u32> {
+        let mut v = 0u32;
+        for _ in 0..n {
+            v = (v << 1) | self.bit()? as u32;
+        }
+        Some(v)
+    }
+
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut w = BitWriter::new();
+        w.write(0b101, 3);
+        w.write(0xFF, 8);
+        w.write(0, 1);
+        w.write(0b110011, 6);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.bits(3), Some(0b101));
+        assert_eq!(r.bits(8), Some(0xFF));
+        assert_eq!(r.bits(1), Some(0));
+        assert_eq!(r.bits(6), Some(0b110011));
+    }
+
+    #[test]
+    fn bit_len_counts() {
+        let mut w = BitWriter::new();
+        w.write(1, 1);
+        assert_eq!(w.bit_len(), 1);
+        w.write(0xABCD, 16);
+        assert_eq!(w.bit_len(), 17);
+    }
+
+    #[test]
+    fn reader_ends_cleanly() {
+        let mut w = BitWriter::new();
+        w.write(0b10, 2);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        let _ = r.bits(8);
+        assert_eq!(r.bits(8), None);
+    }
+
+    #[test]
+    fn zero_width_write_is_noop() {
+        let mut w = BitWriter::new();
+        w.write(123, 0);
+        assert_eq!(w.bit_len(), 0);
+    }
+}

@@ -1,0 +1,421 @@
+//! Baseline JPEG-style encoder/decoder.
+//!
+//! Standard JPEG coding pipeline — RGB→YCbCr, 4:2:0 chroma subsampling,
+//! 8×8 DCT, quality-scaled quantization, zigzag, DPCM-coded DC +
+//! run/size-coded AC, per-image optimized canonical Huffman — wrapped in a
+//! simple container (`RJPG`) instead of JFIF markers. The *rate/quality
+//! behaviour* matches baseline JPEG (what the paper's Fig 9 sweeps);
+//! interchange with libjpeg is a non-goal.
+
+use anyhow::{bail, Context, Result};
+
+use super::bitio::{BitReader, BitWriter};
+use super::color::{rgb_to_ycbcr, subsample_420, upsample_420, ycbcr_to_rgb, Plane};
+use super::dct::{fdct8x8, idct8x8};
+use super::huffman::{HuffDecoder, HuffTable, MAX_CODE_LEN};
+use super::quant::{dequantize, quantize, scaled_table, CHROMA_BASE, LUMA_BASE};
+use super::zigzag::{from_zigzag, to_zigzag};
+use crate::data::ImageRGB;
+
+const MAGIC: &[u8; 4] = b"RJPG";
+const VERSION: u8 = 1;
+
+/// Encode an image at JPEG quality `quality ∈ [1, 100]`.
+pub fn encode(img: &ImageRGB, quality: u8) -> Vec<u8> {
+    let (yp, cbp, crp) = rgb_to_ycbcr(img.width, img.height, &img.data);
+    let cb = subsample_420(&cbp);
+    let cr = subsample_420(&crp);
+    let lq = scaled_table(&LUMA_BASE, quality);
+    let cq = scaled_table(&CHROMA_BASE, quality);
+
+    // Quantized zigzag blocks per component.
+    let yb = plane_to_blocks(&yp, &lq);
+    let cbb = plane_to_blocks(&cb, &cq);
+    let crb = plane_to_blocks(&cr, &cq);
+
+    // First pass: count symbol frequencies for optimized tables.
+    let mut dc_l = vec![0u64; 17];
+    let mut ac_l = vec![0u64; 256];
+    let mut dc_c = vec![0u64; 17];
+    let mut ac_c = vec![0u64; 256];
+    count_component(&yb, &mut dc_l, &mut ac_l);
+    count_component(&cbb, &mut dc_c, &mut ac_c);
+    count_component(&crb, &mut dc_c, &mut ac_c);
+
+    let t_dc_l = HuffTable::from_frequencies(&dc_l);
+    let t_ac_l = HuffTable::from_frequencies(&ac_l);
+    let t_dc_c = HuffTable::from_frequencies(&dc_c);
+    let t_ac_c = HuffTable::from_frequencies(&ac_c);
+
+    // Second pass: entropy-code.
+    let mut w = BitWriter::new();
+    write_component(&yb, &t_dc_l, &t_ac_l, &mut w);
+    write_component(&cbb, &t_dc_c, &t_ac_c, &mut w);
+    write_component(&crb, &t_dc_c, &t_ac_c, &mut w);
+    let scan = w.finish();
+
+    // Container.
+    let mut out = Vec::with_capacity(scan.len() + 256);
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION);
+    out.extend_from_slice(&(img.width as u16).to_le_bytes());
+    out.extend_from_slice(&(img.height as u16).to_le_bytes());
+    out.push(quality);
+    for t in [&t_dc_l, &t_ac_l, &t_dc_c, &t_ac_c] {
+        out.extend_from_slice(&t.counts);
+        out.push(t.symbols.len() as u8); // ≤ 255 symbols used in practice
+        out.extend_from_slice(&t.symbols);
+    }
+    out.extend_from_slice(&(scan.len() as u32).to_le_bytes());
+    out.extend_from_slice(&scan);
+    out
+}
+
+/// Decode an `RJPG` byte stream.
+pub fn decode(bytes: &[u8]) -> Result<ImageRGB> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > bytes.len() {
+            bail!("truncated RJPG at byte {}", *pos);
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    if take(&mut pos, 4)? != MAGIC {
+        bail!("bad magic");
+    }
+    let version = take(&mut pos, 1)?[0];
+    if version != VERSION {
+        bail!("unsupported RJPG version {version}");
+    }
+    let width = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+    let height = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+    let quality = take(&mut pos, 1)?[0];
+    if width == 0 || height == 0 {
+        bail!("zero dimension");
+    }
+
+    let mut tables = Vec::with_capacity(4);
+    for _ in 0..4 {
+        let counts: [u8; MAX_CODE_LEN] =
+            take(&mut pos, MAX_CODE_LEN)?.try_into().unwrap();
+        let nsym = take(&mut pos, 1)?[0] as usize;
+        let symbols = take(&mut pos, nsym)?.to_vec();
+        let total: usize = counts.iter().map(|&c| c as usize).sum();
+        if total != symbols.len() {
+            bail!("huffman spec mismatch");
+        }
+        tables.push(HuffTable::from_spec(counts, symbols));
+    }
+    let scan_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let scan = take(&mut pos, scan_len)?;
+
+    let lq = scaled_table(&LUMA_BASE, quality);
+    let cq = scaled_table(&CHROMA_BASE, quality);
+
+    let (cw, ch) = (width.div_ceil(2), height.div_ceil(2));
+    let d_dc_l = tables[0].decoder();
+    let d_ac_l = tables[1].decoder();
+    let d_dc_c = tables[2].decoder();
+    let d_ac_c = tables[3].decoder();
+
+    let mut r = BitReader::new(scan);
+    let yp = read_component(&mut r, width, height, &d_dc_l, &d_ac_l, &lq)
+        .context("luma scan")?;
+    let cbp = read_component(&mut r, cw, ch, &d_dc_c, &d_ac_c, &cq)
+        .context("cb scan")?;
+    let crp = read_component(&mut r, cw, ch, &d_dc_c, &d_ac_c, &cq)
+        .context("cr scan")?;
+
+    let cb = upsample_420(&cbp, width, height);
+    let cr = upsample_420(&crp, width, height);
+    let rgb = ycbcr_to_rgb(&yp, &cb, &cr);
+    Ok(ImageRGB { width, height, data: rgb })
+}
+
+/// Split a plane into quantized zigzag 8×8 blocks (raster order, edge
+/// pixels replicated).
+fn plane_to_blocks(p: &Plane, table: &[u16; 64]) -> Vec<[i16; 64]> {
+    let bw = p.width.div_ceil(8);
+    let bh = p.height.div_ceil(8);
+    let mut blocks = Vec::with_capacity(bw * bh);
+    for by in 0..bh {
+        for bx in 0..bw {
+            let mut block = [0.0f32; 64];
+            for dy in 0..8 {
+                for dx in 0..8 {
+                    block[dy * 8 + dx] = p
+                        .at_clamped((bx * 8 + dx) as isize, (by * 8 + dy) as isize)
+                        - 128.0; // level shift
+                }
+            }
+            let coef = fdct8x8(&block);
+            blocks.push(to_zigzag(&quantize(&coef, table)));
+        }
+    }
+    blocks
+}
+
+/// Rebuild a plane from quantized zigzag blocks.
+fn blocks_to_plane(blocks: &[[i16; 64]], w: usize, h: usize, table: &[u16; 64]) -> Plane {
+    let bw = w.div_ceil(8);
+    let mut p = Plane::zeros(w, h);
+    for (bi, zz) in blocks.iter().enumerate() {
+        let bx = bi % bw;
+        let by = bi / bw;
+        let pix = idct8x8(&dequantize(&from_zigzag(zz), table));
+        for dy in 0..8 {
+            let y = by * 8 + dy;
+            if y >= h {
+                break;
+            }
+            for dx in 0..8 {
+                let x = bx * 8 + dx;
+                if x >= w {
+                    break;
+                }
+                p.set(x, y, pix[dy * 8 + dx] + 128.0);
+            }
+        }
+    }
+    p
+}
+
+/// Magnitude category (bit length) of a coefficient, JPEG style.
+#[inline]
+fn category(v: i32) -> u8 {
+    (32 - (v.unsigned_abs()).leading_zeros()) as u8
+}
+
+/// JPEG magnitude bits: positive as-is; negative as one's complement.
+#[inline]
+fn magnitude_bits(v: i32, cat: u8) -> u32 {
+    if v >= 0 {
+        v as u32
+    } else {
+        (v + (1 << cat) - 1) as u32
+    }
+}
+
+#[inline]
+fn extend_magnitude(bits: u32, cat: u8) -> i32 {
+    if cat == 0 {
+        return 0;
+    }
+    let half = 1i32 << (cat - 1);
+    if (bits as i32) < half {
+        bits as i32 - (1 << cat) + 1
+    } else {
+        bits as i32
+    }
+}
+
+/// Iterate the (dc_symbol, ac_symbols) stream of one component, feeding the
+/// visitor; shared by the frequency-count and entropy-write passes.
+fn code_component<FD, FA>(blocks: &[[i16; 64]], mut on_dc: FD, mut on_ac: FA)
+where
+    FD: FnMut(u8, u32),
+    FA: FnMut(u8, u8, u32),
+{
+    let mut prev_dc = 0i32;
+    for zz in blocks {
+        let dc = zz[0] as i32;
+        let diff = dc - prev_dc;
+        prev_dc = dc;
+        let cat = category(diff);
+        on_dc(cat, magnitude_bits(diff, cat));
+        let mut run = 0u8;
+        for &c in &zz[1..] {
+            if c == 0 {
+                run += 1;
+                continue;
+            }
+            while run >= 16 {
+                on_ac(0xF0, 0, 0); // ZRL
+                run -= 16;
+            }
+            let cat = category(c as i32);
+            on_ac((run << 4) | cat, cat, magnitude_bits(c as i32, cat));
+            run = 0;
+        }
+        if run > 0 {
+            on_ac(0x00, 0, 0); // EOB
+        }
+    }
+}
+
+fn count_component(blocks: &[[i16; 64]], dc: &mut [u64], ac: &mut [u64]) {
+    code_component(
+        blocks,
+        |cat, _| dc[cat as usize] += 1,
+        |sym, _, _| ac[sym as usize] += 1,
+    );
+}
+
+fn write_component(blocks: &[[i16; 64]], t_dc: &HuffTable, t_ac: &HuffTable, w: &mut BitWriter) {
+    let w = std::cell::RefCell::new(w);
+    code_component(
+        blocks,
+        |cat, bits| {
+            let mut w = w.borrow_mut();
+            let (c, l) = t_dc.encode(cat);
+            w.write(c as u32, l);
+            w.write(bits, cat);
+        },
+        |sym, cat, bits| {
+            let mut w = w.borrow_mut();
+            let (c, l) = t_ac.encode(sym);
+            w.write(c as u32, l);
+            w.write(bits, cat);
+        },
+    );
+}
+
+fn read_component(
+    r: &mut BitReader<'_>,
+    w: usize,
+    h: usize,
+    d_dc: &HuffDecoder,
+    d_ac: &HuffDecoder,
+    table: &[u16; 64],
+) -> Result<Plane> {
+    let bw = w.div_ceil(8);
+    let bh = h.div_ceil(8);
+    let mut blocks = Vec::with_capacity(bw * bh);
+    let mut prev_dc = 0i32;
+    for _ in 0..bw * bh {
+        let mut zz = [0i16; 64];
+        let cat = d_dc.decode(r).context("dc symbol")?;
+        let bits = r.bits(cat).context("dc magnitude")?;
+        let diff = extend_magnitude(bits, cat);
+        prev_dc += diff;
+        zz[0] = prev_dc as i16;
+        let mut k = 1usize;
+        while k < 64 {
+            let sym = d_ac.decode(r).context("ac symbol")?;
+            if sym == 0x00 {
+                break; // EOB
+            }
+            if sym == 0xF0 {
+                k += 16;
+                continue;
+            }
+            let run = (sym >> 4) as usize;
+            let cat = sym & 0x0F;
+            k += run;
+            if k >= 64 {
+                bail!("AC run overflow");
+            }
+            let bits = r.bits(cat).context("ac magnitude")?;
+            zz[k] = extend_magnitude(bits, cat) as i16;
+            k += 1;
+        }
+        blocks.push(zz);
+    }
+    Ok(blocks_to_plane(&blocks, w, h, table))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_sequence, Profile};
+    use crate::metrics::psnr::psnr;
+
+    #[test]
+    fn category_and_magnitude() {
+        assert_eq!(category(0), 0);
+        assert_eq!(category(1), 1);
+        assert_eq!(category(-1), 1);
+        assert_eq!(category(255), 8);
+        assert_eq!(category(-255), 8);
+        for v in [-300i32, -17, -1, 0, 1, 9, 255, 1023] {
+            let c = category(v);
+            assert_eq!(extend_magnitude(magnitude_bits(v, c), c), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_synthetic_frame_high_quality() {
+        let seq = generate_sequence(Profile::Uav123, 5, 0);
+        let img = &seq.frames[0];
+        let bytes = encode(img, 90);
+        let dec = decode(&bytes).unwrap();
+        assert_eq!((dec.width, dec.height), (img.width, img.height));
+        let p = psnr(img, &dec);
+        assert!(p > 28.0, "psnr={p}");
+    }
+
+    #[test]
+    fn quality_controls_size_and_psnr() {
+        let seq = generate_sequence(Profile::Otb100, 9, 1);
+        let img = &seq.frames[0];
+        let lo = encode(img, 20);
+        let hi = encode(img, 90);
+        assert!(lo.len() < hi.len(), "{} vs {}", lo.len(), hi.len());
+        let p_lo = psnr(img, &decode(&lo).unwrap());
+        let p_hi = psnr(img, &decode(&hi).unwrap());
+        assert!(p_hi > p_lo, "{p_hi} vs {p_lo}");
+    }
+
+    #[test]
+    fn compresses_below_raw() {
+        let seq = generate_sequence(Profile::DacSdc, 2, 0);
+        let img = &seq.frames[0];
+        let raw = img.pixels() * 3; // 8-bit raw
+        let enc = encode(img, 75);
+        assert!(enc.len() < raw, "{} vs raw {}", enc.len(), raw);
+    }
+
+    #[test]
+    fn odd_dimensions_roundtrip() {
+        let img = ImageRGB::from_fn(37, 23, |x, y| {
+            [
+                x as f32 / 37.0,
+                y as f32 / 23.0,
+                0.5 + 0.3 * ((x as f32 * 0.4).sin() * (y as f32 * 0.3).cos()),
+            ]
+        });
+        let dec = decode(&encode(&img, 80)).unwrap();
+        assert_eq!((dec.width, dec.height), (37, 23));
+        assert!(psnr(&img, &dec) > 25.0);
+    }
+
+    #[test]
+    fn rejects_corrupt_streams() {
+        let img = ImageRGB::from_fn(16, 16, |x, y| [x as f32 / 16.0, y as f32 / 16.0, 0.5]);
+        let bytes = encode(&img, 50);
+        assert!(decode(&bytes[..10]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn constant_image_tiny_encoding() {
+        let img = ImageRGB::from_fn(64, 64, |_, _| [0.5, 0.5, 0.5]);
+        let bytes = encode(&img, 75);
+        // All-zero ACs + tiny DC stream: should be far below 1 bpp.
+        assert!(bytes.len() < 800, "len={}", bytes.len());
+        let dec = decode(&bytes).unwrap();
+        assert!(psnr(&img, &dec) > 40.0);
+    }
+
+    #[test]
+    fn property_random_images_roundtrip() {
+        crate::util::propcheck::check_seeded("rjpg-roundtrip", 77, 16, |rng| {
+            let w = 8 + rng.below_usize(40);
+            let h = 8 + rng.below_usize(40);
+            let img = ImageRGB {
+                width: w,
+                height: h,
+                data: (0..w * h * 3).map(|_| rng.f32()).collect(),
+            };
+            let q = 10 + rng.below(90) as u8;
+            let dec = decode(&encode(&img, q)).unwrap();
+            assert_eq!((dec.width, dec.height), (w, h));
+            // Even at low quality decode must stay in range and finite.
+            assert!(dec.data.iter().all(|v| v.is_finite() && (0.0..=1.0).contains(v)));
+        });
+    }
+}

@@ -1,0 +1,187 @@
+//! RGB ↔ YCbCr (BT.601 full-range) conversion and 4:2:0 chroma
+//! subsampling — the front half of the baseline JPEG codec.
+
+/// One image plane (single channel, f32, nominal range [0, 255]).
+#[derive(Debug, Clone)]
+pub struct Plane {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<f32>,
+}
+
+impl Plane {
+    pub fn zeros(width: usize, height: usize) -> Self {
+        Plane { width, height, data: vec![0.0; width * height] }
+    }
+
+    #[inline]
+    pub fn at(&self, x: usize, y: usize) -> f32 {
+        self.data[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: f32) {
+        self.data[y * self.width + x] = v;
+    }
+
+    /// Clamped access (edge replication) for block extraction at borders.
+    #[inline]
+    pub fn at_clamped(&self, x: isize, y: isize) -> f32 {
+        let x = x.clamp(0, self.width as isize - 1) as usize;
+        let y = y.clamp(0, self.height as isize - 1) as usize;
+        self.at(x, y)
+    }
+}
+
+/// Convert interleaved RGB f32 `[0,1]` to Y, Cb, Cr planes in `[0,255]`.
+pub fn rgb_to_ycbcr(width: usize, height: usize, rgb01: &[f32]) -> (Plane, Plane, Plane) {
+    assert_eq!(rgb01.len(), width * height * 3);
+    let mut y = Plane::zeros(width, height);
+    let mut cb = Plane::zeros(width, height);
+    let mut cr = Plane::zeros(width, height);
+    for i in 0..width * height {
+        let r = rgb01[3 * i] * 255.0;
+        let g = rgb01[3 * i + 1] * 255.0;
+        let b = rgb01[3 * i + 2] * 255.0;
+        y.data[i] = 0.299 * r + 0.587 * g + 0.114 * b;
+        cb.data[i] = 128.0 - 0.168_736 * r - 0.331_264 * g + 0.5 * b;
+        cr.data[i] = 128.0 + 0.5 * r - 0.418_688 * g - 0.081_312 * b;
+    }
+    (y, cb, cr)
+}
+
+/// Convert Y, Cb, Cr planes (`[0,255]`, same size) back to interleaved RGB
+/// f32 `[0,1]`.
+pub fn ycbcr_to_rgb(y: &Plane, cb: &Plane, cr: &Plane) -> Vec<f32> {
+    assert_eq!((y.width, y.height), (cb.width, cb.height));
+    assert_eq!((y.width, y.height), (cr.width, cr.height));
+    let n = y.width * y.height;
+    let mut rgb = vec![0.0f32; n * 3];
+    for i in 0..n {
+        let yy = y.data[i];
+        let cbv = cb.data[i] - 128.0;
+        let crv = cr.data[i] - 128.0;
+        let r = yy + 1.402 * crv;
+        let g = yy - 0.344_136 * cbv - 0.714_136 * crv;
+        let b = yy + 1.772 * cbv;
+        rgb[3 * i] = (r / 255.0).clamp(0.0, 1.0);
+        rgb[3 * i + 1] = (g / 255.0).clamp(0.0, 1.0);
+        rgb[3 * i + 2] = (b / 255.0).clamp(0.0, 1.0);
+    }
+    rgb
+}
+
+/// 4:2:0 subsample: average each 2×2 block (odd edges replicate).
+pub fn subsample_420(p: &Plane) -> Plane {
+    let w2 = p.width.div_ceil(2);
+    let h2 = p.height.div_ceil(2);
+    let mut out = Plane::zeros(w2, h2);
+    for y in 0..h2 {
+        for x in 0..w2 {
+            let mut acc = 0.0;
+            for dy in 0..2 {
+                for dx in 0..2 {
+                    acc += p.at_clamped((2 * x + dx) as isize, (2 * y + dy) as isize);
+                }
+            }
+            out.set(x, y, acc / 4.0);
+        }
+    }
+    out
+}
+
+/// Upsample a 4:2:0 plane back to `(w, h)` by bilinear interpolation.
+pub fn upsample_420(p: &Plane, w: usize, h: usize) -> Plane {
+    let mut out = Plane::zeros(w, h);
+    for y in 0..h {
+        for x in 0..w {
+            // Sample position in subsampled grid (center-aligned).
+            let sx = (x as f32 - 0.5) / 2.0;
+            let sy = (y as f32 - 0.5) / 2.0;
+            let x0 = sx.floor() as isize;
+            let y0 = sy.floor() as isize;
+            let fx = sx - x0 as f32;
+            let fy = sy - y0 as f32;
+            let v00 = p.at_clamped(x0, y0);
+            let v10 = p.at_clamped(x0 + 1, y0);
+            let v01 = p.at_clamped(x0, y0 + 1);
+            let v11 = p.at_clamped(x0 + 1, y0 + 1);
+            let v = v00 * (1.0 - fx) * (1.0 - fy)
+                + v10 * fx * (1.0 - fy)
+                + v01 * (1.0 - fx) * fy
+                + v11 * fx * fy;
+            out.set(x, y, v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn rgb_ycbcr_roundtrip() {
+        let mut rng = Pcg32::seeded(4);
+        let (w, h) = (16, 8);
+        let rgb: Vec<f32> = (0..w * h * 3).map(|_| rng.f32()).collect();
+        let (y, cb, cr) = rgb_to_ycbcr(w, h, &rgb);
+        let back = ycbcr_to_rgb(&y, &cb, &cr);
+        for (a, b) in rgb.iter().zip(&back) {
+            assert!((a - b).abs() < 2.0 / 255.0, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gray_has_neutral_chroma() {
+        let rgb = vec![0.5f32; 4 * 4 * 3];
+        let (_, cb, cr) = rgb_to_ycbcr(4, 4, &rgb);
+        for i in 0..16 {
+            assert!((cb.data[i] - 128.0).abs() < 0.5);
+            assert!((cr.data[i] - 128.0).abs() < 0.5);
+        }
+    }
+
+    #[test]
+    fn subsample_upsample_constant_plane() {
+        let mut p = Plane::zeros(10, 6);
+        p.data.fill(100.0);
+        let s = subsample_420(&p);
+        assert_eq!((s.width, s.height), (5, 3));
+        let u = upsample_420(&s, 10, 6);
+        for &v in &u.data {
+            assert!((v - 100.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn subsample_handles_odd_sizes() {
+        let mut p = Plane::zeros(5, 5);
+        for (i, v) in p.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let s = subsample_420(&p);
+        assert_eq!((s.width, s.height), (3, 3));
+        let u = upsample_420(&s, 5, 5);
+        assert_eq!((u.width, u.height), (5, 5));
+    }
+
+    #[test]
+    fn subsample_smooth_gradient_small_error() {
+        let mut p = Plane::zeros(32, 32);
+        for y in 0..32 {
+            for x in 0..32 {
+                p.set(x, y, (x + y) as f32 * 2.0);
+            }
+        }
+        let u = upsample_420(&subsample_420(&p), 32, 32);
+        let mut max_err: f32 = 0.0;
+        for y in 2..30 {
+            for x in 2..30 {
+                max_err = max_err.max((u.at(x, y) - p.at(x, y)).abs());
+            }
+        }
+        assert!(max_err < 3.0, "max_err={max_err}");
+    }
+}

@@ -1,0 +1,170 @@
+//! 8×8 forward/inverse DCT-II for the baseline JPEG codec.
+//!
+//! Two implementations: a reference O(n⁴) transform (kept for tests) and a
+//! separable row/column fast path with a precomputed 8×8 cosine basis —
+//! the codec hot loop (see EXPERIMENTS.md §Perf for the before/after).
+
+/// Precomputed `c[u][x] = alpha(u) * cos((2x+1) u π / 16)` basis.
+struct Basis {
+    c: [[f32; 8]; 8],
+}
+
+impl Basis {
+    const fn alpha(u: usize) -> f32 {
+        if u == 0 {
+            0.353_553_39 // 1/sqrt(8)
+        } else {
+            0.5 // sqrt(2/8)
+        }
+    }
+
+    fn new() -> Self {
+        let mut c = [[0.0f32; 8]; 8];
+        for (u, row) in c.iter_mut().enumerate() {
+            for (x, v) in row.iter_mut().enumerate() {
+                *v = Self::alpha(u)
+                    * ((2 * x + 1) as f32 * u as f32 * std::f32::consts::PI / 16.0).cos();
+            }
+        }
+        Basis { c }
+    }
+}
+
+fn basis() -> &'static Basis {
+    use std::sync::OnceLock;
+    static B: OnceLock<Basis> = OnceLock::new();
+    B.get_or_init(Basis::new)
+}
+
+/// Forward 8×8 DCT-II (separable fast path). `block` is row-major.
+pub fn fdct8x8(block: &[f32; 64]) -> [f32; 64] {
+    let b = basis();
+    // Rows first: tmp[y][u] = Σ_x block[y][x] c[u][x]
+    let mut tmp = [0.0f32; 64];
+    for y in 0..8 {
+        for u in 0..8 {
+            let mut acc = 0.0;
+            for x in 0..8 {
+                acc += block[y * 8 + x] * b.c[u][x];
+            }
+            tmp[y * 8 + u] = acc;
+        }
+    }
+    // Columns: out[v][u] = Σ_y tmp[y][u] c[v][y]
+    let mut out = [0.0f32; 64];
+    for v in 0..8 {
+        for u in 0..8 {
+            let mut acc = 0.0;
+            for y in 0..8 {
+                acc += tmp[y * 8 + u] * b.c[v][y];
+            }
+            out[v * 8 + u] = acc;
+        }
+    }
+    out
+}
+
+/// Inverse 8×8 DCT (separable).
+pub fn idct8x8(coef: &[f32; 64]) -> [f32; 64] {
+    let b = basis();
+    // Columns first: tmp[y][u] = Σ_v coef[v][u] c[v][y]
+    let mut tmp = [0.0f32; 64];
+    for y in 0..8 {
+        for u in 0..8 {
+            let mut acc = 0.0;
+            for v in 0..8 {
+                acc += coef[v * 8 + u] * b.c[v][y];
+            }
+            tmp[y * 8 + u] = acc;
+        }
+    }
+    // Rows: out[y][x] = Σ_u tmp[y][u] c[u][x]
+    let mut out = [0.0f32; 64];
+    for y in 0..8 {
+        for x in 0..8 {
+            let mut acc = 0.0;
+            for u in 0..8 {
+                acc += tmp[y * 8 + u] * b.c[u][x];
+            }
+            out[y * 8 + x] = acc;
+        }
+    }
+    out
+}
+
+/// Reference O(n⁴) forward DCT, used only by tests to validate the fast path.
+pub fn fdct8x8_reference(block: &[f32; 64]) -> [f32; 64] {
+    let mut out = [0.0f32; 64];
+    for v in 0..8 {
+        for u in 0..8 {
+            let mut acc = 0.0f32;
+            for y in 0..8 {
+                for x in 0..8 {
+                    acc += block[y * 8 + x]
+                        * ((2 * x + 1) as f32 * u as f32 * std::f32::consts::PI / 16.0).cos()
+                        * ((2 * y + 1) as f32 * v as f32 * std::f32::consts::PI / 16.0).cos();
+                }
+            }
+            out[v * 8 + u] = 0.25 * Basis::alpha(u) * Basis::alpha(v) * acc * 4.0;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_block(seed: u64) -> [f32; 64] {
+        let mut rng = Pcg32::seeded(seed);
+        let mut b = [0.0f32; 64];
+        for v in &mut b {
+            *v = rng.range_f32(-128.0, 128.0);
+        }
+        b
+    }
+
+    #[test]
+    fn fast_matches_reference() {
+        for seed in 0..8 {
+            let b = rand_block(seed);
+            let fast = fdct8x8(&b);
+            let slow = fdct8x8_reference(&b);
+            for i in 0..64 {
+                assert!((fast[i] - slow[i]).abs() < 1e-2, "i={i}: {} vs {}", fast[i], slow[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        for seed in 0..8 {
+            let b = rand_block(100 + seed);
+            let r = idct8x8(&fdct8x8(&b));
+            for i in 0..64 {
+                assert!((b[i] - r[i]).abs() < 1e-3, "i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dc_of_constant_block() {
+        let b = [80.0f32; 64];
+        let c = fdct8x8(&b);
+        // DC = 8 * value for orthonormal scaling.
+        assert!((c[0] - 8.0 * 80.0).abs() < 1e-2);
+        for (i, &v) in c.iter().enumerate().skip(1) {
+            assert!(v.abs() < 1e-3, "AC {i} = {v}");
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let b = rand_block(42);
+        let c = fdct8x8(&b);
+        let eb: f32 = b.iter().map(|v| v * v).sum();
+        let ec: f32 = c.iter().map(|v| v * v).sum();
+        assert!((eb - ec).abs() / eb < 1e-4, "{eb} vs {ec}");
+    }
+}

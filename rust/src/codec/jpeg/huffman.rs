@@ -1,0 +1,364 @@
+//! Canonical Huffman coding for the entropy stage of the baseline JPEG
+//! codec. Per-image optimized tables (like `jpegtran -optimize`): the
+//! encoder counts symbol frequencies, builds length-limited canonical
+//! codes (≤ 16 bits, JPEG's limit), stores the `(counts-per-length,
+//! symbols)` spec in the header, and the decoder reconstructs the same
+//! codes via the standard MINCODE/MAXCODE/VALPTR procedure.
+
+pub const MAX_CODE_LEN: usize = 16;
+
+/// Canonical Huffman code table over byte symbols.
+#[derive(Debug, Clone)]
+pub struct HuffTable {
+    /// `counts[l]` = number of codes with length `l+1` (l in 0..16).
+    pub counts: [u8; MAX_CODE_LEN],
+    /// Symbols in canonical order (shortest code first, then by symbol).
+    pub symbols: Vec<u8>,
+    /// Encoder lookup: symbol -> (code, length). len==0 means absent.
+    enc: Vec<(u16, u8)>,
+}
+
+impl HuffTable {
+    /// Build an optimal (length-limited) table from symbol frequencies.
+    /// Symbols with zero frequency get no code. At least one symbol must
+    /// have nonzero frequency.
+    pub fn from_frequencies(freq: &[u64]) -> HuffTable {
+        assert!(freq.len() <= 256);
+        let mut lengths = huffman_code_lengths(freq);
+        limit_lengths(&mut lengths, freq);
+        Self::from_lengths(&lengths)
+    }
+
+    /// Build from per-symbol code lengths (0 = absent).
+    pub fn from_lengths(lengths: &[u8]) -> HuffTable {
+        let mut counts = [0u8; MAX_CODE_LEN];
+        // Canonical order: by (length, symbol).
+        let mut order: Vec<u8> = (0..lengths.len() as u16)
+            .filter(|&s| lengths[s as usize] > 0)
+            .map(|s| s as u8)
+            .collect();
+        order.sort_by_key(|&s| (lengths[s as usize], s));
+        for &s in &order {
+            counts[lengths[s as usize] as usize - 1] += 1;
+        }
+        let mut table = HuffTable { counts, symbols: order, enc: vec![(0, 0); lengths.len().max(256)] };
+        table.rebuild_encoder();
+        table
+    }
+
+    /// Reconstruct from the serialized `(counts, symbols)` spec.
+    pub fn from_spec(counts: [u8; MAX_CODE_LEN], symbols: Vec<u8>) -> HuffTable {
+        let total: usize = counts.iter().map(|&c| c as usize).sum();
+        assert_eq!(total, symbols.len(), "huffman spec mismatch");
+        let mut table = HuffTable { counts, symbols, enc: vec![(0, 0); 256] };
+        table.rebuild_encoder();
+        table
+    }
+
+    fn rebuild_encoder(&mut self) {
+        for e in &mut self.enc {
+            *e = (0, 0);
+        }
+        let mut code = 0u32; // u32: the trailing shift may exceed 16 bits
+        let mut k = 0usize;
+        for len in 1..=MAX_CODE_LEN {
+            for _ in 0..self.counts[len - 1] {
+                let sym = self.symbols[k];
+                self.enc[sym as usize] = (code as u16, len as u8);
+                code += 1;
+                k += 1;
+            }
+            code <<= 1;
+        }
+    }
+
+    /// `(code, length)` for a symbol; panics if the symbol has no code.
+    pub fn encode(&self, sym: u8) -> (u16, u8) {
+        let (c, l) = self.enc[sym as usize];
+        assert!(l > 0, "symbol {sym} has no code");
+        (c, l)
+    }
+
+    pub fn has(&self, sym: u8) -> bool {
+        self.enc[sym as usize].1 > 0
+    }
+
+    /// Build the decoder acceleration arrays (JPEG F.2.2.3 style).
+    pub fn decoder(&self) -> HuffDecoder {
+        let mut mincode = [0i32; MAX_CODE_LEN + 1];
+        let mut maxcode = [-1i32; MAX_CODE_LEN + 1];
+        let mut valptr = [0usize; MAX_CODE_LEN + 1];
+        let mut code = 0i32;
+        let mut k = 0usize;
+        for len in 1..=MAX_CODE_LEN {
+            let n = self.counts[len - 1] as usize;
+            if n > 0 {
+                valptr[len] = k;
+                mincode[len] = code;
+                code += n as i32;
+                maxcode[len] = code - 1;
+                k += n;
+            } else {
+                maxcode[len] = -1;
+            }
+            code <<= 1;
+        }
+        HuffDecoder { mincode, maxcode, valptr, symbols: self.symbols.clone() }
+    }
+}
+
+/// Decoder state built from a [`HuffTable`].
+#[derive(Debug, Clone)]
+pub struct HuffDecoder {
+    mincode: [i32; MAX_CODE_LEN + 1],
+    maxcode: [i32; MAX_CODE_LEN + 1],
+    valptr: [usize; MAX_CODE_LEN + 1],
+    symbols: Vec<u8>,
+}
+
+impl HuffDecoder {
+    /// Decode one symbol from the bit reader.
+    pub fn decode(&self, r: &mut super::bitio::BitReader<'_>) -> Option<u8> {
+        let mut code = 0i32;
+        for len in 1..=MAX_CODE_LEN {
+            code = (code << 1) | r.bit()? as i32;
+            if self.maxcode[len] >= 0 && code <= self.maxcode[len] && code >= self.mincode[len] {
+                let idx = self.valptr[len] + (code - self.mincode[len]) as usize;
+                return self.symbols.get(idx).copied();
+            }
+        }
+        None
+    }
+}
+
+/// Plain Huffman code lengths (unlimited) via pairwise merging.
+fn huffman_code_lengths(freq: &[u64]) -> Vec<u8> {
+    #[derive(Clone)]
+    struct Node {
+        weight: u64,
+        // leaf symbol or internal children indices
+        sym: Option<usize>,
+        kids: Option<(usize, usize)>,
+    }
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut active: Vec<usize> = Vec::new();
+    for (s, &f) in freq.iter().enumerate() {
+        if f > 0 {
+            nodes.push(Node { weight: f, sym: Some(s), kids: None });
+            active.push(nodes.len() - 1);
+        }
+    }
+    let mut lengths = vec![0u8; freq.len()];
+    match active.len() {
+        0 => return lengths,
+        1 => {
+            lengths[nodes[active[0]].sym.unwrap()] = 1;
+            return lengths;
+        }
+        _ => {}
+    }
+    while active.len() > 1 {
+        // Pull the two smallest (256 symbols max: linear scan is fine).
+        active.sort_by_key(|&i| std::cmp::Reverse(nodes[i].weight));
+        let a = active.pop().unwrap();
+        let b = active.pop().unwrap();
+        nodes.push(Node {
+            weight: nodes[a].weight + nodes[b].weight,
+            sym: None,
+            kids: Some((a, b)),
+        });
+        active.push(nodes.len() - 1);
+    }
+    // DFS to assign depths.
+    let root = active[0];
+    let mut stack = vec![(root, 0u8)];
+    while let Some((i, d)) = stack.pop() {
+        if let Some(s) = nodes[i].sym {
+            lengths[s] = d.max(1);
+        } else if let Some((a, b)) = nodes[i].kids {
+            stack.push((a, d + 1));
+            stack.push((b, d + 1));
+        }
+    }
+    lengths
+}
+
+/// Enforce the 16-bit length limit with JPEG Annex K.3 "Adjust_BITS":
+/// operate on the counts-per-length histogram (which preserves the Kraft
+/// sum exactly), then reassign lengths to symbols in the original
+/// shortest-first order.
+fn limit_lengths(lengths: &mut [u8], freq: &[u64]) {
+    let max_len = lengths.iter().copied().max().unwrap_or(0) as usize;
+    if max_len <= MAX_CODE_LEN {
+        return;
+    }
+    // counts[l] = number of codes of length l (1-indexed).
+    let mut counts = vec![0usize; max_len + 1];
+    for &l in lengths.iter() {
+        if l > 0 {
+            counts[l as usize] += 1;
+        }
+    }
+    // Adjust_BITS: fold levels deeper than MAX_CODE_LEN upward.
+    for i in (MAX_CODE_LEN + 1..=max_len).rev() {
+        while counts[i] > 0 {
+            // Find the deepest level j < i-1 with a code to push down.
+            let mut j = i - 2;
+            while counts[j] == 0 {
+                j -= 1;
+            }
+            counts[i] -= 2; // remove a leaf pair at depth i
+            counts[i - 1] += 1; // their parent becomes a leaf
+            counts[j + 1] += 2; // a leaf at depth j becomes internal w/ 2 leaves
+            counts[j] -= 1;
+        }
+    }
+    // Reassign: symbols ordered by (old length asc, freq desc) receive the
+    // new lengths shortest-first, preserving optimality ordering.
+    let mut order: Vec<usize> = (0..lengths.len()).filter(|&i| lengths[i] > 0).collect();
+    order.sort_by(|&a, &b| {
+        lengths[a]
+            .cmp(&lengths[b])
+            .then(freq[b].cmp(&freq[a]))
+            .then(a.cmp(&b))
+    });
+    let mut k = 0usize;
+    for (len, &cnt) in counts.iter().enumerate().take(MAX_CODE_LEN + 1).skip(1) {
+        for _ in 0..cnt {
+            lengths[order[k]] = len as u8;
+            k += 1;
+        }
+    }
+    debug_assert_eq!(k, order.len());
+    debug_assert!(kraft_ok(lengths), "kraft violated after limiting");
+}
+
+/// Check the Kraft inequality Σ 2^-l ≤ 1 (decodability).
+fn kraft_ok(lengths: &[u8]) -> bool {
+    let mut sum = 0u64; // in units of 2^-MAX_CODE_LEN
+    for &l in lengths {
+        if l > 0 {
+            sum += 1u64 << (MAX_CODE_LEN - l as usize);
+        }
+    }
+    sum <= 1u64 << MAX_CODE_LEN
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::bitio::{BitReader, BitWriter};
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn roundtrip_symbols(freq: &[u64], msg: &[u8]) {
+        let table = HuffTable::from_frequencies(freq);
+        let mut w = BitWriter::new();
+        for &s in msg {
+            let (c, l) = table.encode(s);
+            w.write(c as u32, l);
+        }
+        let bytes = w.finish();
+        let dec = table.decoder();
+        let mut r = BitReader::new(&bytes);
+        for &s in msg {
+            assert_eq!(dec.decode(&mut r), Some(s));
+        }
+    }
+
+    #[test]
+    fn two_symbol_roundtrip() {
+        let mut freq = vec![0u64; 256];
+        freq[7] = 10;
+        freq[42] = 3;
+        roundtrip_symbols(&freq, &[7, 42, 7, 7, 42, 7]);
+    }
+
+    #[test]
+    fn single_symbol_gets_one_bit() {
+        let mut freq = vec![0u64; 256];
+        freq[5] = 100;
+        let t = HuffTable::from_frequencies(&freq);
+        assert_eq!(t.encode(5).1, 1);
+        roundtrip_symbols(&freq, &[5, 5, 5]);
+    }
+
+    #[test]
+    fn skewed_distribution_roundtrip() {
+        let mut rng = Pcg32::seeded(31);
+        let mut freq = vec![0u64; 256];
+        for s in 0..64u64 {
+            freq[s as usize] = 1 + (1 << (s % 13));
+        }
+        let msg: Vec<u8> = (0..5_000).map(|_| rng.below(64) as u8).collect();
+        roundtrip_symbols(&freq, &msg);
+    }
+
+    #[test]
+    fn frequent_symbols_get_shorter_codes() {
+        let mut freq = vec![0u64; 256];
+        freq[0] = 1_000_000;
+        freq[1] = 10;
+        freq[2] = 10;
+        freq[3] = 10;
+        let t = HuffTable::from_frequencies(&freq);
+        assert!(t.encode(0).1 <= t.encode(1).1);
+    }
+
+    #[test]
+    fn lengths_capped_at_16() {
+        // Fibonacci-ish frequencies force long codes without a limit.
+        let mut freq = vec![0u64; 64];
+        let mut a = 1u64;
+        let mut b = 1u64;
+        for f in freq.iter_mut() {
+            *f = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let t = HuffTable::from_frequencies(&freq);
+        for s in 0..64u8 {
+            assert!(t.encode(s).1 as usize <= MAX_CODE_LEN);
+        }
+        // And it still decodes.
+        let msg: Vec<u8> = (0..64).collect();
+        roundtrip_symbols(&freq, &msg);
+    }
+
+    #[test]
+    fn spec_roundtrip() {
+        let mut freq = vec![0u64; 256];
+        for s in 0..32 {
+            freq[s] = (s as u64 + 1) * 7;
+        }
+        let t = HuffTable::from_frequencies(&freq);
+        let t2 = HuffTable::from_spec(t.counts, t.symbols.clone());
+        for s in 0..32u8 {
+            assert_eq!(t.encode(s), t2.encode(s));
+        }
+    }
+
+    #[test]
+    fn property_random_frequencies_decode() {
+        crate::util::propcheck::check("huffman-roundtrip", |rng| {
+            let nsyms = 2 + rng.below_usize(100);
+            let mut freq = vec![0u64; 256];
+            for s in 0..nsyms {
+                freq[s] = 1 + rng.below(1000) as u64;
+            }
+            let msg: Vec<u8> = (0..200).map(|_| rng.below(nsyms as u32) as u8).collect();
+            let table = HuffTable::from_frequencies(&freq);
+            let mut w = BitWriter::new();
+            for &s in &msg {
+                let (c, l) = table.encode(s);
+                w.write(c as u32, l);
+            }
+            let bytes = w.finish();
+            let dec = table.decoder();
+            let mut r = BitReader::new(&bytes);
+            for &s in &msg {
+                assert_eq!(dec.decode(&mut r), Some(s));
+            }
+        });
+    }
+}

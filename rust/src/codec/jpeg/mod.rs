@@ -1,0 +1,15 @@
+//! From-scratch baseline JPEG codec (the paper's compression baseline and
+//! the format edge devices upload to the fog node).
+//!
+//! Pipeline: RGB→YCbCr → 4:2:0 subsampling → 8×8 DCT → quality-scaled
+//! quantization → zigzag → DPCM/run-length → optimized canonical Huffman.
+
+pub mod bitio;
+pub mod coder;
+pub mod color;
+pub mod dct;
+pub mod huffman;
+pub mod quant;
+pub mod zigzag;
+
+pub use coder::{decode, encode};

@@ -1,0 +1,95 @@
+//! JPEG quantization tables with IJG-style quality scaling.
+
+/// Annex-K luminance base table.
+pub const LUMA_BASE: [u16; 64] = [
+    16, 11, 10, 16, 24, 40, 51, 61, //
+    12, 12, 14, 19, 26, 58, 60, 55, //
+    14, 13, 16, 24, 40, 57, 69, 56, //
+    14, 17, 22, 29, 51, 87, 80, 62, //
+    18, 22, 37, 56, 68, 109, 103, 77, //
+    24, 35, 55, 64, 81, 104, 113, 92, //
+    49, 64, 78, 87, 103, 121, 120, 101, //
+    72, 92, 95, 98, 112, 100, 103, 99,
+];
+
+/// Annex-K chrominance base table.
+pub const CHROMA_BASE: [u16; 64] = [
+    17, 18, 24, 47, 99, 99, 99, 99, //
+    18, 21, 26, 66, 99, 99, 99, 99, //
+    24, 26, 56, 99, 99, 99, 99, 99, //
+    47, 66, 99, 99, 99, 99, 99, 99, //
+    99, 99, 99, 99, 99, 99, 99, 99, //
+    99, 99, 99, 99, 99, 99, 99, 99, //
+    99, 99, 99, 99, 99, 99, 99, 99, //
+    99, 99, 99, 99, 99, 99, 99, 99,
+];
+
+/// Scale a base table by JPEG quality `q ∈ [1, 100]` (IJG formula).
+pub fn scaled_table(base: &[u16; 64], quality: u8) -> [u16; 64] {
+    let q = quality.clamp(1, 100) as i32;
+    let scale = if q < 50 { 5000 / q } else { 200 - 2 * q };
+    let mut out = [0u16; 64];
+    for i in 0..64 {
+        let v = (base[i] as i32 * scale + 50) / 100;
+        out[i] = v.clamp(1, 255) as u16;
+    }
+    out
+}
+
+/// Quantize DCT coefficients: `round(coef / table)`.
+pub fn quantize(coef: &[f32; 64], table: &[u16; 64]) -> [i16; 64] {
+    let mut out = [0i16; 64];
+    for i in 0..64 {
+        out[i] = (coef[i] / table[i] as f32).round() as i16;
+    }
+    out
+}
+
+/// Dequantize: `q * table`.
+pub fn dequantize(q: &[i16; 64], table: &[u16; 64]) -> [f32; 64] {
+    let mut out = [0.0f32; 64];
+    for i in 0..64 {
+        out[i] = q[i] as f32 * table[i] as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quality_50_is_base() {
+        assert_eq!(scaled_table(&LUMA_BASE, 50), LUMA_BASE);
+    }
+
+    #[test]
+    fn quality_monotone() {
+        // Higher quality → smaller divisors → finer quantization.
+        let q30 = scaled_table(&LUMA_BASE, 30);
+        let q80 = scaled_table(&LUMA_BASE, 80);
+        for i in 0..64 {
+            assert!(q80[i] <= q30[i]);
+        }
+    }
+
+    #[test]
+    fn quality_100_near_lossless() {
+        let q100 = scaled_table(&LUMA_BASE, 100);
+        assert!(q100.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn quant_dequant_error_bounded() {
+        let table = scaled_table(&LUMA_BASE, 50);
+        let mut coef = [0.0f32; 64];
+        for (i, c) in coef.iter_mut().enumerate() {
+            *c = (i as f32 - 32.0) * 7.3;
+        }
+        let q = quantize(&coef, &table);
+        let d = dequantize(&q, &table);
+        for i in 0..64 {
+            assert!((coef[i] - d[i]).abs() <= table[i] as f32 / 2.0 + 1e-3);
+        }
+    }
+}

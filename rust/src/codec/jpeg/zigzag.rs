@@ -1,0 +1,63 @@
+//! Zigzag scan order for 8×8 coefficient blocks.
+
+/// `ZIGZAG[k]` is the row-major index of the k-th coefficient in zigzag
+/// order (standard JPEG scan).
+pub const ZIGZAG: [usize; 64] = [
+    0, 1, 8, 16, 9, 2, 3, 10, //
+    17, 24, 32, 25, 18, 11, 4, 5, //
+    12, 19, 26, 33, 40, 48, 41, 34, //
+    27, 20, 13, 6, 7, 14, 21, 28, //
+    35, 42, 49, 56, 57, 50, 43, 36, //
+    29, 22, 15, 23, 30, 37, 44, 51, //
+    58, 59, 52, 45, 38, 31, 39, 46, //
+    53, 60, 61, 54, 47, 55, 62, 63,
+];
+
+/// Reorder a row-major block into zigzag order.
+pub fn to_zigzag(block: &[i16; 64]) -> [i16; 64] {
+    let mut out = [0i16; 64];
+    for (k, &idx) in ZIGZAG.iter().enumerate() {
+        out[k] = block[idx];
+    }
+    out
+}
+
+/// Inverse: zigzag order back to row-major.
+pub fn from_zigzag(zz: &[i16; 64]) -> [i16; 64] {
+    let mut out = [0i16; 64];
+    for (k, &idx) in ZIGZAG.iter().enumerate() {
+        out[idx] = zz[k];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zigzag_is_permutation() {
+        let mut seen = [false; 64];
+        for &i in &ZIGZAG {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn zigzag_starts_dc_then_first_two_acs() {
+        assert_eq!(ZIGZAG[0], 0);
+        assert_eq!(ZIGZAG[1], 1); // (0,1)
+        assert_eq!(ZIGZAG[2], 8); // (1,0)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut b = [0i16; 64];
+        for (i, v) in b.iter_mut().enumerate() {
+            *v = i as i16 * 3 - 50;
+        }
+        assert_eq!(from_zigzag(&to_zigzag(&b)), b);
+    }
+}

@@ -1,0 +1,5 @@
+//! Compression codecs: the baseline JPEG implementation and (in `crate::inr`)
+//! the INR weight format. Kept separate from `inr` because JPEG operates on
+//! pixels while INR "encoding" is neural-network training on the fog node.
+
+pub mod jpeg;

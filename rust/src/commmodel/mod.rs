@@ -1,0 +1,226 @@
+//! Analytical multi-device communication model (paper §4).
+//!
+//! Serverless edge computing: every device `i` sends `m_i` bytes to `n_i`
+//! receivers directly, so `D_s = Σ n_i · m_i`.
+//!
+//! Fog computing: a subset of devices (`uses_fog = true`) upload their
+//! JPEG data to the fog node (cost `m_i`), which INR-compresses it with
+//! ratio `α = INR/JPEG` and broadcasts to the `n_i` receivers (cost
+//! `n_i · α · m_i`); the rest exchange JPEG directly. So
+//! `D_f = Σ_fog (n_i·α·m_i + m_i) + Σ_direct n_i·m_i`.
+//!
+//! The crossover condition derived in the paper — fog+INR wins for device
+//! `i` iff `n_i > 1/(1-α)` — is `fog_beneficial`, and
+//! `optimal_assignment` applies it per device. `train_at_edge_beneficial`
+//! reproduces the §4.2 fog-vs-edge training decision (Fig 10's pink/green
+//! regions): moving training to the fog costs two model transfers
+//! (weights there and back).
+
+/// One edge device in the model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Device {
+    /// Bytes of (JPEG) data this device produces and wants to share.
+    pub data_bytes: f64,
+    /// Number of receiver devices it must reach.
+    pub receivers: usize,
+    /// Whether it routes through the fog node for INR compression.
+    pub uses_fog: bool,
+}
+
+/// Total data transmitted in a pure serverless network: `D_s = Σ n_i m_i`.
+pub fn serverless_total(devices: &[Device]) -> f64 {
+    devices.iter().map(|d| d.receivers as f64 * d.data_bytes).sum()
+}
+
+/// Total data transmitted in a fog network with INR compression ratio
+/// `alpha` (`INR size / JPEG size`, 0 < α): `D_f = M1 + M2 + M3`.
+pub fn fog_total(devices: &[Device], alpha: f64) -> f64 {
+    let m1: f64 = devices
+        .iter()
+        .filter(|d| d.uses_fog)
+        .map(|d| d.receivers as f64 * alpha * d.data_bytes)
+        .sum();
+    let m2: f64 = devices.iter().filter(|d| d.uses_fog).map(|d| d.data_bytes).sum();
+    let m3: f64 = devices
+        .iter()
+        .filter(|d| !d.uses_fog)
+        .map(|d| d.receivers as f64 * d.data_bytes)
+        .sum();
+    m1 + m2 + m3
+}
+
+/// The paper's per-device crossover: routing through the fog is beneficial
+/// iff `(1 - α) · n_i - 1 > 0`, i.e. `n_i > 1 / (1 - α)` (for α < 1).
+pub fn fog_beneficial(receivers: usize, alpha: f64) -> bool {
+    if alpha >= 1.0 {
+        return false; // "compression" that grows data never helps
+    }
+    (1.0 - alpha) * receivers as f64 - 1.0 > 0.0
+}
+
+/// Minimum receiver count at which fog routing wins: `⌈1/(1-α)⌉(+1 on tie)`.
+pub fn min_receivers_for_fog(alpha: f64) -> Option<usize> {
+    if alpha >= 1.0 {
+        return None;
+    }
+    let thr = 1.0 / (1.0 - alpha);
+    let mut n = thr.ceil() as usize;
+    if (n as f64 - thr).abs() < 1e-12 {
+        n += 1; // strict inequality required
+    }
+    Some(n.max(1))
+}
+
+/// Assign each device the cheaper route (fog iff beneficial), returning the
+/// optimized device list.
+pub fn optimal_assignment(devices: &[Device], alpha: f64) -> Vec<Device> {
+    devices
+        .iter()
+        .map(|d| Device { uses_fog: fog_beneficial(d.receivers, alpha), ..*d })
+        .collect()
+}
+
+/// §4.2 training-location decision: training at the edge transfers the
+/// (compressed) training data once to each training device; training at
+/// the fog transfers the model weights there and back (`2 · model_bytes`)
+/// per training device. Edge training is beneficial iff the data volume is
+/// smaller.
+pub fn train_at_edge_beneficial(train_data_bytes: f64, model_bytes: f64) -> bool {
+    train_data_bytes < 2.0 * model_bytes
+}
+
+/// Build a uniform all-to-all network of `k` devices each producing
+/// `m` bytes (Fig 8(a)'s setting: every device talks to every other).
+pub fn uniform_all_to_all(k: usize, m: f64, uses_fog: bool) -> Vec<Device> {
+    (0..k)
+        .map(|_| Device { data_bytes: m, receivers: k.saturating_sub(1), uses_fog })
+        .collect()
+}
+
+/// Build a `k`-device network where each device sends to exactly `n`
+/// receivers (Fig 8(b)'s setting, k fixed, n swept).
+pub fn uniform_fixed_receivers(k: usize, n: usize, m: f64, uses_fog: bool) -> Vec<Device> {
+    (0..k).map(|_| Device { data_bytes: m, receivers: n, uses_fog }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    #[test]
+    fn serverless_matches_formula() {
+        let devs = vec![
+            Device { data_bytes: 100.0, receivers: 3, uses_fog: false },
+            Device { data_bytes: 50.0, receivers: 2, uses_fog: false },
+        ];
+        assert_eq!(serverless_total(&devs), 300.0 + 100.0);
+    }
+
+    #[test]
+    fn fog_total_decomposes_m1_m2_m3() {
+        let devs = vec![
+            Device { data_bytes: 100.0, receivers: 4, uses_fog: true },
+            Device { data_bytes: 80.0, receivers: 2, uses_fog: false },
+        ];
+        let alpha = 0.2;
+        // M1 = 4*0.2*100 = 80, M2 = 100, M3 = 160
+        assert!((fog_total(&devs, alpha) - (80.0 + 100.0 + 160.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_identity_ds_minus_df() {
+        // D_s - D_f = Σ_fog m_i [(1-α) n_i - 1]  (paper §4.2)
+        let alpha = 0.15;
+        let devs = vec![
+            Device { data_bytes: 120.0, receivers: 5, uses_fog: true },
+            Device { data_bytes: 60.0, receivers: 1, uses_fog: true },
+            Device { data_bytes: 200.0, receivers: 3, uses_fog: false },
+        ];
+        let ds = serverless_total(&devs);
+        let df = fog_total(&devs, alpha);
+        let expected: f64 = devs
+            .iter()
+            .filter(|d| d.uses_fog)
+            .map(|d| d.data_bytes * ((1.0 - alpha) * d.receivers as f64 - 1.0))
+            .sum();
+        assert!((ds - df - expected).abs() < 1e-9, "{} vs {}", ds - df, expected);
+    }
+
+    #[test]
+    fn crossover_condition() {
+        // α = 0.2 → 1/(1-α) = 1.25 → fog wins from n = 2.
+        assert!(!fog_beneficial(1, 0.2));
+        assert!(fog_beneficial(2, 0.2));
+        assert_eq!(min_receivers_for_fog(0.2), Some(2));
+        // α = 0.5 → threshold 2 (strict) → wins from n = 3.
+        assert!(!fog_beneficial(2, 0.5));
+        assert!(fog_beneficial(3, 0.5));
+        assert_eq!(min_receivers_for_fog(0.5), Some(3));
+        // α ≥ 1 never helps.
+        assert!(!fog_beneficial(100, 1.0));
+        assert_eq!(min_receivers_for_fog(1.2), None);
+    }
+
+    #[test]
+    fn optimal_assignment_never_worse_than_pure_strategies() {
+        propcheck::check("optimal-assignment", |rng| {
+            let alpha = rng.range_f32(0.05, 0.95) as f64;
+            let k = 2 + rng.below_usize(10);
+            let devs: Vec<Device> = (0..k)
+                .map(|_| Device {
+                    data_bytes: rng.range_f32(10.0, 1000.0) as f64,
+                    receivers: rng.below_usize(k.max(2)),
+                    uses_fog: false,
+                })
+                .collect();
+            let all_fog: Vec<Device> =
+                devs.iter().map(|d| Device { uses_fog: true, ..*d }).collect();
+            let opt = optimal_assignment(&devs, alpha);
+            let d_opt = fog_total(&opt, alpha);
+            let d_serverless = serverless_total(&devs);
+            let d_all_fog = fog_total(&all_fog, alpha);
+            assert!(d_opt <= d_serverless + 1e-9, "{d_opt} vs serverless {d_serverless}");
+            assert!(d_opt <= d_all_fog + 1e-9, "{d_opt} vs all-fog {d_all_fog}");
+        });
+    }
+
+    #[test]
+    fn fig8a_shape_fog_wins_at_scale() {
+        // All-to-all, α like the measured Res-Rapid-INR ratio (~0.15):
+        // fog total grows ~linearly in k, serverless quadratically.
+        let alpha = 0.15;
+        let m = 1e6;
+        let mut last_ratio = 0.0;
+        for k in [2usize, 4, 6, 8, 10, 12] {
+            let s = serverless_total(&uniform_all_to_all(k, m, false));
+            let f = fog_total(&uniform_all_to_all(k, m, true), alpha);
+            let ratio = s / f;
+            if k >= 4 {
+                assert!(ratio > last_ratio, "ratio must grow with k");
+            }
+            last_ratio = ratio;
+        }
+        // At k = 10 the paper reports 3.43–5.16×; with α = 0.15 we get
+        // 9m/(9·0.15m + m) ≈ 3.83 — same regime.
+        let k = 10;
+        let s = serverless_total(&uniform_all_to_all(k, m, false));
+        let f = fog_total(&uniform_all_to_all(k, m, true), alpha);
+        assert!((3.0..6.0).contains(&(s / f)), "ratio {}", s / f);
+    }
+
+    #[test]
+    fn train_location_decision() {
+        assert!(train_at_edge_beneficial(1e6, 1e6)); // data < 2×model
+        assert!(!train_at_edge_beneficial(3e6, 1e6)); // data > 2×model
+    }
+
+    #[test]
+    fn uniform_builders() {
+        let a = uniform_all_to_all(5, 10.0, true);
+        assert_eq!(a.len(), 5);
+        assert!(a.iter().all(|d| d.receivers == 4 && d.uses_fog));
+        let b = uniform_fixed_receivers(11, 3, 10.0, false);
+        assert!(b.iter().all(|d| d.receivers == 3));
+    }
+}

@@ -1,0 +1,281 @@
+//! Configuration system: loads `configs/arch.json` (shared with
+//! `python/compile/aot.py`) into typed architecture tables, plus runtime
+//! knobs (network bandwidth, training hyper-parameters) with defaults
+//! matching the paper's experiment settings (§5.1).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::data::Profile;
+use crate::inr::arch::{MlpArch, NervArch, ObjectBin};
+use crate::util::json::{parse, Json};
+
+/// Rapid-INR architecture set for one dataset profile (Table 1 analogue).
+#[derive(Debug, Clone)]
+pub struct RapidProfile {
+    pub background: MlpArch,
+    pub baseline: MlpArch,
+    pub object_bins: Vec<ObjectBin>,
+}
+
+impl RapidProfile {
+    /// The size bin an object with padded bbox `side = max(w, h)` falls in.
+    pub fn bin_for_side(&self, side: usize) -> Option<(usize, &ObjectBin)> {
+        self.object_bins
+            .iter()
+            .enumerate()
+            .find(|(_, b)| side <= b.max_side)
+    }
+}
+
+/// NeRV sequence-length bin (Table 2 analogue: sized by video length).
+#[derive(Debug, Clone)]
+pub struct NervBin {
+    pub max_frames: usize,
+    pub background: NervArch,
+    pub baseline: NervArch,
+}
+
+/// Full architecture configuration.
+#[derive(Debug, Clone)]
+pub struct ArchConfig {
+    pub frame_w: usize,
+    pub frame_h: usize,
+    /// Frames per NeRV decode call (fixed HLO batch).
+    pub nerv_decode_batch: usize,
+    /// Pixel rows in Rapid train/decode artifacts (= frame_w · frame_h).
+    pub train_pixel_batch: usize,
+    pub detect: DetectConfig,
+    rapid: Vec<(Profile, RapidProfile)>,
+    pub nerv_archs: Vec<NervArch>,
+    pub nerv_bins: Vec<NervBin>,
+}
+
+/// TinyDet backbone configuration (YOLOv8 stand-in).
+#[derive(Debug, Clone, Copy)]
+pub struct DetectConfig {
+    pub batch: usize,
+    pub base_channels: usize,
+    pub stages: usize,
+    pub head_hidden: usize,
+}
+
+impl ArchConfig {
+    /// Load from a JSON file (normally `configs/arch.json`).
+    pub fn load(path: &Path) -> Result<ArchConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json_text(&text)
+    }
+
+    /// Locate `configs/arch.json` relative to the repo root (walks up from
+    /// the current directory — benches/examples run from different cwds).
+    pub fn load_default() -> Result<ArchConfig> {
+        let path = find_repo_file("configs/arch.json")?;
+        Self::load(&path)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<ArchConfig> {
+        let j = parse(text).map_err(|e| anyhow!("arch.json: {e}"))?;
+        let frame = j.get("frame").ok_or_else(|| anyhow!("missing frame"))?;
+        let frame_w = frame.get("width").and_then(Json::as_usize).unwrap_or(128);
+        let frame_h = frame.get("height").and_then(Json::as_usize).unwrap_or(96);
+
+        let det = j.get("detect").ok_or_else(|| anyhow!("missing detect"))?;
+        let detect = DetectConfig {
+            batch: det.get("batch").and_then(Json::as_usize).unwrap_or(8),
+            base_channels: det.get("base_channels").and_then(Json::as_usize).unwrap_or(16),
+            stages: det.get("stages").and_then(Json::as_usize).unwrap_or(3),
+            head_hidden: det.get("head_hidden").and_then(Json::as_usize).unwrap_or(64),
+        };
+
+        let mut rapid = Vec::new();
+        let rj = j.get("rapid").ok_or_else(|| anyhow!("missing rapid"))?;
+        for p in Profile::ALL {
+            let pj = rj
+                .get(p.name())
+                .ok_or_else(|| anyhow!("missing rapid profile {}", p.name()))?;
+            let background =
+                MlpArch::from_json(&format!("{}_bg", p.name()), pj.get("background").unwrap())
+                    .ok_or_else(|| anyhow!("bad background arch for {}", p.name()))?;
+            let baseline =
+                MlpArch::from_json(&format!("{}_base", p.name()), pj.get("baseline").unwrap())
+                    .ok_or_else(|| anyhow!("bad baseline arch for {}", p.name()))?;
+            let mut object_bins = Vec::new();
+            for (i, bj) in pj
+                .get("object_bins")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing object_bins"))?
+                .iter()
+                .enumerate()
+            {
+                let max_side = bj
+                    .get("max_side")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("bad max_side"))?;
+                let arch = MlpArch::from_json(
+                    &format!("{}_obj{}", p.name(), i),
+                    bj.get("arch").ok_or_else(|| anyhow!("missing bin arch"))?,
+                )
+                .ok_or_else(|| anyhow!("bad bin arch"))?;
+                object_bins.push(ObjectBin { max_side, arch });
+            }
+            if !object_bins.windows(2).all(|w| w[0].max_side < w[1].max_side) {
+                bail!("object bins must have increasing max_side");
+            }
+            rapid.push((p, RapidProfile { background, baseline, object_bins }));
+        }
+
+        let nj = j.get("nerv").ok_or_else(|| anyhow!("missing nerv"))?;
+        let mut nerv_archs = Vec::new();
+        for name in [
+            "background_small",
+            "background_medium",
+            "background_large",
+            "baseline_small",
+            "baseline_medium",
+            "baseline_large",
+        ] {
+            let aj = nj.get(name).ok_or_else(|| anyhow!("missing nerv arch {name}"))?;
+            nerv_archs.push(
+                NervArch::from_json(name, aj).ok_or_else(|| anyhow!("bad nerv arch {name}"))?,
+            );
+        }
+        let mut nerv_bins = Vec::new();
+        for bj in nj
+            .get("sequence_bins")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing sequence_bins"))?
+        {
+            let max_frames = bj
+                .get("max_frames")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("bad max_frames"))?;
+            let bg_name = bj.get("background").and_then(Json::as_str).unwrap_or_default();
+            let base_name = bj.get("baseline").and_then(Json::as_str).unwrap_or_default();
+            let find = |n: &str| -> Result<NervArch> {
+                nerv_archs
+                    .iter()
+                    .find(|a| a.name == n)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("unknown nerv arch {n}"))
+            };
+            nerv_bins.push(NervBin {
+                max_frames,
+                background: find(bg_name)?,
+                baseline: find(base_name)?,
+            });
+        }
+
+        Ok(ArchConfig {
+            frame_w,
+            frame_h,
+            nerv_decode_batch: j.get("nerv_decode_batch").and_then(Json::as_usize).unwrap_or(4),
+            train_pixel_batch: j
+                .get("train_pixel_batch")
+                .and_then(Json::as_usize)
+                .unwrap_or(frame_w * frame_h),
+            detect,
+            rapid,
+            nerv_archs,
+            nerv_bins,
+        })
+    }
+
+    pub fn rapid(&self, p: Profile) -> &RapidProfile {
+        &self.rapid.iter().find(|(q, _)| *q == p).expect("profile present").1
+    }
+
+    /// NeRV bin for a sequence of `n_frames` (falls back to the largest).
+    pub fn nerv_bin(&self, n_frames: usize) -> &NervBin {
+        self.nerv_bins
+            .iter()
+            .find(|b| n_frames <= b.max_frames)
+            .unwrap_or_else(|| self.nerv_bins.last().expect("nonempty nerv bins"))
+    }
+
+    /// All distinct Rapid MLP archs (for artifact enumeration).
+    pub fn all_mlp_archs(&self) -> Vec<&MlpArch> {
+        let mut out: Vec<&MlpArch> = Vec::new();
+        for (_, rp) in &self.rapid {
+            out.push(&rp.background);
+            out.push(&rp.baseline);
+            for b in &rp.object_bins {
+                out.push(&b.arch);
+            }
+        }
+        out
+    }
+}
+
+/// Walk up from cwd looking for `rel`; also honors `RESIDUAL_INR_ROOT`.
+pub fn find_repo_file(rel: &str) -> Result<PathBuf> {
+    if let Ok(root) = std::env::var("RESIDUAL_INR_ROOT") {
+        let p = Path::new(&root).join(rel);
+        if p.exists() {
+            return Ok(p);
+        }
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let candidate = dir.join(rel);
+        if candidate.exists() {
+            return Ok(candidate);
+        }
+        if !dir.pop() {
+            bail!("could not locate {rel} above the current directory (set RESIDUAL_INR_ROOT)");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_repo_config() {
+        let cfg = ArchConfig::load_default().unwrap();
+        assert_eq!(cfg.frame_w, 128);
+        assert_eq!(cfg.frame_h, 96);
+        for p in Profile::ALL {
+            let rp = cfg.rapid(p);
+            // Table 1 ordering: background strictly smaller than baseline.
+            assert!(rp.background.param_count() < rp.baseline.param_count());
+            // Object INRs are tiny (≤ ~15% of the baseline).
+            for b in &rp.object_bins {
+                assert!(b.arch.param_count() * 4 < rp.baseline.param_count());
+            }
+            assert_eq!(rp.object_bins.len(), 4);
+        }
+        assert_eq!(cfg.nerv_bins.len(), 3);
+        for b in &cfg.nerv_bins {
+            // Table 2 ordering: background NeRV smaller than same-bin baseline.
+            assert!(b.background.param_count() < b.baseline.param_count());
+            assert_eq!(b.background.frame_w(), cfg.frame_w);
+            assert_eq!(b.background.frame_h(), cfg.frame_h);
+        }
+    }
+
+    #[test]
+    fn bin_selection() {
+        let cfg = ArchConfig::load_default().unwrap();
+        let rp = cfg.rapid(Profile::Uav123);
+        let (i0, b0) = rp.bin_for_side(10).unwrap();
+        assert_eq!(i0, 0);
+        assert!(b0.max_side >= 10);
+        let (i3, _) = rp.bin_for_side(30).unwrap();
+        assert_eq!(i3, 3);
+        assert!(rp.bin_for_side(100).is_none());
+        // NeRV bins by sequence length.
+        assert_eq!(cfg.nerv_bin(20).max_frames, 32);
+        assert_eq!(cfg.nerv_bin(40).max_frames, 48);
+        assert_eq!(cfg.nerv_bin(64).max_frames, 64);
+        assert_eq!(cfg.nerv_bin(1000).max_frames, 64); // clamps to largest
+    }
+
+    #[test]
+    fn rejects_malformed_config() {
+        assert!(ArchConfig::from_json_text("{}").is_err());
+        assert!(ArchConfig::from_json_text("not json").is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Edge-device ingest: received [`Record`]s → in-memory [`StoredImage`]s.
+//!
+//! §3.2.1 of the paper: "all INR weights are transferred once from device
+//! storage to device memory in tensor format" before training — here that
+//! is the one-time dequantization to f32 `WeightSet`s shared via `Arc`.
+//! After ingest, training is CPU-free in the paper's sense: no JPEG
+//! decode or storage access on the training path for INR methods.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::config::{ArchConfig, RapidProfile};
+use crate::data::Profile;
+use crate::inr::arch::{MlpArch, ObjectBin};
+use crate::inr::{dequantize, Record};
+use crate::pipeline::group::{ObjOverlay, StoredImage};
+use crate::pipeline::decoder::frame_time;
+
+/// The device-side store: one entry per frame, in global frame order.
+#[derive(Debug, Default)]
+pub struct EdgeStore {
+    pub items: Vec<StoredImage>,
+    /// Bytes held in device memory (paper's storage metric).
+    pub memory_bytes: usize,
+}
+
+/// Resolve an arch key (`names::mlp_key`) against a profile's arch table.
+fn resolve_mlp(profile: &RapidProfile, key: &str) -> Option<MlpArch> {
+    use crate::runtime::names::mlp_key;
+    if mlp_key(&profile.background) == key {
+        return Some(profile.background.clone());
+    }
+    if mlp_key(&profile.baseline) == key {
+        return Some(profile.baseline.clone());
+    }
+    profile
+        .object_bins
+        .iter()
+        .find(|b| mlp_key(&b.arch) == key)
+        .map(|b| b.arch.clone())
+}
+
+fn resolve_bin(profile: &RapidProfile, key: &str) -> Option<ObjectBin> {
+    use crate::runtime::names::mlp_key;
+    profile.object_bins.iter().find(|b| mlp_key(&b.arch) == key).cloned()
+}
+
+/// Ingest records into a store. Records may arrive in any order; frames
+/// are indexed by `frame_id` and sequences expanded into per-frame items.
+pub fn ingest(
+    cfg: &ArchConfig,
+    profile_kind: Profile,
+    records: &[Record],
+) -> Result<EdgeStore> {
+    let profile = cfg.rapid(profile_kind);
+    let mut frames: BTreeMap<u32, StoredImage> = BTreeMap::new();
+    let mut overlays: BTreeMap<u32, ObjOverlay> = BTreeMap::new();
+    // Sequence records expand to (first_frame_id .. +n) in arrival order;
+    // frame ids for VideoNet records are assigned cumulatively.
+    let mut video_cursor = 0u32;
+    for rec in records {
+        match rec {
+            Record::Jpeg { frame_id, bytes } => {
+                frames.insert(
+                    *frame_id,
+                    StoredImage::Jpeg { bytes: Arc::new(bytes.clone()) },
+                );
+            }
+            Record::SingleImage { frame_id, arch, weights } => {
+                let arch = resolve_mlp(profile, arch)
+                    .ok_or_else(|| anyhow!("unknown arch {arch}"))?;
+                frames.insert(
+                    *frame_id,
+                    StoredImage::RapidSingle {
+                        arch,
+                        ws: Arc::new(dequantize(weights)),
+                    },
+                );
+            }
+            Record::ResidualImage { frame_id, bbox, direct, bg_arch, bg, obj_arch, obj } => {
+                let bg_arch = resolve_mlp(profile, bg_arch)
+                    .ok_or_else(|| anyhow!("unknown bg arch {bg_arch}"))?;
+                let bin = resolve_bin(profile, obj_arch)
+                    .ok_or_else(|| anyhow!("unknown obj arch {obj_arch}"))?;
+                frames.insert(
+                    *frame_id,
+                    StoredImage::ResRapid {
+                        bg_arch,
+                        bg: Arc::new(dequantize(bg)),
+                        obj: Some(ObjOverlay {
+                            bin,
+                            ws: Arc::new(dequantize(obj)),
+                            padded: *bbox,
+                            direct: *direct,
+                        }),
+                    },
+                );
+            }
+            Record::VideoNet { seq_id, n_frames, arch, weights } => {
+                let arch = cfg
+                    .nerv_archs
+                    .iter()
+                    .find(|a| &a.name == arch)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("unknown nerv arch {arch}"))?;
+                let ws = Arc::new(dequantize(weights));
+                let n = *n_frames as usize;
+                for i in 0..n {
+                    frames.insert(
+                        video_cursor + i as u32,
+                        StoredImage::NervFrame {
+                            arch: arch.clone(),
+                            ws: Arc::clone(&ws),
+                            seq_key: *seq_id as u64,
+                            t: frame_time(i, n),
+                            obj: None,
+                        },
+                    );
+                }
+                video_cursor += *n_frames;
+            }
+            Record::ObjectPatch { frame_id, bbox, direct, obj_arch, obj } => {
+                let bin = resolve_bin(profile, obj_arch)
+                    .ok_or_else(|| anyhow!("unknown obj arch {obj_arch}"))?;
+                overlays.insert(
+                    *frame_id,
+                    ObjOverlay {
+                        bin,
+                        ws: Arc::new(dequantize(obj)),
+                        padded: *bbox,
+                        direct: *direct,
+                    },
+                );
+            }
+        }
+    }
+    // Attach Res-NeRV object overlays to their frames.
+    for (fid, ov) in overlays {
+        match frames.get_mut(&fid) {
+            Some(StoredImage::NervFrame { obj, .. }) => *obj = Some(ov),
+            Some(_) => return Err(anyhow!("object patch for non-NeRV frame {fid}")),
+            None => return Err(anyhow!("object patch for missing frame {fid}")),
+        }
+    }
+    let items: Vec<StoredImage> = frames.into_values().collect();
+    let memory_bytes = items.iter().map(|s| s.memory_bytes()).sum();
+    Ok(EdgeStore { items, memory_bytes })
+}

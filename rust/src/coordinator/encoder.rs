@@ -1,0 +1,457 @@
+//! Fog-node INR encoding service (paper §3.1).
+//!
+//! "Encoding" an image into INR format is training a network to fit it —
+//! the computationally heavy half of the pipeline, which is exactly why
+//! the paper places it on the fog node. All training runs through the
+//! AOT train-step artifacts (fused Adam, one PJRT call per step).
+//!
+//! Encoders provided:
+//! * `encode_rapid` — single-INR baseline (Rapid-INR).
+//! * `encode_res_rapid` — background INR + object INR with *residual*
+//!   targets (§3.1.2), or direct-RGB targets for the Fig 5/9 ablation.
+//! * `encode_nerv` — whole-sequence video INR baseline (NeRV).
+//! * `encode_res_nerv` — background NeRV + per-frame object INRs.
+//!
+//! Loss-based early stopping: the train-step loss *is* the reconstruction
+//! MSE, so `psnr = -10·log10(mse)` is monitored without extra decodes.
+
+use anyhow::Result;
+
+use crate::config::{ArchConfig, RapidProfile};
+use crate::data::{BBox, ImageRGB, Sequence};
+use crate::inr::arch::MlpArch;
+use crate::inr::{quantize, Bits, QuantWeightSet, WeightSet};
+use crate::pipeline::decoder;
+use crate::runtime::{names, HostTensor, Session};
+use crate::training::state::TrainState;
+use crate::util::rng::Pcg32;
+
+/// Knobs of the encoding service.
+#[derive(Debug, Clone)]
+pub struct EncoderConfig {
+    /// Max Adam steps for background / baseline INRs.
+    pub bg_steps: usize,
+    /// Max Adam steps for object INRs.
+    pub obj_steps: usize,
+    /// Max Adam steps for NeRV video INRs.
+    pub nerv_steps: usize,
+    /// Early-stop PSNR target (dB) for background/baseline fitting.
+    pub target_psnr: f64,
+    /// Check early-stop every this many steps.
+    pub check_every: usize,
+    /// Quantization widths (§5.2: bg 8-bit, obj 16-bit).
+    pub bg_bits: Bits,
+    pub obj_bits: Bits,
+    pub baseline_bits: Bits,
+    /// Object bbox padding in pixels (residual seam blending).
+    pub obj_pad: usize,
+    pub seed: u64,
+}
+
+impl Default for EncoderConfig {
+    fn default() -> Self {
+        EncoderConfig {
+            bg_steps: 400,
+            obj_steps: 250,
+            nerv_steps: 600,
+            target_psnr: 34.0,
+            check_every: 50,
+            bg_bits: Bits::B8,
+            obj_bits: Bits::B16,
+            baseline_bits: Bits::B16,
+            obj_pad: 2,
+            seed: 0x0DDB1A5E,
+        }
+    }
+}
+
+impl EncoderConfig {
+    /// A faster profile for tests/CI (fewer steps, lower bar).
+    pub fn fast() -> Self {
+        EncoderConfig {
+            bg_steps: 150,
+            obj_steps: 150,
+            nerv_steps: 150,
+            target_psnr: 28.0,
+            ..Default::default()
+        }
+    }
+}
+
+/// Outcome of one encoding job.
+#[derive(Debug, Clone)]
+pub struct EncodeStats {
+    pub steps: usize,
+    pub final_loss: f32,
+    pub train_psnr: f64,
+    pub seconds: f64,
+}
+
+/// Residual (or direct) encoding of one image.
+#[derive(Debug, Clone)]
+pub struct ResRapidEncoding {
+    pub bg: QuantWeightSet,
+    pub obj: QuantWeightSet,
+    pub bin_idx: usize,
+    /// Padded object bbox actually encoded.
+    pub padded: BBox,
+    pub direct: bool,
+    pub stats: EncodeStats,
+}
+
+/// The fog node's encoder.
+pub struct FogEncoder<'a> {
+    pub session: &'a Session,
+    pub cfg: &'a ArchConfig,
+    pub enc: EncoderConfig,
+}
+
+fn loss_psnr(loss: f32) -> f64 {
+    if loss <= 0.0 {
+        f64::INFINITY
+    } else {
+        -10.0 * (loss as f64).log10()
+    }
+}
+
+impl<'a> FogEncoder<'a> {
+    pub fn new(session: &'a Session, cfg: &'a ArchConfig, enc: EncoderConfig) -> Self {
+        FogEncoder { session, cfg, enc }
+    }
+
+    fn rng(&self, salt: u64) -> Pcg32 {
+        Pcg32::new(self.enc.seed ^ salt, salt | 1)
+    }
+
+    /// Fit an MLP INR to `(coords, targets, mask)` with early stopping.
+    fn fit_mlp(
+        &self,
+        arch: &MlpArch,
+        n: usize,
+        coords: HostTensor,
+        targets: HostTensor,
+        mask: HostTensor,
+        max_steps: usize,
+        salt: u64,
+    ) -> Result<(WeightSet, EncodeStats)> {
+        let sw = crate::util::Stopwatch::start();
+        let mut rng = self.rng(salt);
+        let mut st = TrainState::init(
+            names::rapid_train(arch, n),
+            arch.param_shapes(),
+            &mut rng,
+        );
+        let mut steps = 0;
+        while steps < max_steps {
+            let loss = st.step(
+                self.session,
+                vec![coords.clone(), targets.clone(), mask.clone()],
+            )?;
+            steps += 1;
+            if steps % self.enc.check_every == 0 && loss_psnr(loss) >= self.enc.target_psnr {
+                break;
+            }
+        }
+        let stats = EncodeStats {
+            steps,
+            final_loss: st.last_loss,
+            train_psnr: loss_psnr(st.last_loss),
+            seconds: sw.seconds(),
+        };
+        Ok((st.weights(), stats))
+    }
+
+    /// Single-INR (Rapid-INR baseline) encoding of a full image.
+    pub fn encode_rapid(
+        &self,
+        img: &ImageRGB,
+        arch: &MlpArch,
+        salt: u64,
+    ) -> Result<(WeightSet, EncodeStats)> {
+        let n = img.pixels();
+        let coords = decoder::frame_coords(img.width, img.height);
+        let targets = HostTensor::new(vec![n, 3], img.data.clone());
+        let mask = HostTensor::new(vec![n], vec![1.0; n]);
+        self.fit_mlp(arch, n, coords, targets, mask, self.enc.bg_steps, salt)
+    }
+
+    /// Residual-INR encoding: small background INR over the full image plus
+    /// a tiny object INR over the (padded) object region. With
+    /// `direct = true` the object INR fits raw RGB instead of residuals
+    /// (the paper's direct-encoding ablation).
+    pub fn encode_res_rapid(
+        &self,
+        img: &ImageRGB,
+        bbox: &BBox,
+        profile: &RapidProfile,
+        direct: bool,
+        salt: u64,
+    ) -> Result<ResRapidEncoding> {
+        let sw = crate::util::Stopwatch::start();
+        // 1. Fit the background INR on the whole frame.
+        let (bg_ws, bg_stats) = self.encode_rapid(img, &profile.background, salt ^ 0xB6)?;
+        // 2. Decode it (the object INR learns what the background INR
+        //    *failed* to capture — §3.1.2).
+        let bg_img = decoder::decode_rapid(
+            self.session,
+            &profile.background,
+            &bg_ws,
+            img.width,
+            img.height,
+        )?;
+        // 3. Build the object-patch targets.
+        let padded = bbox.padded(self.enc.obj_pad, img.width, img.height);
+        let side = padded.w.max(padded.h);
+        let (bin_idx, bin) = profile
+            .bin_for_side(side)
+            .unwrap_or((profile.object_bins.len() - 1, profile.object_bins.last().unwrap()));
+        let n_pad = bin.max_pixels();
+        let (coords, mask) = decoder::patch_coords(padded.w, padded.h, n_pad);
+        let patch = if direct {
+            img.crop(&padded)
+        } else {
+            img.residual_in(&bg_img, &padded)
+        };
+        let mut tdata = patch.data.clone();
+        tdata.resize(n_pad * 3, 0.0);
+        let targets = HostTensor::new(vec![n_pad, 3], tdata);
+        // 4. Fit the object INR.
+        let (obj_ws, obj_stats) = self.fit_mlp(
+            &bin.arch,
+            n_pad,
+            coords,
+            targets,
+            mask,
+            self.enc.obj_steps,
+            salt ^ 0x0B,
+        )?;
+        Ok(ResRapidEncoding {
+            bg: quantize(&bg_ws, self.enc.bg_bits),
+            obj: quantize(&obj_ws, self.enc.obj_bits),
+            bin_idx,
+            padded,
+            direct,
+            stats: EncodeStats {
+                steps: bg_stats.steps + obj_stats.steps,
+                final_loss: obj_stats.final_loss,
+                train_psnr: obj_stats.train_psnr,
+                seconds: sw.seconds(),
+            },
+        })
+    }
+
+    /// NeRV whole-sequence encoding (baseline or Res-NeRV background):
+    /// each step fits a random batch of `nerv_decode_batch` frames.
+    pub fn encode_nerv(
+        &self,
+        seq: &Sequence,
+        arch: &crate::inr::arch::NervArch,
+        max_steps: usize,
+        salt: u64,
+    ) -> Result<(WeightSet, EncodeStats)> {
+        let sw = crate::util::Stopwatch::start();
+        let bsz = self.cfg.nerv_decode_batch;
+        let n = seq.len();
+        let (h, w) = (self.cfg.frame_h, self.cfg.frame_w);
+        let mut rng = self.rng(salt ^ 0x4e);
+        let mut st = TrainState::init(
+            names::nerv_train(arch, bsz),
+            arch.param_shapes(),
+            &mut rng,
+        );
+        let mut steps = 0;
+        while steps < max_steps {
+            // Sample a batch of frames (with replacement for short seqs).
+            let idxs: Vec<usize> = (0..bsz).map(|_| rng.below_usize(n)).collect();
+            let t = HostTensor::new(
+                vec![bsz],
+                idxs.iter().map(|&i| decoder::frame_time(i, n)).collect(),
+            );
+            let mut fdata = Vec::with_capacity(bsz * h * w * 3);
+            for &i in &idxs {
+                fdata.extend_from_slice(&seq.frames[i].data);
+            }
+            let frames = HostTensor::new(vec![bsz, h, w, 3], fdata);
+            let loss = st.step(self.session, vec![t, frames])?;
+            steps += 1;
+            if steps % self.enc.check_every == 0 && loss_psnr(loss) >= self.enc.target_psnr {
+                break;
+            }
+        }
+        let stats = EncodeStats {
+            steps,
+            final_loss: st.last_loss,
+            train_psnr: loss_psnr(st.last_loss),
+            seconds: sw.seconds(),
+        };
+        Ok((st.weights(), stats))
+    }
+
+    /// Res-NeRV: background NeRV over the sequence + per-frame object INRs
+    /// fit to the residual at each frame's bbox.
+    pub fn encode_res_nerv(
+        &self,
+        seq: &Sequence,
+        profile: &RapidProfile,
+        salt: u64,
+    ) -> Result<(QuantWeightSet, Vec<ResNervFrame>, EncodeStats)> {
+        let sw = crate::util::Stopwatch::start();
+        let bin_cfg = self.cfg.nerv_bin(seq.len());
+        let (bg_ws, bg_stats) =
+            self.encode_nerv(seq, &bin_cfg.background, self.enc.nerv_steps, salt)?;
+        let bsz = self.cfg.nerv_decode_batch;
+        let mut frames_out = Vec::with_capacity(seq.len());
+        let mut total_obj_steps = 0;
+        // Decode background frames in chunks, then fit per-frame object INRs.
+        let mut i = 0;
+        while i < seq.len() {
+            let chunk: Vec<usize> = (i..(i + bsz).min(seq.len())).collect();
+            let mut t: Vec<f32> =
+                chunk.iter().map(|&j| decoder::frame_time(j, seq.len())).collect();
+            while t.len() < bsz {
+                t.push(*t.last().unwrap()); // pad with the last frame
+            }
+            let decoded =
+                decoder::decode_nerv_chunk(self.session, &bin_cfg.background, &bg_ws, &t)?;
+            for (k, &j) in chunk.iter().enumerate() {
+                let bg_img = &decoded[k];
+                let raw = &seq.frames[j];
+                let padded = seq.boxes[j].padded(self.enc.obj_pad, raw.width, raw.height);
+                let side = padded.w.max(padded.h);
+                let (bin_idx, bin) = profile.bin_for_side(side).unwrap_or((
+                    profile.object_bins.len() - 1,
+                    profile.object_bins.last().unwrap(),
+                ));
+                let n_pad = bin.max_pixels();
+                let (coords, mask) = decoder::patch_coords(padded.w, padded.h, n_pad);
+                let residual = raw.residual_in(bg_img, &padded);
+                let mut tdata = residual.data.clone();
+                tdata.resize(n_pad * 3, 0.0);
+                let targets = HostTensor::new(vec![n_pad, 3], tdata);
+                let (obj_ws, obj_stats) = self.fit_mlp(
+                    &bin.arch,
+                    n_pad,
+                    coords,
+                    targets,
+                    mask,
+                    self.enc.obj_steps,
+                    salt ^ (j as u64 * 0x9E37),
+                )?;
+                total_obj_steps += obj_stats.steps;
+                frames_out.push(ResNervFrame {
+                    frame_idx: j,
+                    bin_idx,
+                    padded,
+                    obj: quantize(&obj_ws, self.enc.obj_bits),
+                });
+            }
+            i += bsz;
+        }
+        let stats = EncodeStats {
+            steps: bg_stats.steps + total_obj_steps,
+            final_loss: bg_stats.final_loss,
+            train_psnr: bg_stats.train_psnr,
+            seconds: sw.seconds(),
+        };
+        Ok((quantize(&bg_ws, self.enc.bg_bits), frames_out, stats))
+    }
+}
+
+/// Per-frame object encoding of a Res-NeRV sequence.
+#[derive(Debug, Clone)]
+pub struct ResNervFrame {
+    pub frame_idx: usize,
+    pub bin_idx: usize,
+    pub padded: BBox,
+    pub obj: QuantWeightSet,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_sequence, Profile};
+    use crate::inr::dequantize;
+    use crate::metrics::{psnr, psnr_region};
+
+    fn setup() -> (Session, ArchConfig) {
+        (
+            Session::open_default().expect("artifacts built"),
+            ArchConfig::load_default().unwrap(),
+        )
+    }
+
+    #[test]
+    fn rapid_baseline_fits_a_frame() {
+        let (session, cfg) = setup();
+        let enc = FogEncoder::new(&session, &cfg, EncoderConfig::fast());
+        let seq = generate_sequence(Profile::DacSdc, 11, 0);
+        let img = &seq.frames[0];
+        let arch = &cfg.rapid(Profile::DacSdc).baseline;
+        let (ws, stats) = enc.encode_rapid(img, arch, 1).unwrap();
+        assert!(stats.train_psnr > 20.0, "train psnr {}", stats.train_psnr);
+        let rec = decoder::decode_rapid(&session, arch, &ws, img.width, img.height).unwrap();
+        let p = psnr(img, &rec);
+        assert!(p > 20.0, "decoded psnr {p}");
+    }
+
+    #[test]
+    fn residual_encoding_improves_object_psnr() {
+        // The paper's core claim (§3.1, Fig 9): adding a tiny object INR
+        // with residual targets lifts object-region PSNR above what the
+        // small background INR alone achieves.
+        let (session, cfg) = setup();
+        let mut ec = EncoderConfig::fast();
+        ec.bg_steps = 200;
+        ec.obj_steps = 200;
+        let enc = FogEncoder::new(&session, &cfg, ec);
+        let profile = cfg.rapid(Profile::DacSdc);
+        let seq = generate_sequence(Profile::DacSdc, 21, 1);
+        let img = &seq.frames[0];
+        let bbox = &seq.boxes[0];
+        let r = enc.encode_res_rapid(img, bbox, profile, false, 2).unwrap();
+        // Reconstruct: bg decode + residual overlay.
+        let bg_ws = dequantize(&r.bg);
+        let bg_img =
+            decoder::decode_rapid(&session, &profile.background, &bg_ws, img.width, img.height)
+                .unwrap();
+        let bin = &profile.object_bins[r.bin_idx];
+        let obj_ws = dequantize(&r.obj);
+        let patch =
+            decoder::decode_object_patch(&session, bin, &obj_ws, r.padded.w, r.padded.h)
+                .unwrap();
+        let recon = decoder::compose_residual(&bg_img, &patch, &r.padded);
+        let p_bg_only = psnr_region(img, &bg_img, bbox);
+        let p_residual = psnr_region(img, &recon, bbox);
+        assert!(
+            p_residual > p_bg_only + 1.0,
+            "object psnr: bg-only {p_bg_only:.2} vs residual {p_residual:.2}"
+        );
+        // And the combined size must stay below the baseline single INR.
+        let base_params = profile.baseline.param_count();
+        let combined = profile.background.param_count() + bin.arch.param_count();
+        assert!(combined < base_params);
+    }
+
+    #[test]
+    fn nerv_fits_a_short_sequence() {
+        let (session, cfg) = setup();
+        let mut ec = EncoderConfig::fast();
+        ec.nerv_steps = 120;
+        let enc = FogEncoder::new(&session, &cfg, ec);
+        let mut seq = generate_sequence(Profile::Otb100, 3, 0);
+        seq.frames.truncate(8);
+        seq.boxes.truncate(8);
+        let arch = cfg.nerv_bin(seq.len()).background.clone();
+        let (ws, stats) = enc.encode_nerv(&seq, &arch, 120, 4).unwrap();
+        assert!(stats.train_psnr > 12.0, "{}", stats.train_psnr);
+        let frames = decoder::decode_nerv_frames(
+            &session,
+            &arch,
+            &ws,
+            &[decoder::frame_time(0, 8)],
+            cfg.nerv_decode_batch,
+        )
+        .unwrap();
+        assert_eq!(frames.len(), 1);
+    }
+}

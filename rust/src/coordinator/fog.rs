@@ -1,0 +1,198 @@
+//! Fog-node compression service: turns raw sequences (uploaded as JPEG)
+//! into transmission [`Record`]s under a chosen compression method.
+
+use anyhow::Result;
+
+use crate::codec::jpeg;
+use crate::config::ArchConfig;
+use crate::data::{Dataset, Sequence};
+use crate::inr::{quantize, Record};
+use crate::runtime::Session;
+
+use super::encoder::{EncoderConfig, FogEncoder};
+
+/// Compression technique (the paper's five compared methods, Fig 9/11/12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Raw JPEG pass-through at the given quality (serverless baseline).
+    Jpeg { quality: u8 },
+    /// Single-INR per image (Rapid-INR baseline).
+    RapidSingle,
+    /// Residual-INR per image; `direct = true` is the direct-RGB ablation.
+    ResRapid { direct: bool },
+    /// Single NeRV per sequence (NeRV baseline).
+    Nerv,
+    /// Res-NeRV: background NeRV per sequence + object INR per frame.
+    ResNerv,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Jpeg { .. } => "JPEG",
+            Method::RapidSingle => "Rapid-INR",
+            Method::ResRapid { direct: false } => "Res-Rapid-INR",
+            Method::ResRapid { direct: true } => "Res-Rapid-INR(direct)",
+            Method::Nerv => "NeRV",
+            Method::ResNerv => "Res-NeRV",
+        }
+    }
+
+    pub const ALL_MAIN: [Method; 5] = [
+        Method::Jpeg { quality: 95 },
+        Method::RapidSingle,
+        Method::ResRapid { direct: false },
+        Method::Nerv,
+        Method::ResNerv,
+    ];
+}
+
+/// Result of compressing a dataset at the fog node.
+#[derive(Debug)]
+pub struct Compressed {
+    pub method: Method,
+    /// Transmission units in frame order (sequence records first for NeRV).
+    pub records: Vec<Record>,
+    /// Total payload bytes (the paper's size metric).
+    pub payload_bytes: usize,
+    /// Total encode wall time at the fog node.
+    pub encode_seconds: f64,
+    /// Adam steps spent encoding.
+    pub encode_steps: usize,
+    pub n_frames: usize,
+}
+
+impl Compressed {
+    /// Average bytes per frame — Fig 9's x-axis.
+    pub fn avg_frame_bytes(&self) -> f64 {
+        self.payload_bytes as f64 / self.n_frames.max(1) as f64
+    }
+}
+
+/// The fog node: owns a PJRT session and the encoder configuration.
+pub struct FogNode<'a> {
+    pub session: &'a Session,
+    pub cfg: &'a ArchConfig,
+    pub enc: EncoderConfig,
+}
+
+impl<'a> FogNode<'a> {
+    pub fn new(session: &'a Session, cfg: &'a ArchConfig, enc: EncoderConfig) -> Self {
+        FogNode { session, cfg, enc }
+    }
+
+    /// Compress every frame/sequence of `ds` with `method`. Frame ids are
+    /// global frame indices in dataset iteration order.
+    pub fn compress(&self, ds: &Dataset, method: Method) -> Result<Compressed> {
+        let sw = crate::util::Stopwatch::start();
+        let mut records = Vec::new();
+        let mut steps = 0usize;
+        let mut frame_id = 0u32;
+        for (si, seq) in ds.sequences.iter().enumerate() {
+            let (recs, st) = self.compress_sequence(seq, si as u32, &mut frame_id, method)?;
+            records.extend(recs);
+            steps += st;
+        }
+        let payload_bytes = records.iter().map(|r| r.payload_size()).sum();
+        Ok(Compressed {
+            method,
+            records,
+            payload_bytes,
+            encode_seconds: sw.seconds(),
+            encode_steps: steps,
+            n_frames: frame_id as usize,
+        })
+    }
+
+    fn compress_sequence(
+        &self,
+        seq: &Sequence,
+        seq_id: u32,
+        frame_id: &mut u32,
+        method: Method,
+    ) -> Result<(Vec<Record>, usize)> {
+        let enc = FogEncoder::new(self.session, self.cfg, self.enc.clone());
+        let profile = self.cfg.rapid(seq.profile);
+        let mut records = Vec::new();
+        let mut steps = 0usize;
+        match method {
+            Method::Jpeg { quality } => {
+                for img in &seq.frames {
+                    records.push(Record::Jpeg {
+                        frame_id: *frame_id,
+                        bytes: jpeg::encode(img, quality),
+                    });
+                    *frame_id += 1;
+                }
+            }
+            Method::RapidSingle => {
+                for img in &seq.frames {
+                    let (ws, st) =
+                        enc.encode_rapid(img, &profile.baseline, *frame_id as u64)?;
+                    steps += st.steps;
+                    records.push(Record::SingleImage {
+                        frame_id: *frame_id,
+                        arch: crate::runtime::names::mlp_key(&profile.baseline),
+                        weights: quantize(&ws, self.enc.baseline_bits),
+                    });
+                    *frame_id += 1;
+                }
+            }
+            Method::ResRapid { direct } => {
+                for (img, bbox) in seq.frames.iter().zip(&seq.boxes) {
+                    let r =
+                        enc.encode_res_rapid(img, bbox, profile, direct, *frame_id as u64)?;
+                    steps += r.stats.steps;
+                    records.push(Record::ResidualImage {
+                        frame_id: *frame_id,
+                        bbox: r.padded,
+                        direct,
+                        bg_arch: crate::runtime::names::mlp_key(&profile.background),
+                        bg: r.bg,
+                        obj_arch: crate::runtime::names::mlp_key(
+                            &profile.object_bins[r.bin_idx].arch,
+                        ),
+                        obj: r.obj,
+                    });
+                    *frame_id += 1;
+                }
+            }
+            Method::Nerv => {
+                let arch = &self.cfg.nerv_bin(seq.len()).baseline;
+                let (ws, st) = enc.encode_nerv(seq, arch, self.enc.nerv_steps, seq_id as u64)?;
+                steps += st.steps;
+                records.push(Record::VideoNet {
+                    seq_id,
+                    n_frames: seq.len() as u32,
+                    arch: arch.name.clone(),
+                    weights: quantize(&ws, self.enc.baseline_bits),
+                });
+                *frame_id += seq.len() as u32;
+            }
+            Method::ResNerv => {
+                let (bg, frames, st) = enc.encode_res_nerv(seq, profile, seq_id as u64)?;
+                steps += st.steps;
+                let arch = &self.cfg.nerv_bin(seq.len()).background;
+                records.push(Record::VideoNet {
+                    seq_id,
+                    n_frames: seq.len() as u32,
+                    arch: arch.name.clone(),
+                    weights: bg,
+                });
+                for f in frames {
+                    records.push(Record::ObjectPatch {
+                        frame_id: *frame_id + f.frame_idx as u32,
+                        bbox: f.padded,
+                        direct: false,
+                        obj_arch: crate::runtime::names::mlp_key(
+                            &profile.object_bins[f.bin_idx].arch,
+                        ),
+                        obj: f.obj,
+                    });
+                }
+                *frame_id += seq.len() as u32;
+            }
+        }
+        Ok((records, steps))
+    }
+}

@@ -1,0 +1,15 @@
+//! The paper's system contribution: fog/edge coordination.
+//!
+//! * [`encoder`] — fog-side INR encoding service (training INRs, §3.1)
+//! * [`fog`] — compression methods → transmission records
+//! * [`edge`] — device-side ingest (records → in-memory stored images)
+//! * [`sim`] — the end-to-end fog on-device-learning experiment
+
+pub mod edge;
+pub mod encoder;
+pub mod fog;
+pub mod sim;
+
+pub use encoder::{EncoderConfig, FogEncoder};
+pub use fog::{Compressed, FogNode, Method};
+pub use sim::{run as run_sim, SimConfig, SimReport};

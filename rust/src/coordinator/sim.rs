@@ -1,0 +1,304 @@
+//! End-to-end fog on-device-learning simulation (the paper's system,
+//! Fig 1/4, measured as in Figs 10–11).
+//!
+//! One run = one compression method through the full pipeline:
+//!
+//! 1. the detector is pretrained on half the sequences (paper §5.1.2);
+//! 2. a source edge device uploads the *new* sequences to the fog node as
+//!    JPEG (skipped for the serverless JPEG baseline, which sends JPEG
+//!    straight to receivers);
+//! 3. the fog node compresses (INR encoding = network training) and
+//!    broadcasts to `n_receivers` edge devices over the 2 MB/s wireless
+//!    medium, plus 8 bytes/frame of bbox labels for every method;
+//! 4. a receiver ingests the records into device memory, then fine-tunes
+//!    TinyDet: every batch is decoded (grouped or not) and fed to the
+//!    fused train step;
+//! 5. accuracy is evaluated on the *raw* held-out frames (does training on
+//!    reconstructions transfer to real inputs — the paper's accuracy axis).
+
+use anyhow::Result;
+
+use crate::config::ArchConfig;
+use crate::data::{generate_dataset, Dataset, Profile};
+use crate::metrics::{map50, map50_95, mean_iou};
+use crate::net::{NetSim, NodeId};
+use crate::pipeline::baseline::{decode_jpeg_batch, JpegPipeline};
+use crate::pipeline::group::{decode_batch, StoredImage};
+use crate::runtime::{Pool, Session};
+use crate::training::DetTrainer;
+use crate::util::rng::Pcg32;
+use crate::util::Stopwatch;
+
+use super::edge::ingest;
+use super::encoder::EncoderConfig;
+use super::fog::{FogNode, Method};
+
+/// Bytes of label metadata per frame (bbox as 4×u16).
+pub const LABEL_BYTES_PER_FRAME: u64 = 8;
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub profile: Profile,
+    pub n_sequences: usize,
+    pub seed: u64,
+    pub method: Method,
+    /// INR grouping (§3.2.2) on the decode path.
+    pub grouped: bool,
+    /// JPEG baseline decode flavor (ignored for INR methods).
+    pub jpeg_pipeline: JpegPipeline,
+    /// Edge devices receiving the fine-tuning data.
+    pub n_receivers: usize,
+    /// Fine-tuning epochs over the received frames.
+    pub epochs: usize,
+    /// Detector pretraining steps (on raw frames, outside the timed run).
+    pub pretrain_steps: usize,
+    pub enc: EncoderConfig,
+    /// Quality of the JPEG the source edge uploads to the fog.
+    pub upload_quality: u8,
+    pub bandwidth: f64,
+    pub decode_workers: usize,
+    /// Cap on fine-tuning frames (CI speed); `None` = all.
+    pub max_train_frames: Option<usize>,
+}
+
+impl SimConfig {
+    /// Small but complete configuration used by tests and the quickstart.
+    pub fn small(method: Method) -> SimConfig {
+        SimConfig {
+            profile: Profile::DacSdc,
+            n_sequences: 4,
+            seed: 7,
+            method,
+            grouped: true,
+            jpeg_pipeline: JpegPipeline::PyTorchLike,
+            n_receivers: 1,
+            epochs: 2,
+            pretrain_steps: 120,
+            enc: EncoderConfig::fast(),
+            upload_quality: 95,
+            // The paper's 2 MB/s, scaled by our frame-area ratio
+            // (12288 px vs ~230k px at 360p) so the transmission slice of
+            // Fig 11 keeps its real-world proportion on small frames.
+            bandwidth: crate::net::DEFAULT_BANDWIDTH * (128.0 * 96.0) / 230_400.0,
+            decode_workers: 1, // PJRT CPU client is internally parallel; >1 worker measured slower (EXPERIMENTS.md §Perf)
+            max_train_frames: Some(24),
+        }
+    }
+}
+
+/// Everything a run measures (the rows of Figs 10 and 11).
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub method: String,
+    pub grouped: bool,
+    // Bytes over the wireless medium.
+    pub upload_bytes: u64,
+    pub broadcast_bytes: u64,
+    pub label_bytes: u64,
+    pub total_bytes: u64,
+    // Latency breakdown (Fig 11).
+    pub transmission_seconds: f64,
+    pub decode_seconds: f64,
+    pub train_seconds: f64,
+    /// Fog-side encode time (not on the edge critical path).
+    pub fog_encode_seconds: f64,
+    // Compression metrics.
+    pub payload_bytes: usize,
+    pub avg_frame_bytes: f64,
+    pub device_memory_bytes: usize,
+    // Accuracy (Fig 10).
+    pub map_before: f64,
+    pub map50_after: f64,
+    pub map_after: f64,
+    pub mean_iou_after: f64,
+    pub loss_curve: Vec<f32>,
+    pub n_train_frames: usize,
+    pub train_steps: usize,
+}
+
+impl SimReport {
+    /// Edge-side end-to-end time (the Fig 11 bar).
+    pub fn edge_total_seconds(&self) -> f64 {
+        self.transmission_seconds + self.decode_seconds + self.train_seconds
+    }
+}
+
+/// Truncate a dataset to at most `max` frames (whole leading sequences,
+/// then a partial one).
+fn cap_frames(ds: &Dataset, max: usize) -> Dataset {
+    let mut out = Dataset { profile: ds.profile, sequences: Vec::new() };
+    let mut left = max;
+    for s in &ds.sequences {
+        if left == 0 {
+            break;
+        }
+        let take = s.len().min(left);
+        let mut s2 = s.clone();
+        s2.frames.truncate(take);
+        s2.boxes.truncate(take);
+        left -= take;
+        out.sequences.push(s2);
+    }
+    out
+}
+
+/// Run one full simulation.
+pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
+    let session = Session::open_default()?;
+    let pool = Pool::open_default(sim.decode_workers)?;
+    let mut net = NetSim::new(sim.bandwidth, crate::net::DEFAULT_LATENCY);
+    let mut rng = Pcg32::seeded(sim.seed ^ 0x51);
+
+    // --- Data ----------------------------------------------------------
+    let ds = generate_dataset(sim.profile, sim.seed, sim.n_sequences);
+    let (pre_ds, fine_ds) = ds.split_half();
+    let fine_ds = match sim.max_train_frames {
+        Some(m) => cap_frames(&fine_ds, m),
+        None => fine_ds,
+    };
+    let n_frames = fine_ds.total_frames();
+
+    // --- Pretraining (outside the measured window, §5.1.2) -------------
+    let mut trainer = DetTrainer::new(cfg, sim.seed ^ 0xDE7);
+    let pre_frames: Vec<(&crate::data::ImageRGB, &crate::data::BBox)> =
+        pre_ds.iter_frames().map(|(_, _, f, b)| (f, b)).collect();
+    for _ in 0..sim.pretrain_steps {
+        let idx: Vec<usize> =
+            (0..trainer.batch).map(|_| rng.below_usize(pre_frames.len())).collect();
+        let imgs: Vec<&crate::data::ImageRGB> = idx.iter().map(|&i| pre_frames[i].0).collect();
+        let boxes: Vec<crate::data::BBox> = idx.iter().map(|&i| *pre_frames[i].1).collect();
+        trainer.train_batch(&session, &imgs, &boxes)?;
+    }
+    trainer.loss_curve.clear(); // keep only the fine-tuning curve
+
+    // Held-out evaluation on RAW frames of the new sequences.
+    let eval_frames: Vec<(&crate::data::ImageRGB, &crate::data::BBox)> =
+        fine_ds.iter_frames().map(|(_, _, f, b)| (f, b)).collect();
+    let map_before = map50_95(&trainer.evaluate(&session, &eval_frames)?);
+
+    // --- Transmission + fog encoding ------------------------------------
+    let fog = FogNode::new(&session, cfg, sim.enc.clone());
+    let receivers: Vec<NodeId> = (1..=sim.n_receivers).map(NodeId::Edge).collect();
+    let source = NodeId::Edge(0);
+
+    let (records, fog_encode_seconds, payload_bytes, avg_frame_bytes) = match sim.method {
+        Method::Jpeg { quality } => {
+            // Serverless: source → receivers directly.
+            let comp = fog.compress(&fine_ds, Method::Jpeg { quality })?;
+            for rec in &comp.records {
+                let bytes = rec.payload_size() as u64;
+                for &r in &receivers {
+                    net.send(source, r, bytes, "jpeg-direct");
+                }
+            }
+            { let afb = comp.avg_frame_bytes(); (comp.records, comp.encode_seconds, comp.payload_bytes, afb) }
+        }
+        m => {
+            // Upload JPEG to the fog, compress there, broadcast INR.
+            for (_, _, frame, _) in fine_ds.iter_frames() {
+                let up = crate::codec::jpeg::encode(frame, sim.upload_quality);
+                net.send(source, NodeId::Fog, up.len() as u64, "jpeg-upload");
+            }
+            let comp = fog.compress(&fine_ds, m)?;
+            for rec in &comp.records {
+                net.broadcast(NodeId::Fog, &receivers, rec.payload_size() as u64, "inr-broadcast");
+            }
+            { let afb = comp.avg_frame_bytes(); (comp.records, comp.encode_seconds, comp.payload_bytes, afb) }
+        }
+    };
+    // Labels (bboxes) for every method.
+    net.broadcast(
+        match sim.method {
+            Method::Jpeg { .. } => source,
+            _ => NodeId::Fog,
+        },
+        &receivers,
+        n_frames as u64 * LABEL_BYTES_PER_FRAME,
+        "labels",
+    );
+
+    let upload_bytes = net.bytes_tagged("jpeg-upload");
+    let broadcast_bytes = net.bytes_tagged("inr-broadcast") + net.bytes_tagged("jpeg-direct");
+    let label_bytes = net.bytes_tagged("labels");
+    // Fig 11 measures ONE training edge device: its transmission cost is
+    // what it *receives* (the fog→edge INR broadcast or the JPEG stream),
+    // not the whole network's airtime (that is Fig 8's metric).
+    let transmission_seconds = net.seconds_to(NodeId::Edge(1));
+
+    // --- Ingest on receiver 0 -------------------------------------------
+    let store = ingest(cfg, sim.profile, &records)?;
+    anyhow::ensure!(store.items.len() == n_frames, "store/frame mismatch");
+    let gt_boxes: Vec<crate::data::BBox> =
+        fine_ds.iter_frames().map(|(_, _, _, b)| *b).collect();
+
+    // --- Fine-tuning loop -------------------------------------------------
+    let mut decode_seconds = 0.0;
+    let mut train_seconds = 0.0;
+    let steps_per_epoch = n_frames.div_ceil(trainer.batch);
+    for _epoch in 0..sim.epochs {
+        let mut order: Vec<usize> = (0..n_frames).collect();
+        rng.shuffle(&mut order);
+        for step in 0..steps_per_epoch {
+            let idx: Vec<usize> = (0..trainer.batch)
+                .map(|k| order[(step * trainer.batch + k) % n_frames])
+                .collect();
+            let batch_items: Vec<StoredImage> =
+                idx.iter().map(|&i| store.items[i].clone()).collect();
+            // Decode phase.
+            let sw = Stopwatch::start();
+            let images = if let Method::Jpeg { .. } = sim.method {
+                let bytes: Vec<std::sync::Arc<Vec<u8>>> = batch_items
+                    .iter()
+                    .map(|it| match it {
+                        StoredImage::Jpeg { bytes } => std::sync::Arc::clone(bytes),
+                        _ => unreachable!("jpeg method stores jpeg items"),
+                    })
+                    .collect();
+                decode_jpeg_batch(&bytes, sim.jpeg_pipeline)?
+            } else {
+                let (imgs, _st) = decode_batch(
+                    &pool,
+                    cfg.frame_w,
+                    cfg.frame_h,
+                    cfg.nerv_decode_batch,
+                    &batch_items,
+                    sim.grouped,
+                )?;
+                imgs
+            };
+            decode_seconds += sw.seconds();
+            // Train phase.
+            let sw = Stopwatch::start();
+            let img_refs: Vec<&crate::data::ImageRGB> = images.iter().collect();
+            let boxes: Vec<crate::data::BBox> = idx.iter().map(|&i| gt_boxes[i]).collect();
+            trainer.train_batch(&session, &img_refs, &boxes)?;
+            train_seconds += sw.seconds();
+        }
+    }
+
+    // --- Final evaluation --------------------------------------------------
+    let dets = trainer.evaluate(&session, &eval_frames)?;
+    Ok(SimReport {
+        method: sim.method.name().to_string(),
+        grouped: sim.grouped,
+        upload_bytes,
+        broadcast_bytes,
+        label_bytes,
+        total_bytes: net.total_bytes(),
+        transmission_seconds,
+        decode_seconds,
+        train_seconds,
+        fog_encode_seconds,
+        payload_bytes,
+        avg_frame_bytes,
+        device_memory_bytes: store.memory_bytes,
+        map_before,
+        map50_after: map50(&dets),
+        map_after: map50_95(&dets),
+        mean_iou_after: mean_iou(&dets),
+        loss_curve: trainer.loss_curve.clone(),
+        n_train_frames: n_frames,
+        train_steps: trainer.steps_done,
+    })
+}

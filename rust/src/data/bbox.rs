@@ -1,0 +1,133 @@
+//! Axis-aligned bounding boxes (integer pixel coordinates).
+//!
+//! Boxes identify the object region for object-INR cropping (§3.1.2) and
+//! are the regression target of the detection backbone.
+
+/// Integer pixel bounding box: top-left `(x, y)`, size `(w, h)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BBox {
+    pub x: usize,
+    pub y: usize,
+    pub w: usize,
+    pub h: usize,
+}
+
+impl BBox {
+    pub fn new(x: usize, y: usize, w: usize, h: usize) -> Self {
+        BBox { x, y, w, h }
+    }
+
+    pub fn area(&self) -> usize {
+        self.w * self.h
+    }
+
+    /// Fraction of an `img_w × img_h` frame covered by this box
+    /// (Fig 3(a)'s object-size statistic).
+    pub fn area_fraction(&self, img_w: usize, img_h: usize) -> f64 {
+        self.area() as f64 / (img_w * img_h) as f64
+    }
+
+    /// Clip to image bounds (returns an empty-safe box).
+    pub fn clip(&self, img_w: usize, img_h: usize) -> BBox {
+        let x = self.x.min(img_w.saturating_sub(1));
+        let y = self.y.min(img_h.saturating_sub(1));
+        BBox { x, y, w: self.w.min(img_w - x), h: self.h.min(img_h - y) }
+    }
+
+    /// Intersection-over-union with another box (detection metric).
+    pub fn iou(&self, other: &BBox) -> f64 {
+        let x1 = self.x.max(other.x);
+        let y1 = self.y.max(other.y);
+        let x2 = (self.x + self.w).min(other.x + other.w);
+        let y2 = (self.y + self.h).min(other.y + other.h);
+        if x2 <= x1 || y2 <= y1 {
+            return 0.0;
+        }
+        let inter = ((x2 - x1) * (y2 - y1)) as f64;
+        let union = (self.area() + other.area()) as f64 - inter;
+        inter / union
+    }
+
+    /// Normalized center-format `[cx, cy, w, h]` in `[0, 1]` — what the
+    /// detection head regresses.
+    pub fn to_normalized(&self, img_w: usize, img_h: usize) -> [f32; 4] {
+        [
+            (self.x as f32 + self.w as f32 / 2.0) / img_w as f32,
+            (self.y as f32 + self.h as f32 / 2.0) / img_h as f32,
+            self.w as f32 / img_w as f32,
+            self.h as f32 / img_h as f32,
+        ]
+    }
+
+    /// Inverse of [`BBox::to_normalized`] (rounded, clipped).
+    pub fn from_normalized(v: [f32; 4], img_w: usize, img_h: usize) -> BBox {
+        let w = (v[2].clamp(0.0, 1.0) * img_w as f32).round() as usize;
+        let h = (v[3].clamp(0.0, 1.0) * img_h as f32).round() as usize;
+        let cx = v[0].clamp(0.0, 1.0) * img_w as f32;
+        let cy = v[1].clamp(0.0, 1.0) * img_h as f32;
+        let x = (cx - w as f32 / 2.0).max(0.0).round() as usize;
+        let y = (cy - h as f32 / 2.0).max(0.0).round() as usize;
+        BBox { x, y, w: w.max(1), h: h.max(1) }.clip(img_w, img_h)
+    }
+
+    /// Grow the box by `pad` pixels on each side, clipped to the frame.
+    /// The object INR encodes a slightly padded crop so the residual seam
+    /// blends at the box boundary.
+    pub fn padded(&self, pad: usize, img_w: usize, img_h: usize) -> BBox {
+        let x = self.x.saturating_sub(pad);
+        let y = self.y.saturating_sub(pad);
+        let w = self.w + pad + (self.x - x);
+        let h = self.h + pad + (self.y - y);
+        BBox { x, y, w, h }.clip(img_w, img_h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iou_identity_and_disjoint() {
+        let a = BBox::new(2, 2, 4, 4);
+        assert!((a.iou(&a) - 1.0).abs() < 1e-12);
+        let b = BBox::new(10, 10, 2, 2);
+        assert_eq!(a.iou(&b), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        let a = BBox::new(0, 0, 4, 4);
+        let b = BBox::new(2, 0, 4, 4);
+        // inter = 2*4 = 8, union = 16+16-8 = 24
+        assert!((a.iou(&b) - 8.0 / 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalized_roundtrip() {
+        let b = BBox::new(10, 20, 16, 12);
+        let v = b.to_normalized(128, 96);
+        let b2 = BBox::from_normalized(v, 128, 96);
+        assert!(b.iou(&b2) > 0.9, "{b:?} vs {b2:?}");
+    }
+
+    #[test]
+    fn clip_stays_inside() {
+        let b = BBox::new(120, 90, 30, 30).clip(128, 96);
+        assert!(b.x + b.w <= 128 && b.y + b.h <= 96);
+    }
+
+    #[test]
+    fn padded_expands_and_clips() {
+        let b = BBox::new(2, 2, 4, 4).padded(3, 64, 64);
+        assert_eq!((b.x, b.y), (0, 0));
+        assert_eq!((b.w, b.h), (9, 9)); // 4 + 3 + 2 clipped at 0
+        let c = BBox::new(60, 60, 4, 4).padded(3, 64, 64);
+        assert!(c.x + c.w <= 64 && c.y + c.h <= 64);
+    }
+
+    #[test]
+    fn area_fraction() {
+        let b = BBox::new(0, 0, 16, 12);
+        assert!((b.area_fraction(128, 96) - (16.0 * 12.0) / (128.0 * 96.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,242 @@
+//! RGB image container used across the pipeline.
+//!
+//! Pixels are stored interleaved (`H × W × 3`) as `f32` in `[0, 1]` — the
+//! same layout the AOT decode artifacts produce and the detection train
+//! step consumes, so images move between the codec, the INR decoder and
+//! the PJRT runtime without reshuffling.
+
+use super::bbox::BBox;
+
+/// Interleaved RGB f32 image, values nominally in `[0, 1]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageRGB {
+    pub width: usize,
+    pub height: usize,
+    /// `height * width * 3` values, row-major, RGB interleaved.
+    pub data: Vec<f32>,
+}
+
+impl ImageRGB {
+    /// Allocate a black image.
+    pub fn zeros(width: usize, height: usize) -> Self {
+        ImageRGB { width, height, data: vec![0.0; width * height * 3] }
+    }
+
+    /// Build from a fill function `(x, y) -> [r, g, b]`.
+    pub fn from_fn<F: FnMut(usize, usize) -> [f32; 3]>(
+        width: usize,
+        height: usize,
+        mut f: F,
+    ) -> Self {
+        let mut img = ImageRGB::zeros(width, height);
+        for y in 0..height {
+            for x in 0..width {
+                let px = f(x, y);
+                img.put(x, y, px);
+            }
+        }
+        img
+    }
+
+    #[inline]
+    pub fn idx(&self, x: usize, y: usize) -> usize {
+        (y * self.width + x) * 3
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> [f32; 3] {
+        let i = self.idx(x, y);
+        [self.data[i], self.data[i + 1], self.data[i + 2]]
+    }
+
+    #[inline]
+    pub fn put(&mut self, x: usize, y: usize, px: [f32; 3]) {
+        let i = self.idx(x, y);
+        self.data[i] = px[0];
+        self.data[i + 1] = px[1];
+        self.data[i + 2] = px[2];
+    }
+
+    /// Number of pixels.
+    pub fn pixels(&self) -> usize {
+        self.width * self.height
+    }
+
+    /// Clamp all channels into `[0, 1]` in place.
+    pub fn clamp01(&mut self) {
+        for v in &mut self.data {
+            *v = v.clamp(0.0, 1.0);
+        }
+    }
+
+    /// Crop the region described by `bbox` (clipped to bounds).
+    pub fn crop(&self, bbox: &BBox) -> ImageRGB {
+        let b = bbox.clip(self.width, self.height);
+        let mut out = ImageRGB::zeros(b.w, b.h);
+        for dy in 0..b.h {
+            for dx in 0..b.w {
+                out.put(dx, dy, self.get(b.x + dx, b.y + dy));
+            }
+        }
+        out
+    }
+
+    /// Paste `patch` with its top-left corner at `(x0, y0)` (clipped).
+    pub fn paste(&mut self, patch: &ImageRGB, x0: usize, y0: usize) {
+        for dy in 0..patch.height {
+            let y = y0 + dy;
+            if y >= self.height {
+                break;
+            }
+            for dx in 0..patch.width {
+                let x = x0 + dx;
+                if x >= self.width {
+                    break;
+                }
+                self.put(x, y, patch.get(dx, dy));
+            }
+        }
+    }
+
+    /// Add `patch` pixel-wise (residual overlay, §3.2.1 of the paper:
+    /// final object = background-INR RGB + object-INR residual).
+    pub fn add_patch(&mut self, patch: &ImageRGB, x0: usize, y0: usize) {
+        for dy in 0..patch.height {
+            let y = y0 + dy;
+            if y >= self.height {
+                break;
+            }
+            for dx in 0..patch.width {
+                let x = x0 + dx;
+                if x >= self.width {
+                    break;
+                }
+                let a = self.get(x, y);
+                let b = patch.get(dx, dy);
+                self.put(x, y, [a[0] + b[0], a[1] + b[1], a[2] + b[2]]);
+            }
+        }
+    }
+
+    /// Pixel-wise difference `self - other` over the bbox region (the
+    /// residual-encoding target, §3.1.2).
+    pub fn residual_in(&self, other: &ImageRGB, bbox: &BBox) -> ImageRGB {
+        assert_eq!((self.width, self.height), (other.width, other.height));
+        let b = bbox.clip(self.width, self.height);
+        let mut out = ImageRGB::zeros(b.w, b.h);
+        for dy in 0..b.h {
+            for dx in 0..b.w {
+                let a = self.get(b.x + dx, b.y + dy);
+                let c = other.get(b.x + dx, b.y + dy);
+                out.put(dx, dy, [a[0] - c[0], a[1] - c[1], a[2] - c[2]]);
+            }
+        }
+        out
+    }
+
+    /// Convert to 8-bit interleaved RGB (rounding, clamped).
+    pub fn to_u8(&self) -> Vec<u8> {
+        self.data
+            .iter()
+            .map(|&v| (v.clamp(0.0, 1.0) * 255.0).round() as u8)
+            .collect()
+    }
+
+    /// Build from 8-bit interleaved RGB.
+    pub fn from_u8(width: usize, height: usize, bytes: &[u8]) -> Self {
+        assert_eq!(bytes.len(), width * height * 3);
+        ImageRGB {
+            width,
+            height,
+            data: bytes.iter().map(|&b| b as f32 / 255.0).collect(),
+        }
+    }
+
+    /// Mean squared error against another image of the same shape.
+    pub fn mse(&self, other: &ImageRGB) -> f64 {
+        assert_eq!((self.width, self.height), (other.width, other.height));
+        let n = self.data.len() as f64;
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_put_roundtrip() {
+        let mut img = ImageRGB::zeros(4, 3);
+        img.put(2, 1, [0.1, 0.5, 0.9]);
+        assert_eq!(img.get(2, 1), [0.1, 0.5, 0.9]);
+        assert_eq!(img.get(0, 0), [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn crop_paste_roundtrip() {
+        let img = ImageRGB::from_fn(8, 6, |x, y| [x as f32 / 8.0, y as f32 / 6.0, 0.5]);
+        let bb = BBox { x: 2, y: 1, w: 3, h: 4 };
+        let patch = img.crop(&bb);
+        assert_eq!((patch.width, patch.height), (3, 4));
+        let mut dst = ImageRGB::zeros(8, 6);
+        dst.paste(&patch, 2, 1);
+        for dy in 0..4 {
+            for dx in 0..3 {
+                assert_eq!(dst.get(2 + dx, 1 + dy), img.get(2 + dx, 1 + dy));
+            }
+        }
+    }
+
+    #[test]
+    fn residual_plus_background_reconstructs() {
+        let raw = ImageRGB::from_fn(6, 6, |x, y| [(x + y) as f32 / 12.0, 0.3, 0.7]);
+        let approx = ImageRGB::from_fn(6, 6, |x, y| [(x + y) as f32 / 14.0, 0.25, 0.72]);
+        let bb = BBox { x: 1, y: 2, w: 3, h: 2 };
+        let res = raw.residual_in(&approx, &bb);
+        let mut recon = approx.clone();
+        recon.add_patch(&res, 1, 2);
+        for dy in 0..2 {
+            for dx in 0..3 {
+                let a = recon.get(1 + dx, 2 + dy);
+                let b = raw.get(1 + dx, 2 + dy);
+                for c in 0..3 {
+                    assert!((a[c] - b[c]).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn u8_roundtrip_within_quantum() {
+        let img = ImageRGB::from_fn(5, 5, |x, y| {
+            [x as f32 / 5.0, y as f32 / 5.0, (x * y) as f32 / 25.0]
+        });
+        let back = ImageRGB::from_u8(5, 5, &img.to_u8());
+        for (a, b) in img.data.iter().zip(&back.data) {
+            assert!((a - b).abs() <= 0.5 / 255.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn mse_zero_on_self() {
+        let img = ImageRGB::from_fn(4, 4, |x, _| [x as f32 / 4.0; 3]);
+        assert_eq!(img.mse(&img), 0.0);
+    }
+
+    #[test]
+    fn paste_clips_at_border() {
+        let mut img = ImageRGB::zeros(4, 4);
+        let patch = ImageRGB::from_fn(3, 3, |_, _| [1.0; 3]);
+        img.paste(&patch, 3, 3); // only (3,3) lands
+        assert_eq!(img.get(3, 3), [1.0; 3]);
+        assert_eq!(img.get(2, 2), [0.0; 3]);
+    }
+}

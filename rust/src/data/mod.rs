@@ -1,0 +1,11 @@
+//! Data substrate: image container, bounding boxes, and the synthetic
+//! UAV-video dataset generator standing in for DAC-SDC / UAV123 / OTB100
+//! (see DESIGN.md substitution table).
+
+pub mod bbox;
+pub mod image;
+pub mod synth;
+
+pub use bbox::BBox;
+pub use image::ImageRGB;
+pub use synth::{generate_dataset, generate_sequence, Dataset, Profile, Sequence, FRAME_H, FRAME_W};

@@ -1,0 +1,225 @@
+//! INR architecture descriptions.
+//!
+//! Single source of truth for network shapes is `configs/arch.json`, read
+//! both by `python/compile/aot.py` (to build and lower the jax models) and
+//! by this module (for size accounting, grouping keys and manifest
+//! validation). The structures here mirror the paper's Tables 1 and 2,
+//! scaled to the synthetic 128×96 frames (DESIGN.md substitution table).
+
+use crate::util::json::Json;
+
+/// Coordinate-MLP architecture (Rapid-INR family, Table 1).
+///
+/// Layer counting follows the paper's "layer count × hidden dimension":
+/// `layers` total linear layers — input projection (posenc → hidden),
+/// `layers - 2` hidden→hidden, and a final hidden → 3 head.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MlpArch {
+    pub name: String,
+    pub layers: usize,
+    pub hidden: usize,
+    /// Number of positional-encoding frequency bands per coordinate.
+    pub posenc: usize,
+    /// `true` for background/baseline INRs (RGB in [0,1], sigmoid head);
+    /// `false` for object INRs (linear head over residuals).
+    pub sigmoid_out: bool,
+}
+
+impl MlpArch {
+    /// Input dimensionality after positional encoding:
+    /// `[x, y, sin/cos(2^k π x|y) for k < posenc]`.
+    pub fn in_dim(&self) -> usize {
+        2 + 4 * self.posenc
+    }
+
+    /// Ordered parameter shapes `(name, [rows, cols] | [cols])`, identical
+    /// to the flattening order used by the jax model.
+    pub fn param_shapes(&self) -> Vec<(String, Vec<usize>)> {
+        assert!(self.layers >= 2, "MlpArch needs >= 2 layers");
+        let mut out = Vec::new();
+        let mut dims = vec![self.in_dim()];
+        dims.extend(std::iter::repeat(self.hidden).take(self.layers - 1));
+        dims.push(3);
+        for l in 0..self.layers {
+            out.push((format!("w{l}"), vec![dims[l], dims[l + 1]]));
+            out.push((format!("b{l}"), vec![dims[l + 1]]));
+        }
+        out
+    }
+
+    /// Total scalar parameter count.
+    pub fn param_count(&self) -> usize {
+        self.param_shapes().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    pub fn from_json(name: &str, j: &Json) -> Option<MlpArch> {
+        Some(MlpArch {
+            name: name.to_string(),
+            layers: j.get("layers")?.as_usize()?,
+            hidden: j.get("hidden")?.as_usize()?,
+            posenc: j.get("posenc")?.as_usize()?,
+            sigmoid_out: j.get("sigmoid_out")?.as_bool()?,
+        })
+    }
+}
+
+/// NeRV-style video INR (Table 2): positional-encoded frame index → MLP
+/// stem → reshape to a `(c0, h0, w0)` feature map → 3 conv+pixel-shuffle
+/// upsampling stages (×2 each) → 3×3 conv head → RGB frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NervArch {
+    pub name: String,
+    /// Frequency bands for the scalar time index.
+    pub posenc: usize,
+    /// Stem hidden width (paper's "dim 1").
+    pub dim1: usize,
+    /// Channels of the reshaped stem output feature map.
+    pub c0: usize,
+    /// Output channels of the three upsampling stages.
+    pub channels: [usize; 3],
+    /// Base feature-map size; frame = (h0 * 8, w0 * 8).
+    pub h0: usize,
+    pub w0: usize,
+}
+
+impl NervArch {
+    pub fn t_dim(&self) -> usize {
+        1 + 2 * self.posenc
+    }
+
+    /// Stem output size (paper's "dim 2") = c0 · h0 · w0.
+    pub fn dim2(&self) -> usize {
+        self.c0 * self.h0 * self.w0
+    }
+
+    pub fn frame_h(&self) -> usize {
+        self.h0 * 8
+    }
+
+    pub fn frame_w(&self) -> usize {
+        self.w0 * 8
+    }
+
+    /// Ordered parameter shapes. Conv kernels are `[kh, kw, cin, cout]`
+    /// (jax `conv_general_dilated` HWIO layout); pixel-shuffle stages
+    /// produce `4 * cout` channels before depth-to-space.
+    pub fn param_shapes(&self) -> Vec<(String, Vec<usize>)> {
+        let mut out = vec![
+            ("stem_w1".to_string(), vec![self.t_dim(), self.dim1]),
+            ("stem_b1".to_string(), vec![self.dim1]),
+            ("stem_w2".to_string(), vec![self.dim1, self.dim2()]),
+            ("stem_b2".to_string(), vec![self.dim2()]),
+        ];
+        let mut cin = self.c0;
+        for (i, &cout) in self.channels.iter().enumerate() {
+            out.push((format!("conv{i}_w"), vec![3, 3, cin, 4 * cout]));
+            out.push((format!("conv{i}_b"), vec![4 * cout]));
+            cin = cout;
+        }
+        out.push(("head_w".to_string(), vec![3, 3, cin, 3]));
+        out.push(("head_b".to_string(), vec![3]));
+        out
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_shapes().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    pub fn from_json(name: &str, j: &Json) -> Option<NervArch> {
+        let ch = j.get("channels")?.as_arr()?;
+        Some(NervArch {
+            name: name.to_string(),
+            posenc: j.get("posenc")?.as_usize()?,
+            dim1: j.get("dim1")?.as_usize()?,
+            c0: j.get("c0")?.as_usize()?,
+            channels: [ch[0].as_usize()?, ch[1].as_usize()?, ch[2].as_usize()?],
+            h0: j.get("h0")?.as_usize()?,
+            w0: j.get("w0")?.as_usize()?,
+        })
+    }
+}
+
+/// One object-INR size bin: objects whose padded bbox fits in
+/// `max_side × max_side` use `arch` (coords padded to `max_side²` rows in
+/// the fixed-shape artifacts).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObjectBin {
+    pub max_side: usize,
+    pub arch: MlpArch,
+}
+
+impl ObjectBin {
+    /// Fixed row count of the bin's coordinate/target tensors.
+    pub fn max_pixels(&self) -> usize {
+        self.max_side * self.max_side
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mlp(layers: usize, hidden: usize) -> MlpArch {
+        MlpArch { name: "t".into(), layers, hidden, posenc: 6, sigmoid_out: true }
+    }
+
+    #[test]
+    fn mlp_shapes_and_count() {
+        let a = mlp(3, 16);
+        let shapes = a.param_shapes();
+        // w0: 26x16, b0: 16, w1: 16x16, b1: 16, w2: 16x3, b2: 3
+        assert_eq!(shapes.len(), 6);
+        assert_eq!(shapes[0].1, vec![26, 16]);
+        assert_eq!(shapes[2].1, vec![16, 16]);
+        assert_eq!(shapes[4].1, vec![16, 3]);
+        assert_eq!(a.param_count(), 26 * 16 + 16 + 16 * 16 + 16 + 16 * 3 + 3);
+    }
+
+    #[test]
+    fn two_layer_mlp_is_minimal() {
+        let a = mlp(2, 8);
+        let shapes = a.param_shapes();
+        assert_eq!(shapes.len(), 4);
+        assert_eq!(shapes[0].1, vec![26, 8]);
+        assert_eq!(shapes[2].1, vec![8, 3]);
+    }
+
+    #[test]
+    fn bigger_arch_more_params() {
+        assert!(mlp(10, 28).param_count() > mlp(6, 12).param_count());
+    }
+
+    #[test]
+    fn nerv_shapes() {
+        let n = NervArch {
+            name: "bs".into(),
+            posenc: 6,
+            dim1: 96,
+            c0: 8,
+            channels: [16, 12, 8],
+            h0: 12,
+            w0: 16,
+        };
+        assert_eq!(n.t_dim(), 13);
+        assert_eq!(n.dim2(), 8 * 12 * 16);
+        assert_eq!(n.frame_h(), 96);
+        assert_eq!(n.frame_w(), 128);
+        let shapes = n.param_shapes();
+        assert_eq!(shapes[2].1, vec![96, 8 * 12 * 16]);
+        assert_eq!(shapes[4].1, vec![3, 3, 8, 64]); // conv0: c0→4*16
+        assert_eq!(shapes.last().unwrap().1, vec![3]);
+        assert!(n.param_count() > 0);
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = crate::util::json::parse(
+            r#"{"layers": 6, "hidden": 12, "posenc": 6, "sigmoid_out": true}"#,
+        )
+        .unwrap();
+        let a = MlpArch::from_json("bg", &j).unwrap();
+        assert_eq!(a.layers, 6);
+        assert_eq!(a.hidden, 12);
+        assert!(a.sigmoid_out);
+    }
+}

@@ -1,0 +1,13 @@
+//! INR representation substrate: architecture descriptions (Tables 1–2),
+//! weight containers, 8/16-bit quantization (§5.2), and the wire format
+//! transmitted over the simulated network.
+
+pub mod arch;
+pub mod pack;
+pub mod quantize;
+pub mod weights;
+
+pub use arch::{MlpArch, NervArch, ObjectBin};
+pub use pack::Record;
+pub use quantize::{dequantize, quantize, Bits, QuantWeightSet};
+pub use weights::{Tensor, WeightSet};

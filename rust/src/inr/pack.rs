@@ -1,0 +1,404 @@
+//! Wire format for INR payloads — what actually crosses the simulated
+//! wireless links. A `Record` is the per-image (Res-Rapid-INR) or
+//! per-sequence (Res-NeRV) transmission unit; `to_bytes`/`from_bytes`
+//! define an exact, versioned binary encoding, optionally deflate-packed
+//! (an extension over the paper, which counts quantized bits directly —
+//! both sizes are reported).
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+use super::quantize::{Bits, QuantTensor, QuantWeightSet};
+use crate::data::BBox;
+
+const MAGIC: &[u8; 4] = b"RINR";
+const VERSION: u8 = 1;
+
+/// A transmitted compressed item.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    /// Baseline single-INR image (Rapid-INR): one network encodes the frame.
+    SingleImage { frame_id: u32, arch: String, weights: QuantWeightSet },
+    /// Residual-INR image: background INR + object INR + object bbox.
+    /// `direct` selects direct-RGB object encoding (Fig 5/9 "DE" ablation)
+    /// instead of residual encoding; the decoder then *replaces* the object
+    /// region rather than adding the residual.
+    ResidualImage {
+        frame_id: u32,
+        bbox: BBox,
+        direct: bool,
+        bg_arch: String,
+        bg: QuantWeightSet,
+        obj_arch: String,
+        obj: QuantWeightSet,
+    },
+    /// NeRV-style whole-sequence network (baseline or background).
+    VideoNet { seq_id: u32, n_frames: u32, arch: String, weights: QuantWeightSet },
+    /// Raw JPEG bytes (the serverless baseline transmission unit).
+    Jpeg { frame_id: u32, bytes: Vec<u8> },
+    /// Stand-alone per-frame object INR (Res-NeRV: the background travels
+    /// once as a `VideoNet`, objects as one `ObjectPatch` per frame).
+    ObjectPatch {
+        frame_id: u32,
+        bbox: BBox,
+        direct: bool,
+        obj_arch: String,
+        obj: QuantWeightSet,
+    },
+}
+
+impl Record {
+    /// Size in bytes as transmitted (uncompressed container).
+    pub fn wire_size(&self) -> usize {
+        self.to_bytes().len()
+    }
+
+    /// Payload-only size (what the paper's "image size" counts: quantized
+    /// weight bits for INR records, JPEG bytes for JPEG records).
+    pub fn payload_size(&self) -> usize {
+        match self {
+            Record::SingleImage { weights, .. } => weights.byte_size(),
+            Record::ResidualImage { bg, obj, .. } => bg.byte_size() + obj.byte_size(),
+            Record::VideoNet { weights, .. } => weights.byte_size(),
+            Record::Jpeg { bytes, .. } => bytes.len(),
+            Record::ObjectPatch { obj, .. } => obj.byte_size(),
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION);
+        match self {
+            Record::SingleImage { frame_id, arch, weights } => {
+                out.push(0);
+                out.extend_from_slice(&frame_id.to_le_bytes());
+                write_str(&mut out, arch);
+                write_qws(&mut out, weights);
+            }
+            Record::ResidualImage { frame_id, bbox, direct, bg_arch, bg, obj_arch, obj } => {
+                out.push(1);
+                out.extend_from_slice(&frame_id.to_le_bytes());
+                out.push(*direct as u8);
+                for v in [bbox.x, bbox.y, bbox.w, bbox.h] {
+                    out.extend_from_slice(&(v as u16).to_le_bytes());
+                }
+                write_str(&mut out, bg_arch);
+                write_qws(&mut out, bg);
+                write_str(&mut out, obj_arch);
+                write_qws(&mut out, obj);
+            }
+            Record::VideoNet { seq_id, n_frames, arch, weights } => {
+                out.push(2);
+                out.extend_from_slice(&seq_id.to_le_bytes());
+                out.extend_from_slice(&n_frames.to_le_bytes());
+                write_str(&mut out, arch);
+                write_qws(&mut out, weights);
+            }
+            Record::Jpeg { frame_id, bytes } => {
+                out.push(3);
+                out.extend_from_slice(&frame_id.to_le_bytes());
+                out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                out.extend_from_slice(bytes);
+            }
+            Record::ObjectPatch { frame_id, bbox, direct, obj_arch, obj } => {
+                out.push(4);
+                out.extend_from_slice(&frame_id.to_le_bytes());
+                out.push(*direct as u8);
+                for v in [bbox.x, bbox.y, bbox.w, bbox.h] {
+                    out.extend_from_slice(&(v as u16).to_le_bytes());
+                }
+                write_str(&mut out, obj_arch);
+                write_qws(&mut out, obj);
+            }
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Record> {
+        let mut c = Cursor { b: bytes, i: 0 };
+        if c.take(4)? != MAGIC {
+            bail!("bad RINR magic");
+        }
+        if c.u8()? != VERSION {
+            bail!("bad RINR version");
+        }
+        let tag = c.u8()?;
+        let rec = match tag {
+            0 => Record::SingleImage {
+                frame_id: c.u32()?,
+                arch: c.string()?,
+                weights: read_qws(&mut c)?,
+            },
+            1 => {
+                let frame_id = c.u32()?;
+                let direct = c.u8()? != 0;
+                let x = c.u16()? as usize;
+                let y = c.u16()? as usize;
+                let w = c.u16()? as usize;
+                let h = c.u16()? as usize;
+                Record::ResidualImage {
+                    frame_id,
+                    bbox: BBox { x, y, w, h },
+                    direct,
+                    bg_arch: c.string()?,
+                    bg: read_qws(&mut c)?,
+                    obj_arch: c.string()?,
+                    obj: read_qws(&mut c)?,
+                }
+            }
+            2 => Record::VideoNet {
+                seq_id: c.u32()?,
+                n_frames: c.u32()?,
+                arch: c.string()?,
+                weights: read_qws(&mut c)?,
+            },
+            3 => {
+                let frame_id = c.u32()?;
+                let n = c.u32()? as usize;
+                Record::Jpeg { frame_id, bytes: c.take(n)?.to_vec() }
+            }
+            4 => {
+                let frame_id = c.u32()?;
+                let direct = c.u8()? != 0;
+                let x = c.u16()? as usize;
+                let y = c.u16()? as usize;
+                let w = c.u16()? as usize;
+                let h = c.u16()? as usize;
+                Record::ObjectPatch {
+                    frame_id,
+                    bbox: BBox { x, y, w, h },
+                    direct,
+                    obj_arch: c.string()?,
+                    obj: read_qws(&mut c)?,
+                }
+            }
+            t => bail!("unknown record tag {t}"),
+        };
+        if c.i != bytes.len() {
+            bail!("trailing bytes in record");
+        }
+        Ok(rec)
+    }
+
+    /// Deflate-compress the serialized record (size extension, DESIGN.md).
+    pub fn to_deflate_bytes(&self) -> Vec<u8> {
+        let raw = self.to_bytes();
+        let mut enc = flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::best());
+        enc.write_all(&raw).expect("in-memory write");
+        enc.finish().expect("in-memory finish")
+    }
+
+    pub fn from_deflate_bytes(bytes: &[u8]) -> Result<Record> {
+        let mut dec = flate2::read::ZlibDecoder::new(bytes);
+        let mut raw = Vec::new();
+        dec.read_to_end(&mut raw).context("inflate record")?;
+        Record::from_bytes(&raw)
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated record at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn string(&mut self) -> Result<String> {
+        let n = self.u8()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec()).context("bad utf8")?)
+    }
+}
+
+fn write_str(out: &mut Vec<u8>, s: &str) {
+    assert!(s.len() <= 255);
+    out.push(s.len() as u8);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn write_qws(out: &mut Vec<u8>, q: &QuantWeightSet) {
+    out.push(q.bits.tag());
+    out.extend_from_slice(&(q.tensors.len() as u16).to_le_bytes());
+    for t in &q.tensors {
+        write_str(out, &t.name);
+        out.push(t.shape.len() as u8);
+        for &d in &t.shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&t.min.to_le_bytes());
+        out.extend_from_slice(&t.scale.to_le_bytes());
+        out.extend_from_slice(&(t.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&t.payload);
+    }
+}
+
+fn read_qws(c: &mut Cursor<'_>) -> Result<QuantWeightSet> {
+    let bits = Bits::from_tag(c.u8()?)?;
+    let n = c.u16()? as usize;
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = c.string()?;
+        let rank = c.u8()? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(c.u32()? as usize);
+        }
+        let min = c.f32()?;
+        let scale = c.f32()?;
+        let plen = c.u32()? as usize;
+        let payload = c.take(plen)?.to_vec();
+        let expected: usize = shape.iter().product::<usize>() * bits.bits() / 8;
+        if plen != expected {
+            bail!("tensor {name} payload {plen} != expected {expected}");
+        }
+        tensors.push(QuantTensor { name, shape, bits, min, scale, payload });
+    }
+    Ok(QuantWeightSet { bits, tensors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inr::quantize::quantize;
+    use crate::inr::weights::{Tensor, WeightSet};
+    use crate::util::rng::Pcg32;
+
+    fn sample_qws(seed: u64, bits: Bits) -> QuantWeightSet {
+        let mut rng = Pcg32::seeded(seed);
+        let ws = WeightSet::new(vec![
+            Tensor::new("w0", vec![4, 8], (0..32).map(|_| rng.normal()).collect()),
+            Tensor::new("b0", vec![8], (0..8).map(|_| rng.normal()).collect()),
+        ]);
+        quantize(&ws, bits)
+    }
+
+    #[test]
+    fn single_image_roundtrip() {
+        let rec = Record::SingleImage {
+            frame_id: 17,
+            arch: "rapid_base".into(),
+            weights: sample_qws(1, Bits::B16),
+        };
+        let back = Record::from_bytes(&rec.to_bytes()).unwrap();
+        assert_eq!(rec, back);
+    }
+
+    #[test]
+    fn residual_image_roundtrip() {
+        let rec = Record::ResidualImage {
+            frame_id: 3,
+            bbox: BBox::new(10, 20, 16, 12),
+            direct: false,
+            bg_arch: "bg".into(),
+            bg: sample_qws(2, Bits::B8),
+            obj_arch: "obj1".into(),
+            obj: sample_qws(3, Bits::B16),
+        };
+        let back = Record::from_bytes(&rec.to_bytes()).unwrap();
+        assert_eq!(rec, back);
+    }
+
+    #[test]
+    fn video_and_jpeg_roundtrip() {
+        let rec = Record::VideoNet {
+            seq_id: 5,
+            n_frames: 48,
+            arch: "nerv_bs".into(),
+            weights: sample_qws(4, Bits::B8),
+        };
+        assert_eq!(Record::from_bytes(&rec.to_bytes()).unwrap(), rec);
+        let j = Record::Jpeg { frame_id: 9, bytes: vec![1, 2, 3, 4, 5] };
+        assert_eq!(Record::from_bytes(&j.to_bytes()).unwrap(), j);
+    }
+
+    #[test]
+    fn deflate_roundtrip_and_smaller_on_redundant() {
+        let ws = WeightSet::new(vec![Tensor::new("w", vec![1000], vec![0.5; 1000])]);
+        let rec = Record::SingleImage {
+            frame_id: 0,
+            arch: "x".into(),
+            weights: quantize(&ws, Bits::B16),
+        };
+        let raw = rec.to_bytes();
+        let packed = rec.to_deflate_bytes();
+        assert!(packed.len() < raw.len() / 4, "{} vs {}", packed.len(), raw.len());
+        assert_eq!(Record::from_deflate_bytes(&packed).unwrap(), rec);
+    }
+
+    #[test]
+    fn object_patch_roundtrip() {
+        let rec = Record::ObjectPatch {
+            frame_id: 12,
+            bbox: BBox::new(4, 6, 18, 14),
+            direct: true,
+            obj_arch: "obj2".into(),
+            obj: sample_qws(8, Bits::B16),
+        };
+        assert_eq!(Record::from_bytes(&rec.to_bytes()).unwrap(), rec);
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let rec = Record::SingleImage {
+            frame_id: 1,
+            arch: "a".into(),
+            weights: sample_qws(6, Bits::B8),
+        };
+        let bytes = rec.to_bytes();
+        assert!(Record::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(Record::from_bytes(&extra).is_err());
+    }
+
+    #[test]
+    fn payload_size_excludes_container() {
+        let q = sample_qws(7, Bits::B8);
+        let rec = Record::SingleImage { frame_id: 0, arch: "a".into(), weights: q.clone() };
+        assert_eq!(rec.payload_size(), q.byte_size());
+        assert!(rec.wire_size() > rec.payload_size());
+    }
+
+    #[test]
+    fn property_arbitrary_records_roundtrip() {
+        crate::util::propcheck::check("record-roundtrip", |rng| {
+            let bits = *rng.choose(&[Bits::B8, Bits::B16, Bits::F32]);
+            let n_tensors = 1 + rng.below_usize(4);
+            let tensors: Vec<Tensor> = (0..n_tensors)
+                .map(|i| {
+                    let n = 1 + rng.below_usize(64);
+                    Tensor::new(
+                        format!("t{i}"),
+                        vec![n],
+                        (0..n).map(|_| rng.range_f32(-5.0, 5.0)).collect(),
+                    )
+                })
+                .collect();
+            let rec = Record::SingleImage {
+                frame_id: rng.next_u32(),
+                arch: "arch".into(),
+                weights: quantize(&WeightSet::new(tensors), bits),
+            };
+            assert_eq!(Record::from_bytes(&rec.to_bytes()).unwrap(), rec);
+        });
+    }
+}

@@ -1,0 +1,263 @@
+//! Per-tensor affine weight quantization (8- or 16-bit).
+//!
+//! §5.2 / Fig 9 of the paper: background INRs are quantized to 8 bits and
+//! object INRs to 16 bits before transmission. Quantization is a rust-side
+//! transform: the edge dequantizes back to f32 before feeding the decode
+//! artifacts, so the PSNR cost of quantization flows through the exact same
+//! decode path the paper measures.
+
+use anyhow::{bail, Result};
+
+use super::weights::{Tensor, WeightSet};
+
+/// Quantization width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Bits {
+    B8,
+    B16,
+    /// No quantization (f32 passthrough) — used for ablations.
+    F32,
+}
+
+impl Bits {
+    pub fn bits(&self) -> usize {
+        match self {
+            Bits::B8 => 8,
+            Bits::B16 => 16,
+            Bits::F32 => 32,
+        }
+    }
+
+    pub fn tag(&self) -> u8 {
+        match self {
+            Bits::B8 => 8,
+            Bits::B16 => 16,
+            Bits::F32 => 32,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<Bits> {
+        Ok(match t {
+            8 => Bits::B8,
+            16 => Bits::B16,
+            32 => Bits::F32,
+            _ => bail!("unknown quantization tag {t}"),
+        })
+    }
+}
+
+/// One quantized tensor: affine `(min, scale)` + packed integer payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub bits: Bits,
+    pub min: f32,
+    pub scale: f32,
+    /// Packed little-endian payload (1, 2 or 4 bytes/element).
+    pub payload: Vec<u8>,
+}
+
+impl QuantTensor {
+    /// Serialized size in bytes (payload + per-tensor affine header).
+    pub fn byte_size(&self) -> usize {
+        self.payload.len() + 8 // min + scale
+    }
+}
+
+/// A fully quantized weight set — the unit of transmission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantWeightSet {
+    pub bits: Bits,
+    pub tensors: Vec<QuantTensor>,
+}
+
+impl QuantWeightSet {
+    /// Total transmitted size in bytes (payloads + affine headers).
+    pub fn byte_size(&self) -> usize {
+        self.tensors.iter().map(|t| t.byte_size()).sum()
+    }
+}
+
+/// Quantize a weight set at the given width.
+pub fn quantize(ws: &WeightSet, bits: Bits) -> QuantWeightSet {
+    let tensors = ws.tensors.iter().map(|t| quantize_tensor(t, bits)).collect();
+    QuantWeightSet { bits, tensors }
+}
+
+fn quantize_tensor(t: &Tensor, bits: Bits) -> QuantTensor {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in &t.data {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    let levels = match bits {
+        Bits::B8 => 255.0f64,
+        Bits::B16 => 65535.0f64,
+        Bits::F32 => {
+            // Passthrough: payload is raw f32 little-endian.
+            let mut payload = Vec::with_capacity(t.data.len() * 4);
+            for &v in &t.data {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+            return QuantTensor {
+                name: t.name.clone(),
+                shape: t.shape.clone(),
+                bits,
+                min: 0.0,
+                scale: 1.0,
+                payload,
+            };
+        }
+    };
+    let span = (hi - lo) as f64;
+    let scale = if span > 0.0 { span / levels } else { 1.0 };
+    let mut payload = Vec::with_capacity(t.data.len() * bits.bits() / 8);
+    for &v in &t.data {
+        let q = (((v - lo) as f64 / scale).round() as i64).clamp(0, levels as i64) as u64;
+        match bits {
+            Bits::B8 => payload.push(q as u8),
+            Bits::B16 => payload.extend_from_slice(&(q as u16).to_le_bytes()),
+            Bits::F32 => unreachable!(),
+        }
+    }
+    QuantTensor {
+        name: t.name.clone(),
+        shape: t.shape.clone(),
+        bits,
+        min: lo,
+        scale: scale as f32,
+        payload,
+    }
+}
+
+/// Dequantize back to f32 weights.
+pub fn dequantize(q: &QuantWeightSet) -> WeightSet {
+    WeightSet {
+        tensors: q.tensors.iter().map(dequantize_tensor).collect(),
+    }
+}
+
+fn dequantize_tensor(t: &QuantTensor) -> Tensor {
+    let n: usize = t.shape.iter().product();
+    let mut data = Vec::with_capacity(n);
+    match t.bits {
+        Bits::B8 => {
+            for &b in &t.payload {
+                data.push(t.min + t.scale * b as f32);
+            }
+        }
+        Bits::B16 => {
+            for c in t.payload.chunks_exact(2) {
+                let v = u16::from_le_bytes([c[0], c[1]]);
+                data.push(t.min + t.scale * v as f32);
+            }
+        }
+        Bits::F32 => {
+            for c in t.payload.chunks_exact(4) {
+                data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+        }
+    }
+    Tensor::new(t.name.clone(), t.shape.clone(), data)
+}
+
+/// Worst-case absolute reconstruction error for a quantized tensor
+/// (half a quantization step).
+pub fn max_error(q: &QuantTensor) -> f32 {
+    match q.bits {
+        Bits::F32 => 0.0,
+        _ => q.scale * 0.5 + f32::EPSILON,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    fn ws_from(data: Vec<f32>) -> WeightSet {
+        let n = data.len();
+        WeightSet::new(vec![Tensor::new("w", vec![n], data)])
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_8bit() {
+        let ws = ws_from((0..100).map(|i| (i as f32 - 50.0) * 0.037).collect());
+        let q = quantize(&ws, Bits::B8);
+        let back = dequantize(&q);
+        let step = q.tensors[0].scale;
+        for (a, b) in ws.tensors[0].data.iter().zip(&back.tensors[0].data) {
+            assert!((a - b).abs() <= step * 0.5 + 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sixteen_bit_finer_than_eight() {
+        let data: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.618).sin()).collect();
+        let ws = ws_from(data);
+        let q8 = quantize(&ws, Bits::B8);
+        let q16 = quantize(&ws, Bits::B16);
+        let err = |q: &QuantWeightSet| {
+            let back = dequantize(q);
+            ws.tensors[0]
+                .data
+                .iter()
+                .zip(&back.tensors[0].data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max)
+        };
+        assert!(err(&q16) < err(&q8) / 10.0);
+        // And 16-bit costs exactly twice the payload.
+        assert_eq!(q16.tensors[0].payload.len(), 2 * q8.tensors[0].payload.len());
+    }
+
+    #[test]
+    fn f32_passthrough_exact() {
+        let ws = ws_from(vec![1.5, -2.25, 0.0, 1e-7]);
+        let back = dequantize(&quantize(&ws, Bits::F32));
+        assert_eq!(ws.tensors[0].data, back.tensors[0].data);
+    }
+
+    #[test]
+    fn constant_tensor_roundtrips() {
+        let ws = ws_from(vec![3.25; 64]);
+        let back = dequantize(&quantize(&ws, Bits::B8));
+        for &v in &back.tensors[0].data {
+            assert!((v - 3.25).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn byte_size_accounting() {
+        let ws = WeightSet::new(vec![
+            Tensor::zeros("a", vec![10, 10]),
+            Tensor::zeros("b", vec![10]),
+        ]);
+        assert_eq!(quantize(&ws, Bits::B8).byte_size(), 110 + 16);
+        assert_eq!(quantize(&ws, Bits::B16).byte_size(), 220 + 16);
+    }
+
+    #[test]
+    fn property_quantization_error_within_bound() {
+        propcheck::check("quant-error-bound", |rng| {
+            let n = 1 + rng.below_usize(500);
+            let lo = rng.range_f32(-10.0, 0.0);
+            let hi = lo + rng.range_f32(0.01, 20.0);
+            let data: Vec<f32> = (0..n).map(|_| rng.range_f32(lo, hi)).collect();
+            let ws = ws_from(data);
+            for bits in [Bits::B8, Bits::B16] {
+                let q = quantize(&ws, bits);
+                let bound = max_error(&q.tensors[0]) + 1e-4;
+                let back = dequantize(&q);
+                for (a, b) in ws.tensors[0].data.iter().zip(&back.tensors[0].data) {
+                    assert!((a - b).abs() <= bound, "{bits:?}: |{a}-{b}| > {bound}");
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,145 @@
+//! Weight containers: an ordered set of named f32 tensors matching an
+//! architecture's `param_shapes()`. This is what the fog node trains,
+//! quantizes, transmits, and the edge device feeds to decode artifacts.
+
+use anyhow::{bail, Result};
+
+/// One named tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(name: impl Into<String>, shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        let t = Tensor { name: name.into(), shape, data };
+        assert_eq!(t.len(), t.data.len(), "tensor {} shape/data mismatch", t.name);
+        t
+    }
+
+    pub fn zeros(name: impl Into<String>, shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { name: name.into(), shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Ordered collection of tensors (order = artifact parameter order).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WeightSet {
+    pub tensors: Vec<Tensor>,
+}
+
+impl WeightSet {
+    pub fn new(tensors: Vec<Tensor>) -> WeightSet {
+        WeightSet { tensors }
+    }
+
+    /// Zero-initialized weights for the given `(name, shape)` list.
+    pub fn zeros(shapes: &[(String, Vec<usize>)]) -> WeightSet {
+        WeightSet {
+            tensors: shapes
+                .iter()
+                .map(|(n, s)| Tensor::zeros(n.clone(), s.clone()))
+                .collect(),
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Unquantized in-memory size (f32).
+    pub fn f32_bytes(&self) -> usize {
+        self.param_count() * 4
+    }
+
+    /// Validate against an architecture's expected shapes.
+    pub fn check_shapes(&self, expected: &[(String, Vec<usize>)]) -> Result<()> {
+        if self.tensors.len() != expected.len() {
+            bail!(
+                "tensor count mismatch: {} vs expected {}",
+                self.tensors.len(),
+                expected.len()
+            );
+        }
+        for (t, (name, shape)) in self.tensors.iter().zip(expected) {
+            if &t.name != name || &t.shape != shape {
+                bail!(
+                    "tensor mismatch: got {}{:?}, expected {}{:?}",
+                    t.name,
+                    t.shape,
+                    name,
+                    shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    /// Flatten all tensors into one vector (artifact parameter order).
+    pub fn flat(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.param_count());
+        for t in &self.tensors {
+            v.extend_from_slice(&t.data);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> Vec<(String, Vec<usize>)> {
+        vec![
+            ("w0".into(), vec![4, 8]),
+            ("b0".into(), vec![8]),
+            ("w1".into(), vec![8, 3]),
+            ("b1".into(), vec![3]),
+        ]
+    }
+
+    #[test]
+    fn zeros_matches_shapes() {
+        let ws = WeightSet::zeros(&shapes());
+        assert_eq!(ws.param_count(), 32 + 8 + 24 + 3);
+        ws.check_shapes(&shapes()).unwrap();
+    }
+
+    #[test]
+    fn check_shapes_catches_mismatch() {
+        let mut ws = WeightSet::zeros(&shapes());
+        ws.tensors[1].shape = vec![9];
+        ws.tensors[1].data = vec![0.0; 9];
+        assert!(ws.check_shapes(&shapes()).is_err());
+    }
+
+    #[test]
+    fn flat_preserves_order() {
+        let ws = WeightSet::new(vec![
+            Tensor::new("a", vec![2], vec![1.0, 2.0]),
+            Tensor::new("b", vec![3], vec![3.0, 4.0, 5.0]),
+        ]);
+        assert_eq!(ws.flat(), vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_data_mismatch_panics() {
+        let _ = Tensor::new("x", vec![4], vec![1.0]);
+    }
+}

@@ -1,0 +1,46 @@
+//! # Residual-INR
+//!
+//! Production-oriented reproduction of **"Residual-INR: Communication
+//! Efficient On-Device Learning Using Implicit Neural Representation"**
+//! (Chen, Yao, Subedi, Hao — ICCAD 2024).
+//!
+//! Residual-INR is a fog-computing on-device-learning framework: edge
+//! devices upload JPEG frames to a fog node, which compresses each frame
+//! into a small *background INR* (whole image, low quality) plus a tiny
+//! *object INR* (residual encoding of the object region, high quality) and
+//! redistributes the INR weights; edge devices decode on the fly while
+//! fine-tuning a detection backbone — reducing device-to-device traffic by
+//! up to ~5× and accelerating training (paper Figs 8–11).
+//!
+//! The crate is the **Layer-3 rust coordinator** of a three-layer stack
+//! (see DESIGN.md): all numeric compute (INR encode/decode train steps,
+//! detection backbone) is AOT-compiled from JAX + Pallas to HLO and
+//! executed through the PJRT CPU client ([`runtime`]); Python never runs
+//! at request time.
+//!
+//! Module map:
+//! * [`data`] — synthetic UAV-video datasets (DAC-SDC/UAV123/OTB100 stand-ins)
+//! * [`codec`] — from-scratch baseline JPEG
+//! * [`inr`] — INR weight containers, 8/16-bit quantization, wire format
+//! * [`runtime`] — PJRT artifact registry + executor
+//! * [`coordinator`] — fog node & edge devices (the paper's system)
+//! * [`pipeline`] — grouped parallel decoding (§3.2) + baseline loaders
+//! * [`net`] — simulated wireless network
+//! * [`commmodel`] — §4 analytical communication model
+//! * [`training`] — on-device detection fine-tuning driver
+//! * [`metrics`] — PSNR / entropy / mAP / stats
+//! * [`config`] — `configs/arch.json` loader (shared with the AOT script)
+
+pub mod bench_support;
+pub mod codec;
+pub mod commmodel;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod inr;
+pub mod metrics;
+pub mod net;
+pub mod pipeline;
+pub mod runtime;
+pub mod training;
+pub mod util;

@@ -1,0 +1,167 @@
+//! `residual-inr` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//! * `simulate`  — run the end-to-end fog on-device-learning experiment
+//! * `compress`  — compress a synthetic dataset, report size/PSNR
+//! * `commmodel` — evaluate the §4 analytical communication model
+//! * `info`      — artifact/config inventory
+//!
+//! Examples:
+//! ```text
+//! residual-inr simulate --method res-rapid --profile uav123 --epochs 2
+//! residual-inr compress --method jpeg --quality 60
+//! residual-inr commmodel --devices 10 --alpha 0.15
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use residual_inr::config::ArchConfig;
+use residual_inr::coordinator::{run_sim, EncoderConfig, Method, SimConfig};
+use residual_inr::data::Profile;
+use residual_inr::util::cli::Args;
+use residual_inr::util::fmt_bytes;
+
+fn parse_method(s: &str, quality: u8) -> Result<Method> {
+    Ok(match s {
+        "jpeg" => Method::Jpeg { quality },
+        "rapid" | "rapid-inr" => Method::RapidSingle,
+        "res-rapid" | "res-rapid-inr" => Method::ResRapid { direct: false },
+        "res-rapid-direct" => Method::ResRapid { direct: true },
+        "nerv" => Method::Nerv,
+        "res-nerv" => Method::ResNerv,
+        _ => return Err(anyhow!("unknown method {s} (jpeg|rapid|res-rapid|res-rapid-direct|nerv|res-nerv)")),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env(&["no-grouping", "full"]).map_err(|e| anyhow!(e))?;
+    match args.subcommand.as_deref() {
+        Some("simulate") => simulate(&args),
+        Some("compress") => compress(&args),
+        Some("commmodel") => commmodel(&args),
+        Some("info") => info(),
+        _ => {
+            println!(
+                "residual-inr — fog on-device learning via implicit neural representations\n\
+                 \n\
+                 USAGE: residual-inr <simulate|compress|commmodel|info> [flags]\n\
+                 \n\
+                 simulate   --method <jpeg|rapid|res-rapid|nerv|res-nerv> --profile <dac-sdc|uav123|otb100>\n\
+                 \u{20}          --sequences N --epochs N --receivers N --max-frames N [--no-grouping]\n\
+                 compress   --method M --profile P --max-frames N [--quality Q]\n\
+                 commmodel  --devices K --alpha A [--receivers N]\n\
+                 info\n\
+                 \n\
+                 See examples/ for scripted end-to-end runs."
+            );
+            Ok(())
+        }
+    }
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let cfg = ArchConfig::load_default()?;
+    let quality = args.get_usize("quality", 85).map_err(|e| anyhow!(e))? as u8;
+    let method = parse_method(args.get_or("method", "res-rapid"), quality)?;
+    let profile = Profile::from_name(args.get_or("profile", "dac-sdc"))
+        .ok_or_else(|| anyhow!("unknown profile"))?;
+    let mut sim = SimConfig::small(method);
+    sim.profile = profile;
+    sim.grouped = !args.has("no-grouping");
+    sim.n_sequences = args.get_usize("sequences", 4).map_err(|e| anyhow!(e))?;
+    sim.epochs = args.get_usize("epochs", 2).map_err(|e| anyhow!(e))?;
+    sim.n_receivers = args.get_usize("receivers", 1).map_err(|e| anyhow!(e))?;
+    sim.pretrain_steps = args.get_usize("pretrain", 120).map_err(|e| anyhow!(e))?;
+    sim.seed = args.get_u64("seed", 7).map_err(|e| anyhow!(e))?;
+    sim.max_train_frames = Some(args.get_usize("max-frames", 24).map_err(|e| anyhow!(e))?);
+    if args.has("full") {
+        sim.enc = EncoderConfig::default();
+        sim.max_train_frames = None;
+    }
+    println!("# simulate method={} profile={} grouped={}", sim.method.name(), profile.name(), sim.grouped);
+    let r = run_sim(&cfg, &sim)?;
+    println!("frames trained           : {}", r.n_train_frames);
+    println!("avg frame payload        : {}", fmt_bytes(r.avg_frame_bytes as u64));
+    println!("upload bytes             : {}", fmt_bytes(r.upload_bytes));
+    println!("broadcast bytes          : {}", fmt_bytes(r.broadcast_bytes));
+    println!("total network bytes      : {}", fmt_bytes(r.total_bytes));
+    println!("transmission time        : {:.2} s", r.transmission_seconds);
+    println!("decode time              : {:.2} s", r.decode_seconds);
+    println!("train time               : {:.2} s", r.train_seconds);
+    println!("edge end-to-end          : {:.2} s", r.edge_total_seconds());
+    println!("fog encode time          : {:.2} s (off critical path)", r.fog_encode_seconds);
+    println!("device memory            : {}", fmt_bytes(r.device_memory_bytes as u64));
+    println!("mAP50-95 before → after  : {:.3} → {:.3}", r.map_before, r.map_after);
+    println!("mean IoU after           : {:.3}", r.mean_iou_after);
+    Ok(())
+}
+
+fn compress(args: &Args) -> Result<()> {
+    use residual_inr::coordinator::FogNode;
+    use residual_inr::data::generate_dataset;
+    use residual_inr::runtime::Session;
+    let cfg = ArchConfig::load_default()?;
+    let quality = args.get_usize("quality", 85).map_err(|e| anyhow!(e))? as u8;
+    let method = parse_method(args.get_or("method", "res-rapid"), quality)?;
+    let profile = Profile::from_name(args.get_or("profile", "dac-sdc"))
+        .ok_or_else(|| anyhow!("unknown profile"))?;
+    let max = args.get_usize("max-frames", 8).map_err(|e| anyhow!(e))?;
+    let session = Session::open_default()?;
+    let fog = FogNode::new(&session, &cfg, EncoderConfig::fast());
+    let mut ds = generate_dataset(profile, args.get_u64("seed", 7).map_err(|e| anyhow!(e))?, 1);
+    ds.sequences[0].frames.truncate(max);
+    ds.sequences[0].boxes.truncate(max);
+    let c = fog.compress(&ds, method)?;
+    println!("method            : {}", c.method.name());
+    println!("frames            : {}", c.n_frames);
+    println!("records           : {}", c.records.len());
+    println!("payload           : {}", fmt_bytes(c.payload_bytes as u64));
+    println!("avg frame payload : {}", fmt_bytes(c.avg_frame_bytes() as u64));
+    println!("encode time       : {:.2} s ({} Adam steps)", c.encode_seconds, c.encode_steps);
+    Ok(())
+}
+
+fn commmodel(args: &Args) -> Result<()> {
+    use residual_inr::commmodel as cm;
+    let k = args.get_usize("devices", 10).map_err(|e| anyhow!(e))?;
+    let alpha = args.get_f64("alpha", 0.15).map_err(|e| anyhow!(e))?;
+    let m = 1e6;
+    let s = cm::serverless_total(&cm::uniform_all_to_all(k, m, false));
+    let f = cm::fog_total(&cm::uniform_all_to_all(k, m, true), alpha);
+    println!("k = {k} devices, α = {alpha}, m = 1 MB/device, all-to-all");
+    println!("serverless D_s = {}", fmt_bytes(s as u64));
+    println!("fog        D_f = {}", fmt_bytes(f as u64));
+    println!("reduction      = {:.2}x", s / f);
+    match cm::min_receivers_for_fog(alpha) {
+        Some(n) => println!("fog beneficial from n_i >= {n} receivers (n_i > 1/(1-a))"),
+        None => println!("fog never beneficial at a >= 1"),
+    }
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    use residual_inr::runtime::Manifest;
+    let cfg = ArchConfig::load_default()?;
+    let m = Manifest::load_default()?;
+    println!("frame: {}x{}", cfg.frame_w, cfg.frame_h);
+    println!("artifacts: {}", m.entries.len());
+    for p in Profile::ALL {
+        let rp = cfg.rapid(p);
+        println!(
+            "{:8} bg {}x{} ({} params)  baseline {}x{} ({} params)  obj bins: {}",
+            p.name(),
+            rp.background.layers,
+            rp.background.hidden,
+            rp.background.param_count(),
+            rp.baseline.layers,
+            rp.baseline.hidden,
+            rp.baseline.param_count(),
+            rp.object_bins
+                .iter()
+                .map(|b| format!("{}x{}@{}", b.arch.layers, b.arch.hidden, b.max_side))
+                .collect::<Vec<_>>()
+                .join(" "),
+        );
+    }
+    Ok(())
+}

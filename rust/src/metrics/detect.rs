@@ -1,0 +1,132 @@
+//! Detection-accuracy metrics for the single-object detection task.
+//!
+//! The paper reports YOLOv8 mAP50-95. Our stand-in backbone (TinyDet)
+//! regresses one box + confidence per image, so we compute the analogous
+//! single-object metric: mean average precision over IoU thresholds
+//! 0.50:0.05:0.95, which for one prediction per image reduces to the mean
+//! over thresholds of the fraction of images whose IoU clears the
+//! threshold (confidence-weighted via threshold sweep).
+
+use crate::data::BBox;
+
+/// One prediction: predicted box + confidence, against a ground-truth box.
+#[derive(Debug, Clone)]
+pub struct Detection {
+    pub pred: BBox,
+    pub confidence: f32,
+    pub truth: BBox,
+}
+
+impl Detection {
+    pub fn iou(&self) -> f64 {
+        self.pred.iou(&self.truth)
+    }
+}
+
+/// Mean IoU across detections.
+pub fn mean_iou(dets: &[Detection]) -> f64 {
+    if dets.is_empty() {
+        return 0.0;
+    }
+    dets.iter().map(|d| d.iou()).sum::<f64>() / dets.len() as f64
+}
+
+/// Average precision at a single IoU threshold: precision-recall AUC where
+/// predictions are ranked by confidence and a prediction is a true positive
+/// iff IoU ≥ `thr` (single object per image → recall denominator = #images).
+pub fn average_precision(dets: &[Detection], thr: f64) -> f64 {
+    if dets.is_empty() {
+        return 0.0;
+    }
+    let mut ranked: Vec<&Detection> = dets.iter().collect();
+    ranked.sort_by(|a, b| b.confidence.partial_cmp(&a.confidence).unwrap());
+    let total = dets.len() as f64;
+    let mut tp = 0.0f64;
+    let mut fp = 0.0f64;
+    // 11-point-free AP: integrate precision over recall increments.
+    let mut ap = 0.0f64;
+    let mut last_recall = 0.0f64;
+    for d in ranked {
+        if d.iou() >= thr {
+            tp += 1.0;
+        } else {
+            fp += 1.0;
+        }
+        let recall = tp / total;
+        let precision = tp / (tp + fp);
+        ap += precision * (recall - last_recall);
+        last_recall = recall;
+    }
+    ap
+}
+
+/// mAP50-95: mean AP over IoU thresholds 0.50, 0.55, …, 0.95 (the paper's
+/// Fig 10 accuracy metric).
+pub fn map50_95(dets: &[Detection]) -> f64 {
+    let thresholds: Vec<f64> = (0..10).map(|i| 0.5 + 0.05 * i as f64).collect();
+    thresholds.iter().map(|&t| average_precision(dets, t)).sum::<f64>()
+        / thresholds.len() as f64
+}
+
+/// mAP at IoU 0.5 only.
+pub fn map50(dets: &[Detection]) -> f64 {
+    average_precision(dets, 0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(iou_target: f64, conf: f32) -> Detection {
+        // Construct boxes with a controlled IoU: truth 100x100 at origin,
+        // pred shifted right so overlap fraction ~ iou_target.
+        let truth = BBox::new(0, 0, 100, 100);
+        // For pred = truth shifted by s: inter = (100-s)*100,
+        // union = (100+s)*100 → iou = (100-s)/(100+s) → s = 100(1-i)/(1+i)
+        let s = (100.0 * (1.0 - iou_target) / (1.0 + iou_target)).round() as usize;
+        Detection { pred: BBox::new(s, 0, 100, 100), confidence: conf, truth }
+    }
+
+    #[test]
+    fn perfect_predictions_score_one() {
+        let dets: Vec<Detection> = (0..10).map(|i| det(1.0, 0.9 - 0.01 * i as f32)).collect();
+        assert!((map50_95(&dets) - 1.0).abs() < 1e-9);
+        assert!((mean_iou(&dets) - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn hopeless_predictions_score_zero() {
+        let truth = BBox::new(0, 0, 10, 10);
+        let dets: Vec<Detection> = (0..10)
+            .map(|_| Detection { pred: BBox::new(500, 500, 10, 10), confidence: 0.9, truth })
+            .collect();
+        assert_eq!(map50_95(&dets), 0.0);
+        assert_eq!(mean_iou(&dets), 0.0);
+    }
+
+    #[test]
+    fn map_monotone_in_quality() {
+        let good: Vec<Detection> = (0..20).map(|i| det(0.85, 0.9 - 0.001 * i as f32)).collect();
+        let bad: Vec<Detection> = (0..20).map(|i| det(0.55, 0.9 - 0.001 * i as f32)).collect();
+        assert!(map50_95(&good) > map50_95(&bad));
+        // Both clear IoU 0.5, so map50 is equal.
+        assert!((map50(&good) - map50(&bad)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn confidence_ranking_matters() {
+        // Confident-correct beats confident-wrong for AP.
+        let mut dets = vec![det(0.9, 0.9), det(0.2, 0.1)]; // good ranked first
+        let ap_good_first = average_precision(&dets, 0.5);
+        dets[0].confidence = 0.1;
+        dets[1].confidence = 0.9; // bad ranked first
+        let ap_bad_first = average_precision(&dets, 0.5);
+        assert!(ap_good_first > ap_bad_first);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(map50_95(&[]), 0.0);
+        assert_eq!(mean_iou(&[]), 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Evaluation metrics: PSNR (full / object / background region), Shannon
+//! entropy (the Fig 6 argument), detection accuracy (mAP50-95 analogue),
+//! and descriptive statistics for benches.
+
+pub mod detect;
+pub mod entropy;
+pub mod psnr;
+pub mod stats;
+
+pub use detect::{map50, map50_95, mean_iou, Detection};
+pub use psnr::{psnr, psnr_background, psnr_region};

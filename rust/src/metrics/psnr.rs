@@ -1,0 +1,119 @@
+//! Peak signal-to-noise ratio, full-image and region-restricted — the
+//! paper's reconstruction-quality metric (Figs 3(b), 9).
+
+use crate::data::{BBox, ImageRGB};
+
+/// PSNR in dB between two same-shape images with values in `[0, 1]`
+/// (peak = 1.0). Returns `f64::INFINITY` for identical images.
+pub fn psnr(a: &ImageRGB, b: &ImageRGB) -> f64 {
+    mse_to_psnr(a.mse(b))
+}
+
+/// PSNR restricted to the pixels inside `bbox` — the paper's "object PSNR".
+pub fn psnr_region(a: &ImageRGB, b: &ImageRGB, bbox: &BBox) -> f64 {
+    assert_eq!((a.width, a.height), (b.width, b.height));
+    let bb = bbox.clip(a.width, a.height);
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    for dy in 0..bb.h {
+        for dx in 0..bb.w {
+            let pa = a.get(bb.x + dx, bb.y + dy);
+            let pb = b.get(bb.x + dx, bb.y + dy);
+            for c in 0..3 {
+                let d = (pa[c] - pb[c]) as f64;
+                acc += d * d;
+                n += 1;
+            }
+        }
+    }
+    if n == 0 {
+        return f64::INFINITY;
+    }
+    mse_to_psnr(acc / n as f64)
+}
+
+/// PSNR of the complement of `bbox` — the paper's "background PSNR".
+pub fn psnr_background(a: &ImageRGB, b: &ImageRGB, bbox: &BBox) -> f64 {
+    assert_eq!((a.width, a.height), (b.width, b.height));
+    let bb = bbox.clip(a.width, a.height);
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    for y in 0..a.height {
+        for x in 0..a.width {
+            if x >= bb.x && x < bb.x + bb.w && y >= bb.y && y < bb.y + bb.h {
+                continue;
+            }
+            let pa = a.get(x, y);
+            let pb = b.get(x, y);
+            for c in 0..3 {
+                let d = (pa[c] - pb[c]) as f64;
+                acc += d * d;
+                n += 1;
+            }
+        }
+    }
+    if n == 0 {
+        return f64::INFINITY;
+    }
+    mse_to_psnr(acc / n as f64)
+}
+
+fn mse_to_psnr(mse: f64) -> f64 {
+    if mse <= 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (1.0 / mse).log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad(w: usize, h: usize) -> ImageRGB {
+        ImageRGB::from_fn(w, h, |x, y| [x as f32 / w as f32, y as f32 / h as f32, 0.5])
+    }
+
+    #[test]
+    fn identical_images_infinite() {
+        let a = grad(16, 16);
+        assert!(psnr(&a, &a).is_infinite());
+    }
+
+    #[test]
+    fn known_mse_known_psnr() {
+        let a = ImageRGB::from_fn(8, 8, |_, _| [0.5; 3]);
+        let b = ImageRGB::from_fn(8, 8, |_, _| [0.6; 3]);
+        // mse = 0.01 → psnr = 20 dB (f32 rounding of 0.6-0.5 gives ~2e-6 slack)
+        assert!((psnr(&a, &b) - 20.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn region_vs_background_disjoint() {
+        // Corrupt only the object region: object PSNR drops, bg stays ∞.
+        let a = grad(32, 32);
+        let mut b = a.clone();
+        let bb = BBox::new(8, 8, 8, 8);
+        for dy in 0..8 {
+            for dx in 0..8 {
+                b.put(8 + dx, 8 + dy, [0.0; 3]);
+            }
+        }
+        assert!(psnr_region(&a, &b, &bb) < 30.0);
+        assert!(psnr_background(&a, &b, &bb).is_infinite());
+    }
+
+    #[test]
+    fn more_noise_lower_psnr() {
+        let a = grad(16, 16);
+        let mut b1 = a.clone();
+        let mut b2 = a.clone();
+        for (i, v) in b1.data.iter_mut().enumerate() {
+            *v = (*v + if i % 2 == 0 { 0.01 } else { -0.01 }).clamp(0.0, 1.0);
+        }
+        for (i, v) in b2.data.iter_mut().enumerate() {
+            *v = (*v + if i % 2 == 0 { 0.05 } else { -0.05 }).clamp(0.0, 1.0);
+        }
+        assert!(psnr(&a, &b1) > psnr(&a, &b2));
+    }
+}

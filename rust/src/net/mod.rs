@@ -1,0 +1,195 @@
+//! Simulated wireless network.
+//!
+//! The paper's testbed communicates over 4G-LTE-class wireless links and
+//! sets an effective bandwidth of 2 MB/s (§5.1); transmission latency in
+//! Fig 11 is `bytes / bandwidth`. This module reproduces that: a
+//! shared-medium wireless model where every transfer is logged
+//! (from, to, bytes, tag) and costs `latency + bytes / bandwidth` seconds.
+//! Byte accounting per link/direction feeds Figs 8 and 10; simulated time
+//! feeds Fig 11's transmission slice.
+
+use std::collections::BTreeMap;
+
+/// Paper's wireless bandwidth: 2 MB/s.
+pub const DEFAULT_BANDWIDTH: f64 = 2.0e6;
+/// Per-message airtime overhead (connection setup, framing).
+pub const DEFAULT_LATENCY: f64 = 1e-3;
+
+/// A network participant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum NodeId {
+    Fog,
+    Edge(usize),
+}
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NodeId::Fog => write!(f, "fog"),
+            NodeId::Edge(i) => write!(f, "edge{i}"),
+        }
+    }
+}
+
+/// One logged transfer.
+#[derive(Debug, Clone)]
+pub struct Transfer {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub bytes: u64,
+    pub seconds: f64,
+    pub tag: &'static str,
+}
+
+/// Shared-medium wireless network simulator.
+#[derive(Debug)]
+pub struct NetSim {
+    pub bandwidth: f64,
+    pub latency: f64,
+    log: Vec<Transfer>,
+    by_pair: BTreeMap<(NodeId, NodeId), u64>,
+}
+
+impl NetSim {
+    pub fn new(bandwidth: f64, latency: f64) -> NetSim {
+        assert!(bandwidth > 0.0);
+        NetSim { bandwidth, latency, log: Vec::new(), by_pair: BTreeMap::new() }
+    }
+
+    /// Paper defaults: 2 MB/s, 5 ms setup.
+    pub fn paper_default() -> NetSim {
+        NetSim::new(DEFAULT_BANDWIDTH, DEFAULT_LATENCY)
+    }
+
+    /// Transfer `bytes` from `from` to `to`; returns the airtime in seconds
+    /// and logs the transfer. Self-sends are free (local handoff).
+    pub fn send(&mut self, from: NodeId, to: NodeId, bytes: u64, tag: &'static str) -> f64 {
+        if from == to {
+            return 0.0;
+        }
+        let seconds = self.latency + bytes as f64 / self.bandwidth;
+        self.log.push(Transfer { from, to, bytes, seconds, tag });
+        *self.by_pair.entry((from, to)).or_insert(0) += bytes;
+        seconds
+    }
+
+    /// Unicast the same payload to each receiver (wireless broadcast is
+    /// modeled as per-receiver unicasts, matching the paper's
+    /// `M1 = Σ n_i · α·m_i` accounting). Returns total airtime.
+    pub fn broadcast(
+        &mut self,
+        from: NodeId,
+        tos: &[NodeId],
+        bytes: u64,
+        tag: &'static str,
+    ) -> f64 {
+        tos.iter().map(|&t| self.send(from, t, bytes, tag)).sum()
+    }
+
+    /// Total bytes ever transmitted.
+    pub fn total_bytes(&self) -> u64 {
+        self.log.iter().map(|t| t.bytes).sum()
+    }
+
+    /// Total airtime on the shared medium (transfers are serialized —
+    /// the paper's `amount / bandwidth` latency model).
+    pub fn total_seconds(&self) -> f64 {
+        self.log.iter().map(|t| t.seconds).sum()
+    }
+
+    /// Bytes sent from a node.
+    pub fn bytes_from(&self, node: NodeId) -> u64 {
+        self.log.iter().filter(|t| t.from == node).map(|t| t.bytes).sum()
+    }
+
+    /// Bytes received by a node.
+    pub fn bytes_to(&self, node: NodeId) -> u64 {
+        self.log.iter().filter(|t| t.to == node).map(|t| t.bytes).sum()
+    }
+
+    /// Airtime of the transfers received by a node — what one edge device
+    /// waits for before training can start (Fig 11's transmission slice).
+    pub fn seconds_to(&self, node: NodeId) -> f64 {
+        self.log.iter().filter(|t| t.to == node).map(|t| t.seconds).sum()
+    }
+
+    /// Bytes with a given tag (e.g. "jpeg-upload", "inr-broadcast").
+    pub fn bytes_tagged(&self, tag: &str) -> u64 {
+        self.log.iter().filter(|t| t.tag == tag).map(|t| t.bytes).sum()
+    }
+
+    /// All transfers (for reports).
+    pub fn transfers(&self) -> &[Transfer] {
+        &self.log
+    }
+
+    /// Per-(from, to) byte totals.
+    pub fn pair_totals(&self) -> &BTreeMap<(NodeId, NodeId), u64> {
+        &self.by_pair
+    }
+
+    /// Reset the log (new experiment phase) keeping link parameters.
+    pub fn reset(&mut self) {
+        self.log.clear();
+        self.by_pair.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_is_latency_plus_serialization() {
+        let mut net = NetSim::new(1_000_000.0, 0.01);
+        let t = net.send(NodeId::Edge(0), NodeId::Fog, 500_000, "jpeg-upload");
+        assert!((t - (0.01 + 0.5)).abs() < 1e-12);
+        assert_eq!(net.total_bytes(), 500_000);
+    }
+
+    #[test]
+    fn self_send_free() {
+        let mut net = NetSim::paper_default();
+        assert_eq!(net.send(NodeId::Fog, NodeId::Fog, 1_000, "x"), 0.0);
+        assert_eq!(net.total_bytes(), 0);
+    }
+
+    #[test]
+    fn broadcast_counts_per_receiver() {
+        let mut net = NetSim::new(2e6, 0.0);
+        let receivers: Vec<NodeId> = (0..5).map(NodeId::Edge).collect();
+        let t = net.broadcast(NodeId::Fog, &receivers, 1_000_000, "inr-broadcast");
+        assert_eq!(net.total_bytes(), 5_000_000);
+        assert!((t - 2.5).abs() < 1e-9);
+        assert_eq!(net.bytes_from(NodeId::Fog), 5_000_000);
+        assert_eq!(net.bytes_to(NodeId::Edge(3)), 1_000_000);
+    }
+
+    #[test]
+    fn tag_accounting() {
+        let mut net = NetSim::paper_default();
+        net.send(NodeId::Edge(0), NodeId::Fog, 100, "jpeg-upload");
+        net.send(NodeId::Fog, NodeId::Edge(1), 40, "inr-broadcast");
+        net.send(NodeId::Edge(0), NodeId::Fog, 60, "jpeg-upload");
+        assert_eq!(net.bytes_tagged("jpeg-upload"), 160);
+        assert_eq!(net.bytes_tagged("inr-broadcast"), 40);
+        assert_eq!(net.bytes_tagged("nope"), 0);
+    }
+
+    #[test]
+    fn matches_paper_latency_model_at_2mbps() {
+        // 100 MB over 2 MB/s = 50 s of airtime (plus per-message setup).
+        let mut net = NetSim::new(DEFAULT_BANDWIDTH, 0.0);
+        net.send(NodeId::Fog, NodeId::Edge(0), 100_000_000, "bulk");
+        assert!((net.total_seconds() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_clears_log() {
+        let mut net = NetSim::paper_default();
+        net.send(NodeId::Edge(0), NodeId::Edge(1), 10, "x");
+        net.reset();
+        assert_eq!(net.total_bytes(), 0);
+        assert!(net.transfers().is_empty());
+    }
+}

@@ -1,0 +1,93 @@
+//! Baseline data-loading pipelines (Fig 11 comparators):
+//!
+//! * **PyTorch-like** — JPEG decoded one image at a time on a single CPU
+//!   thread on the training critical path (the paper's PyTorch dataloader
+//!   baseline).
+//! * **DALI-like** — JPEG decoded in parallel worker threads (the paper's
+//!   GPU-accelerated DALI baseline; our CPU substrate parallelizes the
+//!   same stage).
+//!
+//! INR pipelines never touch this path: weights live in memory and decode
+//! on the PJRT pool (`CPU-free` in the paper's terms).
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use crate::codec::jpeg;
+use crate::data::ImageRGB;
+use crate::util::pool::par_map;
+
+/// How JPEG baselines decode a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JpegPipeline {
+    /// Single-threaded decode (PyTorch dataloader analogue).
+    PyTorchLike,
+    /// Parallel decode across `workers` threads (DALI analogue).
+    DaliLike { workers: usize },
+}
+
+impl JpegPipeline {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JpegPipeline::PyTorchLike => "PyTorch(JPEG,1-thread)",
+            JpegPipeline::DaliLike { .. } => "DALI(JPEG,parallel)",
+        }
+    }
+}
+
+/// Decode a batch of JPEG byte buffers according to the pipeline flavor.
+pub fn decode_jpeg_batch(
+    items: &[Arc<Vec<u8>>],
+    pipeline: JpegPipeline,
+) -> Result<Vec<ImageRGB>> {
+    match pipeline {
+        JpegPipeline::PyTorchLike => items.iter().map(|b| jpeg::decode(b)).collect(),
+        JpegPipeline::DaliLike { workers } => {
+            let out = par_map(items, workers, |_, b| jpeg::decode(b));
+            out.into_iter().collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_sequence, Profile};
+
+    fn jpeg_items(n: usize) -> (Vec<Arc<Vec<u8>>>, Vec<ImageRGB>) {
+        let seq = generate_sequence(Profile::Uav123, 3, 0);
+        let frames: Vec<ImageRGB> = seq.frames.into_iter().take(n).collect();
+        let items = frames.iter().map(|f| Arc::new(jpeg::encode(f, 95))).collect();
+        (items, frames)
+    }
+
+    #[test]
+    fn both_pipelines_decode_identically() {
+        let (items, frames) = jpeg_items(6);
+        let a = decode_jpeg_batch(&items, JpegPipeline::PyTorchLike).unwrap();
+        let b = decode_jpeg_batch(&items, JpegPipeline::DaliLike { workers: 4 }).unwrap();
+        assert_eq!(a.len(), 6);
+        for ((x, y), orig) in a.iter().zip(&b).zip(&frames) {
+            assert_eq!(x.data, y.data);
+            assert!(crate::metrics::psnr(orig, x) > 25.0);
+        }
+    }
+
+    #[test]
+    fn parallel_not_slower_on_large_batches() {
+        // Smoke check, not a strict perf assertion (CI noise): parallel
+        // decode of 16 frames should not be dramatically slower.
+        let (items, _) = jpeg_items(16);
+        let t1 = {
+            let sw = crate::util::Stopwatch::start();
+            decode_jpeg_batch(&items, JpegPipeline::PyTorchLike).unwrap();
+            sw.seconds()
+        };
+        let t2 = {
+            let sw = crate::util::Stopwatch::start();
+            decode_jpeg_batch(&items, JpegPipeline::DaliLike { workers: 4 }).unwrap();
+            sw.seconds()
+        };
+        assert!(t2 < t1 * 3.0, "parallel {t2}s vs serial {t1}s");
+    }
+}

@@ -1,0 +1,277 @@
+//! INR decoding primitives: coordinate grids, artifact input marshalling,
+//! and single-image decode paths. The *batched/grouped* scheduling built
+//! on top lives in [`super::group`].
+//!
+//! Coordinate conventions (must match `ref.frame_grid` / `ref.patch_grid`):
+//! row-major pixel order `i = y·w + x`, coords `[(x+0.5)/w, (y+0.5)/h]`.
+
+use anyhow::Result;
+
+use crate::data::{BBox, ImageRGB};
+use crate::inr::arch::{MlpArch, NervArch, ObjectBin};
+use crate::inr::WeightSet;
+use crate::runtime::{names, HostTensor, Session};
+
+/// Full-frame pixel-center coordinate grid, `(w*h, 2)` row-major.
+///
+/// Cached per `(w, h)`: the grid is identical for every full-frame decode
+/// and rebuilding it cost ~100 KB of writes per job on the hot path
+/// (EXPERIMENTS.md §Perf, L3 iteration 1).
+pub fn frame_coords(w: usize, h: usize) -> HostTensor {
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+    static CACHE: Mutex<Option<HashMap<(usize, usize), HostTensor>>> = Mutex::new(None);
+    let mut guard = CACHE.lock().unwrap();
+    let cache = guard.get_or_insert_with(HashMap::new);
+    cache
+        .entry((w, h))
+        .or_insert_with(|| {
+            let mut data = Vec::with_capacity(w * h * 2);
+            for y in 0..h {
+                for x in 0..w {
+                    data.push((x as f32 + 0.5) / w as f32);
+                    data.push((y as f32 + 0.5) / h as f32);
+                }
+            }
+            HostTensor::new(vec![w * h, 2], data)
+        })
+        .clone()
+}
+
+/// Local patch grid for a `pw × ph` object crop, zero-padded to `n_pad`
+/// rows (the fixed row count of the object bin's artifact). Returns
+/// `(coords, mask)` where mask is 1 for real rows.
+pub fn patch_coords(pw: usize, ph: usize, n_pad: usize) -> (HostTensor, HostTensor) {
+    let n = pw * ph;
+    assert!(n <= n_pad, "patch {pw}x{ph} exceeds bin capacity {n_pad}");
+    let mut data = Vec::with_capacity(n_pad * 2);
+    for y in 0..ph {
+        for x in 0..pw {
+            data.push((x as f32 + 0.5) / pw as f32);
+            data.push((y as f32 + 0.5) / ph as f32);
+        }
+    }
+    data.resize(n_pad * 2, 0.0);
+    let mut mask = vec![1.0f32; n];
+    mask.resize(n_pad, 0.0);
+    (
+        HostTensor::new(vec![n_pad, 2], data),
+        HostTensor::new(vec![n_pad], mask),
+    )
+}
+
+/// Build the `(artifact, inputs)` job for a full-frame Rapid-INR decode.
+pub fn rapid_decode_job(
+    arch: &MlpArch,
+    ws: &WeightSet,
+    w: usize,
+    h: usize,
+) -> (String, Vec<HostTensor>) {
+    let mut inputs: Vec<HostTensor> = ws.tensors.iter().map(HostTensor::from).collect();
+    inputs.push(frame_coords(w, h));
+    (names::rapid_decode(arch, w * h), inputs)
+}
+
+/// Build the decode job for an object-INR residual patch (padded grid).
+pub fn object_decode_job(
+    bin: &ObjectBin,
+    ws: &WeightSet,
+    pw: usize,
+    ph: usize,
+) -> (String, Vec<HostTensor>) {
+    let mut inputs: Vec<HostTensor> = ws.tensors.iter().map(HostTensor::from).collect();
+    let (coords, _mask) = patch_coords(pw, ph, bin.max_pixels());
+    inputs.push(coords);
+    (names::rapid_decode(&bin.arch, bin.max_pixels()), inputs)
+}
+
+/// Build the decode job for a NeRV chunk of `t` frame times.
+pub fn nerv_decode_job(arch: &NervArch, ws: &WeightSet, t: &[f32]) -> (String, Vec<HostTensor>) {
+    let mut inputs: Vec<HostTensor> = ws.tensors.iter().map(HostTensor::from).collect();
+    inputs.push(HostTensor::new(vec![t.len()], t.to_vec()));
+    (names::nerv_decode(arch, t.len()), inputs)
+}
+
+/// Normalized time for frame `i` of an `n`-frame sequence.
+pub fn frame_time(i: usize, n: usize) -> f32 {
+    (i as f32 + 0.5) / n as f32
+}
+
+/// Flush denormal floats to zero. Decoded values can land arbitrarily
+/// close to 0/1 (sigmoid tails); denormal inputs make CPU matmuls in the
+/// downstream train step pathologically slow (EXPERIMENTS.md §Perf L3).
+#[inline]
+fn flush_denormals(v: f32) -> f32 {
+    if v.abs() < f32::MIN_POSITIVE {
+        0.0
+    } else {
+        v
+    }
+}
+
+/// Interpret a full-frame decode output as an image.
+pub fn tensor_to_image(t: &HostTensor, w: usize, h: usize) -> ImageRGB {
+    assert_eq!(t.shape, vec![w * h, 3]);
+    ImageRGB { width: w, height: h, data: t.data.iter().map(|&v| flush_denormals(v)).collect() }
+}
+
+/// Extract the first `pw*ph` rows of a padded patch decode as a patch image.
+pub fn tensor_to_patch(t: &HostTensor, pw: usize, ph: usize) -> ImageRGB {
+    assert!(t.shape[0] >= pw * ph && t.shape[1] == 3);
+    ImageRGB {
+        width: pw,
+        height: ph,
+        data: t.data[..pw * ph * 3].iter().map(|&v| flush_denormals(v)).collect(),
+    }
+}
+
+/// Extract frame `b` of a NeRV decode output `(B, H, W, 3)`.
+pub fn tensor_to_nerv_frame(t: &HostTensor, b: usize) -> ImageRGB {
+    let (bs, h, w, c) = (t.shape[0], t.shape[1], t.shape[2], t.shape[3]);
+    assert!(b < bs && c == 3);
+    let stride = h * w * 3;
+    ImageRGB {
+        width: w,
+        height: h,
+        data: t.data[b * stride..(b + 1) * stride]
+            .iter()
+            .map(|&v| flush_denormals(v))
+            .collect(),
+    }
+}
+
+/// Single-image Rapid decode (convenience path used by the fog encoder
+/// for PSNR checks and residual computation).
+pub fn decode_rapid(
+    session: &Session,
+    arch: &MlpArch,
+    ws: &WeightSet,
+    w: usize,
+    h: usize,
+) -> Result<ImageRGB> {
+    let (name, inputs) = rapid_decode_job(arch, ws, w, h);
+    let out = session.execute(&name, &inputs)?;
+    Ok(tensor_to_image(&out[0], w, h))
+}
+
+/// Single-patch object residual decode.
+pub fn decode_object_patch(
+    session: &Session,
+    bin: &ObjectBin,
+    ws: &WeightSet,
+    pw: usize,
+    ph: usize,
+) -> Result<ImageRGB> {
+    let (name, inputs) = object_decode_job(bin, ws, pw, ph);
+    let out = session.execute(&name, &inputs)?;
+    Ok(tensor_to_patch(&out[0], pw, ph))
+}
+
+/// Decode a chunk of NeRV frames. `t.len()` must equal the artifact batch
+/// (use [`decode_nerv_frames`] for arbitrary counts).
+pub fn decode_nerv_chunk(
+    session: &Session,
+    arch: &NervArch,
+    ws: &WeightSet,
+    t: &[f32],
+) -> Result<Vec<ImageRGB>> {
+    let (name, inputs) = nerv_decode_job(arch, ws, t);
+    let out = session.execute(&name, &inputs)?;
+    Ok((0..t.len()).map(|b| tensor_to_nerv_frame(&out[0], b)).collect())
+}
+
+/// Decode an arbitrary number of NeRV frame times by padding/chunking to
+/// the fixed artifact batch size.
+pub fn decode_nerv_frames(
+    session: &Session,
+    arch: &NervArch,
+    ws: &WeightSet,
+    times: &[f32],
+    batch: usize,
+) -> Result<Vec<ImageRGB>> {
+    let mut out = Vec::with_capacity(times.len());
+    let mut i = 0;
+    while i < times.len() {
+        let end = (i + batch).min(times.len());
+        let mut t: Vec<f32> = times[i..end].to_vec();
+        while t.len() < batch {
+            t.push(*t.last().unwrap());
+        }
+        let frames = decode_nerv_chunk(session, arch, ws, &t)?;
+        out.extend(frames.into_iter().take(end - i));
+        i = end;
+    }
+    Ok(out)
+}
+
+/// Reassemble a Residual-INR image: background frame + residual patch
+/// overlaid (added) at the padded bbox (paper §3.2.1).
+pub fn compose_residual(bg: &ImageRGB, residual: &ImageRGB, padded: &BBox) -> ImageRGB {
+    let mut out = bg.clone();
+    out.add_patch(residual, padded.x, padded.y);
+    out.clamp01();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_coords_layout() {
+        let c = frame_coords(4, 3);
+        assert_eq!(c.shape, vec![12, 2]);
+        // i = y*w + x
+        assert_eq!(&c.data[0..2], &[0.5 / 4.0, 0.5 / 3.0]);
+        assert_eq!(&c.data[2..4], &[1.5 / 4.0, 0.5 / 3.0]);
+        assert_eq!(&c.data[8..10], &[0.5 / 4.0, 1.5 / 3.0]);
+    }
+
+    #[test]
+    fn patch_coords_padding_and_mask() {
+        let (c, m) = patch_coords(3, 2, 10);
+        assert_eq!(c.shape, vec![10, 2]);
+        assert_eq!(m.data[..6], [1.0; 6]);
+        assert_eq!(m.data[6..], [0.0; 4]);
+        assert_eq!(&c.data[12..], &[0.0; 8]); // padded coords are zeros
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_patch_panics() {
+        let _ = patch_coords(10, 10, 64);
+    }
+
+    #[test]
+    fn compose_residual_adds_patch() {
+        let bg = ImageRGB::from_fn(8, 8, |_, _| [0.25; 3]);
+        let res = ImageRGB::from_fn(2, 2, |_, _| [0.5; 3]);
+        let bb = BBox::new(3, 4, 2, 2);
+        let out = compose_residual(&bg, &res, &bb);
+        assert_eq!(out.get(3, 4), [0.75; 3]);
+        assert_eq!(out.get(0, 0), [0.25; 3]);
+    }
+
+    #[test]
+    fn nerv_frame_extraction() {
+        let (b, h, w) = (2, 3, 4);
+        let mut data = vec![0.0f32; b * h * w * 3];
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let t = HostTensor::new(vec![b, h, w, 3], data);
+        let f1 = tensor_to_nerv_frame(&t, 1);
+        assert_eq!((f1.width, f1.height), (w, h));
+        assert_eq!(f1.data[0], (h * w * 3) as f32);
+    }
+
+    #[test]
+    fn frame_time_in_unit_interval() {
+        for n in [1usize, 5, 64] {
+            for i in 0..n {
+                let t = frame_time(i, n);
+                assert!(t > 0.0 && t < 1.0);
+            }
+        }
+    }
+}

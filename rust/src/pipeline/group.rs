@@ -1,0 +1,356 @@
+//! Batched, grouped, parallel INR decoding on the edge device
+//! (paper §3.2, Fig 7).
+//!
+//! A training batch samples images stored in heterogeneous INR formats
+//! (different object-INR bins, different NeRV sequences). Decoding one
+//! image = 1–2 PJRT executions (background/NeRV + object residual). The
+//! scheduler turns a batch into a job list for the [`Pool`]:
+//!
+//! * **ungrouped** (baselines): jobs are issued in sampling order, one
+//!   NeRV call *per frame* (padded to the fixed artifact batch), mixed
+//!   sizes interleaved across workers — the imbalance of Fig 7 top.
+//! * **grouped** (`INR grouping`, §3.2.2): same-artifact jobs are batched
+//!   together — NeRV frames of one sequence share chunked calls, and jobs
+//!   are sorted by artifact so each pool worker processes uniform work.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::codec::jpeg;
+use crate::data::{BBox, ImageRGB};
+use crate::inr::arch::{MlpArch, NervArch, ObjectBin};
+use crate::inr::WeightSet;
+use crate::runtime::{HostTensor, Pool};
+
+use super::decoder;
+
+/// Optional object-INR overlay of a stored image.
+#[derive(Debug, Clone)]
+pub struct ObjOverlay {
+    pub bin: ObjectBin,
+    pub ws: Arc<WeightSet>,
+    pub padded: BBox,
+    /// `true`: direct RGB replacement; `false`: residual addition.
+    pub direct: bool,
+}
+
+/// An image held in device memory in compressed form. Weights are already
+/// dequantized f32 (§3.2.1: transferred once into memory before training).
+#[derive(Debug, Clone)]
+pub enum StoredImage {
+    /// Raw JPEG (baseline pipelines): decoded on the CPU, not the pool.
+    Jpeg { bytes: Arc<Vec<u8>> },
+    /// Single-INR image (Rapid-INR baseline).
+    RapidSingle { arch: MlpArch, ws: Arc<WeightSet> },
+    /// Residual-INR image (background INR + object INR).
+    ResRapid {
+        bg_arch: MlpArch,
+        bg: Arc<WeightSet>,
+        obj: Option<ObjOverlay>,
+    },
+    /// One frame of a NeRV-encoded sequence (baseline NeRV or Res-NeRV
+    /// background), optionally with a per-frame object overlay.
+    NervFrame {
+        arch: NervArch,
+        ws: Arc<WeightSet>,
+        /// Key identifying the sequence (weights pointer identity is not
+        /// enough across clones) — frames with equal keys share chunks.
+        seq_key: u64,
+        t: f32,
+        obj: Option<ObjOverlay>,
+    },
+}
+
+impl StoredImage {
+    /// §3.2.2 grouping key: images with equal keys decode with the same
+    /// executables (same-size INRs).
+    pub fn group_key(&self) -> String {
+        match self {
+            StoredImage::Jpeg { .. } => "jpeg".to_string(),
+            StoredImage::RapidSingle { arch, .. } => {
+                format!("rapid:{}", crate::runtime::names::mlp_key(arch))
+            }
+            StoredImage::ResRapid { bg_arch, obj, .. } => format!(
+                "res-rapid:{}+{}",
+                crate::runtime::names::mlp_key(bg_arch),
+                obj.as_ref()
+                    .map(|o| crate::runtime::names::mlp_key(&o.bin.arch))
+                    .unwrap_or_default()
+            ),
+            StoredImage::NervFrame { arch, seq_key, .. } => {
+                format!("nerv:{}:{}", arch.name, seq_key)
+            }
+        }
+    }
+
+    /// In-memory footprint of the compressed form (paper's storage metric).
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            StoredImage::Jpeg { bytes } => bytes.len(),
+            StoredImage::RapidSingle { ws, .. } => ws.f32_bytes(),
+            StoredImage::ResRapid { bg, obj, .. } => {
+                bg.f32_bytes() + obj.as_ref().map(|o| o.ws.f32_bytes()).unwrap_or(0)
+            }
+            StoredImage::NervFrame { ws, obj, .. } => {
+                ws.f32_bytes() + obj.as_ref().map(|o| o.ws.f32_bytes()).unwrap_or(0)
+            }
+        }
+    }
+}
+
+/// Where each decoded image comes from after the pool phase.
+enum Source {
+    Local(ImageRGB),
+    Job(usize),
+    /// NeRV chunk job + slot within the chunk.
+    Chunk(usize, usize),
+}
+
+/// Decode timing breakdown.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecodeStats {
+    pub wall_seconds: f64,
+    pub pool_jobs: usize,
+    pub cpu_decoded: usize,
+}
+
+/// Decode a batch of stored images into frames, preserving order.
+pub fn decode_batch(
+    pool: &Pool,
+    frame_w: usize,
+    frame_h: usize,
+    nerv_batch: usize,
+    items: &[StoredImage],
+    grouped: bool,
+) -> Result<(Vec<ImageRGB>, DecodeStats)> {
+    let sw = crate::util::Stopwatch::start();
+    let mut jobs: Vec<(String, Vec<HostTensor>)> = Vec::new();
+    let mut sources: Vec<Source> = Vec::with_capacity(items.len());
+    let mut overlays: Vec<Option<(ObjOverlay, usize)>> = Vec::with_capacity(items.len());
+    let mut cpu_decoded = 0usize;
+
+    // NeRV chunking (grouped mode): (seq_key, arch) -> pending frame list.
+    let mut nerv_groups: BTreeMap<(u64, String), Vec<(usize, f32, Arc<WeightSet>)>> =
+        BTreeMap::new();
+
+    for (i, item) in items.iter().enumerate() {
+        match item {
+            StoredImage::Jpeg { bytes } => {
+                // CPU decode on the calling thread (this is what the
+                // PyTorch/DALI baselines pay; INR pipelines never hit it).
+                sources.push(Source::Local(jpeg::decode(bytes)?));
+                overlays.push(None);
+                cpu_decoded += 1;
+            }
+            StoredImage::RapidSingle { arch, ws } => {
+                jobs.push(decoder::rapid_decode_job(arch, ws, frame_w, frame_h));
+                sources.push(Source::Job(jobs.len() - 1));
+                overlays.push(None);
+            }
+            StoredImage::ResRapid { bg_arch, bg, obj } => {
+                jobs.push(decoder::rapid_decode_job(bg_arch, bg, frame_w, frame_h));
+                sources.push(Source::Job(jobs.len() - 1));
+                if let Some(o) = obj {
+                    jobs.push(decoder::object_decode_job(&o.bin, &o.ws, o.padded.w, o.padded.h));
+                    overlays.push(Some((o.clone(), jobs.len() - 1)));
+                } else {
+                    overlays.push(None);
+                }
+            }
+            StoredImage::NervFrame { arch, ws, seq_key, t, obj } => {
+                if grouped {
+                    nerv_groups
+                        .entry((*seq_key, arch.name.clone()))
+                        .or_default()
+                        .push((i, *t, Arc::clone(ws)));
+                    sources.push(Source::Job(usize::MAX)); // patched below
+                } else {
+                    // Ungrouped: one (padded) decode call per frame.
+                    let ts = vec![*t; nerv_batch];
+                    jobs.push(decoder::nerv_decode_job(arch, ws, &ts));
+                    sources.push(Source::Chunk(jobs.len() - 1, 0));
+                }
+                if let Some(o) = obj {
+                    jobs.push(decoder::object_decode_job(&o.bin, &o.ws, o.padded.w, o.padded.h));
+                    overlays.push(Some((o.clone(), jobs.len() - 1)));
+                } else {
+                    overlays.push(None);
+                }
+            }
+        }
+    }
+
+    // Emit chunked NeRV jobs for grouped mode.
+    for ((_, arch_name), frames) in &nerv_groups {
+        let arch = match items.iter().find_map(|it| match it {
+            StoredImage::NervFrame { arch, .. } if arch.name == *arch_name => Some(arch),
+            _ => None,
+        }) {
+            Some(a) => a.clone(),
+            None => return Err(anyhow!("nerv arch vanished")),
+        };
+        for chunk in frames.chunks(nerv_batch) {
+            let mut ts: Vec<f32> = chunk.iter().map(|(_, t, _)| *t).collect();
+            while ts.len() < nerv_batch {
+                ts.push(*ts.last().unwrap());
+            }
+            jobs.push(decoder::nerv_decode_job(&arch, &chunk[0].2, &ts));
+            let job_idx = jobs.len() - 1;
+            for (slot, (item_idx, _, _)) in chunk.iter().enumerate() {
+                sources[*item_idx] = Source::Chunk(job_idx, slot);
+            }
+        }
+    }
+
+    // Grouped mode sorts jobs by artifact so pool workers see uniform
+    // work; job indices must survive the permutation.
+    let n_jobs = jobs.len();
+    let order: Vec<usize> = if grouped {
+        let mut idx: Vec<usize> = (0..n_jobs).collect();
+        idx.sort_by(|&a, &b| jobs[a].0.cmp(&jobs[b].0));
+        idx
+    } else {
+        (0..n_jobs).collect()
+    };
+    let mut inv = vec![0usize; n_jobs];
+    for (pos, &j) in order.iter().enumerate() {
+        inv[j] = pos;
+    }
+    let mut submitted: Vec<Option<(String, Vec<HostTensor>)>> =
+        jobs.into_iter().map(Some).collect();
+    let batch_jobs: Vec<(String, Vec<HostTensor>)> =
+        order.iter().map(|&j| submitted[j].take().unwrap()).collect();
+
+    let results = pool.execute_many(batch_jobs);
+    let mut outputs: Vec<Option<Vec<HostTensor>>> = Vec::with_capacity(n_jobs);
+    for r in results {
+        outputs.push(Some(r?));
+    }
+    let fetch = |outputs: &Vec<Option<Vec<HostTensor>>>, job: usize| -> Vec<HostTensor> {
+        outputs[inv[job]].clone().expect("job output present")
+    };
+
+    // Compose final images.
+    let mut images = Vec::with_capacity(items.len());
+    for (i, src) in sources.iter().enumerate() {
+        let mut img = match src {
+            Source::Local(img) => img.clone(),
+            Source::Job(j) => decoder::tensor_to_image(&fetch(&outputs, *j)[0], frame_w, frame_h),
+            Source::Chunk(j, slot) => decoder::tensor_to_nerv_frame(&fetch(&outputs, *j)[0], *slot),
+        };
+        if let Some((o, j)) = &overlays[i] {
+            let patch = decoder::tensor_to_patch(&fetch(&outputs, *j)[0], o.padded.w, o.padded.h);
+            if o.direct {
+                img.paste(&patch, o.padded.x, o.padded.y);
+                img.clamp01();
+            } else {
+                img = decoder::compose_residual(&img, &patch, &o.padded);
+            }
+        }
+        images.push(img);
+    }
+    Ok((
+        images,
+        DecodeStats { wall_seconds: sw.seconds(), pool_jobs: n_jobs, cpu_decoded },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::data::{generate_sequence, Profile};
+    use crate::training::state::siren_init;
+    use crate::util::rng::Pcg32;
+
+    fn arc_ws(arch_shapes: &[(String, Vec<usize>)], seed: u64) -> Arc<WeightSet> {
+        let mut rng = Pcg32::seeded(seed);
+        Arc::new(siren_init(arch_shapes, &mut rng))
+    }
+
+    #[test]
+    fn grouped_and_ungrouped_produce_identical_images() {
+        let cfg = ArchConfig::load_default().unwrap();
+        let pool = Pool::open_default(2).unwrap();
+        let rp = cfg.rapid(Profile::Uav123);
+        let nerv_arch = cfg.nerv_bins[0].background.clone();
+        let nerv_ws = arc_ws(&nerv_arch.param_shapes(), 3);
+        let bin = rp.object_bins[1].clone();
+        let items = vec![
+            StoredImage::RapidSingle {
+                arch: rp.baseline.clone(),
+                ws: arc_ws(&rp.baseline.param_shapes(), 1),
+            },
+            StoredImage::ResRapid {
+                bg_arch: rp.background.clone(),
+                bg: arc_ws(&rp.background.param_shapes(), 2),
+                obj: Some(ObjOverlay {
+                    bin: bin.clone(),
+                    ws: arc_ws(&bin.arch.param_shapes(), 4),
+                    padded: BBox::new(10, 10, 14, 12),
+                    direct: false,
+                }),
+            },
+            StoredImage::NervFrame {
+                arch: nerv_arch.clone(),
+                ws: Arc::clone(&nerv_ws),
+                seq_key: 7,
+                t: 0.25,
+                obj: None,
+            },
+            StoredImage::NervFrame {
+                arch: nerv_arch.clone(),
+                ws: nerv_ws,
+                seq_key: 7,
+                t: 0.75,
+                obj: None,
+            },
+        ];
+        let (a, sa) =
+            decode_batch(&pool, cfg.frame_w, cfg.frame_h, cfg.nerv_decode_batch, &items, false)
+                .unwrap();
+        let (b, sb) =
+            decode_batch(&pool, cfg.frame_w, cfg.frame_h, cfg.nerv_decode_batch, &items, true)
+                .unwrap();
+        assert_eq!(a.len(), 4);
+        for (x, y) in a.iter().zip(&b) {
+            for (p, q) in x.data.iter().zip(&y.data) {
+                assert!((p - q).abs() < 1e-5);
+            }
+        }
+        // Grouping merges the two same-sequence NeRV frames into one call.
+        assert!(sb.pool_jobs < sa.pool_jobs, "{} vs {}", sb.pool_jobs, sa.pool_jobs);
+    }
+
+    #[test]
+    fn jpeg_items_decode_on_cpu() {
+        let cfg = ArchConfig::load_default().unwrap();
+        let pool = Pool::open_default(1).unwrap();
+        let seq = generate_sequence(Profile::DacSdc, 5, 0);
+        let bytes = Arc::new(crate::codec::jpeg::encode(&seq.frames[0], 95));
+        let items = vec![StoredImage::Jpeg { bytes }];
+        let (imgs, stats) =
+            decode_batch(&pool, cfg.frame_w, cfg.frame_h, cfg.nerv_decode_batch, &items, true)
+                .unwrap();
+        assert_eq!(imgs.len(), 1);
+        assert_eq!(stats.cpu_decoded, 1);
+        assert_eq!(stats.pool_jobs, 0);
+        assert!(crate::metrics::psnr(&seq.frames[0], &imgs[0]) > 25.0);
+    }
+
+    #[test]
+    fn group_keys_separate_sizes() {
+        let cfg = ArchConfig::load_default().unwrap();
+        let rp = cfg.rapid(Profile::DacSdc);
+        let a = StoredImage::RapidSingle {
+            arch: rp.baseline.clone(),
+            ws: arc_ws(&rp.baseline.param_shapes(), 1),
+        };
+        let b = StoredImage::RapidSingle {
+            arch: rp.background.clone(),
+            ws: arc_ws(&rp.background.param_shapes(), 1),
+        };
+        assert_ne!(a.group_key(), b.group_key());
+    }
+}

@@ -1,0 +1,10 @@
+//! Edge-device decode pipelines: INR decoding primitives ([`decoder`]),
+//! the grouped/parallel batch scheduler of paper §3.2 ([`group`]), and the
+//! JPEG baseline loaders ([`baseline`]).
+
+pub mod baseline;
+pub mod decoder;
+pub mod group;
+
+pub use baseline::JpegPipeline;
+pub use group::{decode_batch, DecodeStats, StoredImage};

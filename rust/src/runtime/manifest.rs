@@ -1,0 +1,224 @@
+//! `artifacts/manifest.json` parsing — the contract between
+//! `python/compile/aot.py` (which writes it) and the rust runtime (which
+//! marshals literals by it). Every artifact lists its exact positional
+//! argument and output tensors (name + shape, all f32).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse, Json};
+
+/// One tensor slot in an artifact signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    /// Artifact family: `rapid_decode`, `rapid_train`, `nerv_decode`,
+    /// `nerv_train`, `tinydet_fwd`, `tinydet_train`.
+    pub kind: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let obj = j.as_obj().ok_or_else(|| anyhow!("manifest must be an object"))?;
+        let mut entries = BTreeMap::new();
+        for (name, entry) in obj {
+            let specs = |key: &str| -> Result<Vec<ArgSpec>> {
+                entry
+                    .get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: missing {key}"))?
+                    .iter()
+                    .map(|a| {
+                        let pair = a.as_arr().ok_or_else(|| anyhow!("{name}: bad {key}"))?;
+                        let nm = pair[0]
+                            .as_str()
+                            .ok_or_else(|| anyhow!("{name}: bad arg name"))?;
+                        let shape = pair[1]
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("{name}: bad shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<Vec<_>>>()?;
+                        Ok(ArgSpec { name: nm.to_string(), shape })
+                    })
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: entry
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing file"))?
+                        .to_string(),
+                    kind: entry
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    args: specs("args")?,
+                    outputs: specs("outputs")?,
+                },
+            );
+        }
+        if entries.is_empty() {
+            bail!("empty manifest at {}", path.display());
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Locate the repo's `artifacts/` directory (walks up from cwd, honors
+    /// `RESIDUAL_INR_ROOT`).
+    pub fn load_default() -> Result<Manifest> {
+        let path = crate::config::find_repo_file("artifacts/manifest.json")?;
+        Manifest::load(path.parent().unwrap())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+/// Canonical artifact names. Mirrors `aot.py`'s naming scheme — a change
+/// on either side breaks `test_manifest_names_resolve` immediately.
+pub mod names {
+    use crate::inr::arch::{MlpArch, NervArch};
+
+    pub fn mlp_key(a: &MlpArch) -> String {
+        let s = if a.sigmoid_out { "s" } else { "r" };
+        format!("l{}h{}p{}{}", a.layers, a.hidden, a.posenc, s)
+    }
+
+    pub fn rapid_decode(a: &MlpArch, n: usize) -> String {
+        format!("rapid_decode_{}_n{}", mlp_key(a), n)
+    }
+
+    pub fn rapid_train(a: &MlpArch, n: usize) -> String {
+        format!("rapid_train_{}_n{}", mlp_key(a), n)
+    }
+
+    pub fn nerv_decode(a: &NervArch, batch: usize) -> String {
+        format!("nerv_decode_{}_b{}", a.name, batch)
+    }
+
+    pub fn nerv_train(a: &NervArch, batch: usize) -> String {
+        format!("nerv_train_{}_b{}", a.name, batch)
+    }
+
+    pub fn tinydet_fwd(batch: usize) -> String {
+        format!("tinydet_fwd_b{batch}")
+    }
+
+    pub fn tinydet_train(batch: usize) -> String {
+        format!("tinydet_train_b{batch}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::data::Profile;
+
+    #[test]
+    fn loads_repo_manifest() {
+        let m = Manifest::load_default().unwrap();
+        assert!(m.entries.len() >= 40, "{} entries", m.entries.len());
+        for spec in m.entries.values() {
+            assert!(!spec.args.is_empty());
+            assert!(!spec.outputs.is_empty());
+            assert!(m.hlo_path(spec).exists(), "{} missing", spec.file);
+        }
+    }
+
+    #[test]
+    fn manifest_names_resolve_for_all_configured_archs() {
+        // Every architecture the rust config can produce must have decode
+        // and train artifacts in the manifest with matching shapes.
+        let m = Manifest::load_default().unwrap();
+        let cfg = ArchConfig::load_default().unwrap();
+        let n_full = cfg.frame_w * cfg.frame_h;
+        for p in Profile::ALL {
+            let rp = cfg.rapid(p);
+            for (arch, n) in [(&rp.background, n_full), (&rp.baseline, n_full)]
+                .into_iter()
+                .chain(rp.object_bins.iter().map(|b| (&b.arch, b.max_pixels())))
+            {
+                let dec = m.get(&names::rapid_decode(arch, n)).unwrap();
+                // Weight args match MlpArch::param_shapes exactly.
+                let shapes = arch.param_shapes();
+                assert_eq!(dec.args.len(), shapes.len() + 1);
+                for (a, (nm, sh)) in dec.args.iter().zip(&shapes) {
+                    assert_eq!(&a.name, nm);
+                    assert_eq!(&a.shape, sh);
+                }
+                assert_eq!(dec.args.last().unwrap().shape, vec![n, 2]);
+                assert_eq!(dec.outputs[0].shape, vec![n, 3]);
+                let tr = m.get(&names::rapid_train(arch, n)).unwrap();
+                assert_eq!(tr.args.len(), 3 * shapes.len() + 4);
+                assert_eq!(tr.outputs.len(), 3 * shapes.len() + 1);
+            }
+        }
+        for bin in &cfg.nerv_bins {
+            for arch in [&bin.background, &bin.baseline] {
+                let dec = m.get(&names::nerv_decode(arch, cfg.nerv_decode_batch)).unwrap();
+                let shapes = arch.param_shapes();
+                assert_eq!(dec.args.len(), shapes.len() + 1);
+                for (a, (nm, sh)) in dec.args.iter().zip(&shapes) {
+                    assert_eq!(&a.name, nm);
+                    assert_eq!(&a.shape, sh);
+                }
+                assert_eq!(
+                    dec.outputs[0].shape,
+                    vec![cfg.nerv_decode_batch, cfg.frame_h, cfg.frame_w, 3]
+                );
+                m.get(&names::nerv_train(arch, cfg.nerv_decode_batch)).unwrap();
+            }
+        }
+        m.get(&names::tinydet_fwd(cfg.detect.batch)).unwrap();
+        m.get(&names::tinydet_train(cfg.detect.batch)).unwrap();
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::load_default().unwrap();
+        assert!(m.get("nonexistent").is_err());
+    }
+}

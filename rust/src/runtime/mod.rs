@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced by `python/compile/aot.py` and executes them
+//! from the rust hot path. Python never runs at request time.
+//!
+//! * [`manifest`] — artifact signatures (the python↔rust contract)
+//! * [`tensor`] — host tensors ↔ PJRT literals
+//! * [`session`] — thread-pinned client + compile-once cache
+//! * [`pool`] — N-worker execution pool (the parallel decode substrate)
+
+pub mod manifest;
+pub mod pool;
+pub mod session;
+pub mod tensor;
+
+pub use manifest::{names, ArtifactSpec, Manifest};
+pub use pool::Pool;
+pub use session::Session;
+pub use tensor::HostTensor;

@@ -1,0 +1,229 @@
+//! Multi-threaded PJRT execution pool.
+//!
+//! `PjRtClient` is thread-pinned (`Rc` internals), so the pool spawns N
+//! worker threads, each owning a [`Session`] with its own client and
+//! executable cache. Decode jobs fan out across workers — this is the
+//! "images inside one group decoded in parallel" hardware path of paper
+//! §3.2 (Fig 7), with one compiled executable per INR size bin.
+
+use anyhow::{anyhow, Result};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::thread;
+
+use super::manifest::Manifest;
+use super::session::Session;
+use super::tensor::HostTensor;
+
+enum Job {
+    Execute {
+        name: String,
+        inputs: Vec<HostTensor>,
+        reply: mpsc::Sender<Result<Vec<HostTensor>>>,
+    },
+    Warmup {
+        names: Vec<String>,
+        reply: mpsc::Sender<Result<()>>,
+    },
+}
+
+struct Worker {
+    tx: mpsc::Sender<Job>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+/// Pool of PJRT worker threads.
+pub struct Pool {
+    workers: Vec<Worker>,
+    next: AtomicUsize,
+    manifest: Manifest,
+}
+
+impl Pool {
+    /// Spawn `n` workers over the given manifest.
+    pub fn new(manifest: Manifest, n: usize) -> Result<Pool> {
+        let n = n.max(1);
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let m = manifest.clone();
+            let handle = thread::Builder::new()
+                .name(format!("pjrt-worker-{i}"))
+                .spawn(move || {
+                    let session = match Session::new(Rc::new(m)) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            // Surface the failure on the first job.
+                            let err = format!("worker init failed: {e:#}");
+                            while let Ok(job) = rx.recv() {
+                                match job {
+                                    Job::Execute { reply, .. } => {
+                                        let _ = reply.send(Err(anyhow!(err.clone())));
+                                    }
+                                    Job::Warmup { reply, .. } => {
+                                        let _ = reply.send(Err(anyhow!(err.clone())));
+                                    }
+                                }
+                            }
+                            return;
+                        }
+                    };
+                    while let Ok(job) = rx.recv() {
+                        match job {
+                            Job::Execute { name, inputs, reply } => {
+                                let _ = reply.send(session.execute(&name, &inputs));
+                            }
+                            Job::Warmup { names, reply } => {
+                                let names: Vec<&str> =
+                                    names.iter().map(|s| s.as_str()).collect();
+                                let _ = reply.send(session.warmup(&names));
+                            }
+                        }
+                    }
+                })
+                .expect("spawn pjrt worker");
+            workers.push(Worker { tx, handle: Some(handle) });
+        }
+        Ok(Pool { workers, next: AtomicUsize::new(0), manifest })
+    }
+
+    /// Pool over the repo's default artifacts.
+    pub fn open_default(n: usize) -> Result<Pool> {
+        Pool::new(Manifest::load_default()?, n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn pick(&self) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len()
+    }
+
+    /// Execute on the least-recently-assigned worker (round-robin).
+    pub fn execute(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        self.execute_on(self.pick(), name, inputs)
+    }
+
+    /// Execute pinned to a specific worker (used by the training loop so
+    /// the tinydet executable compiles exactly once).
+    pub fn execute_on(
+        &self,
+        worker: usize,
+        name: &str,
+        inputs: Vec<HostTensor>,
+    ) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.workers[worker % self.workers.len()]
+            .tx
+            .send(Job::Execute { name: name.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("pool worker gone"))?;
+        rx.recv().map_err(|_| anyhow!("pool worker dropped reply"))?
+    }
+
+    /// Execute a batch of jobs concurrently across all workers, preserving
+    /// job order in the result. One group of same-sized INRs = one call.
+    pub fn execute_many(
+        &self,
+        jobs: Vec<(String, Vec<HostTensor>)>,
+    ) -> Vec<Result<Vec<HostTensor>>> {
+        let mut rxs = Vec::with_capacity(jobs.len());
+        for (i, (name, inputs)) in jobs.into_iter().enumerate() {
+            let (reply, rx) = mpsc::channel();
+            let w = i % self.workers.len();
+            let send = self.workers[w].tx.send(Job::Execute { name, inputs, reply });
+            rxs.push((rx, send.is_ok()));
+        }
+        rxs.into_iter()
+            .map(|(rx, ok)| {
+                if !ok {
+                    return Err(anyhow!("pool worker gone"));
+                }
+                rx.recv().map_err(|_| anyhow!("pool worker dropped reply"))?
+            })
+            .collect()
+    }
+
+    /// Pre-compile `names` on every worker (device startup: "all INR
+    /// weights are transferred once ... before training starts", §3.2.1).
+    pub fn warmup(&self, names: &[String]) -> Result<()> {
+        let mut rxs = Vec::new();
+        for w in &self.workers {
+            let (reply, rx) = mpsc::channel();
+            w.tx.send(Job::Warmup { names: names.to_vec(), reply })
+                .map_err(|_| anyhow!("pool worker gone"))?;
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            rx.recv().map_err(|_| anyhow!("pool worker dropped reply"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            let (tx, _) = mpsc::channel();
+            let _ = std::mem::replace(&mut w.tx, tx); // close original sender
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::data::Profile;
+    use crate::runtime::manifest::names;
+
+    fn decode_inputs(cfg: &ArchConfig) -> (String, Vec<HostTensor>) {
+        let arch = &cfg.rapid(Profile::DacSdc).background;
+        let n = cfg.frame_w * cfg.frame_h;
+        let mut inputs: Vec<HostTensor> = arch
+            .param_shapes()
+            .iter()
+            .map(|(_, sh)| HostTensor::zeros(sh.clone()))
+            .collect();
+        inputs.push(HostTensor::zeros(vec![n, 2]));
+        (names::rapid_decode(arch, n), inputs)
+    }
+
+    #[test]
+    fn pool_executes_in_parallel_with_order() {
+        let cfg = ArchConfig::load_default().unwrap();
+        let pool = Pool::open_default(2).unwrap();
+        let (name, inputs) = decode_inputs(&cfg);
+        let jobs: Vec<_> = (0..6).map(|_| (name.clone(), inputs.clone())).collect();
+        let results = pool.execute_many(jobs);
+        assert_eq!(results.len(), 6);
+        for r in results {
+            let out = r.unwrap();
+            assert_eq!(out[0].shape, vec![cfg.frame_w * cfg.frame_h, 3]);
+        }
+    }
+
+    #[test]
+    fn warmup_then_execute() {
+        let cfg = ArchConfig::load_default().unwrap();
+        let pool = Pool::open_default(2).unwrap();
+        let (name, inputs) = decode_inputs(&cfg);
+        pool.warmup(&[name.clone()]).unwrap();
+        let out = pool.execute(&name, inputs).unwrap();
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn unknown_artifact_is_error_not_panic() {
+        let pool = Pool::open_default(1).unwrap();
+        assert!(pool.execute("no_such_artifact", vec![]).is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! Single-threaded PJRT session: owns a CPU client and a compile-once
+//! executable cache. `PjRtClient` is `Rc`-based (not `Send`), so a session
+//! is pinned to its thread; cross-thread execution goes through
+//! [`super::pool::Pool`], which runs one session per worker thread.
+
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+/// A PJRT CPU session with lazily compiled, cached executables.
+pub struct Session {
+    client: xla::PjRtClient,
+    manifest: Rc<Manifest>,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Executions performed (for perf accounting).
+    pub calls: RefCell<u64>,
+}
+
+impl Session {
+    pub fn new(manifest: Rc<Manifest>) -> Result<Session> {
+        Ok(Session {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            calls: RefCell::new(0),
+        })
+    }
+
+    /// Open a session on the repo's default artifact directory.
+    pub fn open_default() -> Result<Session> {
+        Session::new(Rc::new(Manifest::load_default()?))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(exe));
+        }
+        let spec = self.manifest.get(name)?;
+        let path = self.manifest.hlo_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (used at device startup so the hot
+    /// path never hits compilation).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with shape-checked inputs; returns one
+    /// `HostTensor` per manifest output.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.get(name)?.clone();
+        if inputs.len() != spec.args.len() {
+            anyhow::bail!(
+                "{name}: {} inputs given, manifest wants {}",
+                inputs.len(),
+                spec.args.len()
+            );
+        }
+        for (t, a) in inputs.iter().zip(&spec.args) {
+            t.check(a).with_context(|| format!("artifact {name}"))?;
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {name} result"))?;
+        *self.calls.borrow_mut() += 1;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            anyhow::bail!(
+                "{name}: got {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, o)| HostTensor::from_literal(lit, &o.shape))
+            .collect()
+    }
+
+    /// Number of distinct compiled executables in the cache.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::data::Profile;
+    use crate::runtime::manifest::names;
+
+    fn session() -> Session {
+        Session::open_default().expect("artifacts built (`make artifacts`)")
+    }
+
+    #[test]
+    fn decode_artifact_executes_with_correct_shapes() {
+        let cfg = ArchConfig::load_default().unwrap();
+        let arch = &cfg.rapid(Profile::DacSdc).background;
+        let n = cfg.frame_w * cfg.frame_h;
+        let s = session();
+        let name = names::rapid_decode(arch, n);
+        let mut inputs: Vec<HostTensor> = arch
+            .param_shapes()
+            .iter()
+            .map(|(_, sh)| HostTensor::zeros(sh.clone()))
+            .collect();
+        inputs.push(HostTensor::zeros(vec![n, 2]));
+        let out = s.execute(&name, &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![n, 3]);
+        // Zero weights + sigmoid head → all outputs exactly 0.5.
+        assert!(out[0].data.iter().all(|&v| (v - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let s = session();
+        let cfg = ArchConfig::load_default().unwrap();
+        let arch = &cfg.rapid(Profile::DacSdc).background;
+        let name = names::rapid_decode(arch, cfg.frame_w * cfg.frame_h);
+        s.executable(&name).unwrap();
+        assert_eq!(s.cached(), 1);
+        s.executable(&name).unwrap();
+        assert_eq!(s.cached(), 1);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected_before_execution() {
+        let s = session();
+        let cfg = ArchConfig::load_default().unwrap();
+        let arch = &cfg.rapid(Profile::DacSdc).background;
+        let n = cfg.frame_w * cfg.frame_h;
+        let name = names::rapid_decode(arch, n);
+        let inputs = vec![HostTensor::zeros(vec![1, 1])];
+        assert!(s.execute(&name, &inputs).is_err());
+    }
+
+    #[test]
+    fn train_step_reduces_loss_via_pjrt() {
+        // End-to-end Adam through the AOT artifact: loss must drop.
+        let cfg = ArchConfig::load_default().unwrap();
+        let rp = cfg.rapid(Profile::DacSdc);
+        let bin = &rp.object_bins[0];
+        let n = bin.max_pixels();
+        let arch = &bin.arch;
+        let s = session();
+        let name = names::rapid_train(arch, n);
+        let shapes = arch.param_shapes();
+        // SIREN-ish init from the rust side.
+        let mut rng = crate::util::rng::Pcg32::seeded(5);
+        let mut params: Vec<HostTensor> = shapes
+            .iter()
+            .map(|(_, sh)| {
+                let fan_in = if sh.len() >= 2 { sh[0] } else { 1 };
+                let bound = (6.0f32 / fan_in as f32).sqrt();
+                let nel: usize = sh.iter().product();
+                HostTensor::new(
+                    sh.clone(),
+                    (0..nel).map(|_| rng.range_f32(-bound, bound)).collect(),
+                )
+            })
+            .collect();
+        let mut m: Vec<HostTensor> =
+            shapes.iter().map(|(_, sh)| HostTensor::zeros(sh.clone())).collect();
+        let mut v = m.clone();
+        let coords = HostTensor::new(
+            vec![n, 2],
+            (0..n).flat_map(|i| {
+                let side = (n as f32).sqrt() as usize;
+                let x = (i % side) as f32 / side as f32;
+                let y = (i / side) as f32 / side as f32;
+                [x, y]
+            }).collect(),
+        );
+        let targets = HostTensor::new(
+            vec![n, 3],
+            (0..n * 3).map(|i| 0.2 * ((i as f32) * 0.01).sin()).collect(),
+        );
+        let mask = HostTensor::new(vec![n], vec![1.0; n]);
+        let mut first = None;
+        let mut last = 0.0;
+        for step in 1..=80 {
+            let mut inputs = params.clone();
+            inputs.extend(m.iter().cloned());
+            inputs.extend(v.iter().cloned());
+            inputs.push(HostTensor::scalar(step as f32));
+            inputs.push(coords.clone());
+            inputs.push(targets.clone());
+            inputs.push(mask.clone());
+            let out = s.execute(&name, &inputs).unwrap();
+            let k = shapes.len();
+            params = out[..k].to_vec();
+            m = out[k..2 * k].to_vec();
+            v = out[2 * k..3 * k].to_vec();
+            last = out[3 * k].data[0];
+            first.get_or_insert(last);
+        }
+        let first = first.unwrap();
+        assert!(last < first * 0.6, "loss {first} -> {last}");
+    }
+}

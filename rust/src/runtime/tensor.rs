@@ -1,0 +1,107 @@
+//! Host-side tensors and conversions to/from PJRT literals.
+
+use anyhow::{bail, Result};
+
+use super::manifest::ArgSpec;
+
+/// A shaped f32 tensor in host memory (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        let t = HostTensor { shape, data };
+        assert_eq!(t.elements(), t.data.len(), "shape/data mismatch");
+        t
+    }
+
+    pub fn scalar(v: f32) -> HostTensor {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Validate against a manifest slot.
+    pub fn check(&self, spec: &ArgSpec) -> Result<()> {
+        if self.shape != spec.shape {
+            bail!(
+                "argument {}: shape {:?} does not match manifest {:?}",
+                spec.name,
+                self.shape,
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Convert to a PJRT literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        if self.shape.is_empty() {
+            return Ok(xla::Literal::scalar(self.data[0]));
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Build from a PJRT literal with a known shape.
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<HostTensor> {
+        let data = lit.to_vec::<f32>()?;
+        let expect: usize = shape.iter().product();
+        if data.len() != expect {
+            bail!("literal has {} elements, expected {:?}", data.len(), shape);
+        }
+        Ok(HostTensor { shape: shape.to_vec(), data })
+    }
+}
+
+impl From<&crate::inr::Tensor> for HostTensor {
+    fn from(t: &crate::inr::Tensor) -> HostTensor {
+        HostTensor { shape: t.shape.clone(), data: t.data.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_shape_mismatch() {
+        let t = HostTensor::zeros(vec![2, 3]);
+        let ok = ArgSpec { name: "x".into(), shape: vec![2, 3] };
+        let bad = ArgSpec { name: "x".into(), shape: vec![3, 2] };
+        assert!(t.check(&ok).is_ok());
+        assert!(t.check(&bad).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip_through_literal() {
+        let t = HostTensor::scalar(4.25);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &[]).unwrap();
+        assert_eq!(back.data, vec![4.25]);
+    }
+
+    #[test]
+    fn matrix_roundtrip_through_literal() {
+        let t = HostTensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &[2, 3]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        let _ = HostTensor::new(vec![2, 2], vec![1.0]);
+    }
+}

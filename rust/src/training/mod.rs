@@ -1,0 +1,209 @@
+//! On-device detection training: the consumer of the decoded image stream.
+//! TinyDet (the YOLOv8-m stand-in, DESIGN.md) is fine-tuned through the
+//! AOT `tinydet_train` artifact; evaluation runs `tinydet_fwd` and scores
+//! mAP50-95 via [`crate::metrics::detect`].
+
+pub mod state;
+
+use anyhow::Result;
+
+use crate::config::ArchConfig;
+use crate::data::{BBox, ImageRGB};
+use crate::metrics::Detection;
+use crate::runtime::{names, HostTensor, Session};
+use crate::util::rng::Pcg32;
+use state::TrainState;
+
+pub use state::siren_init;
+
+/// Pack images into the `(B, H, W, 3)` tensor the artifacts expect.
+/// Short batches are padded by repeating the last image.
+pub fn images_to_tensor(images: &[&ImageRGB], batch: usize) -> HostTensor {
+    assert!(!images.is_empty() && images.len() <= batch);
+    let (w, h) = (images[0].width, images[0].height);
+    let mut data = Vec::with_capacity(batch * h * w * 3);
+    for i in 0..batch {
+        let img = images[i.min(images.len() - 1)];
+        assert_eq!((img.width, img.height), (w, h));
+        data.extend_from_slice(&img.data);
+    }
+    HostTensor::new(vec![batch, h, w, 3], data)
+}
+
+/// Pack ground-truth boxes as normalized `(B, 4)` cxcywh.
+pub fn boxes_to_tensor(boxes: &[BBox], batch: usize, w: usize, h: usize) -> HostTensor {
+    assert!(!boxes.is_empty() && boxes.len() <= batch);
+    let mut data = Vec::with_capacity(batch * 4);
+    for i in 0..batch {
+        let b = &boxes[i.min(boxes.len() - 1)];
+        data.extend_from_slice(&b.to_normalized(w, h));
+    }
+    HostTensor::new(vec![batch, 4], data)
+}
+
+/// TinyDet trainer: Adam state + fixed-batch train/eval over the artifacts.
+pub struct DetTrainer {
+    pub state: TrainState,
+    pub batch: usize,
+    pub frame_w: usize,
+    pub frame_h: usize,
+    fwd_artifact: String,
+    pub steps_done: usize,
+    pub loss_curve: Vec<f32>,
+}
+
+impl DetTrainer {
+    /// Fresh detector with SIREN-style init.
+    pub fn new(cfg: &ArchConfig, seed: u64) -> DetTrainer {
+        let shapes = detect_shapes(cfg);
+        let mut rng = Pcg32::seeded(seed);
+        DetTrainer {
+            state: TrainState::init(names::tinydet_train(cfg.detect.batch), shapes, &mut rng),
+            batch: cfg.detect.batch,
+            frame_w: cfg.frame_w,
+            frame_h: cfg.frame_h,
+            fwd_artifact: names::tinydet_fwd(cfg.detect.batch),
+            steps_done: 0,
+            loss_curve: Vec::new(),
+        }
+    }
+
+    /// One fused train step on a batch of decoded images + boxes.
+    pub fn train_batch(
+        &mut self,
+        session: &Session,
+        images: &[&ImageRGB],
+        boxes: &[BBox],
+    ) -> Result<f32> {
+        let imgs = images_to_tensor(images, self.batch);
+        let bxs = boxes_to_tensor(boxes, self.batch, self.frame_w, self.frame_h);
+        let loss = self.state.step(session, vec![imgs, bxs])?;
+        self.steps_done += 1;
+        self.loss_curve.push(loss);
+        Ok(loss)
+    }
+
+    /// Predict boxes + confidences for up to `batch` images.
+    pub fn predict(
+        &self,
+        session: &Session,
+        images: &[&ImageRGB],
+    ) -> Result<Vec<(BBox, f32)>> {
+        let n = images.len();
+        let imgs = images_to_tensor(images, self.batch);
+        let mut inputs = self.state.params.clone();
+        inputs.push(imgs);
+        let out = session.execute(&self.fwd_artifact, &inputs)?;
+        let boxes = &out[0];
+        let conf = &out[1];
+        Ok((0..n)
+            .map(|i| {
+                let v = [
+                    boxes.data[4 * i],
+                    boxes.data[4 * i + 1],
+                    boxes.data[4 * i + 2],
+                    boxes.data[4 * i + 3],
+                ];
+                (BBox::from_normalized(v, self.frame_w, self.frame_h), conf.data[i])
+            })
+            .collect())
+    }
+
+    /// Evaluate on a labeled frame set; returns per-image detections for
+    /// mAP scoring.
+    pub fn evaluate(
+        &self,
+        session: &Session,
+        frames: &[(&ImageRGB, &BBox)],
+    ) -> Result<Vec<Detection>> {
+        let mut dets = Vec::with_capacity(frames.len());
+        for chunk in frames.chunks(self.batch) {
+            let imgs: Vec<&ImageRGB> = chunk.iter().map(|(f, _)| *f).collect();
+            let preds = self.predict(session, &imgs)?;
+            for ((_, truth), (pred, conf)) in chunk.iter().zip(preds) {
+                dets.push(Detection { pred, confidence: conf, truth: **truth });
+            }
+        }
+        Ok(dets)
+    }
+}
+
+fn detect_shapes(cfg: &ArchConfig) -> Vec<(String, Vec<usize>)> {
+    // Mirror of model.detect_param_shapes.
+    let d = &cfg.detect;
+    let mut shapes = Vec::new();
+    let mut cin = 3usize;
+    let mut c = d.base_channels;
+    for i in 0..d.stages {
+        shapes.push((format!("conv{i}_w"), vec![3, 3, cin, c]));
+        shapes.push((format!("conv{i}_b"), vec![c]));
+        cin = c;
+        c *= 2;
+    }
+    let ds = 1usize << d.stages;
+    let fh = cfg.frame_h.div_ceil(ds);
+    let fw = cfg.frame_w.div_ceil(ds);
+    shapes.push(("head_w1".to_string(), vec![fh * fw * cin, d.head_hidden]));
+    shapes.push(("head_b1".to_string(), vec![d.head_hidden]));
+    shapes.push(("head_w2".to_string(), vec![d.head_hidden, 5]));
+    shapes.push(("head_b2".to_string(), vec![5]));
+    shapes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_sequence, Profile};
+    use crate::metrics::{map50_95, mean_iou};
+
+    #[test]
+    fn tensor_packing_pads_by_repetition() {
+        let img = ImageRGB::from_fn(4, 3, |x, y| [x as f32, y as f32, 0.0]);
+        let t = images_to_tensor(&[&img], 2);
+        assert_eq!(t.shape, vec![2, 3, 4, 3]);
+        assert_eq!(&t.data[..36], &t.data[36..]);
+        let b = boxes_to_tensor(&[BBox::new(0, 0, 2, 2)], 2, 4, 3);
+        assert_eq!(b.shape, vec![2, 4]);
+        assert_eq!(&b.data[..4], &b.data[4..]);
+    }
+
+    #[test]
+    fn detect_shapes_match_manifest() {
+        let cfg = ArchConfig::load_default().unwrap();
+        let m = crate::runtime::Manifest::load_default().unwrap();
+        let spec = m.get(&names::tinydet_train(cfg.detect.batch)).unwrap();
+        let shapes = detect_shapes(&cfg);
+        for ((name, shape), arg) in shapes.iter().zip(&spec.args) {
+            assert_eq!(name, &arg.name);
+            assert_eq!(shape, &arg.shape);
+        }
+    }
+
+    #[test]
+    fn training_on_raw_frames_improves_detection() {
+        let cfg = ArchConfig::load_default().unwrap();
+        let session = Session::open_default().unwrap();
+        let seq = generate_sequence(Profile::Otb100, 31, 0);
+        let mut trainer = DetTrainer::new(&cfg, 9);
+        let mut rng = Pcg32::seeded(4);
+        let n = seq.len();
+        let eval: Vec<(&ImageRGB, &BBox)> = (0..n.min(16))
+            .map(|i| (&seq.frames[i], &seq.boxes[i]))
+            .collect();
+        let before = mean_iou(&trainer.evaluate(&session, &eval).unwrap());
+        for _ in 0..60 {
+            let idx: Vec<usize> = (0..trainer.batch).map(|_| rng.below_usize(n)).collect();
+            let imgs: Vec<&ImageRGB> = idx.iter().map(|&i| &seq.frames[i]).collect();
+            let boxes: Vec<BBox> = idx.iter().map(|&i| seq.boxes[i]).collect();
+            trainer.train_batch(&session, &imgs, &boxes).unwrap();
+        }
+        let dets = trainer.evaluate(&session, &eval).unwrap();
+        let after = mean_iou(&dets);
+        assert!(
+            after > before + 0.1,
+            "mean IoU {before:.3} -> {after:.3}, map {:.3}",
+            map50_95(&dets)
+        );
+        assert!(trainer.loss_curve.first().unwrap() > trainer.loss_curve.last().unwrap());
+    }
+}

@@ -1,0 +1,141 @@
+//! Generic AOT train-step driver: owns the `(params, m, v, step)` Adam
+//! state for one network and advances it by executing the network's
+//! fused train-step artifact. Used by the fog-side INR encoder (Rapid,
+//! NeRV) and the on-device TinyDet fine-tuning loop.
+
+use anyhow::Result;
+
+use crate::inr::weights::{Tensor, WeightSet};
+use crate::runtime::{HostTensor, Session};
+use crate::util::rng::Pcg32;
+
+/// SIREN-style init mirrored from `model.siren_init`: W ~ U(±sqrt(6/fan_in))
+/// (fan_in = product of all but the last dim), b ~ U(±0.01).
+pub fn siren_init(shapes: &[(String, Vec<usize>)], rng: &mut Pcg32) -> WeightSet {
+    let tensors = shapes
+        .iter()
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product();
+            let bound = if shape.len() >= 2 {
+                let fan_in: usize = shape[..shape.len() - 1].iter().product();
+                (6.0f32 / fan_in as f32).sqrt()
+            } else {
+                0.01
+            };
+            Tensor::new(
+                name.clone(),
+                shape.clone(),
+                (0..n).map(|_| rng.range_f32(-bound, bound)).collect(),
+            )
+        })
+        .collect();
+    WeightSet::new(tensors)
+}
+
+/// Adam training state over one artifact.
+pub struct TrainState {
+    /// Train-step artifact name (e.g. `rapid_train_l6h12p6s_n12288`).
+    pub artifact: String,
+    pub shapes: Vec<(String, Vec<usize>)>,
+    pub params: Vec<HostTensor>,
+    m: Vec<HostTensor>,
+    v: Vec<HostTensor>,
+    pub step: u64,
+    pub last_loss: f32,
+}
+
+impl TrainState {
+    /// Fresh state with SIREN init.
+    pub fn init(artifact: String, shapes: Vec<(String, Vec<usize>)>, rng: &mut Pcg32) -> Self {
+        let ws = siren_init(&shapes, rng);
+        Self::from_weights(artifact, shapes, &ws)
+    }
+
+    /// State seeded from existing weights (e.g. resuming, or a pretrained
+    /// detection backbone).
+    pub fn from_weights(
+        artifact: String,
+        shapes: Vec<(String, Vec<usize>)>,
+        ws: &WeightSet,
+    ) -> Self {
+        let params: Vec<HostTensor> = ws.tensors.iter().map(HostTensor::from).collect();
+        let zeros: Vec<HostTensor> =
+            shapes.iter().map(|(_, s)| HostTensor::zeros(s.clone())).collect();
+        TrainState {
+            artifact,
+            shapes,
+            params,
+            m: zeros.clone(),
+            v: zeros,
+            step: 0,
+            last_loss: f32::NAN,
+        }
+    }
+
+    /// One fused Adam step; `extra` are the data inputs after
+    /// `(params…, m…, v…, step)` in the artifact signature. Returns loss.
+    pub fn step(&mut self, session: &Session, extra: Vec<HostTensor>) -> Result<f32> {
+        self.step += 1;
+        let k = self.shapes.len();
+        let mut inputs = Vec::with_capacity(3 * k + 1 + extra.len());
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.m.iter().cloned());
+        inputs.extend(self.v.iter().cloned());
+        inputs.push(HostTensor::scalar(self.step as f32));
+        inputs.extend(extra);
+        let out = session.execute(&self.artifact, &inputs)?;
+        self.params = out[..k].to_vec();
+        self.m = out[k..2 * k].to_vec();
+        self.v = out[2 * k..3 * k].to_vec();
+        self.last_loss = out[3 * k].data[0];
+        Ok(self.last_loss)
+    }
+
+    /// Current parameters as a `WeightSet` (for quantization/transmission).
+    pub fn weights(&self) -> WeightSet {
+        WeightSet::new(
+            self.shapes
+                .iter()
+                .zip(&self.params)
+                .map(|((name, shape), t)| Tensor::new(name.clone(), shape.clone(), t.data.clone()))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn siren_init_bounds_and_determinism() {
+        let shapes = vec![
+            ("w0".to_string(), vec![26, 12]),
+            ("b0".to_string(), vec![12]),
+            ("conv_w".to_string(), vec![3, 3, 8, 16]),
+        ];
+        let mut rng = Pcg32::seeded(1);
+        let a = siren_init(&shapes, &mut rng);
+        let mut rng2 = Pcg32::seeded(1);
+        let b = siren_init(&shapes, &mut rng2);
+        assert_eq!(a, b);
+        let bound0 = (6.0f32 / 26.0).sqrt();
+        assert!(a.tensors[0].data.iter().all(|v| v.abs() <= bound0));
+        assert!(a.tensors[1].data.iter().all(|v| v.abs() <= 0.01));
+        let bound2 = (6.0f32 / 72.0).sqrt();
+        assert!(a.tensors[2].data.iter().all(|v| v.abs() <= bound2));
+        // Not all zero / not all identical.
+        assert!(a.tensors[0].data.iter().any(|&v| v != a.tensors[0].data[0]));
+    }
+
+    #[test]
+    fn weights_roundtrip() {
+        let shapes = vec![("w0".to_string(), vec![2, 2]), ("b0".to_string(), vec![2])];
+        let mut rng = Pcg32::seeded(3);
+        let st = TrainState::init("x".into(), shapes.clone(), &mut rng);
+        let ws = st.weights();
+        ws.check_shapes(&shapes).unwrap();
+        let st2 = TrainState::from_weights("x".into(), shapes, &ws);
+        assert_eq!(st.params, st2.params);
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny command-line argument parser (no `clap` in the vendored set).
+//!
+//! Supports `subcommand --flag value --switch positional` style. Flags may
+//! be given as `--key value` or `--key=value`. Unknown flags are an error so
+//! typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, `--key value` flags, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// `known_switches` are boolean flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_switches: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        // First non-flag token is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&body) {
+                    out.switches.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("flag --{body} needs a value"))?;
+                    out.flags.insert(body.to_string(), v);
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse_env(known_switches: &[&str]) -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1), known_switches)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let a = Args::parse(argv("encode --dataset uav --steps 300 out.bin --verbose"), &["verbose"])
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("encode"));
+        assert_eq!(a.get("dataset"), Some("uav"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 300);
+        assert_eq!(a.positional, vec!["out.bin"]);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(argv("run --alpha=0.12"), &[]).unwrap();
+        assert_eq!(a.get_f64("alpha", 0.0).unwrap(), 0.12);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(argv("run --steps"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(argv("run --steps banana"), &[]).unwrap();
+        assert!(a.get_usize("steps", 1).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(argv("run"), &[]).unwrap();
+        assert_eq!(a.get_usize("steps", 42).unwrap(), 42);
+        assert_eq!(a.get_or("mode", "fog"), "fog");
+    }
+}

@@ -1,0 +1,62 @@
+//! Self-contained utility substrates for the offline build environment:
+//! seeded RNG, minimal JSON, CLI parsing, thread pool, and a small
+//! property-testing helper. See DESIGN.md "Environment constraints".
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod propcheck;
+pub mod rng;
+
+/// Wall-clock stopwatch used by the pipeline latency accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: std::time::Instant::now() }
+    }
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.seconds() * 1e3
+    }
+}
+
+/// Format a byte count human-readably (`12.3 KB`, `4.56 MB`).
+pub fn fmt_bytes(b: u64) -> String {
+    let b = b as f64;
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(1500), "1.50 KB");
+        assert_eq!(fmt_bytes(2_500_000), "2.50 MB");
+        assert_eq!(fmt_bytes(3_000_000_000), "3.00 GB");
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.seconds();
+        let b = sw.seconds();
+        assert!(b >= a && a >= 0.0);
+    }
+}

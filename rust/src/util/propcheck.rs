@@ -1,0 +1,93 @@
+//! Minimal property-based testing helper (no `proptest` in the vendored
+//! set). A property is a closure over a seeded RNG that panics on
+//! violation; `check` runs it across many seeds and, on failure, reports
+//! the failing seed so the case can be replayed deterministically.
+//!
+//! Used by the coordinator/pipeline/codec test suites for randomized
+//! invariants (routing conservation, grouping keys, quantization bounds,
+//! JPEG round-trip tolerance, comm-model algebra).
+
+use super::rng::Pcg32;
+
+/// Default number of random cases per property.
+pub const DEFAULT_CASES: u64 = 64;
+
+/// Run `prop` for `cases` seeds derived from `base_seed`. The property gets
+/// a fresh deterministic RNG per case; any panic is caught, annotated with
+/// the seed, and re-raised.
+pub fn check_seeded<F: Fn(&mut Pcg32) + std::panic::RefUnwindSafe>(
+    name: &str,
+    base_seed: u64,
+    cases: u64,
+    prop: F,
+) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(case);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg32::seeded(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed on case {case} (replay seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run a property with the default case count.
+pub fn check<F: Fn(&mut Pcg32) + std::panic::RefUnwindSafe>(name: &str, prop: F) {
+    check_seeded(name, 0xC0FFEE, DEFAULT_CASES, prop)
+}
+
+/// Generate a random `Vec<f32>` with values in `[lo, hi)`.
+pub fn vec_f32(rng: &mut Pcg32, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.range_f32(lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", |rng| {
+            let a = rng.f32();
+            let b = rng.f32();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        // Silence the default panic-hook spam from the inner catch_unwind.
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", |rng| {
+                assert!(rng.f32() < 0.0, "cannot hold");
+            });
+        });
+        std::panic::set_hook(hook);
+        if let Err(p) = r {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    #[test]
+    fn vec_f32_bounds() {
+        check("vec-bounds", |rng| {
+            let v = vec_f32(rng, 100, -2.0, 3.0);
+            assert_eq!(v.len(), 100);
+            assert!(v.iter().all(|x| (-2.0..3.0).contains(x)));
+        });
+    }
+}
