@@ -1,0 +1,85 @@
+//! Fleet scale-out bench: total bytes + makespan vs device count for the
+//! serverless JPEG baseline, Rapid-INR and Res-Rapid-INR, on the
+//! discrete-event fleet engine (single fog cell, the paper's topology,
+//! scaled from the 10-device testbed to 100 and 1000 edge devices).
+//!
+//! This extends Fig 8 from analytical totals to a simulated timeline:
+//! the byte curves reproduce the §4 model (fog+INR grows with slope
+//! `α·m` per receiver vs `m` for serverless) while makespan additionally
+//! shows upload/encode/broadcast overlap and cell contention.
+//!
+//! Run: `cargo bench --bench fleet_scale`
+//! Env: `FRAMES=24` shard size, `WORKERS=4` encode workers per fog.
+
+use residual_inr::bench_support::Table;
+use residual_inr::config::ArchConfig;
+use residual_inr::coordinator::Method;
+use residual_inr::fleet::{self, FleetConfig};
+use residual_inr::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ArchConfig::load_default()?;
+    let frames: usize =
+        std::env::var("FRAMES").ok().and_then(|v| v.parse().ok()).unwrap_or(24);
+    let workers: usize =
+        std::env::var("WORKERS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+
+    let methods = [
+        ("jpeg", Method::Jpeg { quality: 95 }),
+        ("rapid", Method::RapidSingle),
+        ("res-rapid", Method::ResRapid { direct: false }),
+    ];
+    let device_counts = [10usize, 100, 1000];
+
+    println!(
+        "== fleet scale-out: single fog cell, {frames}-frame shard, {workers} encode workers =="
+    );
+    let mut t = Table::new(&[
+        "method", "devices", "total bytes", "bytes/receiver", "makespan (s)", "queue",
+        "events",
+    ]);
+    // (method, devices) -> total bytes, for the reduction summary below.
+    let mut totals = Vec::new();
+    for (name, method) in methods {
+        for &devices in &device_counts {
+            let mut fc = FleetConfig::paper_10(method);
+            fc.n_edges = devices;
+            fc.max_frames = Some(frames);
+            fc.encode_workers = workers;
+            let r = fleet::run(&cfg, &fc)?;
+            let receivers = (devices - 1) as u64;
+            t.row(&[
+                name.to_string(),
+                devices.to_string(),
+                fmt_bytes(r.total_bytes),
+                fmt_bytes(r.total_bytes / receivers.max(1)),
+                format!("{:.2}", r.makespan_seconds),
+                r.max_queue_depth.to_string(),
+                r.events.to_string(),
+            ]);
+            totals.push((name, devices, r.total_bytes));
+        }
+    }
+    t.print();
+
+    println!("\n== reduction vs serverless JPEG (paper Fig 8 regime) ==");
+    let mut t = Table::new(&["devices", "rapid", "res-rapid"]);
+    for &devices in &device_counts {
+        let get = |n: &str| {
+            totals
+                .iter()
+                .find(|(m, d, _)| *m == n && *d == devices)
+                .map(|(_, _, b)| *b as f64)
+                .unwrap()
+        };
+        let jpeg = get("jpeg");
+        t.row(&[
+            devices.to_string(),
+            format!("{:.2}x", jpeg / get("rapid")),
+            format!("{:.2}x", jpeg / get("res-rapid")),
+        ]);
+    }
+    t.print();
+    println!("\npaper headline: 3.43-5.16x less transmission across 10 edge devices");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Multi-fog scale-out study on the discrete-event fleet engine.
+//!
+//! Takes the same Res-Rapid-INR workload through the three fleet
+//! topologies — one big single-fog cell, four sharded fog cells over a
+//! mesh backhaul, and a cloud→fog→edge hierarchy — and compares wireless
+//! bytes, backhaul bytes, weight-cache dedup and makespan. The paper's
+//! single-fog testbed (10 devices) is the calibration point; the
+//! interesting regime is hundreds of receivers, where per-fog encode
+//! worker pools and the content-addressed weight cache keep both the
+//! timeline and the backhaul flat.
+//!
+//! ```text
+//! cargo run --release --example fleet_scaleout
+//! EDGES=400 FOGS=8 cargo run --release --example fleet_scaleout
+//! ```
+
+use anyhow::Result;
+
+use residual_inr::config::ArchConfig;
+use residual_inr::coordinator::Method;
+use residual_inr::fleet::{self, FleetConfig};
+use residual_inr::util::fmt_bytes;
+
+fn main() -> Result<()> {
+    let cfg = ArchConfig::load_default()?;
+    let edges: usize = std::env::var("EDGES").ok().and_then(|v| v.parse().ok()).unwrap_or(200);
+    let fogs: usize = std::env::var("FOGS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+    let method = Method::ResRapid { direct: false };
+
+    // 1. The paper's 10-device single-fog testbed as the anchor.
+    let paper = fleet::run(&cfg, &FleetConfig::paper_10(method))?;
+    println!("--- paper-10 anchor ---");
+    paper.print();
+
+    // 2. One fog cell serving the whole fleet: every broadcast contends
+    //    on a single shared medium.
+    let mut single = FleetConfig::paper_10(method);
+    single.scenario = "single-big-cell".into();
+    single.n_edges = edges;
+    println!("\n--- single fog, {edges} edges ---");
+    let r_single = fleet::run(&cfg, &single)?;
+    r_single.print();
+
+    // 3. Sharded: per-fog cells + mesh backhaul + weight cache.
+    let mut sharded = FleetConfig::from_scenario("sharded", method)?;
+    sharded.n_fogs = fogs;
+    sharded.n_edges = edges;
+    println!("\n--- sharded, {fogs} fogs × {} edges ---", edges / fogs);
+    let r_sharded = fleet::run(&cfg, &sharded)?;
+    r_sharded.print();
+
+    // 4. Hierarchical cloud relay.
+    let mut hier = FleetConfig::from_scenario("hierarchical", method)?;
+    hier.n_fogs = fogs;
+    hier.n_edges = edges;
+    println!("\n--- hierarchical (cloud→fog→edge), {fogs} fogs ---");
+    let r_hier = fleet::run(&cfg, &hier)?;
+    r_hier.print();
+
+    println!("\n--- summary ---");
+    println!(
+        "single cell : {} on air, makespan {:.2} s",
+        fmt_bytes(r_single.total_bytes),
+        r_single.makespan_seconds
+    );
+    println!(
+        "sharded     : {} on air ({} backhaul), makespan {:.2} s, cache saved {}",
+        fmt_bytes(r_sharded.total_bytes),
+        fmt_bytes(r_sharded.backhaul_bytes),
+        r_sharded.makespan_seconds,
+        fmt_bytes(r_sharded.cache.bytes_saved)
+    );
+    println!(
+        "hierarchical: {} on air ({} backhaul), makespan {:.2} s, cache saved {}",
+        fmt_bytes(r_hier.total_bytes),
+        fmt_bytes(r_hier.backhaul_bytes),
+        r_hier.makespan_seconds,
+        fmt_bytes(r_hier.cache.bytes_saved)
+    );
+    // Note the workloads differ: the single cell serves one shard, the
+    // multi-fog fleets serve one shard *per fog* to every receiver, so
+    // compare per-frame rates rather than raw makespans.
+    let rate = |frames: usize, makespan: f64| frames as f64 / makespan.max(1e-9);
+    println!(
+        "delivery rate : single {:.1} frames/s vs sharded {:.1} frames/s ({} fog cells overlap)",
+        rate(r_single.n_frames, r_single.makespan_seconds),
+        rate(r_sharded.n_frames, r_sharded.makespan_seconds),
+        fogs
+    );
+    Ok(())
+}

@@ -1,7 +1,11 @@
-//! Configuration system: loads `configs/arch.json` (shared with
-//! `python/compile/aot.py`) into typed architecture tables, plus runtime
-//! knobs (network bandwidth, training hyper-parameters) with defaults
-//! matching the paper's experiment settings (§5.1).
+//! Configuration system: loads `configs/arch.json` (checked in at the
+//! repo root and shared with `python/compile/aot.py`) into typed
+//! architecture tables, plus runtime knobs (network bandwidth, training
+//! hyper-parameters) with defaults matching the paper's experiment
+//! settings (§5.1). The architecture tables are also the size oracle of
+//! the [`crate::fleet`] traffic model: INR payload bytes are fully
+//! determined by `param_shapes()` and the quantization widths, which is
+//! what lets the fleet engine reproduce live byte totals without PJRT.
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};

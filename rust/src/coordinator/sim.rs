@@ -103,6 +103,10 @@ pub struct SimReport {
     pub train_seconds: f64,
     /// Fog-side encode time (not on the edge critical path).
     pub fog_encode_seconds: f64,
+    /// Makespan of the same run on the discrete-event [`crate::fleet`]
+    /// engine (upload/encode/broadcast overlapped on their own
+    /// resources), as opposed to the serialized NetSim accounting above.
+    pub fleet_makespan_seconds: f64,
     // Compression metrics.
     pub payload_bytes: usize,
     pub avg_frame_bytes: f64,
@@ -125,8 +129,9 @@ impl SimReport {
 }
 
 /// Truncate a dataset to at most `max` frames (whole leading sequences,
-/// then a partial one).
-fn cap_frames(ds: &Dataset, max: usize) -> Dataset {
+/// then a partial one). Shared with the fleet engine so its modeled
+/// shards see the same frame set as a live run.
+pub fn cap_frames(ds: &Dataset, max: usize) -> Dataset {
     let mut out = Dataset { profile: ds.profile, sequences: Vec::new() };
     let mut left = max;
     for s in &ds.sequences {
@@ -148,6 +153,10 @@ pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
     let session = Session::open_default()?;
     let pool = Pool::open_default(sim.decode_workers)?;
     let mut net = NetSim::new(sim.bandwidth, crate::net::DEFAULT_LATENCY);
+    // Byte queries are aggregate-backed; the per-transfer log is only a
+    // debugging aid, so bound it (large --receivers sweeps otherwise log
+    // one entry per record per receiver).
+    net.cap_log(100_000);
     let mut rng = Pcg32::seeded(sim.seed ^ 0x51);
 
     // --- Data ----------------------------------------------------------
@@ -182,6 +191,7 @@ pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
     let receivers: Vec<NodeId> = (1..=sim.n_receivers).map(NodeId::Edge).collect();
     let source = NodeId::Edge(0);
 
+    let mut upload_sizes: Vec<u64> = Vec::new();
     let (records, fog_encode_seconds, payload_bytes, avg_frame_bytes) = match sim.method {
         Method::Jpeg { quality } => {
             // Serverless: source → receivers directly.
@@ -192,19 +202,22 @@ pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
                     net.send(source, r, bytes, "jpeg-direct");
                 }
             }
-            { let afb = comp.avg_frame_bytes(); (comp.records, comp.encode_seconds, comp.payload_bytes, afb) }
+            let afb = comp.avg_frame_bytes();
+            (comp.records, comp.encode_seconds, comp.payload_bytes, afb)
         }
         m => {
             // Upload JPEG to the fog, compress there, broadcast INR.
             for (_, _, frame, _) in fine_ds.iter_frames() {
                 let up = crate::codec::jpeg::encode(frame, sim.upload_quality);
+                upload_sizes.push(up.len() as u64);
                 net.send(source, NodeId::Fog, up.len() as u64, "jpeg-upload");
             }
             let comp = fog.compress(&fine_ds, m)?;
             for rec in &comp.records {
                 net.broadcast(NodeId::Fog, &receivers, rec.payload_size() as u64, "inr-broadcast");
             }
-            { let afb = comp.avg_frame_bytes(); (comp.records, comp.encode_seconds, comp.payload_bytes, afb) }
+            let afb = comp.avg_frame_bytes();
+            (comp.records, comp.encode_seconds, comp.payload_bytes, afb)
         }
     };
     // Labels (bboxes) for every method.
@@ -225,6 +238,30 @@ pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
     // what it *receives* (the fog→edge INR broadcast or the JPEG stream),
     // not the whole network's airtime (that is Fig 8's metric).
     let transmission_seconds = net.seconds_to(NodeId::Edge(1));
+
+    // --- Fleet-engine adaptation (single-fog scenario) ------------------
+    // The measured record stream rides the discrete-event engine too:
+    // byte totals must match the serialized NetSim accounting exactly,
+    // while the engine reports a contention-aware overlapped makespan.
+    let fleet_cfg = crate::fleet::FleetConfig::for_measured(
+        sim.method,
+        sim.n_receivers,
+        sim.bandwidth,
+        sim.epochs,
+    );
+    let shard = crate::fleet::ShardTraffic::from_records(
+        sim.method,
+        n_frames,
+        upload_sizes,
+        &records,
+        &sim.enc,
+    );
+    let fleet_report = crate::fleet::simulate(&fleet_cfg, vec![shard]);
+    debug_assert_eq!(
+        fleet_report.total_bytes,
+        net.total_bytes(),
+        "fleet engine vs NetSim byte parity"
+    );
 
     // --- Ingest on receiver 0 -------------------------------------------
     let store = ingest(cfg, sim.profile, &records)?;
@@ -290,6 +327,7 @@ pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
         decode_seconds,
         train_seconds,
         fog_encode_seconds,
+        fleet_makespan_seconds: fleet_report.makespan_seconds,
         payload_bytes,
         avg_frame_bytes,
         device_memory_bytes: store.memory_bytes,

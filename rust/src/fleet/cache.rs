@@ -1,0 +1,212 @@
+//! Content-addressed INR weight cache (per fog node).
+//!
+//! Weight blobs are keyed by a 64-bit FNV-1a hash of the packed
+//! [`crate::inr::Record`] bytes, so identical payloads — the same blob
+//! delivered to many receivers behind one fog, a re-broadcast, or two
+//! encodes that converge to identical quantized weights — are fetched
+//! over the backhaul once and served locally afterwards. The cache is an
+//! LRU bounded by bytes; hit/miss/bytes-saved counters feed the fleet
+//! report.
+
+use std::collections::HashMap;
+
+/// FNV-1a 64-bit content hash of a packed weight blob.
+pub fn blob_hash(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Counters accumulated over a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Backhaul bytes avoided by serving lookups from the cache.
+    pub bytes_saved: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    bytes: u64,
+    last_use: u64,
+}
+
+/// Byte-bounded LRU of content-addressed weight blobs.
+#[derive(Debug)]
+pub struct WeightCache {
+    capacity_bytes: u64,
+    used_bytes: u64,
+    clock: u64,
+    entries: HashMap<u64, Entry>,
+    pub stats: CacheStats,
+}
+
+impl WeightCache {
+    /// `capacity_bytes = u64::MAX` is effectively unbounded;
+    /// `capacity_bytes = 0` disables caching (every lookup misses).
+    pub fn new(capacity_bytes: u64) -> WeightCache {
+        WeightCache {
+            capacity_bytes,
+            used_bytes: 0,
+            clock: 0,
+            entries: HashMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Consult the cache before fetching a `bytes`-sized blob. A hit
+    /// refreshes recency and credits `bytes_saved`.
+    pub fn lookup(&mut self, hash: u64, bytes: u64) -> bool {
+        self.clock += 1;
+        if let Some(e) = self.entries.get_mut(&hash) {
+            e.last_use = self.clock;
+            self.stats.hits += 1;
+            self.stats.bytes_saved += bytes;
+            true
+        } else {
+            self.stats.misses += 1;
+            false
+        }
+    }
+
+    /// Insert a blob just fetched (or locally encoded), evicting LRU
+    /// entries if over capacity. Blobs larger than the whole cache are
+    /// not stored.
+    pub fn insert(&mut self, hash: u64, bytes: u64) {
+        if bytes > self.capacity_bytes {
+            return;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(e) = self.entries.get_mut(&hash) {
+            e.last_use = clock;
+            return;
+        }
+        self.entries.insert(hash, Entry { bytes, last_use: clock });
+        self.used_bytes += bytes;
+        self.stats.insertions += 1;
+        while self.used_bytes > self.capacity_bytes {
+            // O(n) LRU scan: eviction is rare relative to lookups and the
+            // entry count at fleet scale stays in the thousands.
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(h, _)| **h != hash)
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(h, e)| (*h, e.bytes));
+            match victim {
+                Some((h, b)) => {
+                    self.entries.remove(&h);
+                    self.used_bytes -= b;
+                    self.stats.evictions += 1;
+                }
+                None => break, // only the just-inserted blob remains
+            }
+        }
+    }
+
+    pub fn contains(&self, hash: u64) -> bool {
+        self.entries.contains_key(&hash)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_is_content_addressed() {
+        assert_eq!(blob_hash(b"abc"), blob_hash(b"abc"));
+        assert_ne!(blob_hash(b"abc"), blob_hash(b"abd"));
+        assert_ne!(blob_hash(b""), blob_hash(b"\0"));
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        // The satellite requirement: cache hit accounting is exact.
+        let mut c = WeightCache::new(u64::MAX);
+        let h = blob_hash(b"blob-1");
+        assert!(!c.lookup(h, 1000)); // cold miss
+        c.insert(h, 1000);
+        assert!(c.lookup(h, 1000));
+        assert!(c.lookup(h, 1000));
+        assert_eq!(c.stats.hits, 2);
+        assert_eq!(c.stats.misses, 1);
+        assert_eq!(c.stats.bytes_saved, 2000);
+        assert!((c.stats.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = WeightCache::new(3000);
+        let (a, b, d) = (blob_hash(b"a"), blob_hash(b"b"), blob_hash(b"d"));
+        c.insert(a, 1500);
+        c.insert(b, 1500);
+        assert!(c.lookup(a, 1500)); // refresh a: b becomes LRU
+        c.insert(d, 1500); // over capacity -> evict b
+        assert!(c.contains(a));
+        assert!(!c.contains(b));
+        assert!(c.contains(d));
+        assert_eq!(c.stats.evictions, 1);
+        assert!(c.used_bytes() <= 3000);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let mut c = WeightCache::new(0);
+        let h = blob_hash(b"x");
+        c.insert(h, 10);
+        assert!(!c.contains(h));
+        assert!(!c.lookup(h, 10));
+        assert_eq!(c.stats.misses, 1);
+        assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_double_count() {
+        let mut c = WeightCache::new(u64::MAX);
+        let h = blob_hash(b"y");
+        c.insert(h, 500);
+        c.insert(h, 500);
+        assert_eq!(c.stats.insertions, 1);
+        assert_eq!(c.used_bytes(), 500);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn oversized_blob_never_cached() {
+        let mut c = WeightCache::new(100);
+        let h = blob_hash(b"big");
+        c.insert(h, 1000);
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,141 @@
+//! Contention-aware shared-medium channel.
+//!
+//! The legacy [`crate::net::NetSim`] charges every transfer the same
+//! `latency + bytes/bandwidth` and serializes the whole fleet on one
+//! implicit medium. Here each wireless cell (and each fog's backhaul
+//! link) is its own [`Channel`]: transfers submitted to a channel queue
+//! FIFO behind its `busy_until` horizon, so traffic within a cell
+//! contends while different cells overlap in time — the timeline overlap
+//! the single-fog simulator cannot express.
+
+use std::collections::BTreeMap;
+
+/// One FIFO shared medium (a wireless cell or a point-to-point backhaul).
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub bandwidth: f64,
+    pub latency: f64,
+    busy_until: f64,
+    bytes_total: u64,
+    airtime_total: f64,
+    transfers: u64,
+    by_tag: BTreeMap<&'static str, u64>,
+}
+
+impl Channel {
+    pub fn new(bandwidth: f64, latency: f64) -> Channel {
+        assert!(bandwidth > 0.0, "channel bandwidth must be positive");
+        Channel {
+            bandwidth,
+            latency,
+            busy_until: 0.0,
+            bytes_total: 0,
+            airtime_total: 0.0,
+            transfers: 0,
+            by_tag: BTreeMap::new(),
+        }
+    }
+
+    /// Airtime of one transfer in isolation (no queueing).
+    pub fn airtime(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Submit a transfer at virtual time `now`; it starts when the medium
+    /// frees up (FIFO) and the completion time is returned.
+    pub fn transmit(&mut self, now: f64, bytes: u64, tag: &'static str) -> f64 {
+        let start = if self.busy_until > now { self.busy_until } else { now };
+        let finish = start + self.airtime(bytes);
+        self.busy_until = finish;
+        self.bytes_total += bytes;
+        self.airtime_total += self.airtime(bytes);
+        self.transfers += 1;
+        *self.by_tag.entry(tag).or_insert(0) += bytes;
+        finish
+    }
+
+    /// Time at which the medium next becomes idle.
+    pub fn busy_until(&self) -> f64 {
+        self.busy_until
+    }
+
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_total
+    }
+
+    pub fn airtime_total(&self) -> f64 {
+        self.airtime_total
+    }
+
+    pub fn transfers(&self) -> u64 {
+        self.transfers
+    }
+
+    pub fn bytes_tagged(&self, tag: &str) -> u64 {
+        self.by_tag.get(tag).copied().unwrap_or(0)
+    }
+
+    /// Fraction of `[0, horizon]` the medium spent transmitting.
+    pub fn utilization(&self, horizon: f64) -> f64 {
+        if horizon <= 0.0 {
+            0.0
+        } else {
+            (self.airtime_total / horizon).min(1.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfers_serialize_under_contention() {
+        let mut c = Channel::new(1_000_000.0, 0.0);
+        // Two 1 MB transfers both submitted at t = 0: FIFO back-to-back.
+        let f1 = c.transmit(0.0, 1_000_000, "a");
+        let f2 = c.transmit(0.0, 1_000_000, "a");
+        assert!((f1 - 1.0).abs() < 1e-12);
+        assert!((f2 - 2.0).abs() < 1e-12);
+        assert_eq!(c.bytes_total(), 2_000_000);
+    }
+
+    #[test]
+    fn idle_gaps_do_not_accumulate() {
+        let mut c = Channel::new(1_000_000.0, 0.0);
+        c.transmit(0.0, 500_000, "a"); // busy until 0.5
+        let f = c.transmit(10.0, 500_000, "a"); // medium long idle
+        assert!((f - 10.5).abs() < 1e-12);
+        assert!((c.airtime_total() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_charged_per_message() {
+        let mut c = Channel::new(2e6, 1e-3);
+        let f1 = c.transmit(0.0, 2_000_000, "x");
+        assert!((f1 - 1.001).abs() < 1e-9);
+        let f2 = c.transmit(0.0, 0, "x");
+        assert!((f2 - 1.002).abs() < 1e-9);
+        assert_eq!(c.transfers(), 2);
+    }
+
+    #[test]
+    fn tag_accounting() {
+        let mut c = Channel::new(1e6, 0.0);
+        c.transmit(0.0, 100, "jpeg-upload");
+        c.transmit(0.0, 40, "inr-broadcast");
+        c.transmit(0.0, 60, "jpeg-upload");
+        assert_eq!(c.bytes_tagged("jpeg-upload"), 160);
+        assert_eq!(c.bytes_tagged("inr-broadcast"), 40);
+        assert_eq!(c.bytes_tagged("nope"), 0);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let mut c = Channel::new(1e6, 0.0);
+        c.transmit(0.0, 1_000_000, "a");
+        assert!((c.utilization(2.0) - 0.5).abs() < 1e-12);
+        assert_eq!(c.utilization(0.0), 0.0);
+        assert!(c.utilization(0.5) <= 1.0);
+    }
+}

@@ -1,0 +1,493 @@
+//! The discrete-event fleet engine.
+//!
+//! Replaces the serialized `NetSim::send` accounting of
+//! `coordinator::sim` with a true timeline: JPEG uploads, fog-side INR
+//! encoding (K workers per fog), weight broadcasts, backhaul transfers
+//! and on-device fine-tuning all overlap on their own resources, while
+//! traffic sharing one medium contends FIFO. Single-fog runs reproduce
+//! the legacy byte totals transfer-for-transfer (the engine submits the
+//! exact record stream the live encoder would emit — see
+//! [`super::traffic`]); multi-fog runs add backhaul links and the per-fog
+//! content-addressed weight cache.
+//!
+//! Flow per blob: source uploads its frames → the blob's encode job
+//! queues on the origin fog's worker pool → on completion the blob is
+//! unicast to every local receiver over the cell channel and, in
+//! multi-fog scopes, pulled by remote fogs (mesh uplink or cloud relay,
+//! deduplicated by the weight cache) before their own cell broadcast.
+//! Label metadata ships once per shard after its last encode. A receiver
+//! that has everything fine-tunes for `epochs × frames × cost` seconds.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::config::ArchConfig;
+use crate::coordinator::Method;
+use crate::data::generate_dataset;
+
+use super::cache::WeightCache;
+use super::channel::Channel;
+use super::events::{Event, EventQueue};
+use super::report::{FleetReport, FogReport};
+use super::scenario::{FleetConfig, Topology};
+use super::traffic::{model_shard, ShardTraffic};
+use super::workers::WorkerPool;
+
+/// Frame/sequence-id space reserved per shard; with the `MAX_FOGS`
+/// bound in [`FleetConfig::validate`] the bases stay within u32.
+pub(crate) const IDS_PER_SHARD: u32 = 1_000_000;
+
+/// Runtime state of one fog cell.
+struct FogRt {
+    cell: Channel,
+    uplink: Channel,
+    downlink: Channel,
+    pool: WorkerPool,
+    cache: WeightCache,
+    traffic: ShardTraffic,
+    n_receivers: usize,
+    /// Blobs of this shard not yet encoded.
+    remaining: usize,
+    /// Per-receiver delivery count / latest delivery / training finish.
+    received: Vec<usize>,
+    last_rx: Vec<f64>,
+    trained_at: Vec<f64>,
+    /// When a remote blob `(origin, blob)` became locally available.
+    avail_remote: HashMap<(usize, usize), f64>,
+}
+
+/// Generate per-fog datasets (the fine-tuning halves, mirroring
+/// `coordinator::sim`), model their traffic, and run the fleet.
+pub fn run(cfg: &ArchConfig, fc: &FleetConfig) -> Result<FleetReport> {
+    fc.validate()?;
+    let mut shards = Vec::with_capacity(fc.n_fogs);
+    for f in 0..fc.n_fogs {
+        let ds = generate_dataset(fc.profile, fc.seed.wrapping_add(f as u64), fc.n_sequences);
+        let (_pre, fine) = ds.split_half();
+        let fine = match fc.max_frames {
+            Some(m) => crate::coordinator::sim::cap_frames(&fine, m),
+            None => fine,
+        };
+        // Distinct id bases keep blobs content-distinct across shards
+        // (`validate()` bounds n_fogs so this cannot overflow u32).
+        let ids_base = f as u32 * IDS_PER_SHARD;
+        shards.push(model_shard(cfg, &fine, fc.method, &fc.enc, fc.upload_quality, ids_base));
+    }
+    Ok(simulate(fc, shards))
+}
+
+/// Run the engine over prebuilt shard traffic (one `ShardTraffic` per
+/// fog). This is the entry point `coordinator::sim` uses with *measured*
+/// records.
+pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
+    assert_eq!(shards.len(), fc.n_fogs, "one shard per fog");
+    let scope_all = fc.topology != Topology::SingleFog && fc.n_fogs > 1;
+    let n_fogs = fc.n_fogs;
+
+    let mut fogs: Vec<FogRt> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(f, t)| {
+            let nr = fc.receivers_of_fog(f);
+            let remaining = t.blobs.len();
+            FogRt {
+                cell: Channel::new(fc.bandwidth, fc.latency),
+                uplink: Channel::new(fc.backhaul_bandwidth, fc.latency),
+                downlink: Channel::new(fc.backhaul_bandwidth, fc.latency),
+                pool: WorkerPool::new(fc.encode_workers),
+                cache: WeightCache::new(fc.cache_bytes),
+                traffic: t,
+                n_receivers: nr,
+                remaining,
+                received: vec![0; nr],
+                last_rx: vec![0.0; nr],
+                trained_at: vec![0.0; nr],
+                avail_remote: HashMap::new(),
+            }
+        })
+        .collect();
+
+    let total_blobs: usize = fogs.iter().map(|f| f.traffic.blobs.len()).sum();
+    let total_frames: usize = fogs.iter().map(|f| f.traffic.n_frames).sum();
+
+    let mut q = EventQueue::new();
+    let mut cloud_up: HashMap<(usize, usize), f64> = HashMap::new();
+
+    // --- Seed the timeline: uploads + encode readiness -----------------
+    for f in 0..n_fogs {
+        if matches!(fogs[f].traffic.method, Method::Jpeg { .. }) {
+            // Serverless: no upload leg; the source compresses locally.
+            for b in 0..fogs[f].traffic.blobs.len() {
+                q.push(0.0, Event::EncodeReady { fog: f, blob: b });
+            }
+        } else {
+            let uploads = fogs[f].traffic.uploads.clone();
+            let mut finishes = Vec::with_capacity(uploads.len());
+            for u in uploads {
+                finishes.push(fogs[f].cell.transmit(0.0, u, "jpeg-upload"));
+            }
+            let ready: Vec<(usize, usize)> = fogs[f]
+                .traffic
+                .blobs
+                .iter()
+                .map(|b| (b.id, b.ready_after_frame))
+                .collect();
+            for (id, raf) in ready {
+                let t = if finishes.is_empty() {
+                    0.0
+                } else {
+                    finishes[raf.min(finishes.len() - 1)]
+                };
+                q.push(t, Event::EncodeReady { fog: f, blob: id });
+            }
+        }
+        if fogs[f].traffic.blobs.is_empty() {
+            // Empty shard: nothing encodes, but labels still ship.
+            let lb = fogs[f].traffic.label_bytes();
+            let label_id = fogs[f].traffic.blobs.len();
+            deliver(fc, &mut fogs, &mut q, &mut cloud_up, scope_all, 0.0, f, label_id, lb, 0,
+                "labels", false);
+        }
+    }
+
+    // --- Event loop ------------------------------------------------------
+    while let Some((now, ev)) = q.pop() {
+        match ev {
+            Event::EncodeReady { fog, blob } => {
+                let steps = fogs[fog].traffic.blobs[blob].encode_steps;
+                let cost = if steps == 0 {
+                    fc.jpeg_encode_seconds
+                } else {
+                    steps as f64 * fc.seconds_per_step
+                };
+                let (_start, finish) = fogs[fog].pool.schedule(now, cost);
+                q.push(finish, Event::EncodeDone { fog, blob });
+            }
+            Event::EncodeDone { fog, blob } => {
+                fogs[fog].remaining -= 1;
+                let (bytes, hash, tag) = {
+                    let b = &fogs[fog].traffic.blobs[blob];
+                    (b.bytes, b.hash, b.tag)
+                };
+                deliver(fc, &mut fogs, &mut q, &mut cloud_up, scope_all, now, fog, blob, bytes,
+                    hash, tag, true);
+                if fogs[fog].remaining == 0 {
+                    let lb = fogs[fog].traffic.label_bytes();
+                    let label_id = fogs[fog].traffic.blobs.len();
+                    deliver(fc, &mut fogs, &mut q, &mut cloud_up, scope_all, now, fog, label_id,
+                        lb, 0, "labels", false);
+                }
+            }
+            Event::Delivered { fog, edge, .. } => {
+                fogs[fog].received[edge] += 1;
+                if now > fogs[fog].last_rx[edge] {
+                    fogs[fog].last_rx[edge] = now;
+                }
+                let expected = if scope_all {
+                    total_blobs + n_fogs
+                } else {
+                    fogs[fog].traffic.blobs.len() + 1
+                };
+                if fogs[fog].received[edge] == expected {
+                    let frames = if scope_all {
+                        total_frames
+                    } else {
+                        fogs[fog].traffic.n_frames
+                    };
+                    let t = now
+                        + fc.epochs as f64 * frames as f64 * fc.train_seconds_per_frame;
+                    q.push(t, Event::TrainDone { fog, edge });
+                }
+            }
+            Event::TrainDone { fog, edge } => {
+                fogs[fog].trained_at[edge] = now;
+            }
+        }
+    }
+    let makespan = q.now();
+
+    // --- Aggregate the report -------------------------------------------
+    let mut report = FleetReport {
+        scenario: fc.scenario.clone(),
+        topology: fc.topology.name(),
+        method: fc.method.name().to_string(),
+        n_fogs,
+        n_edges: fc.n_edges,
+        n_receivers: (0..n_fogs).map(|f| fc.receivers_of_fog(f)).sum(),
+        n_frames: total_frames,
+        n_blobs: total_blobs,
+        upload_bytes: 0,
+        broadcast_bytes: 0,
+        label_bytes: 0,
+        backhaul_bytes: 0,
+        total_bytes: 0,
+        makespan_seconds: makespan,
+        encode_busy_seconds: 0.0,
+        max_queue_depth: 0,
+        cache: Default::default(),
+        events: q.processed(),
+        fogs: Vec::with_capacity(n_fogs),
+    };
+    for (f, rt) in fogs.iter().enumerate() {
+        let backhaul = rt.uplink.bytes_total() + rt.downlink.bytes_total();
+        report.upload_bytes += rt.cell.bytes_tagged("jpeg-upload");
+        report.broadcast_bytes +=
+            rt.cell.bytes_tagged("inr-broadcast") + rt.cell.bytes_tagged("jpeg-direct");
+        report.label_bytes += rt.cell.bytes_tagged("labels");
+        report.backhaul_bytes += backhaul;
+        report.encode_busy_seconds += rt.pool.busy_seconds;
+        report.max_queue_depth = report.max_queue_depth.max(rt.pool.max_queue_depth);
+        report.cache.hits += rt.cache.stats.hits;
+        report.cache.misses += rt.cache.stats.misses;
+        report.cache.insertions += rt.cache.stats.insertions;
+        report.cache.evictions += rt.cache.stats.evictions;
+        report.cache.bytes_saved += rt.cache.stats.bytes_saved;
+        report.fogs.push(FogReport {
+            fog: f,
+            edges: fc.edges_of_fog(f),
+            receivers: rt.n_receivers,
+            shard_frames: rt.traffic.n_frames,
+            blobs: rt.traffic.blobs.len(),
+            encode_busy_seconds: rt.pool.busy_seconds,
+            encode_wait_seconds: rt.pool.wait_seconds,
+            max_queue_depth: rt.pool.max_queue_depth,
+            cell_bytes: rt.cell.bytes_total(),
+            cell_utilization: rt.cell.utilization(makespan),
+            backhaul_bytes: backhaul,
+            cache: rt.cache.stats,
+            cache_blobs: rt.cache.len(),
+            cache_used_bytes: rt.cache.used_bytes(),
+            last_delivery: rt.last_rx.iter().copied().fold(0.0, f64::max),
+            trained_at: rt.trained_at.iter().copied().fold(0.0, f64::max),
+        });
+    }
+    report.total_bytes = report.upload_bytes
+        + report.broadcast_bytes
+        + report.label_bytes
+        + report.backhaul_bytes;
+    report
+}
+
+/// Ship one blob (or the label pseudo-blob) to every receiver in scope.
+/// Local receivers get a cell unicast; remote cells first materialize
+/// the blob at their fog (weight cache → backhaul fetch on miss).
+///
+/// Deliberate semantics: a remote fog that cannot cache a blob (cache
+/// disabled via `cache_bytes = 0`, blob larger than the cache, or
+/// evicted) re-fetches it for every further receiver — without a store
+/// the fog cannot retain what it relays. That per-receiver backhaul is
+/// exactly the baseline `CacheStats::bytes_saved` measures against.
+/// Labels are control metadata held outside the weight cache, so their
+/// availability is tracked unconditionally in `avail_remote`.
+#[allow(clippy::too_many_arguments)]
+fn deliver(
+    fc: &FleetConfig,
+    fogs: &mut [FogRt],
+    q: &mut EventQueue,
+    cloud_up: &mut HashMap<(usize, usize), f64>,
+    scope_all: bool,
+    now: f64,
+    origin: usize,
+    blob: usize,
+    bytes: u64,
+    hash: u64,
+    tag: &'static str,
+    cacheable: bool,
+) {
+    for r in 0..fogs[origin].n_receivers {
+        let finish = fogs[origin].cell.transmit(now, bytes, tag);
+        q.push(finish, Event::Delivered { fog: origin, edge: r, origin, blob });
+    }
+    if !scope_all {
+        return;
+    }
+    let key = (origin, blob);
+    for g in (0..fogs.len()).filter(|&g| g != origin) {
+        for r in 0..fogs[g].n_receivers {
+            let avail = if cacheable && fogs[g].cache.lookup(hash, bytes) {
+                fogs[g].avail_remote.get(&key).copied().unwrap_or(now)
+            } else if !cacheable && fogs[g].avail_remote.contains_key(&key) {
+                fogs[g].avail_remote[&key]
+            } else {
+                let a = fetch(fc, fogs, cloud_up, origin, g, now, blob, bytes);
+                if cacheable {
+                    fogs[g].cache.insert(hash, bytes);
+                }
+                fogs[g].avail_remote.insert(key, a);
+                a
+            };
+            let start = if avail > now { avail } else { now };
+            let finish = fogs[g].cell.transmit(start, bytes, tag);
+            q.push(finish, Event::Delivered { fog: g, edge: r, origin, blob });
+        }
+    }
+}
+
+/// Move a blob from its origin fog to `dst` over the backhaul.
+fn fetch(
+    fc: &FleetConfig,
+    fogs: &mut [FogRt],
+    cloud_up: &mut HashMap<(usize, usize), f64>,
+    origin: usize,
+    dst: usize,
+    now: f64,
+    blob: usize,
+    bytes: u64,
+) -> f64 {
+    match fc.topology {
+        Topology::SingleFog => now,
+        // Mesh: a point-to-point copy out of the origin fog's uplink.
+        Topology::Sharded => fogs[origin].uplink.transmit(now, bytes, "backhaul"),
+        // Cloud relay: one uplink per blob (memoized), then the consuming
+        // fog's downlink.
+        Topology::Hierarchical => {
+            let up_done = match cloud_up.get(&(origin, blob)) {
+                Some(&t) => t,
+                None => {
+                    let t = fogs[origin].uplink.transmit(now, bytes, "backhaul");
+                    cloud_up.insert((origin, blob), t);
+                    t
+                }
+            };
+            let start = if up_done > now { up_done } else { now };
+            fogs[dst].downlink.transmit(start, bytes, "backhaul")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EncoderConfig;
+    use crate::coordinator::Method;
+    use crate::fleet::traffic::blob_from_record;
+    use crate::inr::Record;
+
+    /// Hand-rolled two-blob shard: engine arithmetic is checkable by hand.
+    fn tiny_shard(method: Method, uploads: Vec<u64>, sizes: &[u64]) -> ShardTraffic {
+        let enc = EncoderConfig::fast();
+        let blobs = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| {
+                let rec = Record::Jpeg { frame_id: i as u32, bytes: vec![i as u8 + 1; s as usize] };
+                let mut b = blob_from_record(i, &rec, &enc, i);
+                if !matches!(method, Method::Jpeg { .. }) {
+                    b.tag = "inr-broadcast";
+                    b.encode_steps = 100;
+                }
+                b
+            })
+            .collect();
+        ShardTraffic { method, n_frames: sizes.len(), uploads, blobs }
+    }
+
+    fn base_fc(method: Method, edges: usize) -> FleetConfig {
+        let mut fc = FleetConfig::paper_10(method);
+        fc.n_edges = edges;
+        fc.bandwidth = 1e6;
+        fc.latency = 0.0;
+        fc.backhaul_bandwidth = 1e7;
+        fc.seconds_per_step = 1e-3;
+        fc.jpeg_encode_seconds = 1e-3;
+        fc.epochs = 1;
+        fc.train_seconds_per_frame = 1e-3;
+        fc
+    }
+
+    #[test]
+    fn single_fog_bytes_add_up() {
+        let m = Method::RapidSingle;
+        let fc = base_fc(m, 4); // 1 source + 3 receivers
+        let shard = tiny_shard(m, vec![1000, 2000], &[300, 500]);
+        let r = simulate(&fc, vec![shard]);
+        assert_eq!(r.upload_bytes, 3000);
+        assert_eq!(r.broadcast_bytes, 3 * 800);
+        assert_eq!(r.label_bytes, 3 * 2 * 8);
+        assert_eq!(r.backhaul_bytes, 0);
+        assert_eq!(r.total_bytes, 3000 + 2400 + 48);
+        assert!(r.makespan_seconds > 0.0);
+        // 2 encode-ready + 2 done + (2 blobs + labels) × 3 receivers
+        // delivered + 3 train-done.
+        assert_eq!(r.events, 2 + 2 + 9 + 3);
+        assert_eq!(r.cache.hits + r.cache.misses, 0);
+    }
+
+    #[test]
+    fn encoding_overlaps_across_fog_cells() {
+        // Two fogs, disjoint scope-all=false impossible for sharded; use
+        // the makespan instead: two cells with identical load finish at
+        // the same virtual time as one cell with the same shard, because
+        // their channels and pools are independent resources.
+        let m = Method::RapidSingle;
+        let mut fc1 = base_fc(m, 4);
+        fc1.topology = Topology::SingleFog;
+        let r1 = simulate(&fc1, vec![tiny_shard(m, vec![1000], &[400])]);
+
+        let mut fc2 = base_fc(m, 8);
+        fc2.topology = Topology::Sharded;
+        fc2.n_fogs = 2;
+        fc2.cache_bytes = 0; // isolate: no caching effects on bytes
+        let r2 = simulate(
+            &fc2,
+            vec![tiny_shard(m, vec![1000], &[400]), tiny_shard(m, vec![1000], &[400])],
+        );
+        // Cross-cell traffic makes fog 2 runs longer than single, but far
+        // less than 2× (cells overlap in time).
+        assert!(r2.makespan_seconds < 2.0 * r1.makespan_seconds);
+        assert!(r2.backhaul_bytes > 0);
+    }
+
+    #[test]
+    fn remote_fogs_dedup_backhaul_through_cache() {
+        let m = Method::RapidSingle;
+        let mut fc = base_fc(m, 12); // 2 fogs × (1 source + 5 receivers)
+        fc.topology = Topology::Sharded;
+        fc.n_fogs = 2;
+        let shard_a = tiny_shard(m, vec![1000], &[400]);
+        let shard_b = tiny_shard(m, vec![1000], &[600]);
+        let r = simulate(&fc, vec![shard_a, shard_b]);
+        // Each blob crosses the mesh once; 5 local receivers each → 4
+        // cache hits per blob per remote fog. Labels (8 B per shard)
+        // cross once in each direction.
+        assert_eq!(r.backhaul_bytes, 400 + 600 + 8 + 8);
+        assert_eq!(r.cache.misses, 2);
+        assert_eq!(r.cache.hits, 2 * 4);
+        assert_eq!(r.cache.bytes_saved, 4 * 400 + 4 * 600);
+        assert!(r.cache_hit_rate() > 0.7);
+    }
+
+    #[test]
+    fn hierarchical_uplinks_once_per_blob() {
+        let m = Method::RapidSingle;
+        let mut fc = base_fc(m, 9); // 3 fogs × (1 source + 2 receivers)
+        fc.topology = Topology::Hierarchical;
+        fc.n_fogs = 3;
+        let shards = vec![
+            tiny_shard(m, vec![500], &[400]),
+            tiny_shard(m, vec![500], &[0; 0]),
+            tiny_shard(m, vec![500], &[0; 0]),
+        ];
+        let r = simulate(&fc, shards);
+        // Fog 0's single blob: 1 uplink (400) + 2 downlinks (2×400);
+        // labels: each fog uplinks its label once, consumers downlink.
+        let blob_backhaul = 400 + 2 * 400;
+        let label_backhaul = 3 * 8 /* label bytes, only fog0 has frames */;
+        // Only fog 0 has frames → label bytes 8; fogs 1/2 labels are 0 B
+        // but still traverse (latency-only messages).
+        assert_eq!(r.backhaul_bytes as i64, (blob_backhaul + label_backhaul) as i64);
+        assert_eq!(r.cache.misses, 2); // fog1 + fog2 first lookups
+        assert_eq!(r.cache.hits, 2); // second receiver on each remote fog
+    }
+
+    #[test]
+    fn empty_shard_still_ships_labels() {
+        let m = Method::RapidSingle;
+        let fc = base_fc(m, 3);
+        let shard = ShardTraffic { method: m, n_frames: 0, uploads: vec![], blobs: vec![] };
+        let r = simulate(&fc, vec![shard]);
+        assert_eq!(r.total_bytes, 0); // 0-byte labels, latency only
+        assert_eq!(r.events, 2 + 2); // labels to 2 receivers + 2 train-done
+    }
+}

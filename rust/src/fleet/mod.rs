@@ -1,0 +1,44 @@
+//! `fleet` — discrete-event multi-fog scale-out simulator.
+//!
+//! The paper's testbed is one fog node and ten edge devices; the legacy
+//! [`crate::net::NetSim`] + [`crate::coordinator::sim`] pair reproduces
+//! it by *serializing* every transfer on one implicit medium. This
+//! subsystem scales the communication story to many fog cells and
+//! hundreds–thousands of edge devices with a proper simulation engine:
+//!
+//! * [`events`] — virtual-time event queue (typed events, FIFO ties);
+//! * [`channel`] — contention-aware FIFO channels (one per wireless
+//!   cell, plus per-fog backhaul links), so cells overlap in time;
+//! * [`workers`] — per-fog encode worker pools: K concurrent INR encode
+//!   jobs drain a queue instead of running inline;
+//! * [`cache`] — per-fog content-addressed INR weight cache keyed by a
+//!   hash of the packed [`crate::inr::Record`] bytes, deduplicating
+//!   backhaul fetches across receivers and re-broadcasts;
+//! * [`traffic`] — the session-free size/cost model: zero-weight packed
+//!   records whose byte sizes match the live encoder record-for-record;
+//! * [`scenario`] — `paper-10` / `sharded` / `hierarchical` topologies;
+//! * [`engine`] — the event loop tying it together;
+//! * [`report`] — per-fog and fleet-wide reports.
+//!
+//! Single-fog runs reproduce the legacy byte totals exactly (enforced by
+//! `tests/integration_fleet.rs` against both `NetSim` replay and the §4
+//! [`crate::commmodel`] predictions); multi-fog runs add what the legacy
+//! path cannot express: timeline overlap, queueing, and cache dedup.
+
+pub mod cache;
+pub mod channel;
+pub mod engine;
+pub mod events;
+pub mod report;
+pub mod scenario;
+pub mod traffic;
+pub mod workers;
+
+pub use cache::{blob_hash, CacheStats, WeightCache};
+pub use channel::Channel;
+pub use engine::{run, simulate};
+pub use events::{Event, EventQueue};
+pub use report::{FleetReport, FogReport};
+pub use scenario::{FleetConfig, Topology};
+pub use traffic::{model_shard, Blob, ShardTraffic};
+pub use workers::WorkerPool;

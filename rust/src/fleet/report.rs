@@ -1,0 +1,114 @@
+//! Fleet run reports: per-fog and fleet-wide byte/time/cache accounting.
+
+use crate::bench_support::Table;
+use crate::util::fmt_bytes;
+
+use super::cache::CacheStats;
+
+/// One fog cell's view of the run.
+#[derive(Debug, Clone)]
+pub struct FogReport {
+    pub fog: usize,
+    pub edges: usize,
+    pub receivers: usize,
+    pub shard_frames: usize,
+    pub blobs: usize,
+    /// Worker-seconds of encode work and total queue wait.
+    pub encode_busy_seconds: f64,
+    pub encode_wait_seconds: f64,
+    pub max_queue_depth: usize,
+    pub cell_bytes: u64,
+    pub cell_utilization: f64,
+    pub backhaul_bytes: u64,
+    pub cache: CacheStats,
+    pub cache_blobs: usize,
+    pub cache_used_bytes: u64,
+    /// Last over-the-air delivery into this cell.
+    pub last_delivery: f64,
+    /// Last receiver in this cell to finish fine-tuning.
+    pub trained_at: f64,
+}
+
+/// Fleet-wide results (the `residual-inr fleet` output).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub scenario: String,
+    pub topology: &'static str,
+    pub method: String,
+    pub n_fogs: usize,
+    pub n_edges: usize,
+    pub n_receivers: usize,
+    pub n_frames: usize,
+    pub n_blobs: usize,
+    // Byte accounting across all wireless cells + backhaul links.
+    pub upload_bytes: u64,
+    pub broadcast_bytes: u64,
+    pub label_bytes: u64,
+    pub backhaul_bytes: u64,
+    pub total_bytes: u64,
+    // Timeline.
+    pub makespan_seconds: f64,
+    pub encode_busy_seconds: f64,
+    pub max_queue_depth: usize,
+    pub cache: CacheStats,
+    pub events: u64,
+    pub fogs: Vec<FogReport>,
+}
+
+impl FleetReport {
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache.hit_rate()
+    }
+
+    /// Bytes that crossed a wireless cell (upload + broadcast + labels).
+    pub fn cell_bytes(&self) -> u64 {
+        self.upload_bytes + self.broadcast_bytes + self.label_bytes
+    }
+
+    pub fn print(&self) {
+        println!(
+            "# fleet scenario={} topology={} method={} fogs={} edges={} receivers={}",
+            self.scenario, self.topology, self.method, self.n_fogs, self.n_edges,
+            self.n_receivers
+        );
+        println!("frames / blobs           : {} / {}", self.n_frames, self.n_blobs);
+        println!("upload bytes             : {}", fmt_bytes(self.upload_bytes));
+        println!("broadcast bytes          : {}", fmt_bytes(self.broadcast_bytes));
+        println!("label bytes              : {}", fmt_bytes(self.label_bytes));
+        println!("backhaul bytes           : {}", fmt_bytes(self.backhaul_bytes));
+        println!("total network bytes      : {}", fmt_bytes(self.total_bytes));
+        println!("makespan                 : {:.2} s", self.makespan_seconds);
+        println!("fog encode work          : {:.2} worker-s", self.encode_busy_seconds);
+        println!("max encode queue depth   : {}", self.max_queue_depth);
+        println!(
+            "weight cache             : {} hits / {} misses ({:.1}% hit rate), {} saved",
+            self.cache.hits,
+            self.cache.misses,
+            100.0 * self.cache.hit_rate(),
+            fmt_bytes(self.cache.bytes_saved)
+        );
+        println!("events processed         : {}", self.events);
+        if self.fogs.len() > 1 {
+            let mut t = Table::new(&[
+                "fog", "edges", "frames", "blobs", "queue", "cell", "util", "backhaul",
+                "cache hit%", "saved", "done (s)",
+            ]);
+            for f in &self.fogs {
+                t.row(&[
+                    f.fog.to_string(),
+                    f.edges.to_string(),
+                    f.shard_frames.to_string(),
+                    f.blobs.to_string(),
+                    f.max_queue_depth.to_string(),
+                    fmt_bytes(f.cell_bytes),
+                    format!("{:.0}%", 100.0 * f.cell_utilization),
+                    fmt_bytes(f.backhaul_bytes),
+                    format!("{:.1}", 100.0 * f.cache.hit_rate()),
+                    fmt_bytes(f.cache.bytes_saved),
+                    format!("{:.2}", f.trained_at),
+                ]);
+            }
+            t.print();
+        }
+    }
+}

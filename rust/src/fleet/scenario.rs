@@ -1,0 +1,248 @@
+//! Fleet scenario configuration.
+//!
+//! Three topologies, selectable from the `residual-inr fleet` CLI:
+//!
+//! * `paper-10` / `single` — the paper's §5.1 testbed: one fog node, ten
+//!   edge devices (one source + nine receivers) on one wireless cell.
+//!   Byte totals reproduce `coordinator::sim` / `NetSim` exactly.
+//! * `sharded` — F fog cells, each with its own source and shard of the
+//!   data; every receiver in the fleet fine-tunes on every shard, and
+//!   shards cross cells over per-fog mesh backhaul links (origin fog
+//!   uplink → destination fog cache → local cell broadcast).
+//! * `hierarchical` — cloud→fog→edge: the origin fog uplinks each blob
+//!   to the cloud once; destination fogs pull it over their downlink on
+//!   first local demand and serve the rest of their cell from the
+//!   content-addressed weight cache.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{EncoderConfig, Method};
+use crate::data::Profile;
+
+/// How fog cells share encoded blobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// One fog cell; no backhaul (the paper's testbed).
+    SingleFog,
+    /// Fog-to-fog mesh: origin uplink carries one copy per peer fog.
+    Sharded,
+    /// Cloud relay: one uplink per blob, one downlink per consuming fog.
+    Hierarchical,
+}
+
+impl Topology {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::SingleFog => "single-fog",
+            Topology::Sharded => "sharded",
+            Topology::Hierarchical => "hierarchical",
+        }
+    }
+}
+
+/// Per-fog backhaul bandwidth multiplier relative to the cell bandwidth
+/// (wired fog↔fog / fog↔cloud links are faster than the wireless cell).
+pub const BACKHAUL_FACTOR: f64 = 10.0;
+
+/// Full parameter set of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub topology: Topology,
+    pub scenario: String,
+    pub n_fogs: usize,
+    /// Total edge devices; each fog cell's first edge is its source, the
+    /// rest are receivers.
+    pub n_edges: usize,
+    pub method: Method,
+    pub profile: Profile,
+    pub seed: u64,
+    /// Sequences generated per fog shard (the shard is the fine-tuning
+    /// half, mirroring `SimConfig`).
+    pub n_sequences: usize,
+    pub max_frames: Option<usize>,
+    pub enc: EncoderConfig,
+    pub upload_quality: u8,
+    /// Wireless cell bandwidth (bytes/s) and per-message latency.
+    pub bandwidth: f64,
+    pub latency: f64,
+    /// Backhaul link bandwidth (bytes/s).
+    pub backhaul_bandwidth: f64,
+    /// Encode workers per fog.
+    pub encode_workers: usize,
+    /// Virtual cost of one Adam encode step at the fog.
+    pub seconds_per_step: f64,
+    /// Virtual cost of one JPEG encode on the source device.
+    pub jpeg_encode_seconds: f64,
+    /// Per-fog weight-cache capacity in bytes (0 disables).
+    pub cache_bytes: u64,
+    /// Fine-tuning epochs and per-frame decode+train cost on a receiver.
+    pub epochs: usize,
+    pub train_seconds_per_frame: f64,
+}
+
+impl FleetConfig {
+    /// The paper's single-fog 10-device testbed, parameterized by method.
+    /// Dataset knobs mirror [`crate::coordinator::SimConfig::small`] so
+    /// byte totals line up with `simulate` on the same seed/profile.
+    pub fn paper_10(method: Method) -> FleetConfig {
+        FleetConfig {
+            topology: Topology::SingleFog,
+            scenario: "paper-10".to_string(),
+            n_fogs: 1,
+            n_edges: 10,
+            method,
+            profile: Profile::DacSdc,
+            seed: 7,
+            n_sequences: 4,
+            max_frames: Some(24),
+            enc: EncoderConfig::fast(),
+            upload_quality: 95,
+            // SimConfig::small's area-scaled 2 MB/s (see its comment).
+            bandwidth: crate::net::DEFAULT_BANDWIDTH * (128.0 * 96.0) / 230_400.0,
+            latency: crate::net::DEFAULT_LATENCY,
+            backhaul_bandwidth: crate::net::DEFAULT_BANDWIDTH * (128.0 * 96.0) / 230_400.0
+                * BACKHAUL_FACTOR,
+            encode_workers: 4,
+            // ~0.6 s per Res-Rapid frame at the `fast` encoder profile —
+            // encoding, not the wireless cell, is the fog's bottleneck,
+            // which is what the worker pool exists to absorb.
+            seconds_per_step: 2e-3,
+            jpeg_encode_seconds: 2e-3,
+            cache_bytes: 64 << 20,
+            epochs: 2,
+            train_seconds_per_frame: 5e-3,
+        }
+    }
+
+    /// Resolve a scenario name to a config with that topology's default
+    /// fleet size (overridable via CLI flags).
+    pub fn from_scenario(name: &str, method: Method) -> Result<FleetConfig> {
+        let mut fc = FleetConfig::paper_10(method);
+        fc.scenario = name.to_string();
+        match name {
+            "paper-10" | "paper10" | "single" | "single-fog" => {}
+            "sharded" => {
+                fc.topology = Topology::Sharded;
+                fc.n_fogs = 4;
+                fc.n_edges = 200;
+            }
+            "hierarchical" | "cloud" => {
+                fc.topology = Topology::Hierarchical;
+                fc.n_fogs = 4;
+                fc.n_edges = 200;
+            }
+            _ => {
+                return Err(anyhow!(
+                    "unknown scenario {name} (paper-10|sharded|hierarchical)"
+                ))
+            }
+        }
+        Ok(fc)
+    }
+
+    /// Minimal single-fog config used when adapting a *measured*
+    /// `coordinator::sim` run onto the fleet engine: link parameters and
+    /// receiver count drive byte parity; `epochs` is a workload
+    /// parameter (unlike the virtual cost knobs) and must match the
+    /// live run so the modeled makespan describes the same fine-tune.
+    pub fn for_measured(
+        method: Method,
+        n_receivers: usize,
+        bandwidth: f64,
+        epochs: usize,
+    ) -> FleetConfig {
+        let mut fc = FleetConfig::paper_10(method);
+        fc.scenario = "measured-single-fog".to_string();
+        fc.n_edges = n_receivers + 1;
+        fc.bandwidth = bandwidth;
+        fc.epochs = epochs;
+        fc.encode_workers = 1; // the live encoder is serial
+        fc
+    }
+
+    /// Edges hosted by fog `f` (even split, remainder to the low fogs).
+    pub fn edges_of_fog(&self, f: usize) -> usize {
+        let base = self.n_edges / self.n_fogs;
+        let rem = self.n_edges % self.n_fogs;
+        base + usize::from(f < rem)
+    }
+
+    /// Receivers of fog `f` (its edges minus the one source device).
+    pub fn receivers_of_fog(&self, f: usize) -> usize {
+        self.edges_of_fog(f).saturating_sub(1)
+    }
+
+    /// Upper bound on fog count: keeps per-shard record-id bases
+    /// (`engine::IDS_PER_SHARD` apart) within the u32 id space so blobs
+    /// from different shards can never collide content-wise.
+    pub const MAX_FOGS: usize = 4096;
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_fogs == 0 {
+            return Err(anyhow!("fleet needs at least one fog"));
+        }
+        if self.n_fogs > Self::MAX_FOGS {
+            return Err(anyhow!(
+                "fleet supports at most {} fogs (record-id space), got {}",
+                Self::MAX_FOGS,
+                self.n_fogs
+            ));
+        }
+        if self.n_edges < self.n_fogs {
+            return Err(anyhow!(
+                "fleet needs one source edge per fog ({} edges < {} fogs)",
+                self.n_edges,
+                self.n_fogs
+            ));
+        }
+        if self.topology == Topology::SingleFog && self.n_fogs != 1 {
+            return Err(anyhow!("single-fog scenario requires --fogs 1"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_names_resolve() {
+        let m = Method::ResRapid { direct: false };
+        assert_eq!(
+            FleetConfig::from_scenario("paper-10", m).unwrap().topology,
+            Topology::SingleFog
+        );
+        assert_eq!(
+            FleetConfig::from_scenario("sharded", m).unwrap().topology,
+            Topology::Sharded
+        );
+        let h = FleetConfig::from_scenario("hierarchical", m).unwrap();
+        assert_eq!(h.topology, Topology::Hierarchical);
+        assert_eq!(h.n_fogs, 4);
+        assert!(FleetConfig::from_scenario("bogus", m).is_err());
+    }
+
+    #[test]
+    fn edge_distribution_covers_all_edges() {
+        let mut fc = FleetConfig::from_scenario("sharded", Method::RapidSingle).unwrap();
+        fc.n_fogs = 3;
+        fc.n_edges = 11;
+        let total: usize = (0..fc.n_fogs).map(|f| fc.edges_of_fog(f)).sum();
+        assert_eq!(total, 11);
+        assert_eq!(fc.edges_of_fog(0), 4);
+        assert_eq!(fc.edges_of_fog(2), 3);
+        assert_eq!(fc.receivers_of_fog(0), 3);
+        assert!(fc.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_fleets() {
+        let mut fc = FleetConfig::paper_10(Method::Nerv);
+        fc.n_fogs = 4; // single-fog topology with 4 fogs
+        assert!(fc.validate().is_err());
+        let mut fc = FleetConfig::from_scenario("sharded", Method::Nerv).unwrap();
+        fc.n_edges = 2; // fewer edges than fogs
+        assert!(fc.validate().is_err());
+    }
+}

@@ -25,7 +25,10 @@
 //! * [`runtime`] — PJRT artifact registry + executor
 //! * [`coordinator`] — fog node & edge devices (the paper's system)
 //! * [`pipeline`] — grouped parallel decoding (§3.2) + baseline loaders
-//! * [`net`] — simulated wireless network
+//! * [`net`] — simulated wireless network (single shared medium)
+//! * [`fleet`] — discrete-event multi-fog scale-out simulator: event
+//!   queue, contention-aware channels, encode worker pools, and a
+//!   content-addressed INR weight cache per fog
 //! * [`commmodel`] — §4 analytical communication model
 //! * [`training`] — on-device detection fine-tuning driver
 //! * [`metrics`] — PSNR / entropy / mAP / stats
@@ -37,6 +40,7 @@ pub mod commmodel;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fleet;
 pub mod inr;
 pub mod metrics;
 pub mod net;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //! * `simulate`  — run the end-to-end fog on-device-learning experiment
+//! * `fleet`     — discrete-event multi-fog scale-out simulation
 //! * `compress`  — compress a synthetic dataset, report size/PSNR
 //! * `commmodel` — evaluate the §4 analytical communication model
 //! * `info`      — artifact/config inventory
@@ -9,6 +10,8 @@
 //! Examples:
 //! ```text
 //! residual-inr simulate --method res-rapid --profile uav123 --epochs 2
+//! residual-inr fleet --scenario paper-10 --method res-rapid
+//! residual-inr fleet --scenario sharded --fogs 4 --edges 200
 //! residual-inr compress --method jpeg --quality 60
 //! residual-inr commmodel --devices 10 --alpha 0.15
 //! ```
@@ -18,6 +21,7 @@ use anyhow::{anyhow, Result};
 use residual_inr::config::ArchConfig;
 use residual_inr::coordinator::{run_sim, EncoderConfig, Method, SimConfig};
 use residual_inr::data::Profile;
+use residual_inr::fleet::FleetConfig;
 use residual_inr::util::cli::Args;
 use residual_inr::util::fmt_bytes;
 
@@ -29,7 +33,11 @@ fn parse_method(s: &str, quality: u8) -> Result<Method> {
         "res-rapid-direct" => Method::ResRapid { direct: true },
         "nerv" => Method::Nerv,
         "res-nerv" => Method::ResNerv,
-        _ => return Err(anyhow!("unknown method {s} (jpeg|rapid|res-rapid|res-rapid-direct|nerv|res-nerv)")),
+        _ => {
+            return Err(anyhow!(
+                "unknown method {s} (jpeg|rapid|res-rapid|res-rapid-direct|nerv|res-nerv)"
+            ))
+        }
     })
 }
 
@@ -37,6 +45,7 @@ fn main() -> Result<()> {
     let args = Args::parse_env(&["no-grouping", "full"]).map_err(|e| anyhow!(e))?;
     match args.subcommand.as_deref() {
         Some("simulate") => simulate(&args),
+        Some("fleet") => fleet(&args),
         Some("compress") => compress(&args),
         Some("commmodel") => commmodel(&args),
         Some("info") => info(),
@@ -44,10 +53,16 @@ fn main() -> Result<()> {
             println!(
                 "residual-inr — fog on-device learning via implicit neural representations\n\
                  \n\
-                 USAGE: residual-inr <simulate|compress|commmodel|info> [flags]\n\
+                 USAGE: residual-inr <simulate|fleet|compress|commmodel|info> [flags]\n\
                  \n\
-                 simulate   --method <jpeg|rapid|res-rapid|nerv|res-nerv> --profile <dac-sdc|uav123|otb100>\n\
+                 simulate   --method <jpeg|rapid|res-rapid|res-rapid-direct|nerv|res-nerv>\n\
+                 \u{20}          --profile <dac-sdc|uav123|otb100>\n\
                  \u{20}          --sequences N --epochs N --receivers N --max-frames N [--no-grouping]\n\
+                 fleet      --scenario <paper-10|sharded|hierarchical> --method M --profile P\n\
+                 \u{20}          --fogs N --edges N --workers K --sequences N --max-frames N\n\
+                 \u{20}          --epochs N --seed S --cache-mb MB (paper-10 = 1 fog, 10 edge\n\
+                 \u{20}          devices; sharded = per-fog shards over mesh backhaul;\n\
+                 \u{20}          hierarchical = cloud→fog→edge relay with weight caching)\n\
                  compress   --method M --profile P --max-frames N [--quality Q]\n\
                  commmodel  --devices K --alpha A [--receivers N]\n\
                  info\n\
@@ -78,7 +93,12 @@ fn simulate(args: &Args) -> Result<()> {
         sim.enc = EncoderConfig::default();
         sim.max_train_frames = None;
     }
-    println!("# simulate method={} profile={} grouped={}", sim.method.name(), profile.name(), sim.grouped);
+    println!(
+        "# simulate method={} profile={} grouped={}",
+        sim.method.name(),
+        profile.name(),
+        sim.grouped
+    );
     let r = run_sim(&cfg, &sim)?;
     println!("frames trained           : {}", r.n_train_frames);
     println!("avg frame payload        : {}", fmt_bytes(r.avg_frame_bytes as u64));
@@ -91,8 +111,41 @@ fn simulate(args: &Args) -> Result<()> {
     println!("edge end-to-end          : {:.2} s", r.edge_total_seconds());
     println!("fog encode time          : {:.2} s (off critical path)", r.fog_encode_seconds);
     println!("device memory            : {}", fmt_bytes(r.device_memory_bytes as u64));
+    println!("fleet makespan (overlap) : {:.2} s", r.fleet_makespan_seconds);
     println!("mAP50-95 before → after  : {:.3} → {:.3}", r.map_before, r.map_after);
     println!("mean IoU after           : {:.3}", r.mean_iou_after);
+    Ok(())
+}
+
+fn fleet(args: &Args) -> Result<()> {
+    let cfg = ArchConfig::load_default()?;
+    let quality = args.get_usize("quality", 85).map_err(|e| anyhow!(e))? as u8;
+    let method = parse_method(args.get_or("method", "res-rapid"), quality)?;
+    let mut fc = FleetConfig::from_scenario(args.get_or("scenario", "paper-10"), method)?;
+    if let Some(p) = args.get("profile") {
+        fc.profile = Profile::from_name(p).ok_or_else(|| anyhow!("unknown profile"))?;
+    }
+    fc.n_fogs = args.get_usize("fogs", fc.n_fogs).map_err(|e| anyhow!(e))?;
+    fc.n_edges = args.get_usize("edges", fc.n_edges).map_err(|e| anyhow!(e))?;
+    fc.encode_workers =
+        args.get_usize("workers", fc.encode_workers).map_err(|e| anyhow!(e))?;
+    fc.n_sequences = args.get_usize("sequences", fc.n_sequences).map_err(|e| anyhow!(e))?;
+    fc.epochs = args.get_usize("epochs", fc.epochs).map_err(|e| anyhow!(e))?;
+    fc.seed = args.get_u64("seed", fc.seed).map_err(|e| anyhow!(e))?;
+    let max = args
+        .get_usize("max-frames", fc.max_frames.unwrap_or(24))
+        .map_err(|e| anyhow!(e))?;
+    fc.max_frames = if max == 0 { None } else { Some(max) };
+    let cache_mb = args.get_usize("cache-mb", 64).map_err(|e| anyhow!(e))?;
+    fc.cache_bytes = (cache_mb as u64) << 20;
+    fc.bandwidth = args.get_f64("bandwidth", fc.bandwidth).map_err(|e| anyhow!(e))?;
+    // Keep the wired-backhaul-faster-than-cell invariant when only the
+    // cell bandwidth is overridden.
+    fc.backhaul_bandwidth = fc.bandwidth * residual_inr::fleet::scenario::BACKHAUL_FACTOR;
+    fc.backhaul_bandwidth =
+        args.get_f64("backhaul", fc.backhaul_bandwidth).map_err(|e| anyhow!(e))?;
+    let report = residual_inr::fleet::run(&cfg, &fc)?;
+    report.print();
     Ok(())
 }
 

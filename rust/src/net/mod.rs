@@ -7,8 +7,15 @@
 //! (from, to, bytes, tag) and costs `latency + bytes / bandwidth` seconds.
 //! Byte accounting per link/direction feeds Figs 8 and 10; simulated time
 //! feeds Fig 11's transmission slice.
+//!
+//! Aggregates (totals, per-node, per-tag) are maintained incrementally on
+//! every `send`, so queries are O(1)/O(log n) instead of rescanning the
+//! transfer log, and [`NetSim::cap_log`] bounds the log itself to a ring
+//! of the most recent transfers — fleet-scale runs push millions of
+//! transfers through without unbounded memory growth. (For multi-cell
+//! contention-aware simulation see [`crate::fleet`].)
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Paper's wireless bandwidth: 2 MB/s.
 pub const DEFAULT_BANDWIDTH: f64 = 2.0e6;
@@ -41,24 +48,61 @@ pub struct Transfer {
     pub tag: &'static str,
 }
 
+/// Per-node running totals.
+#[derive(Debug, Clone, Copy, Default)]
+struct NodeTotals {
+    bytes_from: u64,
+    bytes_to: u64,
+    seconds_to: f64,
+}
+
 /// Shared-medium wireless network simulator.
 #[derive(Debug)]
 pub struct NetSim {
     pub bandwidth: f64,
     pub latency: f64,
-    log: Vec<Transfer>,
+    log: VecDeque<Transfer>,
+    /// Max transfers retained in the log (`None` = unbounded).
+    log_cap: Option<usize>,
+    // Running aggregates — never rescans `log`.
+    total_bytes: u64,
+    total_seconds: f64,
+    n_transfers: u64,
     by_pair: BTreeMap<(NodeId, NodeId), u64>,
+    by_tag: BTreeMap<&'static str, u64>,
+    by_node: BTreeMap<NodeId, NodeTotals>,
 }
 
 impl NetSim {
     pub fn new(bandwidth: f64, latency: f64) -> NetSim {
         assert!(bandwidth > 0.0);
-        NetSim { bandwidth, latency, log: Vec::new(), by_pair: BTreeMap::new() }
+        NetSim {
+            bandwidth,
+            latency,
+            log: VecDeque::new(),
+            log_cap: None,
+            total_bytes: 0,
+            total_seconds: 0.0,
+            n_transfers: 0,
+            by_pair: BTreeMap::new(),
+            by_tag: BTreeMap::new(),
+            by_node: BTreeMap::new(),
+        }
     }
 
     /// Paper defaults: 2 MB/s, 5 ms setup.
     pub fn paper_default() -> NetSim {
         NetSim::new(DEFAULT_BANDWIDTH, DEFAULT_LATENCY)
+    }
+
+    /// Bound the transfer log to the `n` most recent transfers (a ring).
+    /// Aggregates are unaffected — only `transfers()` forgets history.
+    /// `n = 0` disables logging entirely.
+    pub fn cap_log(&mut self, n: usize) {
+        self.log_cap = Some(n);
+        while self.log.len() > n {
+            self.log.pop_front();
+        }
     }
 
     /// Transfer `bytes` from `from` to `to`; returns the airtime in seconds
@@ -68,8 +112,28 @@ impl NetSim {
             return 0.0;
         }
         let seconds = self.latency + bytes as f64 / self.bandwidth;
-        self.log.push(Transfer { from, to, bytes, seconds, tag });
+        self.total_bytes += bytes;
+        self.total_seconds += seconds;
+        self.n_transfers += 1;
         *self.by_pair.entry((from, to)).or_insert(0) += bytes;
+        *self.by_tag.entry(tag).or_insert(0) += bytes;
+        {
+            let f = self.by_node.entry(from).or_default();
+            f.bytes_from += bytes;
+        }
+        {
+            let t = self.by_node.entry(to).or_default();
+            t.bytes_to += bytes;
+            t.seconds_to += seconds;
+        }
+        if self.log_cap != Some(0) {
+            self.log.push_back(Transfer { from, to, bytes, seconds, tag });
+            if let Some(cap) = self.log_cap {
+                while self.log.len() > cap {
+                    self.log.pop_front();
+                }
+            }
+        }
         seconds
     }
 
@@ -88,38 +152,43 @@ impl NetSim {
 
     /// Total bytes ever transmitted.
     pub fn total_bytes(&self) -> u64 {
-        self.log.iter().map(|t| t.bytes).sum()
+        self.total_bytes
     }
 
     /// Total airtime on the shared medium (transfers are serialized —
     /// the paper's `amount / bandwidth` latency model).
     pub fn total_seconds(&self) -> f64 {
-        self.log.iter().map(|t| t.seconds).sum()
+        self.total_seconds
+    }
+
+    /// Transfers ever sent (including any no longer in the capped log).
+    pub fn n_transfers(&self) -> u64 {
+        self.n_transfers
     }
 
     /// Bytes sent from a node.
     pub fn bytes_from(&self, node: NodeId) -> u64 {
-        self.log.iter().filter(|t| t.from == node).map(|t| t.bytes).sum()
+        self.by_node.get(&node).map_or(0, |t| t.bytes_from)
     }
 
     /// Bytes received by a node.
     pub fn bytes_to(&self, node: NodeId) -> u64 {
-        self.log.iter().filter(|t| t.to == node).map(|t| t.bytes).sum()
+        self.by_node.get(&node).map_or(0, |t| t.bytes_to)
     }
 
     /// Airtime of the transfers received by a node — what one edge device
     /// waits for before training can start (Fig 11's transmission slice).
     pub fn seconds_to(&self, node: NodeId) -> f64 {
-        self.log.iter().filter(|t| t.to == node).map(|t| t.seconds).sum()
+        self.by_node.get(&node).map_or(0.0, |t| t.seconds_to)
     }
 
     /// Bytes with a given tag (e.g. "jpeg-upload", "inr-broadcast").
     pub fn bytes_tagged(&self, tag: &str) -> u64 {
-        self.log.iter().filter(|t| t.tag == tag).map(|t| t.bytes).sum()
+        self.by_tag.get(tag).copied().unwrap_or(0)
     }
 
-    /// All transfers (for reports).
-    pub fn transfers(&self) -> &[Transfer] {
+    /// The retained transfer log (most recent `cap` entries if capped).
+    pub fn transfers(&self) -> &VecDeque<Transfer> {
         &self.log
     }
 
@@ -128,10 +197,16 @@ impl NetSim {
         &self.by_pair
     }
 
-    /// Reset the log (new experiment phase) keeping link parameters.
+    /// Reset the log and aggregates (new experiment phase) keeping link
+    /// parameters and any log cap.
     pub fn reset(&mut self) {
         self.log.clear();
+        self.total_bytes = 0;
+        self.total_seconds = 0.0;
+        self.n_transfers = 0;
         self.by_pair.clear();
+        self.by_tag.clear();
+        self.by_node.clear();
     }
 }
 
@@ -191,5 +266,43 @@ mod tests {
         net.reset();
         assert_eq!(net.total_bytes(), 0);
         assert!(net.transfers().is_empty());
+    }
+
+    #[test]
+    fn capped_log_keeps_aggregates_exact() {
+        let mut net = NetSim::new(1e6, 0.0);
+        net.cap_log(10);
+        for i in 0..1000u64 {
+            net.send(NodeId::Edge((i % 7) as usize), NodeId::Fog, 100, "up");
+        }
+        // Log is a ring of the 10 most recent; aggregates see all 1000.
+        assert_eq!(net.transfers().len(), 10);
+        assert_eq!(net.n_transfers(), 1000);
+        assert_eq!(net.total_bytes(), 100_000);
+        assert_eq!(net.bytes_tagged("up"), 100_000);
+        assert_eq!(net.bytes_to(NodeId::Fog), 100_000);
+        assert!((net.total_seconds() - 1000.0 * 1e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_cap_disables_logging() {
+        let mut net = NetSim::new(1e6, 0.0);
+        net.cap_log(0);
+        net.send(NodeId::Edge(0), NodeId::Fog, 100, "up");
+        assert!(net.transfers().is_empty());
+        assert_eq!(net.total_bytes(), 100);
+    }
+
+    #[test]
+    fn queries_are_aggregate_backed_after_capping() {
+        let mut net = NetSim::new(1e6, 0.0);
+        for _ in 0..5 {
+            net.send(NodeId::Fog, NodeId::Edge(1), 200, "inr-broadcast");
+        }
+        let before = (net.bytes_to(NodeId::Edge(1)), net.seconds_to(NodeId::Edge(1)));
+        net.cap_log(1); // drop most of the log after the fact
+        let after = (net.bytes_to(NodeId::Edge(1)), net.seconds_to(NodeId::Edge(1)));
+        assert_eq!(before, after);
+        assert_eq!(net.pair_totals()[&(NodeId::Fog, NodeId::Edge(1))], 1000);
     }
 }

@@ -1,0 +1,210 @@
+//! Fleet-engine integration: the discrete-event simulator's single-fog
+//! byte totals must agree with BOTH the legacy serialized `NetSim`
+//! accounting and the §4 analytical `commmodel` predictions for the
+//! paper's 10-device configuration, and multi-fog scale-out must report
+//! queue/cache/makespan statistics with the expected structure.
+//!
+//! Everything here is session-free: the traffic model packs zero-weight
+//! records whose sizes are shape-determined, so no PJRT artifacts are
+//! needed.
+
+use residual_inr::commmodel as cm;
+use residual_inr::config::ArchConfig;
+use residual_inr::coordinator::sim::cap_frames;
+use residual_inr::coordinator::Method;
+use residual_inr::data::generate_dataset;
+use residual_inr::fleet::{self, FleetConfig, ShardTraffic};
+use residual_inr::net::{NetSim, NodeId};
+
+fn cfg() -> ArchConfig {
+    ArchConfig::load_default().unwrap()
+}
+
+/// Rebuild the exact shard `fleet::run` simulates for fog 0.
+fn shard_of(cfg: &ArchConfig, fc: &FleetConfig) -> ShardTraffic {
+    let ds = generate_dataset(fc.profile, fc.seed, fc.n_sequences);
+    let (_pre, fine) = ds.split_half();
+    let fine = match fc.max_frames {
+        Some(m) => cap_frames(&fine, m),
+        None => fine,
+    };
+    fleet::model_shard(cfg, &fine, fc.method, &fc.enc, fc.upload_quality, 0)
+}
+
+/// Replay a shard through the legacy serialized NetSim exactly the way
+/// `coordinator::sim::run` drives it.
+fn legacy_replay(shard: &ShardTraffic, n_receivers: usize, bandwidth: f64) -> NetSim {
+    let mut net = NetSim::new(bandwidth, residual_inr::net::DEFAULT_LATENCY);
+    let receivers: Vec<NodeId> = (1..=n_receivers).map(NodeId::Edge).collect();
+    let source = NodeId::Edge(0);
+    if matches!(shard.method, Method::Jpeg { .. }) {
+        for b in &shard.blobs {
+            for &r in &receivers {
+                net.send(source, r, b.bytes, "jpeg-direct");
+            }
+        }
+        net.broadcast(source, &receivers, shard.label_bytes(), "labels");
+    } else {
+        for &u in &shard.uploads {
+            net.send(source, NodeId::Fog, u, "jpeg-upload");
+        }
+        for b in &shard.blobs {
+            net.broadcast(NodeId::Fog, &receivers, b.bytes, "inr-broadcast");
+        }
+        net.broadcast(NodeId::Fog, &receivers, shard.label_bytes(), "labels");
+    }
+    net
+}
+
+#[test]
+fn paper10_fleet_totals_match_legacy_netsim() {
+    let cfg = cfg();
+    for method in [
+        Method::ResRapid { direct: false },
+        Method::RapidSingle,
+        Method::ResNerv,
+        Method::Jpeg { quality: 95 },
+    ] {
+        let fc = FleetConfig::paper_10(method); // 1 fog, 10 edges = 9 receivers
+        let report = fleet::run(&cfg, &fc).unwrap();
+        let shard = shard_of(&cfg, &fc);
+        let net = legacy_replay(&shard, 9, fc.bandwidth);
+        assert_eq!(
+            report.upload_bytes,
+            net.bytes_tagged("jpeg-upload"),
+            "{method:?} upload"
+        );
+        assert_eq!(
+            report.broadcast_bytes,
+            net.bytes_tagged("inr-broadcast") + net.bytes_tagged("jpeg-direct"),
+            "{method:?} broadcast"
+        );
+        assert_eq!(report.label_bytes, net.bytes_tagged("labels"), "{method:?} labels");
+        assert_eq!(report.backhaul_bytes, 0, "{method:?}: single fog has no backhaul");
+        assert_eq!(report.total_bytes, net.total_bytes(), "{method:?} total");
+        assert!(report.makespan_seconds > 0.0);
+        assert_eq!(report.n_receivers, 9);
+    }
+}
+
+#[test]
+fn paper10_fleet_totals_match_commmodel_prediction() {
+    // §4: D_f = n·α·m + m for the one fog-routed source device, with
+    // α measured as INR payload / JPEG payload on the same frames.
+    let cfg = cfg();
+    let fc = FleetConfig::paper_10(Method::ResRapid { direct: false });
+    let report = fleet::run(&cfg, &fc).unwrap();
+    let shard = shard_of(&cfg, &fc);
+
+    let m = shard.upload_bytes() as f64;
+    let alpha = shard.payload_bytes() as f64 / m;
+    assert!(alpha > 0.0 && alpha < 1.0, "INR must compress: α = {alpha}");
+    let dev = cm::Device { data_bytes: m, receivers: 9, uses_fog: true };
+    let predicted = cm::fog_total(&[dev], alpha);
+    let fleet_no_labels = (report.total_bytes - report.label_bytes) as f64;
+    assert!(
+        (predicted - fleet_no_labels).abs() <= 1.0,
+        "commmodel {predicted} vs fleet {fleet_no_labels}"
+    );
+
+    // The serverless JPEG fleet matches D_s = n·m, and the in-engine
+    // reduction matches the analytical reduction exactly.
+    let fj = FleetConfig::paper_10(Method::Jpeg { quality: 95 });
+    let rj = fleet::run(&cfg, &fj).unwrap();
+    assert_eq!(rj.upload_bytes, 0);
+    assert_eq!(rj.broadcast_bytes, 9 * shard.upload_bytes());
+    let serverless = cm::serverless_total(&[cm::Device {
+        data_bytes: m,
+        receivers: 9,
+        uses_fog: false,
+    }]);
+    let measured = (rj.total_bytes - rj.label_bytes) as f64 / fleet_no_labels;
+    let analytic = serverless / predicted;
+    assert!(
+        (measured - analytic).abs() / analytic < 1e-6,
+        "reduction: engine {measured:.4}x vs model {analytic:.4}x"
+    );
+    assert!(measured > 1.2, "fog+INR must beat serverless at 9 receivers: {measured:.2}x");
+}
+
+#[test]
+fn sharded_scaleout_reports_queue_cache_and_makespan() {
+    // Acceptance: `fleet --scenario sharded --fogs 4 --edges 200`
+    // completes with per-fog queue depth, cache hit rate and makespan.
+    let cfg = cfg();
+    let fc = FleetConfig::from_scenario("sharded", Method::ResRapid { direct: false }).unwrap();
+    assert_eq!((fc.n_fogs, fc.n_edges), (4, 200));
+    let r = fleet::run(&cfg, &fc).unwrap();
+
+    assert_eq!(r.fogs.len(), 4);
+    assert_eq!(r.n_receivers, 196);
+    assert!(r.makespan_seconds > 0.0);
+    assert!(r.n_blobs > 0 && r.n_frames > 0);
+
+    // Encode jobs outnumber workers → queues form.
+    assert!(r.max_queue_depth >= 1, "queue depth {}", r.max_queue_depth);
+    // 49 receivers per fog: each remote blob misses once and hits 48
+    // times → fleet hit rate 48/49.
+    assert!(r.cache.hits > 0 && r.cache.misses > 0);
+    assert!(r.cache_hit_rate() > 0.9, "hit rate {}", r.cache_hit_rate());
+    assert!(r.cache.bytes_saved > 0);
+
+    // Backhaul invariant: every payload byte crosses the mesh once per
+    // remote fog (3), never once per remote receiver (147).
+    assert_eq!(r.broadcast_bytes % 196, 0);
+    assert_eq!(r.label_bytes % 196, 0);
+    let payload_total = r.broadcast_bytes / 196;
+    assert_eq!(r.backhaul_bytes, 3 * payload_total + 3 * (r.label_bytes / 196));
+
+    for f in &r.fogs {
+        assert_eq!(f.edges, 50);
+        assert_eq!(f.receivers, 49);
+        assert!(f.blobs > 0);
+        assert!(f.trained_at > 0.0);
+        assert!(f.trained_at <= r.makespan_seconds + 1e-9);
+        assert!(f.cache.hit_rate() > 0.9);
+    }
+}
+
+#[test]
+fn hierarchical_relay_costs_two_hops_but_same_cache_behavior() {
+    let cfg = cfg();
+    let m = Method::RapidSingle;
+    let rs = fleet::run(&cfg, &FleetConfig::from_scenario("sharded", m).unwrap()).unwrap();
+    let rh =
+        fleet::run(&cfg, &FleetConfig::from_scenario("hierarchical", m).unwrap()).unwrap();
+    // Same shards, same cells: wireless byte totals identical.
+    assert_eq!(rs.cell_bytes(), rh.cell_bytes());
+    // Mesh pays one hop per remote fog (3); the cloud relay pays one
+    // uplink plus 3 downlinks (4 hops) for the same dedup'd transfers.
+    assert_eq!(3 * rh.backhaul_bytes, 4 * rs.backhaul_bytes);
+    // The weight cache behaves identically in both topologies.
+    assert_eq!(rs.cache.hits, rh.cache.hits);
+    assert_eq!(rs.cache.misses, rh.cache.misses);
+    assert_eq!(rs.cache.bytes_saved, rh.cache.bytes_saved);
+}
+
+#[test]
+fn fleet_bytes_scale_linearly_with_receivers_for_fog_methods() {
+    // Fig 8's regime, now measured in-engine: fog+INR total grows with
+    // slope = payload per receiver, so doubling receivers far less than
+    // doubles total bytes (upload amortizes), while serverless doubles.
+    let cfg = cfg();
+    let mk = |method, edges| {
+        let mut fc = FleetConfig::paper_10(method);
+        fc.n_edges = edges;
+        fleet::run(&cfg, &fc).unwrap()
+    };
+    let inr_10 = mk(Method::ResRapid { direct: false }, 10);
+    let inr_19 = mk(Method::ResRapid { direct: false }, 19); // 2× receivers
+    let jpeg_10 = mk(Method::Jpeg { quality: 95 }, 10);
+    let jpeg_19 = mk(Method::Jpeg { quality: 95 }, 19);
+    let g_inr = inr_19.total_bytes as f64 / inr_10.total_bytes as f64;
+    let g_jpeg = jpeg_19.total_bytes as f64 / jpeg_10.total_bytes as f64;
+    assert!((g_jpeg - 2.0).abs() < 1e-9, "serverless doubles: {g_jpeg}");
+    assert!(g_inr < g_jpeg, "upload amortizes: {g_inr} vs {g_jpeg}");
+    // And the INR advantage grows with fleet size.
+    let red_10 = jpeg_10.total_bytes as f64 / inr_10.total_bytes as f64;
+    let red_19 = jpeg_19.total_bytes as f64 / inr_19.total_bytes as f64;
+    assert!(red_19 > red_10, "reduction grows: {red_10:.2} → {red_19:.2}");
+}
