@@ -93,7 +93,10 @@ fn main() -> anyhow::Result<()> {
     for workers in [1usize, 2, 4] {
         let pool = Pool::open_default(workers)?;
         // Warm all executables on every worker.
-        let names: Vec<String> = pool.manifest().entries.keys()
+        let names: Vec<String> = pool
+            .manifest()
+            .entries
+            .keys()
             .filter(|n| n.contains("decode"))
             .cloned()
             .collect();
@@ -105,8 +108,15 @@ fn main() -> anyhow::Result<()> {
                 if grouped { "grouped" } else { "ungrouped" }
             );
             let r = bench(&label, 1, 8, || {
-                decode_batch(&pool, cfg.frame_w, cfg.frame_h, cfg.nerv_decode_batch, &items, grouped)
-                    .unwrap();
+                decode_batch(
+                    &pool,
+                    cfg.frame_w,
+                    cfg.frame_h,
+                    cfg.nerv_decode_batch,
+                    &items,
+                    grouped,
+                )
+                .unwrap();
             });
             report(&r);
         }

@@ -77,7 +77,8 @@ fn main() -> anyhow::Result<()> {
         rows.push((c.label, r));
     }
 
-    let mut t = Table::new(&["pipeline", "tx (s)", "decode (s)", "train (s)", "total (s)", "speedup"]);
+    let mut t =
+        Table::new(&["pipeline", "tx (s)", "decode (s)", "train (s)", "total (s)", "speedup"]);
     let base = rows[0].1.edge_total_seconds();
     for (label, r) in &rows {
         t.row(&[

@@ -1,21 +1,45 @@
 //! Fleet scale-out bench: total bytes + makespan vs device count for the
 //! serverless JPEG baseline, Rapid-INR and Res-Rapid-INR, on the
 //! discrete-event fleet engine (single fog cell, the paper's topology,
-//! scaled from the 10-device testbed to 100 and 1000 edge devices).
+//! scaled from the 10-device testbed to 100 and 1000 edge devices), plus
+//! one multi-fog point per topology (sharded mesh / hierarchical relay,
+//! 4 fogs × 200 edges).
 //!
 //! This extends Fig 8 from analytical totals to a simulated timeline:
 //! the byte curves reproduce the §4 model (fog+INR grows with slope
 //! `α·m` per receiver vs `m` for serverless) while makespan additionally
-//! shows upload/encode/broadcast overlap and cell contention.
+//! shows upload/encode/broadcast overlap and cell contention. Timing is
+//! priced by `costmodel` — calibrated against the live PJRT session when
+//! artifacts exist, analytical otherwise (the emitted JSON records
+//! which).
+//!
+//! Besides the printed tables, the run writes `BENCH_fleet.json` at the
+//! repo root so the perf trajectory is machine-readable across PRs.
 //!
 //! Run: `cargo bench --bench fleet_scale`
 //! Env: `FRAMES=24` shard size, `WORKERS=4` encode workers per fog.
 
 use residual_inr::bench_support::Table;
 use residual_inr::config::ArchConfig;
-use residual_inr::coordinator::Method;
-use residual_inr::fleet::{self, FleetConfig};
+use residual_inr::coordinator::{EncoderConfig, Method};
+use residual_inr::costmodel;
+use residual_inr::data::Profile;
+use residual_inr::fleet::{self, FleetConfig, FleetReport};
 use residual_inr::util::fmt_bytes;
+use residual_inr::util::json::Json;
+
+fn row_json(name: &str, devices: usize, r: &FleetReport) -> Json {
+    Json::obj(vec![
+        ("method", Json::Str(name.to_string())),
+        ("devices", Json::Num(devices as f64)),
+        ("total_bytes", Json::Num(r.total_bytes as f64)),
+        ("makespan_seconds", Json::Num(r.makespan_seconds)),
+        ("max_queue_depth", Json::Num(r.max_queue_depth as f64)),
+        ("events", Json::Num(r.events as f64)),
+        ("cost_source", Json::Str(r.costs.source.name().to_string())),
+        ("seconds_per_step", Json::Num(r.costs.seconds_per_step)),
+    ])
+}
 
 fn main() -> anyhow::Result<()> {
     let cfg = ArchConfig::load_default()?;
@@ -30,6 +54,13 @@ fn main() -> anyhow::Result<()> {
         ("res-rapid", Method::ResRapid { direct: false }),
     ];
     let device_counts = [10usize, 100, 1000];
+    let enc = EncoderConfig::fast();
+    // One cost resolution per method — the calibration probe is not free,
+    // and the multi-fog section below reuses the res-rapid book.
+    let books: Vec<_> = methods
+        .iter()
+        .map(|&(_, m)| costmodel::auto(&cfg, Profile::DacSdc, m, &enc))
+        .collect();
 
     println!(
         "== fleet scale-out: single fog cell, {frames}-frame shard, {workers} encode workers =="
@@ -40,9 +71,10 @@ fn main() -> anyhow::Result<()> {
     ]);
     // (method, devices) -> total bytes, for the reduction summary below.
     let mut totals = Vec::new();
-    for (name, method) in methods {
+    let mut rows = Vec::new();
+    for (&(name, method), &costs) in methods.iter().zip(&books) {
         for &devices in &device_counts {
-            let mut fc = FleetConfig::paper_10(method);
+            let mut fc = FleetConfig::paper_10(method, costs);
             fc.n_edges = devices;
             fc.max_frames = Some(frames);
             fc.encode_workers = workers;
@@ -57,13 +89,50 @@ fn main() -> anyhow::Result<()> {
                 r.max_queue_depth.to_string(),
                 r.events.to_string(),
             ]);
+            rows.push(row_json(name, devices, &r));
             totals.push((name, devices, r.total_bytes));
         }
     }
     t.print();
 
+    // Multi-fog bench point: the measured-stream topologies at fleet
+    // scale (4 fogs × 200 edges, the `fleet` CLI defaults).
+    println!("\n== multi-fog: 4 fogs x 200 edges, res-rapid ==");
+    let method = Method::ResRapid { direct: false };
+    let costs = books[2]; // res-rapid's book, resolved above
+    let mut t = Table::new(&[
+        "topology", "total bytes", "backhaul", "makespan (s)", "cache hit%", "saved",
+    ]);
+    let mut multi = Vec::new();
+    for scenario in ["sharded", "hierarchical"] {
+        let mut fc = FleetConfig::from_scenario(scenario, method, costs)?;
+        fc.max_frames = Some(frames);
+        fc.encode_workers = workers;
+        let r = fleet::run(&cfg, &fc)?;
+        t.row(&[
+            scenario.to_string(),
+            fmt_bytes(r.total_bytes),
+            fmt_bytes(r.backhaul_bytes),
+            format!("{:.2}", r.makespan_seconds),
+            format!("{:.1}", 100.0 * r.cache_hit_rate()),
+            fmt_bytes(r.cache.bytes_saved),
+        ]);
+        multi.push(Json::obj(vec![
+            ("scenario", Json::Str(scenario.to_string())),
+            ("fogs", Json::Num(r.n_fogs as f64)),
+            ("edges", Json::Num(r.n_edges as f64)),
+            ("total_bytes", Json::Num(r.total_bytes as f64)),
+            ("backhaul_bytes", Json::Num(r.backhaul_bytes as f64)),
+            ("makespan_seconds", Json::Num(r.makespan_seconds)),
+            ("cache_hit_rate", Json::Num(r.cache_hit_rate())),
+            ("cache_bytes_saved", Json::Num(r.cache.bytes_saved as f64)),
+        ]));
+    }
+    t.print();
+
     println!("\n== reduction vs serverless JPEG (paper Fig 8 regime) ==");
     let mut t = Table::new(&["devices", "rapid", "res-rapid"]);
+    let mut reductions = Vec::new();
     for &devices in &device_counts {
         let get = |n: &str| {
             totals
@@ -78,8 +147,32 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}x", jpeg / get("rapid")),
             format!("{:.2}x", jpeg / get("res-rapid")),
         ]);
+        reductions.push(Json::obj(vec![
+            ("devices", Json::Num(devices as f64)),
+            ("rapid", Json::Num(jpeg / get("rapid"))),
+            ("res_rapid", Json::Num(jpeg / get("res-rapid"))),
+        ]));
     }
     t.print();
     println!("\npaper headline: 3.43-5.16x less transmission across 10 edge devices");
+
+    // Machine-readable perf trajectory (BENCH_fleet.json at the repo
+    // root; falls back to the current directory outside a checkout).
+    let json = Json::obj(vec![
+        ("bench", Json::Str("fleet_scale".to_string())),
+        ("frames", Json::Num(frames as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("cost_source", Json::Str(costs.source.name().to_string())),
+        ("single_fog", Json::Arr(rows)),
+        ("multi_fog", Json::Arr(multi)),
+        ("reduction_vs_jpeg", Json::Arr(reductions)),
+    ]);
+    let out = residual_inr::config::find_repo_file("Cargo.toml")
+        .ok()
+        .and_then(|p| p.parent().map(|d| d.to_path_buf()))
+        .unwrap_or_else(|| std::path::PathBuf::from("."))
+        .join("BENCH_fleet.json");
+    std::fs::write(&out, format!("{json}\n"))?;
+    println!("wrote {}", out.display());
     Ok(())
 }

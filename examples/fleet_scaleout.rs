@@ -17,7 +17,9 @@
 use anyhow::Result;
 
 use residual_inr::config::ArchConfig;
-use residual_inr::coordinator::Method;
+use residual_inr::coordinator::{EncoderConfig, Method};
+use residual_inr::costmodel;
+use residual_inr::data::Profile;
 use residual_inr::fleet::{self, FleetConfig};
 use residual_inr::util::fmt_bytes;
 
@@ -26,15 +28,18 @@ fn main() -> Result<()> {
     let edges: usize = std::env::var("EDGES").ok().and_then(|v| v.parse().ok()).unwrap_or(200);
     let fogs: usize = std::env::var("FOGS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
     let method = Method::ResRapid { direct: false };
+    // Calibrated against live PJRT timing when artifacts exist.
+    let costs = costmodel::auto(&cfg, Profile::DacSdc, method, &EncoderConfig::fast());
+    println!("cost model: {}", costs.source.name());
 
     // 1. The paper's 10-device single-fog testbed as the anchor.
-    let paper = fleet::run(&cfg, &FleetConfig::paper_10(method))?;
+    let paper = fleet::run(&cfg, &FleetConfig::paper_10(method, costs))?;
     println!("--- paper-10 anchor ---");
     paper.print();
 
     // 2. One fog cell serving the whole fleet: every broadcast contends
     //    on a single shared medium.
-    let mut single = FleetConfig::paper_10(method);
+    let mut single = FleetConfig::paper_10(method, costs);
     single.scenario = "single-big-cell".into();
     single.n_edges = edges;
     println!("\n--- single fog, {edges} edges ---");
@@ -42,7 +47,7 @@ fn main() -> Result<()> {
     r_single.print();
 
     // 3. Sharded: per-fog cells + mesh backhaul + weight cache.
-    let mut sharded = FleetConfig::from_scenario("sharded", method)?;
+    let mut sharded = FleetConfig::from_scenario("sharded", method, costs)?;
     sharded.n_fogs = fogs;
     sharded.n_edges = edges;
     println!("\n--- sharded, {fogs} fogs × {} edges ---", edges / fogs);
@@ -50,7 +55,7 @@ fn main() -> Result<()> {
     r_sharded.print();
 
     // 4. Hierarchical cloud relay.
-    let mut hier = FleetConfig::from_scenario("hierarchical", method)?;
+    let mut hier = FleetConfig::from_scenario("hierarchical", method, costs)?;
     hier.n_fogs = fogs;
     hier.n_edges = edges;
     println!("\n--- hierarchical (cloud→fog→edge), {fogs} fogs ---");

@@ -72,8 +72,11 @@ fn main() -> Result<()> {
             if cm::fog_beneficial(n, alpha) { "yes" } else { "no " }
         );
     }
-    println!("crossover: fog wins from n_i >= {:?} (paper: n_i > 1/(1-α) = {:.2})",
-             thr, 1.0 / (1.0 - alpha));
+    println!(
+        "crossover: fog wins from n_i >= {:?} (paper: n_i > 1/(1-α) = {:.2})",
+        thr,
+        1.0 / (1.0 - alpha)
+    );
 
     // 4. Simulated wireless transfers at 2 MB/s for k = 10 (headline).
     let k = 10;
@@ -96,7 +99,9 @@ fn main() -> Result<()> {
     println!("\nsimulated wireless @ 2 MB/s, k = {k}, all-to-all:");
     println!("  serverless : {}  ({:.1} s airtime)", fmt_bytes(b_serverless), t_serverless);
     println!("  fog + INR  : {}  ({:.1} s airtime)", fmt_bytes(b_fog), t_fog);
-    println!("  reduction  : {:.2}x  (paper reports 3.43–5.16x at k = 10)",
-             b_serverless as f64 / b_fog as f64);
+    println!(
+        "  reduction  : {:.2}x  (paper reports 3.43–5.16x at k = 10)",
+        b_serverless as f64 / b_fog as f64
+    );
     Ok(())
 }

@@ -48,14 +48,27 @@ fn main() -> Result<()> {
 
     // 3. The edge device: dequantize, decode background, overlay residual.
     let bg_img = decoder::decode_rapid(
-        &session, &profile.background, &dequantize(&r.bg), img.width, img.height)?;
+        &session,
+        &profile.background,
+        &dequantize(&r.bg),
+        img.width,
+        img.height,
+    )?;
     let patch = decoder::decode_object_patch(
-        &session, bin, &dequantize(&r.obj), r.padded.w, r.padded.h)?;
+        &session,
+        bin,
+        &dequantize(&r.obj),
+        r.padded.w,
+        r.padded.h,
+    )?;
     let recon = decoder::compose_residual(&bg_img, &patch, &r.padded);
 
     // 4. Compare against JPEG at a few qualities (the paper's Fig 9 axes).
     let inr_bytes = r.bg.byte_size() + r.obj.byte_size();
-    println!("\n{:<26} {:>10} {:>12} {:>12} {:>12}", "method", "bytes", "PSNR(obj)", "PSNR(bg)", "PSNR(full)");
+    println!(
+        "\n{:<26} {:>10} {:>12} {:>12} {:>12}",
+        "method", "bytes", "PSNR(obj)", "PSNR(bg)", "PSNR(full)"
+    );
     println!("{}", "-".repeat(76));
     println!(
         "{:<26} {:>10} {:>12.2} {:>12.2} {:>12.2}",

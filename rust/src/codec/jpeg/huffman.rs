@@ -41,7 +41,8 @@ impl HuffTable {
         for &s in &order {
             counts[lengths[s as usize] as usize - 1] += 1;
         }
-        let mut table = HuffTable { counts, symbols: order, enc: vec![(0, 0); lengths.len().max(256)] };
+        let mut table =
+            HuffTable { counts, symbols: order, enc: vec![(0, 0); lengths.len().max(256)] };
         table.rebuild_encoder();
         table
     }

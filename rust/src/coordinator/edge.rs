@@ -25,6 +25,15 @@ pub struct EdgeStore {
     pub memory_bytes: usize,
 }
 
+impl EdgeStore {
+    /// Append another store's items (a further fog shard's ingest on the
+    /// same receiver), keeping per-shard frame order.
+    pub fn merge(&mut self, other: EdgeStore) {
+        self.items.extend(other.items);
+        self.memory_bytes += other.memory_bytes;
+    }
+}
+
 /// Resolve an arch key (`names::mlp_key`) against a profile's arch table.
 fn resolve_mlp(profile: &RapidProfile, key: &str) -> Option<MlpArch> {
     use crate::runtime::names::mlp_key;

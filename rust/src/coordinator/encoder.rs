@@ -87,6 +87,19 @@ pub struct EncodeStats {
     pub seconds: f64,
 }
 
+impl EncodeStats {
+    /// Measured wall seconds per Adam step — the quantity
+    /// [`crate::costmodel::Calibrated`] distills from live encodes
+    /// (0.0 when no steps ran).
+    pub fn seconds_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.seconds / self.steps as f64
+        }
+    }
+}
+
 /// Residual (or direct) encoding of one image.
 #[derive(Debug, Clone)]
 pub struct ResRapidEncoding {

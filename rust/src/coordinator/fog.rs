@@ -67,6 +67,18 @@ impl Compressed {
     pub fn avg_frame_bytes(&self) -> f64 {
         self.payload_bytes as f64 / self.n_frames.max(1) as f64
     }
+
+    /// Measured wall seconds per Adam step across the whole compress run
+    /// (0.0 for the JPEG method, which spends no steps) — the same
+    /// quantity `coordinator::sim` distills into its calibrated
+    /// [`crate::costmodel::CostBook`], here per compress call.
+    pub fn seconds_per_step(&self) -> f64 {
+        if self.encode_steps == 0 {
+            0.0
+        } else {
+            self.encode_seconds / self.encode_steps as f64
+        }
+    }
 }
 
 /// The fog node: owns a PJRT session and the encoder configuration.

@@ -3,7 +3,10 @@
 //! * [`encoder`] — fog-side INR encoding service (training INRs, §3.1)
 //! * [`fog`] — compression methods → transmission records
 //! * [`edge`] — device-side ingest (records → in-memory stored images)
-//! * [`sim`] — the end-to-end fog on-device-learning experiment
+//! * [`sim`] — the end-to-end fog on-device-learning experiment, staged
+//!   as a measured pipeline: single-fog ([`sim::run`]) or sharded across
+//!   F fog cells ([`sim::run_multi`]), with fleet timing priced by a
+//!   [`crate::costmodel`] book calibrated from the run itself
 
 pub mod edge;
 pub mod encoder;
@@ -12,4 +15,6 @@ pub mod sim;
 
 pub use encoder::{EncoderConfig, FogEncoder};
 pub use fog::{Compressed, FogNode, Method};
-pub use sim::{run as run_sim, SimConfig, SimReport};
+pub use sim::{
+    run as run_sim, run_multi, MultiFogConfig, MultiFogReport, ShardReport, SimConfig, SimReport,
+};

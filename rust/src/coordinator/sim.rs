@@ -1,25 +1,41 @@
 //! End-to-end fog on-device-learning simulation (the paper's system,
 //! Fig 1/4, measured as in Figs 10–11).
 //!
-//! One run = one compression method through the full pipeline:
+//! The run is a staged pipeline; [`run`] wires the stages for the paper's
+//! single-fog testbed and [`run_multi`] shards them across F fog cells:
 //!
-//! 1. the detector is pretrained on half the sequences (paper §5.1.2);
-//! 2. a source edge device uploads the *new* sequences to the fog node as
-//!    JPEG (skipped for the serverless JPEG baseline, which sends JPEG
-//!    straight to receivers);
-//! 3. the fog node compresses (INR encoding = network training) and
-//!    broadcasts to `n_receivers` edge devices over the 2 MB/s wireless
-//!    medium, plus 8 bytes/frame of bbox labels for every method;
-//! 4. a receiver ingests the records into device memory, then fine-tunes
-//!    TinyDet: every batch is decoded (grouped or not) and fed to the
-//!    fused train step;
-//! 5. accuracy is evaluated on the *raw* held-out frames (does training on
-//!    reconstructions transfer to real inputs — the paper's accuracy axis).
+//! 1. **shard** — one fine-tuning dataset shard per fog, each generated
+//!    by the same per-shard generator the synthetic fleet path uses, so
+//!    measured and modeled shards compare record-for-record (note:
+//!    total workload scales with F — fogs serve disjoint shard-sized
+//!    slices, not fractions of one fixed dataset);
+//! 2. **pretrain** — the detector is pretrained on the held-back halves
+//!    (paper §5.1.2), outside the measured window;
+//! 3. **encode** ([`encode_shard`]) — each shard's source edge uploads
+//!    JPEG to its fog, the live `FogNode` encoder produces transmission
+//!    records (INR encoding = network training), and a per-cell serialized
+//!    [`NetSim`] accounts every byte; the measured records become a
+//!    [`ShardTraffic`] stream;
+//! 4. **ingest + fine-tune** — a receiver ingests every shard into device
+//!    memory and fine-tunes TinyDet over decoded batches;
+//! 5. **calibrate + fleet** — the wall times collected above distill into
+//!    a [`Calibrated`] [`CostBook`] (per-step encode, per-frame train),
+//!    and the measured streams ride the discrete-event [`crate::fleet`]
+//!    engine for an overlap-aware makespan; byte parity between the
+//!    engine and the serialized accounting is *counted* and surfaced in
+//!    the report (tier-1 builds `--release`, where a `debug_assert!`
+//!    would compile out and drift would go unseen);
+//! 6. **evaluate** — accuracy on the *raw* held-out frames (does training
+//!    on reconstructions transfer to real inputs — the paper's accuracy
+//!    axis).
 
 use anyhow::Result;
 
 use crate::config::ArchConfig;
-use crate::data::{generate_dataset, Dataset, Profile};
+use crate::costmodel::{Analytical, Calibrated, CostBook, CostModel};
+use crate::data::{generate_dataset, BBox, Dataset, ImageRGB, Profile};
+use crate::fleet::{FleetConfig, FleetReport, ShardTraffic, Topology};
+use crate::inr::Record;
 use crate::metrics::{map50, map50_95, mean_iou};
 use crate::net::{NetSim, NodeId};
 use crate::pipeline::baseline::{decode_jpeg_batch, JpegPipeline};
@@ -27,9 +43,9 @@ use crate::pipeline::group::{decode_batch, StoredImage};
 use crate::runtime::{Pool, Session};
 use crate::training::DetTrainer;
 use crate::util::rng::Pcg32;
-use crate::util::Stopwatch;
+use crate::util::{fmt_bytes, Stopwatch};
 
-use super::edge::ingest;
+use super::edge::{ingest, EdgeStore};
 use super::encoder::EncoderConfig;
 use super::fog::{FogNode, Method};
 
@@ -47,7 +63,7 @@ pub struct SimConfig {
     pub grouped: bool,
     /// JPEG baseline decode flavor (ignored for INR methods).
     pub jpeg_pipeline: JpegPipeline,
-    /// Edge devices receiving the fine-tuning data.
+    /// Edge devices receiving the fine-tuning data (per fog cell).
     pub n_receivers: usize,
     /// Fine-tuning epochs over the received frames.
     pub epochs: usize,
@@ -58,7 +74,7 @@ pub struct SimConfig {
     pub upload_quality: u8,
     pub bandwidth: f64,
     pub decode_workers: usize,
-    /// Cap on fine-tuning frames (CI speed); `None` = all.
+    /// Cap on fine-tuning frames per shard (CI speed); `None` = all.
     pub max_train_frames: Option<usize>,
 }
 
@@ -107,6 +123,12 @@ pub struct SimReport {
     /// engine (upload/encode/broadcast overlapped on their own
     /// resources), as opposed to the serialized NetSim accounting above.
     pub fleet_makespan_seconds: f64,
+    /// Cost book the fleet adaptation ran with, calibrated from this
+    /// run's own wall-time measurements.
+    pub costs: CostBook,
+    /// |fleet-engine total − serialized NetSim total|: counted byte
+    /// parity between the two accounting paths (0 when faithful).
+    pub byte_parity_mismatch: u64,
     // Compression metrics.
     pub payload_bytes: usize,
     pub avg_frame_bytes: f64,
@@ -148,76 +170,68 @@ pub fn cap_frames(ds: &Dataset, max: usize) -> Dataset {
     out
 }
 
-/// Run one full simulation.
-pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
-    let session = Session::open_default()?;
-    let pool = Pool::open_default(sim.decode_workers)?;
+/// One shard's live encode plus its serialized per-cell byte accounting.
+struct EncodedShard {
+    records: Vec<Record>,
+    /// The measured record stream as fleet-engine traffic.
+    traffic: ShardTraffic,
+    n_frames: usize,
+    payload_bytes: usize,
+    avg_frame_bytes: f64,
+    fog_encode_seconds: f64,
+    encode_steps: usize,
+    /// Wall seconds spent JPEG-encoding the source uploads.
+    upload_jpeg_seconds: f64,
+    // Serialized NetSim accounting for this shard's cell.
+    upload_bytes: u64,
+    broadcast_bytes: u64,
+    label_bytes: u64,
+    cell_bytes: u64,
+    /// Airtime receiver Edge(1) of this cell waits for (Fig 11's
+    /// transmission slice — what one device receives, not fleet airtime).
+    transmission_seconds: f64,
+}
+
+/// Stage: run the live fog encoder over one dataset shard and account
+/// every byte on a serialized per-cell [`NetSim`].
+fn encode_shard(fog: &FogNode, sim: &SimConfig, fine_ds: &Dataset) -> Result<EncodedShard> {
     let mut net = NetSim::new(sim.bandwidth, crate::net::DEFAULT_LATENCY);
     // Byte queries are aggregate-backed; the per-transfer log is only a
     // debugging aid, so bound it (large --receivers sweeps otherwise log
     // one entry per record per receiver).
     net.cap_log(100_000);
-    let mut rng = Pcg32::seeded(sim.seed ^ 0x51);
-
-    // --- Data ----------------------------------------------------------
-    let ds = generate_dataset(sim.profile, sim.seed, sim.n_sequences);
-    let (pre_ds, fine_ds) = ds.split_half();
-    let fine_ds = match sim.max_train_frames {
-        Some(m) => cap_frames(&fine_ds, m),
-        None => fine_ds,
-    };
     let n_frames = fine_ds.total_frames();
-
-    // --- Pretraining (outside the measured window, §5.1.2) -------------
-    let mut trainer = DetTrainer::new(cfg, sim.seed ^ 0xDE7);
-    let pre_frames: Vec<(&crate::data::ImageRGB, &crate::data::BBox)> =
-        pre_ds.iter_frames().map(|(_, _, f, b)| (f, b)).collect();
-    for _ in 0..sim.pretrain_steps {
-        let idx: Vec<usize> =
-            (0..trainer.batch).map(|_| rng.below_usize(pre_frames.len())).collect();
-        let imgs: Vec<&crate::data::ImageRGB> = idx.iter().map(|&i| pre_frames[i].0).collect();
-        let boxes: Vec<crate::data::BBox> = idx.iter().map(|&i| *pre_frames[i].1).collect();
-        trainer.train_batch(&session, &imgs, &boxes)?;
-    }
-    trainer.loss_curve.clear(); // keep only the fine-tuning curve
-
-    // Held-out evaluation on RAW frames of the new sequences.
-    let eval_frames: Vec<(&crate::data::ImageRGB, &crate::data::BBox)> =
-        fine_ds.iter_frames().map(|(_, _, f, b)| (f, b)).collect();
-    let map_before = map50_95(&trainer.evaluate(&session, &eval_frames)?);
-
-    // --- Transmission + fog encoding ------------------------------------
-    let fog = FogNode::new(&session, cfg, sim.enc.clone());
     let receivers: Vec<NodeId> = (1..=sim.n_receivers).map(NodeId::Edge).collect();
     let source = NodeId::Edge(0);
 
     let mut upload_sizes: Vec<u64> = Vec::new();
-    let (records, fog_encode_seconds, payload_bytes, avg_frame_bytes) = match sim.method {
+    let mut upload_jpeg_seconds = 0.0;
+    let comp = match sim.method {
         Method::Jpeg { quality } => {
             // Serverless: source → receivers directly.
-            let comp = fog.compress(&fine_ds, Method::Jpeg { quality })?;
+            let comp = fog.compress(fine_ds, Method::Jpeg { quality })?;
             for rec in &comp.records {
                 let bytes = rec.payload_size() as u64;
                 for &r in &receivers {
                     net.send(source, r, bytes, "jpeg-direct");
                 }
             }
-            let afb = comp.avg_frame_bytes();
-            (comp.records, comp.encode_seconds, comp.payload_bytes, afb)
+            comp
         }
         m => {
             // Upload JPEG to the fog, compress there, broadcast INR.
+            let sw = Stopwatch::start();
             for (_, _, frame, _) in fine_ds.iter_frames() {
                 let up = crate::codec::jpeg::encode(frame, sim.upload_quality);
                 upload_sizes.push(up.len() as u64);
                 net.send(source, NodeId::Fog, up.len() as u64, "jpeg-upload");
             }
-            let comp = fog.compress(&fine_ds, m)?;
+            upload_jpeg_seconds = sw.seconds();
+            let comp = fog.compress(fine_ds, m)?;
             for rec in &comp.records {
                 net.broadcast(NodeId::Fog, &receivers, rec.payload_size() as u64, "inr-broadcast");
             }
-            let afb = comp.avg_frame_bytes();
-            (comp.records, comp.encode_seconds, comp.payload_bytes, afb)
+            comp
         }
     };
     // Labels (bboxes) for every method.
@@ -231,45 +245,62 @@ pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
         "labels",
     );
 
-    let upload_bytes = net.bytes_tagged("jpeg-upload");
-    let broadcast_bytes = net.bytes_tagged("inr-broadcast") + net.bytes_tagged("jpeg-direct");
-    let label_bytes = net.bytes_tagged("labels");
-    // Fig 11 measures ONE training edge device: its transmission cost is
-    // what it *receives* (the fog→edge INR broadcast or the JPEG stream),
-    // not the whole network's airtime (that is Fig 8's metric).
-    let transmission_seconds = net.seconds_to(NodeId::Edge(1));
-
-    // --- Fleet-engine adaptation (single-fog scenario) ------------------
-    // The measured record stream rides the discrete-event engine too:
-    // byte totals must match the serialized NetSim accounting exactly,
-    // while the engine reports a contention-aware overlapped makespan.
-    let fleet_cfg = crate::fleet::FleetConfig::for_measured(
-        sim.method,
-        sim.n_receivers,
-        sim.bandwidth,
-        sim.epochs,
-    );
-    let shard = crate::fleet::ShardTraffic::from_records(
-        sim.method,
+    let traffic =
+        ShardTraffic::from_records(sim.method, n_frames, upload_sizes, &comp.records, &sim.enc);
+    let avg_frame_bytes = comp.avg_frame_bytes();
+    Ok(EncodedShard {
+        traffic,
         n_frames,
-        upload_sizes,
-        &records,
-        &sim.enc,
-    );
-    let fleet_report = crate::fleet::simulate(&fleet_cfg, vec![shard]);
-    debug_assert_eq!(
-        fleet_report.total_bytes,
-        net.total_bytes(),
-        "fleet engine vs NetSim byte parity"
-    );
+        payload_bytes: comp.payload_bytes,
+        avg_frame_bytes,
+        fog_encode_seconds: comp.encode_seconds,
+        encode_steps: comp.encode_steps,
+        upload_jpeg_seconds,
+        upload_bytes: net.bytes_tagged("jpeg-upload"),
+        broadcast_bytes: net.bytes_tagged("inr-broadcast") + net.bytes_tagged("jpeg-direct"),
+        label_bytes: net.bytes_tagged("labels"),
+        cell_bytes: net.total_bytes(),
+        transmission_seconds: net.seconds_to(NodeId::Edge(1)),
+        records: comp.records,
+    })
+}
 
-    // --- Ingest on receiver 0 -------------------------------------------
-    let store = ingest(cfg, sim.profile, &records)?;
-    anyhow::ensure!(store.items.len() == n_frames, "store/frame mismatch");
-    let gt_boxes: Vec<crate::data::BBox> =
-        fine_ds.iter_frames().map(|(_, _, _, b)| *b).collect();
+/// Stage: detector pretraining (outside the measured window, §5.1.2).
+fn pretrain(
+    session: &Session,
+    trainer: &mut DetTrainer,
+    pre_frames: &[(&ImageRGB, &BBox)],
+    steps: usize,
+    rng: &mut Pcg32,
+) -> Result<()> {
+    if pre_frames.is_empty() {
+        return Ok(());
+    }
+    for _ in 0..steps {
+        let idx: Vec<usize> =
+            (0..trainer.batch).map(|_| rng.below_usize(pre_frames.len())).collect();
+        let imgs: Vec<&ImageRGB> = idx.iter().map(|&i| pre_frames[i].0).collect();
+        let boxes: Vec<BBox> = idx.iter().map(|&i| *pre_frames[i].1).collect();
+        trainer.train_batch(session, &imgs, &boxes)?;
+    }
+    trainer.loss_curve.clear(); // keep only the fine-tuning curve
+    Ok(())
+}
 
-    // --- Fine-tuning loop -------------------------------------------------
+/// Stage: receiver-side fine-tuning over decoded batches. Returns
+/// `(decode_seconds, train_seconds)` wall time.
+#[allow(clippy::too_many_arguments)]
+fn fine_tune(
+    session: &Session,
+    pool: &Pool,
+    cfg: &ArchConfig,
+    sim: &SimConfig,
+    trainer: &mut DetTrainer,
+    store: &EdgeStore,
+    gt_boxes: &[BBox],
+    rng: &mut Pcg32,
+) -> Result<(f64, f64)> {
+    let n_frames = store.items.len();
     let mut decode_seconds = 0.0;
     let mut train_seconds = 0.0;
     let steps_per_epoch = n_frames.div_ceil(trainer.batch);
@@ -295,7 +326,7 @@ pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
                 decode_jpeg_batch(&bytes, sim.jpeg_pipeline)?
             } else {
                 let (imgs, _st) = decode_batch(
-                    &pool,
+                    pool,
                     cfg.frame_w,
                     cfg.frame_h,
                     cfg.nerv_decode_batch,
@@ -307,29 +338,170 @@ pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
             decode_seconds += sw.seconds();
             // Train phase.
             let sw = Stopwatch::start();
-            let img_refs: Vec<&crate::data::ImageRGB> = images.iter().collect();
-            let boxes: Vec<crate::data::BBox> = idx.iter().map(|&i| gt_boxes[i]).collect();
-            trainer.train_batch(&session, &img_refs, &boxes)?;
+            let img_refs: Vec<&ImageRGB> = images.iter().collect();
+            let boxes: Vec<BBox> = idx.iter().map(|&i| gt_boxes[i]).collect();
+            trainer.train_batch(session, &img_refs, &boxes)?;
             train_seconds += sw.seconds();
         }
     }
+    Ok((decode_seconds, train_seconds))
+}
 
-    // --- Final evaluation --------------------------------------------------
+/// Stage: distill the run's own wall-time measurements into a
+/// [`Calibrated`] cost book. Knobs the run did not exercise (e.g. the
+/// per-step price under the JPEG method) back-fill from [`Analytical`].
+fn calibrate(
+    cfg: &ArchConfig,
+    sim: &SimConfig,
+    shards: &[EncodedShard],
+    decode_seconds: f64,
+    train_seconds: f64,
+    n_train_frames: usize,
+) -> CostBook {
+    let fallback = Analytical::new(cfg, sim.profile, sim.method, &sim.enc).book();
+    let encode_seconds: f64 = shards.iter().map(|s| s.fog_encode_seconds).sum();
+    // Price against the NOMINAL per-blob step counts the engine will
+    // multiply by (`Blob::encode_steps`), not the early-stopped actual
+    // count — engine cost × price must reproduce the measured wall time
+    // even when `target_psnr` stopped fits short of `bg_steps`.
+    let priced_steps: usize = shards
+        .iter()
+        .flat_map(|s| s.traffic.blobs.iter())
+        .map(|b| b.encode_steps)
+        .sum();
+    let seconds_per_step = if priced_steps > 0 {
+        encode_seconds / priced_steps as f64
+    } else {
+        fallback.seconds_per_step
+    };
+    let uploads: usize = shards.iter().map(|s| s.traffic.uploads.len()).sum();
+    let upload_seconds: f64 = shards.iter().map(|s| s.upload_jpeg_seconds).sum();
+    let total_frames: usize = shards.iter().map(|s| s.n_frames).sum();
+    let jpeg_encode_seconds = if uploads > 0 {
+        upload_seconds / uploads as f64
+    } else if matches!(sim.method, Method::Jpeg { .. }) && total_frames > 0 {
+        // Serverless JPEG: the fog "encode" is the JPEG pass itself.
+        encode_seconds / total_frames as f64
+    } else {
+        fallback.jpeg_encode_seconds
+    };
+    let trained = sim.epochs * n_train_frames;
+    let train_seconds_per_frame = if trained > 0 {
+        (decode_seconds + train_seconds) / trained as f64
+    } else {
+        fallback.train_seconds_per_frame
+    };
+    Calibrated::from_measurements(seconds_per_step, jpeg_encode_seconds, train_seconds_per_frame)
+        .book()
+}
+
+/// Wireless-cell bytes the measured shard traffic implies analytically:
+/// uploads land once on their own cell; every blob and label payload is
+/// unicast to each receiver in scope (all cells under multi-fog
+/// topologies, the local cell otherwise).
+fn expected_cell_bytes(fc: &FleetConfig, shards: &[EncodedShard]) -> u64 {
+    let scope_all = fc.topology != Topology::SingleFog && fc.n_fogs > 1;
+    let uploads: u64 = shards.iter().map(|s| s.traffic.upload_bytes()).sum();
+    if scope_all {
+        let receivers: u64 = (0..fc.n_fogs).map(|f| fc.receivers_of_fog(f) as u64).sum();
+        let per_receiver: u64 = shards
+            .iter()
+            .map(|s| s.traffic.payload_bytes() + s.traffic.label_bytes())
+            .sum();
+        uploads + receivers * per_receiver
+    } else {
+        uploads
+            + shards
+                .iter()
+                .enumerate()
+                .map(|(f, s)| {
+                    fc.receivers_of_fog(f) as u64
+                        * (s.traffic.payload_bytes() + s.traffic.label_bytes())
+                })
+                .sum::<u64>()
+    }
+}
+
+/// Run one full single-fog simulation (the paper's testbed).
+pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
+    let session = Session::open_default()?;
+    let pool = Pool::open_default(sim.decode_workers)?;
+    let mut rng = Pcg32::seeded(sim.seed ^ 0x51);
+
+    // --- Partition -----------------------------------------------------
+    let ds = generate_dataset(sim.profile, sim.seed, sim.n_sequences);
+    let (pre_ds, fine_ds) = ds.split_half();
+    let fine_ds = match sim.max_train_frames {
+        Some(m) => cap_frames(&fine_ds, m),
+        None => fine_ds,
+    };
+    let n_frames = fine_ds.total_frames();
+
+    // --- Pretrain ------------------------------------------------------
+    let mut trainer = DetTrainer::new(cfg, sim.seed ^ 0xDE7);
+    let pre_frames: Vec<(&ImageRGB, &BBox)> =
+        pre_ds.iter_frames().map(|(_, _, f, b)| (f, b)).collect();
+    pretrain(&session, &mut trainer, &pre_frames, sim.pretrain_steps, &mut rng)?;
+
+    // Held-out evaluation on RAW frames of the new sequences.
+    let eval_frames: Vec<(&ImageRGB, &BBox)> =
+        fine_ds.iter_frames().map(|(_, _, f, b)| (f, b)).collect();
+    let map_before = map50_95(&trainer.evaluate(&session, &eval_frames)?);
+
+    // --- Encode (live) + serialized byte accounting --------------------
+    let fog = FogNode::new(&session, cfg, sim.enc.clone());
+    let shard = encode_shard(&fog, sim, &fine_ds)?;
+
+    // --- Ingest + fine-tune on receiver 0 ------------------------------
+    let store = ingest(cfg, sim.profile, &shard.records)?;
+    anyhow::ensure!(store.items.len() == n_frames, "store/frame mismatch");
+    let gt_boxes: Vec<BBox> = fine_ds.iter_frames().map(|(_, _, _, b)| *b).collect();
+    let (decode_seconds, train_seconds) =
+        fine_tune(&session, &pool, cfg, sim, &mut trainer, &store, &gt_boxes, &mut rng)?;
+
+    // --- Calibrate + fleet adaptation ----------------------------------
+    // The measured record stream rides the discrete-event engine too:
+    // byte totals must match the serialized NetSim accounting exactly
+    // (counted below), while the engine reports a contention-aware
+    // overlapped makespan priced by the calibrated cost book.
+    let costs = calibrate(
+        cfg,
+        sim,
+        std::slice::from_ref(&shard),
+        decode_seconds,
+        train_seconds,
+        n_frames,
+    );
+    let fleet_cfg = FleetConfig::for_measured(
+        sim.method,
+        Topology::SingleFog,
+        1,
+        sim.n_receivers,
+        sim.bandwidth,
+        sim.epochs,
+        costs,
+    );
+    let fleet_report = crate::fleet::simulate(&fleet_cfg, vec![shard.traffic.clone()]);
+    let byte_parity_mismatch = fleet_report.total_bytes.abs_diff(shard.cell_bytes);
+
+    // --- Final evaluation ----------------------------------------------
     let dets = trainer.evaluate(&session, &eval_frames)?;
     Ok(SimReport {
         method: sim.method.name().to_string(),
         grouped: sim.grouped,
-        upload_bytes,
-        broadcast_bytes,
-        label_bytes,
-        total_bytes: net.total_bytes(),
-        transmission_seconds,
+        upload_bytes: shard.upload_bytes,
+        broadcast_bytes: shard.broadcast_bytes,
+        label_bytes: shard.label_bytes,
+        total_bytes: shard.cell_bytes,
+        transmission_seconds: shard.transmission_seconds,
         decode_seconds,
         train_seconds,
-        fog_encode_seconds,
+        fog_encode_seconds: shard.fog_encode_seconds,
         fleet_makespan_seconds: fleet_report.makespan_seconds,
-        payload_bytes,
-        avg_frame_bytes,
+        costs,
+        byte_parity_mismatch,
+        payload_bytes: shard.payload_bytes,
+        avg_frame_bytes: shard.avg_frame_bytes,
         device_memory_bytes: store.memory_bytes,
         map_before,
         map50_after: map50(&dets),
@@ -338,5 +510,221 @@ pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
         loss_curve: trainer.loss_curve.clone(),
         n_train_frames: n_frames,
         train_steps: trainer.steps_done,
+    })
+}
+
+/// Multi-fog topology knobs for [`run_multi`].
+#[derive(Debug, Clone, Copy)]
+pub struct MultiFogConfig {
+    pub n_fogs: usize,
+    pub topology: Topology,
+}
+
+/// One fog shard's slice of a measured multi-fog run.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub shard: usize,
+    pub n_frames: usize,
+    pub n_records: usize,
+    pub upload_bytes: u64,
+    pub payload_bytes: u64,
+    pub label_bytes: u64,
+    /// Serialized single-cell NetSim total for this shard's cell.
+    pub cell_bytes: u64,
+    pub avg_frame_bytes: f64,
+    pub encode_seconds: f64,
+    pub encode_steps: usize,
+}
+
+/// A measured multi-fog run: per-shard and fleet-wide bytes, an
+/// overlap-aware makespan priced by a calibrated cost book, and accuracy
+/// from real weights end to end.
+#[derive(Debug, Clone)]
+pub struct MultiFogReport {
+    pub method: String,
+    pub topology: &'static str,
+    pub n_fogs: usize,
+    pub receivers_per_fog: usize,
+    /// Cost book calibrated from the live run (fleet timing source).
+    pub costs: CostBook,
+    pub shards: Vec<ShardReport>,
+    /// Discrete-event fleet run over the measured record streams.
+    pub fleet: FleetReport,
+    /// Wireless-cell bytes the measured traffic predicts analytically.
+    pub expected_cell_bytes: u64,
+    /// |expected − engine cell bytes| (0 when accounting is faithful).
+    pub byte_parity_mismatch: u64,
+    // Edge-side measured fine-tune (one receiver trains on every shard).
+    pub decode_seconds: f64,
+    pub train_seconds: f64,
+    pub n_train_frames: usize,
+    pub train_steps: usize,
+    // Accuracy on raw held-out frames, trained on reconstructions.
+    pub map_before: f64,
+    pub map50_after: f64,
+    pub map_after: f64,
+    pub mean_iou_after: f64,
+}
+
+impl MultiFogReport {
+    pub fn print(&self) {
+        println!(
+            "# sim measured multi-fog method={} topology={} fogs={} receivers/fog={}",
+            self.method, self.topology, self.n_fogs, self.receivers_per_fog
+        );
+        let mut t = crate::bench_support::Table::new(&[
+            "shard", "frames", "records", "upload", "payload", "cell", "encode (s)", "steps",
+        ]);
+        for s in &self.shards {
+            t.row(&[
+                s.shard.to_string(),
+                s.n_frames.to_string(),
+                s.n_records.to_string(),
+                fmt_bytes(s.upload_bytes),
+                fmt_bytes(s.payload_bytes),
+                fmt_bytes(s.cell_bytes),
+                format!("{:.2}", s.encode_seconds),
+                s.encode_steps.to_string(),
+            ]);
+        }
+        t.print();
+        println!(
+            "cost model               : {} ({:.2e} s/step, {:.2e} s/frame train)",
+            self.costs.source.name(),
+            self.costs.seconds_per_step,
+            self.costs.train_seconds_per_frame
+        );
+        println!("fleet total bytes        : {}", fmt_bytes(self.fleet.total_bytes));
+        println!("fleet backhaul bytes     : {}", fmt_bytes(self.fleet.backhaul_bytes));
+        println!("fleet makespan (overlap) : {:.2} s", self.fleet.makespan_seconds);
+        println!(
+            "byte parity              : expected {} vs engine {} (mismatch {} B)",
+            fmt_bytes(self.expected_cell_bytes),
+            fmt_bytes(self.fleet.cell_bytes()),
+            self.byte_parity_mismatch
+        );
+        println!(
+            "decode / train (edge)    : {:.2} s / {:.2} s",
+            self.decode_seconds, self.train_seconds
+        );
+        println!("frames trained           : {}", self.n_train_frames);
+        println!("mAP50-95 before → after  : {:.3} → {:.3}", self.map_before, self.map_after);
+        println!("mean IoU after           : {:.3}", self.mean_iou_after);
+    }
+}
+
+/// Run the measured pipeline across `mf.n_fogs` fog shards: the live
+/// encoder runs per shard, every receiver ingests every shard (matching
+/// the fleet engine's all-shards broadcast scope), and the fleet engine
+/// reports the overlap-aware fleet-wide makespan.
+pub fn run_multi(cfg: &ArchConfig, sim: &SimConfig, mf: &MultiFogConfig) -> Result<MultiFogReport> {
+    anyhow::ensure!(mf.n_fogs >= 1, "need at least one fog shard");
+    if mf.topology == Topology::SingleFog {
+        anyhow::ensure!(mf.n_fogs == 1, "single-fog topology requires --fogs 1");
+    }
+    let session = Session::open_default()?;
+    let pool = Pool::open_default(sim.decode_workers)?;
+    let mut rng = Pcg32::seeded(sim.seed ^ 0x51);
+
+    // --- Shard: one generated dataset slice per fog (mirrors the
+    // synthetic fleet path's per-fog generator) ------------------------
+    let mut pre_sets = Vec::with_capacity(mf.n_fogs);
+    let mut fine_sets = Vec::with_capacity(mf.n_fogs);
+    for f in 0..mf.n_fogs {
+        let ds =
+            generate_dataset(sim.profile, sim.seed.wrapping_add(f as u64), sim.n_sequences);
+        let (pre, fine) = ds.split_half();
+        let fine = match sim.max_train_frames {
+            Some(m) => cap_frames(&fine, m),
+            None => fine,
+        };
+        pre_sets.push(pre);
+        fine_sets.push(fine);
+    }
+
+    // --- Pretrain on the union of held-back halves ---------------------
+    let mut trainer = DetTrainer::new(cfg, sim.seed ^ 0xDE7);
+    let pre_frames: Vec<(&ImageRGB, &BBox)> = pre_sets
+        .iter()
+        .flat_map(|ds| ds.iter_frames().map(|(_, _, f, b)| (f, b)))
+        .collect();
+    pretrain(&session, &mut trainer, &pre_frames, sim.pretrain_steps, &mut rng)?;
+    let eval_frames: Vec<(&ImageRGB, &BBox)> = fine_sets
+        .iter()
+        .flat_map(|ds| ds.iter_frames().map(|(_, _, f, b)| (f, b)))
+        .collect();
+    let map_before = map50_95(&trainer.evaluate(&session, &eval_frames)?);
+
+    // --- Encode every shard with the live fog encoder ------------------
+    let fog = FogNode::new(&session, cfg, sim.enc.clone());
+    let mut shards = Vec::with_capacity(mf.n_fogs);
+    for fine in &fine_sets {
+        shards.push(encode_shard(&fog, sim, fine)?);
+    }
+
+    // --- Every receiver ingests every shard; fine-tune one receiver ----
+    let mut store = EdgeStore::default();
+    let mut gt_boxes: Vec<BBox> = Vec::new();
+    for (shard, fine) in shards.iter().zip(&fine_sets) {
+        let s = ingest(cfg, sim.profile, &shard.records)?;
+        anyhow::ensure!(s.items.len() == shard.n_frames, "store/frame mismatch");
+        store.merge(s);
+        gt_boxes.extend(fine.iter_frames().map(|(_, _, _, b)| *b));
+    }
+    let n_train_frames = store.items.len();
+    let (decode_seconds, train_seconds) =
+        fine_tune(&session, &pool, cfg, sim, &mut trainer, &store, &gt_boxes, &mut rng)?;
+
+    // --- Calibrate + fleet run over the measured streams ---------------
+    let costs = calibrate(cfg, sim, &shards, decode_seconds, train_seconds, n_train_frames);
+    let fleet_cfg = FleetConfig::for_measured(
+        sim.method,
+        mf.topology,
+        mf.n_fogs,
+        sim.n_receivers,
+        sim.bandwidth,
+        sim.epochs,
+        costs,
+    );
+    let traffic: Vec<ShardTraffic> = shards.iter().map(|s| s.traffic.clone()).collect();
+    let fleet = crate::fleet::simulate(&fleet_cfg, traffic);
+    let expected = expected_cell_bytes(&fleet_cfg, &shards);
+    let byte_parity_mismatch = fleet.cell_bytes().abs_diff(expected);
+
+    // --- Final evaluation ----------------------------------------------
+    let dets = trainer.evaluate(&session, &eval_frames)?;
+    Ok(MultiFogReport {
+        method: sim.method.name().to_string(),
+        topology: mf.topology.name(),
+        n_fogs: mf.n_fogs,
+        receivers_per_fog: sim.n_receivers,
+        costs,
+        shards: shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ShardReport {
+                shard: i,
+                n_frames: s.n_frames,
+                n_records: s.records.len(),
+                upload_bytes: s.upload_bytes,
+                payload_bytes: s.traffic.payload_bytes(),
+                label_bytes: s.traffic.label_bytes(),
+                cell_bytes: s.cell_bytes,
+                avg_frame_bytes: s.avg_frame_bytes,
+                encode_seconds: s.fog_encode_seconds,
+                encode_steps: s.encode_steps,
+            })
+            .collect(),
+        fleet,
+        expected_cell_bytes: expected,
+        byte_parity_mismatch,
+        decode_seconds,
+        train_seconds,
+        n_train_frames,
+        train_steps: trainer.steps_done,
+        map_before,
+        map50_after: map50(&dets),
+        map_after: map50_95(&dets),
+        mean_iou_after: mean_iou(&dets),
     })
 }

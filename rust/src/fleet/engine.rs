@@ -157,9 +157,9 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
             Event::EncodeReady { fog, blob } => {
                 let steps = fogs[fog].traffic.blobs[blob].encode_steps;
                 let cost = if steps == 0 {
-                    fc.jpeg_encode_seconds
+                    fc.costs.jpeg_encode_seconds
                 } else {
-                    steps as f64 * fc.seconds_per_step
+                    steps as f64 * fc.costs.seconds_per_step
                 };
                 let (_start, finish) = fogs[fog].pool.schedule(now, cost);
                 q.push(finish, Event::EncodeDone { fog, blob });
@@ -196,7 +196,7 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
                         fogs[fog].traffic.n_frames
                     };
                     let t = now
-                        + fc.epochs as f64 * frames as f64 * fc.train_seconds_per_frame;
+                        + fc.epochs as f64 * frames as f64 * fc.costs.train_seconds_per_frame;
                     q.push(t, Event::TrainDone { fog, edge });
                 }
             }
@@ -217,6 +217,7 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
         n_receivers: (0..n_fogs).map(|f| fc.receivers_of_fog(f)).sum(),
         n_frames: total_frames,
         n_blobs: total_blobs,
+        costs: fc.costs,
         upload_bytes: 0,
         broadcast_bytes: 0,
         label_bytes: 0,
@@ -361,6 +362,7 @@ mod tests {
     use super::*;
     use crate::coordinator::EncoderConfig;
     use crate::coordinator::Method;
+    use crate::costmodel::{CostBook, CostSource};
     use crate::fleet::traffic::blob_from_record;
     use crate::inr::Record;
 
@@ -383,16 +385,23 @@ mod tests {
         ShardTraffic { method, n_frames: sizes.len(), uploads, blobs }
     }
 
+    /// Hand-checkable cost book: every virtual price is 1 ms.
+    fn unit_costs() -> CostBook {
+        CostBook {
+            seconds_per_step: 1e-3,
+            jpeg_encode_seconds: 1e-3,
+            train_seconds_per_frame: 1e-3,
+            source: CostSource::Analytical,
+        }
+    }
+
     fn base_fc(method: Method, edges: usize) -> FleetConfig {
-        let mut fc = FleetConfig::paper_10(method);
+        let mut fc = FleetConfig::paper_10(method, unit_costs());
         fc.n_edges = edges;
         fc.bandwidth = 1e6;
         fc.latency = 0.0;
         fc.backhaul_bandwidth = 1e7;
-        fc.seconds_per_step = 1e-3;
-        fc.jpeg_encode_seconds = 1e-3;
         fc.epochs = 1;
-        fc.train_seconds_per_frame = 1e-3;
         fc
     }
 

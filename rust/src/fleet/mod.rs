@@ -17,8 +17,12 @@
 //! * [`traffic`] — the session-free size/cost model: zero-weight packed
 //!   records whose byte sizes match the live encoder record-for-record;
 //! * [`scenario`] — `paper-10` / `sharded` / `hierarchical` topologies;
+//!   virtual-time prices come from a [`crate::costmodel::CostBook`]
+//!   (calibrated against live PJRT timing, or analytical), never from
+//!   hard-coded constants;
 //! * [`engine`] — the event loop tying it together;
-//! * [`report`] — per-fog and fleet-wide reports.
+//! * [`report`] — per-fog and fleet-wide reports (including which cost
+//!   model priced the run).
 //!
 //! Single-fog runs reproduce the legacy byte totals exactly (enforced by
 //! `tests/integration_fleet.rs` against both `NetSim` replay and the §4

@@ -1,6 +1,7 @@
 //! Fleet run reports: per-fog and fleet-wide byte/time/cache accounting.
 
 use crate::bench_support::Table;
+use crate::costmodel::CostBook;
 use crate::util::fmt_bytes;
 
 use super::cache::CacheStats;
@@ -40,6 +41,9 @@ pub struct FleetReport {
     pub n_receivers: usize,
     pub n_frames: usize,
     pub n_blobs: usize,
+    /// Virtual-time prices the run was simulated with (and their source:
+    /// calibrated against live PJRT timing, or analytical).
+    pub costs: CostBook,
     // Byte accounting across all wireless cells + backhaul links.
     pub upload_bytes: u64,
     pub broadcast_bytes: u64,
@@ -72,6 +76,13 @@ impl FleetReport {
             self.n_receivers
         );
         println!("frames / blobs           : {} / {}", self.n_frames, self.n_blobs);
+        println!(
+            "cost model               : {} ({:.2e} s/step, {:.2e} s/jpeg, {:.2e} s/frame train)",
+            self.costs.source.name(),
+            self.costs.seconds_per_step,
+            self.costs.jpeg_encode_seconds,
+            self.costs.train_seconds_per_frame
+        );
         println!("upload bytes             : {}", fmt_bytes(self.upload_bytes));
         println!("broadcast bytes          : {}", fmt_bytes(self.broadcast_bytes));
         println!("label bytes              : {}", fmt_bytes(self.label_bytes));

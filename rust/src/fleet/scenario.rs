@@ -13,10 +13,16 @@
 //!   to the cloud once; destination fogs pull it over their downlink on
 //!   first local demand and serve the rest of their cell from the
 //!   content-addressed weight cache.
+//!
+//! Virtual-time prices (encode step, JPEG encode, per-frame fine-tune)
+//! are not set here: every config carries a [`CostBook`] resolved by
+//! [`crate::costmodel`] — calibrated against the live PJRT session when
+//! artifacts exist, analytical otherwise.
 
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::{EncoderConfig, Method};
+use crate::costmodel::CostBook;
 use crate::data::Profile;
 
 /// How fog cells share encoded blobs.
@@ -36,6 +42,16 @@ impl Topology {
             Topology::SingleFog => "single-fog",
             Topology::Sharded => "sharded",
             Topology::Hierarchical => "hierarchical",
+        }
+    }
+
+    /// Parse a CLI topology name.
+    pub fn from_name(s: &str) -> Option<Topology> {
+        match s {
+            "single" | "single-fog" | "paper-10" | "paper10" => Some(Topology::SingleFog),
+            "sharded" | "mesh" => Some(Topology::Sharded),
+            "hierarchical" | "cloud" => Some(Topology::Hierarchical),
+            _ => None,
         }
     }
 }
@@ -69,22 +85,21 @@ pub struct FleetConfig {
     pub backhaul_bandwidth: f64,
     /// Encode workers per fog.
     pub encode_workers: usize,
-    /// Virtual cost of one Adam encode step at the fog.
-    pub seconds_per_step: f64,
-    /// Virtual cost of one JPEG encode on the source device.
-    pub jpeg_encode_seconds: f64,
+    /// Virtual-time prices (encode step / JPEG encode / per-frame
+    /// fine-tune), resolved by [`crate::costmodel`].
+    pub costs: CostBook,
     /// Per-fog weight-cache capacity in bytes (0 disables).
     pub cache_bytes: u64,
-    /// Fine-tuning epochs and per-frame decode+train cost on a receiver.
+    /// Fine-tuning epochs on a receiver.
     pub epochs: usize,
-    pub train_seconds_per_frame: f64,
 }
 
 impl FleetConfig {
-    /// The paper's single-fog 10-device testbed, parameterized by method.
-    /// Dataset knobs mirror [`crate::coordinator::SimConfig::small`] so
-    /// byte totals line up with `simulate` on the same seed/profile.
-    pub fn paper_10(method: Method) -> FleetConfig {
+    /// The paper's single-fog 10-device testbed, parameterized by method
+    /// and a resolved cost book. Dataset knobs mirror
+    /// [`crate::coordinator::SimConfig::small`] so byte totals line up
+    /// with `simulate` on the same seed/profile.
+    pub fn paper_10(method: Method, costs: CostBook) -> FleetConfig {
         FleetConfig {
             topology: Topology::SingleFog,
             scenario: "paper-10".to_string(),
@@ -103,58 +118,50 @@ impl FleetConfig {
             backhaul_bandwidth: crate::net::DEFAULT_BANDWIDTH * (128.0 * 96.0) / 230_400.0
                 * BACKHAUL_FACTOR,
             encode_workers: 4,
-            // ~0.6 s per Res-Rapid frame at the `fast` encoder profile —
-            // encoding, not the wireless cell, is the fog's bottleneck,
-            // which is what the worker pool exists to absorb.
-            seconds_per_step: 2e-3,
-            jpeg_encode_seconds: 2e-3,
+            costs,
             cache_bytes: 64 << 20,
             epochs: 2,
-            train_seconds_per_frame: 5e-3,
         }
     }
 
     /// Resolve a scenario name to a config with that topology's default
-    /// fleet size (overridable via CLI flags).
-    pub fn from_scenario(name: &str, method: Method) -> Result<FleetConfig> {
-        let mut fc = FleetConfig::paper_10(method);
+    /// fleet size (overridable via CLI flags). Name → topology mapping
+    /// lives in [`Topology::from_name`]; only size defaults live here.
+    pub fn from_scenario(name: &str, method: Method, costs: CostBook) -> Result<FleetConfig> {
+        let mut fc = FleetConfig::paper_10(method, costs);
         fc.scenario = name.to_string();
-        match name {
-            "paper-10" | "paper10" | "single" | "single-fog" => {}
-            "sharded" => {
-                fc.topology = Topology::Sharded;
-                fc.n_fogs = 4;
-                fc.n_edges = 200;
-            }
-            "hierarchical" | "cloud" => {
-                fc.topology = Topology::Hierarchical;
-                fc.n_fogs = 4;
-                fc.n_edges = 200;
-            }
-            _ => {
-                return Err(anyhow!(
-                    "unknown scenario {name} (paper-10|sharded|hierarchical)"
-                ))
-            }
+        fc.topology = Topology::from_name(name).ok_or_else(|| {
+            anyhow!("unknown scenario {name} (paper-10|sharded|hierarchical)")
+        })?;
+        if fc.topology != Topology::SingleFog {
+            fc.n_fogs = 4;
+            fc.n_edges = 200;
         }
         Ok(fc)
     }
 
-    /// Minimal single-fog config used when adapting a *measured*
-    /// `coordinator::sim` run onto the fleet engine: link parameters and
-    /// receiver count drive byte parity; `epochs` is a workload
-    /// parameter (unlike the virtual cost knobs) and must match the
-    /// live run so the modeled makespan describes the same fine-tune.
+    /// Config for adapting a *measured* `coordinator::sim` run onto the
+    /// fleet engine: F fog cells with `receivers_per_fog` receivers each,
+    /// link parameters driving byte parity, and a cost book calibrated
+    /// from the live run. `epochs` is a workload parameter (unlike the
+    /// virtual prices) and must match the live run so the modeled
+    /// makespan describes the same fine-tune.
     pub fn for_measured(
         method: Method,
-        n_receivers: usize,
+        topology: Topology,
+        n_fogs: usize,
+        receivers_per_fog: usize,
         bandwidth: f64,
         epochs: usize,
+        costs: CostBook,
     ) -> FleetConfig {
-        let mut fc = FleetConfig::paper_10(method);
-        fc.scenario = "measured-single-fog".to_string();
-        fc.n_edges = n_receivers + 1;
+        let mut fc = FleetConfig::paper_10(method, costs);
+        fc.scenario = format!("measured-{}", topology.name());
+        fc.topology = topology;
+        fc.n_fogs = n_fogs;
+        fc.n_edges = n_fogs * (receivers_per_fog + 1);
         fc.bandwidth = bandwidth;
+        fc.backhaul_bandwidth = bandwidth * BACKHAUL_FACTOR;
         fc.epochs = epochs;
         fc.encode_workers = 1; // the live encoder is serial
         fc
@@ -205,27 +212,75 @@ impl FleetConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ArchConfig;
+    use crate::costmodel::{Analytical, CostModel, CostSource};
+
+    fn book(m: Method) -> CostBook {
+        Analytical::new(
+            &ArchConfig::load_default().unwrap(),
+            Profile::DacSdc,
+            m,
+            &EncoderConfig::fast(),
+        )
+        .book()
+    }
 
     #[test]
     fn scenario_names_resolve() {
         let m = Method::ResRapid { direct: false };
         assert_eq!(
-            FleetConfig::from_scenario("paper-10", m).unwrap().topology,
+            FleetConfig::from_scenario("paper-10", m, book(m)).unwrap().topology,
             Topology::SingleFog
         );
         assert_eq!(
-            FleetConfig::from_scenario("sharded", m).unwrap().topology,
+            FleetConfig::from_scenario("sharded", m, book(m)).unwrap().topology,
             Topology::Sharded
         );
-        let h = FleetConfig::from_scenario("hierarchical", m).unwrap();
+        let h = FleetConfig::from_scenario("hierarchical", m, book(m)).unwrap();
         assert_eq!(h.topology, Topology::Hierarchical);
         assert_eq!(h.n_fogs, 4);
-        assert!(FleetConfig::from_scenario("bogus", m).is_err());
+        assert!(FleetConfig::from_scenario("bogus", m, book(m)).is_err());
+    }
+
+    #[test]
+    fn topology_names_roundtrip() {
+        for t in [Topology::SingleFog, Topology::Sharded, Topology::Hierarchical] {
+            assert_eq!(Topology::from_name(t.name()), Some(t));
+        }
+        assert_eq!(Topology::from_name("cloud"), Some(Topology::Hierarchical));
+        assert_eq!(Topology::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn configs_carry_a_resolved_cost_book() {
+        let m = Method::RapidSingle;
+        let fc = FleetConfig::paper_10(m, book(m));
+        assert_eq!(fc.costs.source, CostSource::Analytical);
+        assert!(fc.costs.seconds_per_step > 0.0);
+        assert!(fc.costs.train_seconds_per_frame > 0.0);
+    }
+
+    #[test]
+    fn for_measured_builds_the_requested_fleet_shape() {
+        let m = Method::ResRapid { direct: false };
+        let fc = FleetConfig::for_measured(m, Topology::Sharded, 4, 3, 1e6, 2, book(m));
+        assert_eq!(fc.n_fogs, 4);
+        assert_eq!(fc.n_edges, 16);
+        for f in 0..4 {
+            assert_eq!(fc.receivers_of_fog(f), 3);
+        }
+        assert_eq!(fc.encode_workers, 1);
+        assert_eq!(fc.scenario, "measured-sharded");
+        assert!(fc.validate().is_ok());
+        let single = FleetConfig::for_measured(m, Topology::SingleFog, 1, 9, 1e6, 2, book(m));
+        assert_eq!(single.n_edges, 10);
+        assert!(single.validate().is_ok());
     }
 
     #[test]
     fn edge_distribution_covers_all_edges() {
-        let mut fc = FleetConfig::from_scenario("sharded", Method::RapidSingle).unwrap();
+        let m = Method::RapidSingle;
+        let mut fc = FleetConfig::from_scenario("sharded", m, book(m)).unwrap();
         fc.n_fogs = 3;
         fc.n_edges = 11;
         let total: usize = (0..fc.n_fogs).map(|f| fc.edges_of_fog(f)).sum();
@@ -238,10 +293,11 @@ mod tests {
 
     #[test]
     fn validation_rejects_degenerate_fleets() {
-        let mut fc = FleetConfig::paper_10(Method::Nerv);
+        let m = Method::Nerv;
+        let mut fc = FleetConfig::paper_10(m, book(m));
         fc.n_fogs = 4; // single-fog topology with 4 fogs
         assert!(fc.validate().is_err());
-        let mut fc = FleetConfig::from_scenario("sharded", Method::Nerv).unwrap();
+        let mut fc = FleetConfig::from_scenario("sharded", m, book(m)).unwrap();
         fc.n_edges = 2; // fewer edges than fogs
         assert!(fc.validate().is_err());
     }

@@ -23,12 +23,17 @@
 //! * [`codec`] — from-scratch baseline JPEG
 //! * [`inr`] — INR weight containers, 8/16-bit quantization, wire format
 //! * [`runtime`] — PJRT artifact registry + executor
-//! * [`coordinator`] — fog node & edge devices (the paper's system)
+//! * [`coordinator`] — fog node & edge devices (the paper's system);
+//!   `sim` runs the measured pipeline single-fog or sharded across F fog
+//!   cells (`sim --fogs F --topology sharded`)
 //! * [`pipeline`] — grouped parallel decoding (§3.2) + baseline loaders
 //! * [`net`] — simulated wireless network (single shared medium)
 //! * [`fleet`] — discrete-event multi-fog scale-out simulator: event
 //!   queue, contention-aware channels, encode worker pools, and a
 //!   content-addressed INR weight cache per fog
+//! * [`costmodel`] — virtual-time prices for the fleet engine: a
+//!   `Calibrated` model measured against the live PJRT session, with an
+//!   `Analytical` fallback (shape-derived) when `artifacts/` are absent
 //! * [`commmodel`] — §4 analytical communication model
 //! * [`training`] — on-device detection fine-tuning driver
 //! * [`metrics`] — PSNR / entropy / mAP / stats
@@ -39,6 +44,7 @@ pub mod codec;
 pub mod commmodel;
 pub mod config;
 pub mod coordinator;
+pub mod costmodel;
 pub mod data;
 pub mod fleet;
 pub mod inr;

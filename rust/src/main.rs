@@ -1,7 +1,9 @@
 //! `residual-inr` CLI — the Layer-3 leader entrypoint.
 //!
 //! Subcommands:
-//! * `simulate`  — run the end-to-end fog on-device-learning experiment
+//! * `simulate` (`sim`) — run the end-to-end fog on-device-learning
+//!   experiment; `--fogs F --topology sharded|hierarchical` shards the
+//!   measured pipeline across F live-encoded fog cells
 //! * `fleet`     — discrete-event multi-fog scale-out simulation
 //! * `compress`  — compress a synthetic dataset, report size/PSNR
 //! * `commmodel` — evaluate the §4 analytical communication model
@@ -10,8 +12,9 @@
 //! Examples:
 //! ```text
 //! residual-inr simulate --method res-rapid --profile uav123 --epochs 2
+//! residual-inr sim --fogs 4 --topology sharded --method res-rapid
 //! residual-inr fleet --scenario paper-10 --method res-rapid
-//! residual-inr fleet --scenario sharded --fogs 4 --edges 200
+//! residual-inr fleet --scenario sharded --fogs 4 --edges 200 --cost analytical
 //! residual-inr compress --method jpeg --quality 60
 //! residual-inr commmodel --devices 10 --alpha 0.15
 //! ```
@@ -19,9 +22,13 @@
 use anyhow::{anyhow, Result};
 
 use residual_inr::config::ArchConfig;
-use residual_inr::coordinator::{run_sim, EncoderConfig, Method, SimConfig};
+use residual_inr::coordinator::{
+    run_multi, run_sim, EncoderConfig, Method, MultiFogConfig, SimConfig,
+};
+use residual_inr::costmodel::{self, Analytical, Calibrated, CostModel, CostSource};
 use residual_inr::data::Profile;
-use residual_inr::fleet::FleetConfig;
+use residual_inr::fleet::{FleetConfig, Topology};
+use residual_inr::runtime::Session;
 use residual_inr::util::cli::Args;
 use residual_inr::util::fmt_bytes;
 
@@ -44,7 +51,7 @@ fn parse_method(s: &str, quality: u8) -> Result<Method> {
 fn main() -> Result<()> {
     let args = Args::parse_env(&["no-grouping", "full"]).map_err(|e| anyhow!(e))?;
     match args.subcommand.as_deref() {
-        Some("simulate") => simulate(&args),
+        Some("simulate") | Some("sim") => simulate(&args),
         Some("fleet") => fleet(&args),
         Some("compress") => compress(&args),
         Some("commmodel") => commmodel(&args),
@@ -58,11 +65,14 @@ fn main() -> Result<()> {
                  simulate   --method <jpeg|rapid|res-rapid|res-rapid-direct|nerv|res-nerv>\n\
                  \u{20}          --profile <dac-sdc|uav123|otb100>\n\
                  \u{20}          --sequences N --epochs N --receivers N --max-frames N [--no-grouping]\n\
+                 \u{20}          --fogs F --topology <sharded|hierarchical> (F > 1 runs the\n\
+                 \u{20}          live encoder per fog shard and reports fleet-wide makespan\n\
+                 \u{20}          from a cost model calibrated on the run; alias: sim)\n\
                  fleet      --scenario <paper-10|sharded|hierarchical> --method M --profile P\n\
                  \u{20}          --fogs N --edges N --workers K --sequences N --max-frames N\n\
-                 \u{20}          --epochs N --seed S --cache-mb MB (paper-10 = 1 fog, 10 edge\n\
-                 \u{20}          devices; sharded = per-fog shards over mesh backhaul;\n\
-                 \u{20}          hierarchical = cloud→fog→edge relay with weight caching)\n\
+                 \u{20}          --epochs N --seed S --cache-mb MB --cost <auto|analytical|calibrated>\n\
+                 \u{20}          (paper-10 = 1 fog, 10 edge devices; sharded = per-fog shards\n\
+                 \u{20}          over mesh backhaul; hierarchical = cloud→fog→edge relay)\n\
                  compress   --method M --profile P --max-frames N [--quality Q]\n\
                  commmodel  --devices K --alpha A [--receivers N]\n\
                  info\n\
@@ -93,6 +103,56 @@ fn simulate(args: &Args) -> Result<()> {
         sim.enc = EncoderConfig::default();
         sim.max_train_frames = None;
     }
+    let fogs = args.get_usize("fogs", 1).map_err(|e| anyhow!(e))?;
+    if fogs <= 1 && args.get("topology").is_some() {
+        return Err(anyhow!("--topology requires --fogs > 1 (the multi-fog measured pipeline)"));
+    }
+    if fogs > 1 {
+        let topology = args.get_or("topology", "sharded");
+        let topology = Topology::from_name(topology)
+            .ok_or_else(|| anyhow!("unknown topology {topology} (sharded|hierarchical)"))?;
+        let mf = MultiFogConfig { n_fogs: fogs, topology };
+        println!(
+            "# simulate method={} profile={} fogs={} topology={}",
+            sim.method.name(),
+            profile.name(),
+            fogs,
+            topology.name()
+        );
+        // Artifact presence is a manifest read, not a PJRT session —
+        // run_multi opens the real session itself.
+        if residual_inr::runtime::Manifest::load_default().is_err() {
+            // No artifacts → the live encoder cannot run; degrade to the
+            // modeled shards with analytical prices, loudly.
+            println!(
+                "# cost model: analytical (AOT artifacts absent — live per-shard encode \
+                 unavailable; simulating modeled shards; run `python -m compile.aot` \
+                 for the measured pipeline)"
+            );
+            let costs = Analytical::new(&cfg, sim.profile, sim.method, &sim.enc).book();
+            let mut fc = FleetConfig::for_measured(
+                sim.method,
+                topology,
+                fogs,
+                sim.n_receivers,
+                sim.bandwidth,
+                sim.epochs,
+                costs,
+            );
+            fc.profile = sim.profile;
+            fc.seed = sim.seed;
+            fc.n_sequences = sim.n_sequences;
+            fc.max_frames = sim.max_train_frames;
+            fc.enc = sim.enc.clone();
+            fc.upload_quality = sim.upload_quality;
+            let report = residual_inr::fleet::run(&cfg, &fc)?;
+            report.print();
+            return Ok(());
+        }
+        let r = run_multi(&cfg, &sim, &mf)?;
+        r.print();
+        return Ok(());
+    }
     println!(
         "# simulate method={} profile={} grouped={}",
         sim.method.name(),
@@ -111,7 +171,12 @@ fn simulate(args: &Args) -> Result<()> {
     println!("edge end-to-end          : {:.2} s", r.edge_total_seconds());
     println!("fog encode time          : {:.2} s (off critical path)", r.fog_encode_seconds);
     println!("device memory            : {}", fmt_bytes(r.device_memory_bytes as u64));
-    println!("fleet makespan (overlap) : {:.2} s", r.fleet_makespan_seconds);
+    println!(
+        "fleet makespan (overlap) : {:.2} s ({} cost model, parity mismatch {} B)",
+        r.fleet_makespan_seconds,
+        r.costs.source.name(),
+        r.byte_parity_mismatch
+    );
     println!("mAP50-95 before → after  : {:.3} → {:.3}", r.map_before, r.map_after);
     println!("mean IoU after           : {:.3}", r.mean_iou_after);
     Ok(())
@@ -121,10 +186,29 @@ fn fleet(args: &Args) -> Result<()> {
     let cfg = ArchConfig::load_default()?;
     let quality = args.get_usize("quality", 85).map_err(|e| anyhow!(e))? as u8;
     let method = parse_method(args.get_or("method", "res-rapid"), quality)?;
-    let mut fc = FleetConfig::from_scenario(args.get_or("scenario", "paper-10"), method)?;
-    if let Some(p) = args.get("profile") {
-        fc.profile = Profile::from_name(p).ok_or_else(|| anyhow!("unknown profile"))?;
+    let profile = Profile::from_name(args.get_or("profile", "dac-sdc"))
+        .ok_or_else(|| anyhow!("unknown profile"))?;
+    // Virtual-time prices: measured against the live session when the
+    // AOT artifacts exist, analytical otherwise (or forced via --cost).
+    let enc = EncoderConfig::fast();
+    let costs = match args.get_or("cost", "auto") {
+        "analytical" => Analytical::new(&cfg, profile, method, &enc).book(),
+        "calibrated" => {
+            let session = Session::open_default()?;
+            Calibrated::probe(&session, &cfg, profile, method, &enc)?.book()
+        }
+        "auto" => costmodel::auto(&cfg, profile, method, &enc),
+        other => return Err(anyhow!("unknown --cost {other} (auto|analytical|calibrated)")),
+    };
+    if costs.source == CostSource::Analytical {
+        println!(
+            "# cost model: analytical (--cost analytical, AOT artifacts absent, or the \
+             calibration probe failed — see stderr; run `python -m compile.aot` for \
+             calibrated timing)"
+        );
     }
+    let mut fc = FleetConfig::from_scenario(args.get_or("scenario", "paper-10"), method, costs)?;
+    fc.profile = profile;
     fc.n_fogs = args.get_usize("fogs", fc.n_fogs).map_err(|e| anyhow!(e))?;
     fc.n_edges = args.get_usize("edges", fc.n_edges).map_err(|e| anyhow!(e))?;
     fc.encode_workers =
@@ -170,7 +254,12 @@ fn compress(args: &Args) -> Result<()> {
     println!("records           : {}", c.records.len());
     println!("payload           : {}", fmt_bytes(c.payload_bytes as u64));
     println!("avg frame payload : {}", fmt_bytes(c.avg_frame_bytes() as u64));
-    println!("encode time       : {:.2} s ({} Adam steps)", c.encode_seconds, c.encode_steps);
+    println!(
+        "encode time       : {:.2} s ({} Adam steps, {:.2e} s/step)",
+        c.encode_seconds,
+        c.encode_steps,
+        c.seconds_per_step()
+    );
     Ok(())
 }
 

@@ -97,8 +97,9 @@ mod tests {
 
     #[test]
     fn parses_subcommand_flags_positionals() {
-        let a = Args::parse(argv("encode --dataset uav --steps 300 out.bin --verbose"), &["verbose"])
-            .unwrap();
+        let a =
+            Args::parse(argv("encode --dataset uav --steps 300 out.bin --verbose"), &["verbose"])
+                .unwrap();
         assert_eq!(a.subcommand.as_deref(), Some("encode"));
         assert_eq!(a.get("dataset"), Some("uav"));
         assert_eq!(a.get_usize("steps", 0).unwrap(), 300);

@@ -11,13 +11,20 @@
 use residual_inr::commmodel as cm;
 use residual_inr::config::ArchConfig;
 use residual_inr::coordinator::sim::cap_frames;
-use residual_inr::coordinator::Method;
-use residual_inr::data::generate_dataset;
+use residual_inr::coordinator::{EncoderConfig, Method};
+use residual_inr::costmodel::{Analytical, CostBook, CostModel};
+use residual_inr::data::{generate_dataset, Profile};
 use residual_inr::fleet::{self, FleetConfig, ShardTraffic};
 use residual_inr::net::{NetSim, NodeId};
 
 fn cfg() -> ArchConfig {
     ArchConfig::load_default().unwrap()
+}
+
+/// Session-free cost book: the analytical model (these tests run without
+/// artifacts; byte accounting never depends on the cost source).
+fn costs(m: Method) -> CostBook {
+    Analytical::new(&cfg(), Profile::DacSdc, m, &EncoderConfig::fast()).book()
 }
 
 /// Rebuild the exact shard `fleet::run` simulates for fog 0.
@@ -65,7 +72,7 @@ fn paper10_fleet_totals_match_legacy_netsim() {
         Method::ResNerv,
         Method::Jpeg { quality: 95 },
     ] {
-        let fc = FleetConfig::paper_10(method); // 1 fog, 10 edges = 9 receivers
+        let fc = FleetConfig::paper_10(method, costs(method)); // 1 fog, 10 edges = 9 receivers
         let report = fleet::run(&cfg, &fc).unwrap();
         let shard = shard_of(&cfg, &fc);
         let net = legacy_replay(&shard, 9, fc.bandwidth);
@@ -92,7 +99,8 @@ fn paper10_fleet_totals_match_commmodel_prediction() {
     // §4: D_f = n·α·m + m for the one fog-routed source device, with
     // α measured as INR payload / JPEG payload on the same frames.
     let cfg = cfg();
-    let fc = FleetConfig::paper_10(Method::ResRapid { direct: false });
+    let m = Method::ResRapid { direct: false };
+    let fc = FleetConfig::paper_10(m, costs(m));
     let report = fleet::run(&cfg, &fc).unwrap();
     let shard = shard_of(&cfg, &fc);
 
@@ -109,7 +117,8 @@ fn paper10_fleet_totals_match_commmodel_prediction() {
 
     // The serverless JPEG fleet matches D_s = n·m, and the in-engine
     // reduction matches the analytical reduction exactly.
-    let fj = FleetConfig::paper_10(Method::Jpeg { quality: 95 });
+    let mj = Method::Jpeg { quality: 95 };
+    let fj = FleetConfig::paper_10(mj, costs(mj));
     let rj = fleet::run(&cfg, &fj).unwrap();
     assert_eq!(rj.upload_bytes, 0);
     assert_eq!(rj.broadcast_bytes, 9 * shard.upload_bytes());
@@ -132,7 +141,8 @@ fn sharded_scaleout_reports_queue_cache_and_makespan() {
     // Acceptance: `fleet --scenario sharded --fogs 4 --edges 200`
     // completes with per-fog queue depth, cache hit rate and makespan.
     let cfg = cfg();
-    let fc = FleetConfig::from_scenario("sharded", Method::ResRapid { direct: false }).unwrap();
+    let m = Method::ResRapid { direct: false };
+    let fc = FleetConfig::from_scenario("sharded", m, costs(m)).unwrap();
     assert_eq!((fc.n_fogs, fc.n_edges), (4, 200));
     let r = fleet::run(&cfg, &fc).unwrap();
 
@@ -170,9 +180,10 @@ fn sharded_scaleout_reports_queue_cache_and_makespan() {
 fn hierarchical_relay_costs_two_hops_but_same_cache_behavior() {
     let cfg = cfg();
     let m = Method::RapidSingle;
-    let rs = fleet::run(&cfg, &FleetConfig::from_scenario("sharded", m).unwrap()).unwrap();
-    let rh =
-        fleet::run(&cfg, &FleetConfig::from_scenario("hierarchical", m).unwrap()).unwrap();
+    let rs =
+        fleet::run(&cfg, &FleetConfig::from_scenario("sharded", m, costs(m)).unwrap()).unwrap();
+    let rh = fleet::run(&cfg, &FleetConfig::from_scenario("hierarchical", m, costs(m)).unwrap())
+        .unwrap();
     // Same shards, same cells: wireless byte totals identical.
     assert_eq!(rs.cell_bytes(), rh.cell_bytes());
     // Mesh pays one hop per remote fog (3); the cloud relay pays one
@@ -191,7 +202,7 @@ fn fleet_bytes_scale_linearly_with_receivers_for_fog_methods() {
     // doubles total bytes (upload amortizes), while serverless doubles.
     let cfg = cfg();
     let mk = |method, edges| {
-        let mut fc = FleetConfig::paper_10(method);
+        let mut fc = FleetConfig::paper_10(method, costs(method));
         fc.n_edges = edges;
         fleet::run(&cfg, &fc).unwrap()
     };

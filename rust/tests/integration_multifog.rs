@@ -1,0 +1,223 @@
+//! Measured multi-fog pipeline integration.
+//!
+//! * The *measured* `ShardTraffic` a live fog encode produces must match
+//!   the session-free synthetic traffic model record-for-record, for
+//!   every compression method — that identity is what lets the fleet
+//!   engine scale the measured pipeline's communication story without
+//!   PJRT.
+//! * Byte accounting must be independent of the cost model: `Analytical`
+//!   and `Calibrated` books over the same shards agree on every byte
+//!   field and differ only in timing.
+//! * `run_multi` (the `sim --fogs F --topology ...` path) must deliver a
+//!   `MultiFogReport` whose engine bytes reconcile with the measured
+//!   traffic (counted parity, not a debug_assert) and whose fleet timing
+//!   is calibrated from the run itself.
+//!
+//! Tests touching the live encoder skip (with a notice) when the AOT
+//! artifacts are absent; the cost-model byte test is session-free.
+
+use residual_inr::config::ArchConfig;
+use residual_inr::coordinator::sim::cap_frames;
+use residual_inr::coordinator::{
+    run_multi, EncoderConfig, FogNode, Method, MultiFogConfig, SimConfig,
+};
+use residual_inr::costmodel::{Analytical, Calibrated, CostModel, CostSource};
+use residual_inr::data::{generate_dataset, Dataset, Profile};
+use residual_inr::fleet::{self, FleetConfig, ShardTraffic, Topology};
+use residual_inr::runtime::Session;
+
+fn cfg() -> ArchConfig {
+    ArchConfig::load_default().unwrap()
+}
+
+/// The shard `run_multi` carves out for fog `f` (same generator, split,
+/// and cap).
+fn shard_dataset(sim: &SimConfig, f: usize) -> Dataset {
+    let ds = generate_dataset(sim.profile, sim.seed.wrapping_add(f as u64), sim.n_sequences);
+    let (_pre, fine) = ds.split_half();
+    match sim.max_train_frames {
+        Some(m) => cap_frames(&fine, m),
+        None => fine,
+    }
+}
+
+fn tiny_sim(method: Method) -> SimConfig {
+    let mut sim = SimConfig::small(method);
+    sim.n_sequences = 2;
+    sim.max_train_frames = Some(4);
+    sim.n_receivers = 2;
+    sim.epochs = 1;
+    sim.pretrain_steps = 10;
+    sim.enc.bg_steps = 40;
+    sim.enc.obj_steps = 40;
+    sim.enc.nerv_steps = 40;
+    sim
+}
+
+#[test]
+fn analytical_and_calibrated_books_agree_on_bytes() {
+    // Byte accounting is topology + traffic; the cost model only prices
+    // time. Same shards + wildly different books ⇒ identical byte fields,
+    // different makespans.
+    let cfg = cfg();
+    let method = Method::ResRapid { direct: false };
+    let enc = EncoderConfig::fast();
+    let shards = |ids: u32| -> Vec<ShardTraffic> {
+        (0..2u32)
+            .map(|f| {
+                let ds = generate_dataset(Profile::DacSdc, 7 + f as u64, 2);
+                let (_pre, fine) = ds.split_half();
+                let fine = cap_frames(&fine, 6);
+                fleet::model_shard(&cfg, &fine, method, &enc, 95, ids + f * 1_000_000)
+            })
+            .collect()
+    };
+    let analytical = Analytical::new(&cfg, Profile::DacSdc, method, &enc).book();
+    // A calibrated book an order of magnitude slower across the board.
+    let calibrated = Calibrated::from_measurements(
+        analytical.seconds_per_step * 10.0,
+        analytical.jpeg_encode_seconds * 10.0,
+        analytical.train_seconds_per_frame * 10.0,
+    )
+    .book();
+    assert_eq!(analytical.source, CostSource::Analytical);
+    assert_eq!(calibrated.source, CostSource::Calibrated);
+
+    let fc_a = FleetConfig::for_measured(method, Topology::Sharded, 2, 3, 1e6, 1, analytical);
+    let fc_c = FleetConfig::for_measured(method, Topology::Sharded, 2, 3, 1e6, 1, calibrated);
+    let ra = fleet::simulate(&fc_a, shards(0));
+    let rc = fleet::simulate(&fc_c, shards(0));
+
+    assert_eq!(ra.upload_bytes, rc.upload_bytes);
+    assert_eq!(ra.broadcast_bytes, rc.broadcast_bytes);
+    assert_eq!(ra.label_bytes, rc.label_bytes);
+    assert_eq!(ra.backhaul_bytes, rc.backhaul_bytes);
+    assert_eq!(ra.total_bytes, rc.total_bytes);
+    assert_eq!(ra.n_blobs, rc.n_blobs);
+    // Only timing differs — and in the direction of the slower book.
+    assert!(
+        rc.makespan_seconds > ra.makespan_seconds,
+        "calibrated {} vs analytical {}",
+        rc.makespan_seconds,
+        ra.makespan_seconds
+    );
+    assert_eq!(ra.costs.source, CostSource::Analytical);
+    assert_eq!(rc.costs.source, CostSource::Calibrated);
+}
+
+#[test]
+fn measured_traffic_matches_synthetic_model_record_for_record() {
+    let Ok(session) = Session::open_default() else {
+        eprintln!("skipping: AOT artifacts absent (python -m compile.aot)");
+        return;
+    };
+    let cfg = cfg();
+    for method in Method::ALL_MAIN {
+        let sim = tiny_sim(method);
+        let fog = FogNode::new(&session, &cfg, sim.enc.clone());
+        for f in 0..2usize {
+            let fine = shard_dataset(&sim, f);
+            let n_frames = fine.total_frames();
+
+            // Measured stream: live encoder output wrapped as traffic.
+            let comp = fog.compress(&fine, method).unwrap();
+            let uploads: Vec<u64> = if matches!(method, Method::Jpeg { .. }) {
+                vec![]
+            } else {
+                fine.iter_frames()
+                    .map(|(_, _, frame, _)| {
+                        residual_inr::codec::jpeg::encode(frame, sim.upload_quality).len()
+                            as u64
+                    })
+                    .collect()
+            };
+            let measured =
+                ShardTraffic::from_records(method, n_frames, uploads, &comp.records, &sim.enc);
+
+            // Synthetic stream: zero-weight model of the same shard.
+            let modeled =
+                fleet::model_shard(&cfg, &fine, method, &sim.enc, sim.upload_quality, 0);
+
+            assert_eq!(measured.n_frames, modeled.n_frames, "{method:?} shard {f} frames");
+            assert_eq!(measured.uploads, modeled.uploads, "{method:?} shard {f} uploads");
+            assert_eq!(
+                measured.blobs.len(),
+                modeled.blobs.len(),
+                "{method:?} shard {f} record count"
+            );
+            for (a, b) in measured.blobs.iter().zip(&modeled.blobs) {
+                assert_eq!(a.bytes, b.bytes, "{method:?} shard {f} blob {} bytes", a.id);
+                assert_eq!(a.tag, b.tag, "{method:?} shard {f} blob {} tag", a.id);
+                assert_eq!(
+                    a.encode_steps, b.encode_steps,
+                    "{method:?} shard {f} blob {} steps",
+                    a.id
+                );
+                assert_eq!(
+                    a.n_frames, b.n_frames,
+                    "{method:?} shard {f} blob {} span",
+                    a.id
+                );
+                assert_eq!(
+                    a.ready_after_frame, b.ready_after_frame,
+                    "{method:?} shard {f} blob {} readiness",
+                    a.id
+                );
+            }
+            assert_eq!(measured.payload_bytes(), modeled.payload_bytes());
+            assert_eq!(measured.label_bytes(), modeled.label_bytes());
+        }
+    }
+}
+
+#[test]
+fn measured_multifog_pipeline_end_to_end() {
+    if Session::open_default().is_err() {
+        eprintln!("skipping: AOT artifacts absent (python -m compile.aot)");
+        return;
+    }
+    let cfg = cfg();
+    let sim = tiny_sim(Method::ResRapid { direct: false });
+    let mf = MultiFogConfig { n_fogs: 2, topology: Topology::Sharded };
+    let r = run_multi(&cfg, &sim, &mf).unwrap();
+
+    // Per-shard structure.
+    assert_eq!(r.shards.len(), 2);
+    assert_eq!(r.n_fogs, 2);
+    for s in &r.shards {
+        assert_eq!(s.n_frames, 4);
+        assert_eq!(s.n_records, 4); // one ResidualImage per frame
+        assert!(s.payload_bytes > 0);
+        assert!(s.encode_seconds > 0.0);
+        assert!(s.encode_steps > 0);
+        // Serialized per-cell accounting covers uploads + local
+        // broadcasts of this shard only.
+        assert_eq!(
+            s.cell_bytes,
+            s.upload_bytes + sim.n_receivers as u64 * (s.payload_bytes + s.label_bytes)
+        );
+    }
+
+    // Fleet engine bytes reconcile with the measured traffic (counted
+    // parity — the report field that replaced the byte debug_assert).
+    assert_eq!(r.byte_parity_mismatch, 0, "expected {} B", r.expected_cell_bytes);
+    assert_eq!(r.fleet.cell_bytes(), r.expected_cell_bytes);
+    assert!(r.fleet.backhaul_bytes > 0, "sharded topology crosses the mesh");
+    assert!(r.fleet.makespan_seconds > 0.0);
+    assert_eq!(r.fleet.n_fogs, 2);
+
+    // Fleet timing came from this run's measurements.
+    assert_eq!(r.costs.source, CostSource::Calibrated);
+    assert!(r.costs.seconds_per_step > 0.0 && r.costs.seconds_per_step.is_finite());
+    assert!(r.costs.train_seconds_per_frame > 0.0);
+    assert_eq!(r.fleet.costs.source, CostSource::Calibrated);
+
+    // The receiver fine-tuned on every shard, and accuracy was evaluated
+    // on real weights end to end.
+    assert_eq!(r.n_train_frames, 8);
+    assert!(r.train_steps > 0);
+    assert!(r.decode_seconds > 0.0 && r.train_seconds > 0.0);
+    for v in [r.map_before, r.map50_after, r.map_after, r.mean_iou_after] {
+        assert!((0.0..=1.0).contains(&v), "metric out of range: {v}");
+    }
+}

@@ -67,9 +67,21 @@ fn quantization_bits_trade_size_for_decode_quality() {
     let q16 = quantize(&ws, Bits::B16);
     assert!(q8.byte_size() < q16.byte_size());
     let d8 = residual_inr::pipeline::decoder::decode_rapid(
-        &session, &profile.background, &dequantize(&q8), img.width, img.height).unwrap();
+        &session,
+        &profile.background,
+        &dequantize(&q8),
+        img.width,
+        img.height,
+    )
+    .unwrap();
     let d16 = residual_inr::pipeline::decoder::decode_rapid(
-        &session, &profile.background, &dequantize(&q16), img.width, img.height).unwrap();
+        &session,
+        &profile.background,
+        &dequantize(&q16),
+        img.width,
+        img.height,
+    )
+    .unwrap();
     let p8 = residual_inr::metrics::psnr(&img, &d8);
     let p16 = residual_inr::metrics::psnr(&img, &d16);
     assert!(p16 >= p8 - 0.5, "16-bit {p16} vs 8-bit {p8}");
@@ -113,10 +125,18 @@ fn fog_compress_payload_scales_with_method() {
     let jpeg = fog.compress(&ds, Method::Jpeg { quality: 85 }).unwrap();
     let single = fog.compress(&ds, Method::RapidSingle).unwrap();
     let res = fog.compress(&ds, Method::ResRapid { direct: false }).unwrap();
-    assert!(res.payload_bytes < single.payload_bytes, "res {} vs single {}",
-            res.payload_bytes, single.payload_bytes);
-    assert!(res.payload_bytes < jpeg.payload_bytes, "res {} vs jpeg {}",
-            res.payload_bytes, jpeg.payload_bytes);
+    assert!(
+        res.payload_bytes < single.payload_bytes,
+        "res {} vs single {}",
+        res.payload_bytes,
+        single.payload_bytes
+    );
+    assert!(
+        res.payload_bytes < jpeg.payload_bytes,
+        "res {} vs jpeg {}",
+        res.payload_bytes,
+        jpeg.payload_bytes
+    );
 }
 
 #[test]
