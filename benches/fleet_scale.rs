@@ -3,7 +3,9 @@
 //! discrete-event fleet engine (single fog cell, the paper's topology,
 //! scaled from the 10-device testbed to 100 and 1000 edge devices), plus
 //! one multi-fog point per topology (sharded mesh / hierarchical relay,
-//! 4 fogs × 200 edges).
+//! 4 fogs × 200 edges) and a re-broadcast policy sweep (unicast /
+//! cell-multicast / multicast-tree / receiver-pull) over both multi-fog
+//! scenarios, reported as redistribution bytes vs the unicast baseline.
 //!
 //! This extends Fig 8 from analytical totals to a simulated timeline:
 //! the byte curves reproduce the §4 model (fog+INR grows with slope
@@ -24,7 +26,7 @@ use residual_inr::config::ArchConfig;
 use residual_inr::coordinator::{EncoderConfig, Method};
 use residual_inr::costmodel;
 use residual_inr::data::Profile;
-use residual_inr::fleet::{self, FleetConfig, FleetReport};
+use residual_inr::fleet::{self, FleetConfig, FleetReport, RebroadcastPolicy};
 use residual_inr::util::fmt_bytes;
 use residual_inr::util::json::Json;
 
@@ -130,6 +132,58 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
+    // Policy sweep: the same multi-fog fleet under all four re-broadcast
+    // disciplines, reported as redistribution (broadcast + backhaul)
+    // bytes and airtime saved vs the unicast parity baseline.
+    println!("\n== re-broadcast policy sweep: 4 fogs x 200 edges, res-rapid ==");
+    let mut t = Table::new(&[
+        "scenario", "policy", "bcast+backhaul", "vs unicast", "pull", "airtime saved (s)",
+        "makespan (s)",
+    ]);
+    let mut policy_rows = Vec::new();
+    // The shard streams depend only on dataset knobs, not topology or
+    // policy — model them once and replay for all 8 sweep points.
+    let mut sweep_base = FleetConfig::from_scenario("sharded", method, costs)?;
+    sweep_base.max_frames = Some(frames);
+    sweep_base.encode_workers = workers;
+    let sweep_shards = fleet::model_fleet_shards(&cfg, &sweep_base);
+    for scenario in ["sharded", "hierarchical"] {
+        let mut unicast_redis = 0u64;
+        for policy in RebroadcastPolicy::ALL {
+            let mut fc = FleetConfig::from_scenario(scenario, method, costs)?;
+            fc.max_frames = Some(frames);
+            fc.encode_workers = workers;
+            fc.policy = policy;
+            let r = fleet::simulate(&fc, sweep_shards.clone());
+            let redis = r.redistribution_bytes();
+            if policy == RebroadcastPolicy::Unicast {
+                unicast_redis = redis;
+            }
+            t.row(&[
+                scenario.to_string(),
+                policy.name().to_string(),
+                fmt_bytes(redis),
+                format!("{:.2}x", unicast_redis as f64 / redis.max(1) as f64),
+                fmt_bytes(r.pull_bytes),
+                format!("{:.2}", r.airtime_saved_seconds),
+                format!("{:.2}", r.makespan_seconds),
+            ]);
+            policy_rows.push(Json::obj(vec![
+                ("scenario", Json::Str(scenario.to_string())),
+                ("policy", Json::Str(policy.name().to_string())),
+                ("broadcast_bytes", Json::Num(r.broadcast_bytes as f64)),
+                ("backhaul_bytes", Json::Num(r.backhaul_bytes as f64)),
+                ("redistribution_bytes", Json::Num(redis as f64)),
+                ("pull_bytes", Json::Num(r.pull_bytes as f64)),
+                ("total_bytes", Json::Num(r.total_bytes as f64)),
+                ("airtime_saved_seconds", Json::Num(r.airtime_saved_seconds)),
+                ("makespan_seconds", Json::Num(r.makespan_seconds)),
+                ("reduction_vs_unicast", Json::Num(unicast_redis as f64 / redis.max(1) as f64)),
+            ]));
+        }
+    }
+    t.print();
+
     println!("\n== reduction vs serverless JPEG (paper Fig 8 regime) ==");
     let mut t = Table::new(&["devices", "rapid", "res-rapid"]);
     let mut reductions = Vec::new();
@@ -165,6 +219,7 @@ fn main() -> anyhow::Result<()> {
         ("cost_source", Json::Str(costs.source.name().to_string())),
         ("single_fog", Json::Arr(rows)),
         ("multi_fog", Json::Arr(multi)),
+        ("policy_sweep", Json::Arr(policy_rows)),
         ("reduction_vs_jpeg", Json::Arr(reductions)),
     ]);
     let out = residual_inr::config::find_repo_file("Cargo.toml")

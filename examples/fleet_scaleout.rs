@@ -20,7 +20,7 @@ use residual_inr::config::ArchConfig;
 use residual_inr::coordinator::{EncoderConfig, Method};
 use residual_inr::costmodel;
 use residual_inr::data::Profile;
-use residual_inr::fleet::{self, FleetConfig};
+use residual_inr::fleet::{self, FleetConfig, RebroadcastPolicy};
 use residual_inr::util::fmt_bytes;
 
 fn main() -> Result<()> {
@@ -61,6 +61,35 @@ fn main() -> Result<()> {
     println!("\n--- hierarchical (cloud→fog→edge), {fogs} fogs ---");
     let r_hier = fleet::run(&cfg, &hier)?;
     r_hier.print();
+
+    // 5. The same sharded fleet under each re-broadcast policy: unicast
+    //    is the parity baseline; the others share cell airtime and
+    //    dedup or tree-push the backhaul. The shard streams are
+    //    policy-independent, so model them once and replay.
+    println!("\n--- re-broadcast policies on the sharded fleet ---");
+    let mut base = FleetConfig::from_scenario("sharded", method, costs)?;
+    base.n_fogs = fogs;
+    base.n_edges = edges;
+    let shards = fleet::model_fleet_shards(&cfg, &base);
+    let mut unicast_redis = 0u64;
+    for policy in RebroadcastPolicy::ALL {
+        let mut fc = base.clone();
+        fc.policy = policy;
+        let r = fleet::simulate(&fc, shards.clone());
+        let redis = r.redistribution_bytes();
+        if policy == RebroadcastPolicy::Unicast {
+            unicast_redis = redis;
+        }
+        println!(
+            "{:15}: {} broadcast+backhaul ({:.2}x vs unicast), airtime saved {:.2} s, \
+             makespan {:.2} s",
+            policy.name(),
+            fmt_bytes(redis),
+            unicast_redis as f64 / redis.max(1) as f64,
+            r.airtime_saved_seconds,
+            r.makespan_seconds
+        );
+    }
 
     println!("\n--- summary ---");
     println!(

@@ -34,7 +34,8 @@ use anyhow::Result;
 use crate::config::ArchConfig;
 use crate::costmodel::{Analytical, Calibrated, CostBook, CostModel};
 use crate::data::{generate_dataset, BBox, Dataset, ImageRGB, Profile};
-use crate::fleet::{FleetConfig, FleetReport, ShardTraffic, Topology};
+use crate::fleet::policy::PULL_REQUEST_BYTES;
+use crate::fleet::{FleetConfig, FleetReport, RebroadcastPolicy, ShardTraffic, Topology};
 use crate::inr::Record;
 use crate::metrics::{map50, map50_95, mean_iou};
 use crate::net::{NetSim, NodeId};
@@ -395,30 +396,63 @@ fn calibrate(
         .book()
 }
 
-/// Wireless-cell bytes the measured shard traffic implies analytically:
-/// uploads land once on their own cell; every blob and label payload is
-/// unicast to each receiver in scope (all cells under multi-fog
-/// topologies, the local cell otherwise).
+/// Wireless-cell bytes the measured shard traffic implies analytically
+/// under the configured re-broadcast policy: uploads land once on their
+/// own cell; every blob and label payload then crosses each cell in
+/// scope once per receiver (`unicast`) or once per populated cell
+/// (shared-airtime policies), plus one request per receiver per
+/// delivered blob under `receiver-pull`. Scope is all cells under
+/// multi-fog topologies, the local cell otherwise.
 fn expected_cell_bytes(fc: &FleetConfig, shards: &[EncodedShard]) -> u64 {
     let scope_all = fc.topology != Topology::SingleFog && fc.n_fogs > 1;
     let uploads: u64 = shards.iter().map(|s| s.traffic.upload_bytes()).sum();
+    let shared = fc.policy.shares_cell_airtime();
+    // Payload copies a cell carries per delivered set.
+    let copies_of = |f: usize| -> u64 {
+        let r = fc.receivers_of_fog(f) as u64;
+        if shared {
+            u64::from(r > 0)
+        } else {
+            r
+        }
+    };
+    let total_blobs: u64 = shards.iter().map(|s| s.traffic.blobs.len() as u64).sum();
     if scope_all {
-        let receivers: u64 = (0..fc.n_fogs).map(|f| fc.receivers_of_fog(f) as u64).sum();
-        let per_receiver: u64 = shards
+        let copies: u64 = (0..fc.n_fogs).map(|f| copies_of(f)).sum();
+        let per_set: u64 = shards
             .iter()
             .map(|s| s.traffic.payload_bytes() + s.traffic.label_bytes())
             .sum();
-        uploads + receivers * per_receiver
+        let pulls = if fc.policy.pulls() {
+            let receivers: u64 = (0..fc.n_fogs).map(|f| fc.receivers_of_fog(f) as u64).sum();
+            receivers * (total_blobs + fc.n_fogs as u64) * PULL_REQUEST_BYTES
+        } else {
+            0
+        };
+        uploads + copies * per_set + pulls
     } else {
+        let pulls = if fc.policy.pulls() {
+            shards
+                .iter()
+                .enumerate()
+                .map(|(f, s)| {
+                    fc.receivers_of_fog(f) as u64
+                        * (s.traffic.blobs.len() as u64 + 1)
+                        * PULL_REQUEST_BYTES
+                })
+                .sum()
+        } else {
+            0
+        };
         uploads
             + shards
                 .iter()
                 .enumerate()
                 .map(|(f, s)| {
-                    fc.receivers_of_fog(f) as u64
-                        * (s.traffic.payload_bytes() + s.traffic.label_bytes())
+                    copies_of(f) * (s.traffic.payload_bytes() + s.traffic.label_bytes())
                 })
                 .sum::<u64>()
+            + pulls
     }
 }
 
@@ -518,6 +552,10 @@ pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
 pub struct MultiFogConfig {
     pub n_fogs: usize,
     pub topology: Topology,
+    /// Re-broadcast discipline the fleet adaptation runs under
+    /// ([`RebroadcastPolicy::Unicast`] preserves byte parity with the
+    /// serialized per-cell accounting).
+    pub policy: RebroadcastPolicy,
 }
 
 /// One fog shard's slice of a measured multi-fog run.
@@ -569,8 +607,8 @@ pub struct MultiFogReport {
 impl MultiFogReport {
     pub fn print(&self) {
         println!(
-            "# sim measured multi-fog method={} topology={} fogs={} receivers/fog={}",
-            self.method, self.topology, self.n_fogs, self.receivers_per_fog
+            "# sim measured multi-fog method={} topology={} policy={} fogs={} receivers/fog={}",
+            self.method, self.topology, self.fleet.policy, self.n_fogs, self.receivers_per_fog
         );
         let mut t = crate::bench_support::Table::new(&[
             "shard", "frames", "records", "upload", "payload", "cell", "encode (s)", "steps",
@@ -677,7 +715,7 @@ pub fn run_multi(cfg: &ArchConfig, sim: &SimConfig, mf: &MultiFogConfig) -> Resu
 
     // --- Calibrate + fleet run over the measured streams ---------------
     let costs = calibrate(cfg, sim, &shards, decode_seconds, train_seconds, n_train_frames);
-    let fleet_cfg = FleetConfig::for_measured(
+    let mut fleet_cfg = FleetConfig::for_measured(
         sim.method,
         mf.topology,
         mf.n_fogs,
@@ -686,6 +724,7 @@ pub fn run_multi(cfg: &ArchConfig, sim: &SimConfig, mf: &MultiFogConfig) -> Resu
         sim.epochs,
         costs,
     );
+    fleet_cfg.policy = mf.policy;
     let traffic: Vec<ShardTraffic> = shards.iter().map(|s| s.traffic.clone()).collect();
     let fleet = crate::fleet::simulate(&fleet_cfg, traffic);
     let expected = expected_cell_bytes(&fleet_cfg, &shards);

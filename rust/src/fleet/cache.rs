@@ -7,6 +7,14 @@
 //! over the backhaul once and served locally afterwards. The cache is an
 //! LRU bounded by bytes; hit/miss/bytes-saved counters feed the fleet
 //! report.
+//!
+//! Every payload class shares the same store and retention rules (JPEG
+//! baseline blobs are relayed through the identical capacity-bounded
+//! LRU, so cross-method byte totals stay comparable), but the *stats*
+//! are split: [`WeightCache::stats`] counts INR weight blobs only, and
+//! [`WeightCache::relay_stats`] counts everything else — the paper's
+//! weight-cache hit/`bytes_saved` numbers must never be inflated by the
+//! JPEG baseline's own payloads.
 
 use std::collections::HashMap;
 
@@ -40,12 +48,24 @@ impl CacheStats {
             self.hits as f64 / total as f64
         }
     }
+
+    /// Accumulate another counter set (fleet-wide aggregation over
+    /// per-fog stats) — one place to extend when counters are added.
+    pub fn absorb(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.insertions += other.insertions;
+        self.evictions += other.evictions;
+        self.bytes_saved += other.bytes_saved;
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
 struct Entry {
     bytes: u64,
     last_use: u64,
+    /// Whether this blob is an INR weight payload (stats class).
+    weights: bool,
 }
 
 /// Byte-bounded LRU of content-addressed weight blobs.
@@ -55,7 +75,12 @@ pub struct WeightCache {
     used_bytes: u64,
     clock: u64,
     entries: HashMap<u64, Entry>,
+    /// INR weight-blob counters (the paper's cache metrics).
     pub stats: CacheStats,
+    /// Counters for every other payload class relayed through the same
+    /// store (JPEG baseline blobs), kept apart so `stats` stays
+    /// method-fair.
+    pub relay_stats: CacheStats,
 }
 
 impl WeightCache {
@@ -68,28 +93,40 @@ impl WeightCache {
             clock: 0,
             entries: HashMap::new(),
             stats: CacheStats::default(),
+            relay_stats: CacheStats::default(),
         }
     }
 
-    /// Consult the cache before fetching a `bytes`-sized blob. A hit
-    /// refreshes recency and credits `bytes_saved`.
-    pub fn lookup(&mut self, hash: u64, bytes: u64) -> bool {
+    fn stats_of(&mut self, weights: bool) -> &mut CacheStats {
+        if weights {
+            &mut self.stats
+        } else {
+            &mut self.relay_stats
+        }
+    }
+
+    /// Consult the cache before fetching a `bytes`-sized blob of the
+    /// given stats class (`weights` = INR payload). A hit refreshes
+    /// recency and credits `bytes_saved` to the blob's class.
+    pub fn lookup(&mut self, hash: u64, bytes: u64, weights: bool) -> bool {
         self.clock += 1;
+        let clock = self.clock;
         if let Some(e) = self.entries.get_mut(&hash) {
-            e.last_use = self.clock;
-            self.stats.hits += 1;
-            self.stats.bytes_saved += bytes;
+            e.last_use = clock;
+            let s = self.stats_of(weights);
+            s.hits += 1;
+            s.bytes_saved += bytes;
             true
         } else {
-            self.stats.misses += 1;
+            self.stats_of(weights).misses += 1;
             false
         }
     }
 
     /// Insert a blob just fetched (or locally encoded), evicting LRU
     /// entries if over capacity. Blobs larger than the whole cache are
-    /// not stored.
-    pub fn insert(&mut self, hash: u64, bytes: u64) {
+    /// not stored. Evictions are charged to the *evicted* blob's class.
+    pub fn insert(&mut self, hash: u64, bytes: u64, weights: bool) {
         if bytes > self.capacity_bytes {
             return;
         }
@@ -99,9 +136,9 @@ impl WeightCache {
             e.last_use = clock;
             return;
         }
-        self.entries.insert(hash, Entry { bytes, last_use: clock });
+        self.entries.insert(hash, Entry { bytes, last_use: clock, weights });
         self.used_bytes += bytes;
-        self.stats.insertions += 1;
+        self.stats_of(weights).insertions += 1;
         while self.used_bytes > self.capacity_bytes {
             // O(n) LRU scan: eviction is rare relative to lookups and the
             // entry count at fleet scale stays in the thousands.
@@ -110,12 +147,12 @@ impl WeightCache {
                 .iter()
                 .filter(|(h, _)| **h != hash)
                 .min_by_key(|(_, e)| e.last_use)
-                .map(|(h, e)| (*h, e.bytes));
+                .map(|(h, e)| (*h, e.bytes, e.weights));
             match victim {
-                Some((h, b)) => {
+                Some((h, b, w)) => {
                     self.entries.remove(&h);
                     self.used_bytes -= b;
-                    self.stats.evictions += 1;
+                    self.stats_of(w).evictions += 1;
                 }
                 None => break, // only the just-inserted blob remains
             }
@@ -155,24 +192,42 @@ mod tests {
         // The satellite requirement: cache hit accounting is exact.
         let mut c = WeightCache::new(u64::MAX);
         let h = blob_hash(b"blob-1");
-        assert!(!c.lookup(h, 1000)); // cold miss
-        c.insert(h, 1000);
-        assert!(c.lookup(h, 1000));
-        assert!(c.lookup(h, 1000));
+        assert!(!c.lookup(h, 1000, true)); // cold miss
+        c.insert(h, 1000, true);
+        assert!(c.lookup(h, 1000, true));
+        assert!(c.lookup(h, 1000, true));
         assert_eq!(c.stats.hits, 2);
         assert_eq!(c.stats.misses, 1);
         assert_eq!(c.stats.bytes_saved, 2000);
         assert!((c.stats.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(c.relay_stats, CacheStats::default());
+    }
+
+    #[test]
+    fn relay_blobs_share_the_store_but_not_the_weight_stats() {
+        // JPEG baseline payloads dedup through the same LRU (identical
+        // byte behavior) while the INR weight-cache counters stay zero.
+        let mut c = WeightCache::new(u64::MAX);
+        let h = blob_hash(b"jpeg-frame");
+        assert!(!c.lookup(h, 700, false));
+        c.insert(h, 700, false);
+        assert!(c.lookup(h, 700, false));
+        assert_eq!(c.stats, CacheStats::default());
+        assert_eq!(c.relay_stats.hits, 1);
+        assert_eq!(c.relay_stats.misses, 1);
+        assert_eq!(c.relay_stats.insertions, 1);
+        assert_eq!(c.relay_stats.bytes_saved, 700);
+        assert_eq!(c.used_bytes(), 700);
     }
 
     #[test]
     fn lru_evicts_least_recently_used() {
         let mut c = WeightCache::new(3000);
         let (a, b, d) = (blob_hash(b"a"), blob_hash(b"b"), blob_hash(b"d"));
-        c.insert(a, 1500);
-        c.insert(b, 1500);
-        assert!(c.lookup(a, 1500)); // refresh a: b becomes LRU
-        c.insert(d, 1500); // over capacity -> evict b
+        c.insert(a, 1500, true);
+        c.insert(b, 1500, true);
+        assert!(c.lookup(a, 1500, true)); // refresh a: b becomes LRU
+        c.insert(d, 1500, true); // over capacity -> evict b
         assert!(c.contains(a));
         assert!(!c.contains(b));
         assert!(c.contains(d));
@@ -181,12 +236,23 @@ mod tests {
     }
 
     #[test]
+    fn eviction_is_charged_to_the_evicted_blobs_class() {
+        let mut c = WeightCache::new(1000);
+        let (a, b) = (blob_hash(b"relay"), blob_hash(b"weights"));
+        c.insert(a, 800, false);
+        c.insert(b, 800, true); // evicts the relay blob
+        assert_eq!(c.relay_stats.evictions, 1);
+        assert_eq!(c.stats.evictions, 0);
+        assert!(c.contains(b) && !c.contains(a));
+    }
+
+    #[test]
     fn zero_capacity_disables_caching() {
         let mut c = WeightCache::new(0);
         let h = blob_hash(b"x");
-        c.insert(h, 10);
+        c.insert(h, 10, true);
         assert!(!c.contains(h));
-        assert!(!c.lookup(h, 10));
+        assert!(!c.lookup(h, 10, true));
         assert_eq!(c.stats.misses, 1);
         assert_eq!(c.used_bytes(), 0);
     }
@@ -195,8 +261,8 @@ mod tests {
     fn reinsert_refreshes_without_double_count() {
         let mut c = WeightCache::new(u64::MAX);
         let h = blob_hash(b"y");
-        c.insert(h, 500);
-        c.insert(h, 500);
+        c.insert(h, 500, true);
+        c.insert(h, 500, true);
         assert_eq!(c.stats.insertions, 1);
         assert_eq!(c.used_bytes(), 500);
         assert_eq!(c.len(), 1);
@@ -206,7 +272,7 @@ mod tests {
     fn oversized_blob_never_cached() {
         let mut c = WeightCache::new(100);
         let h = blob_hash(b"big");
-        c.insert(h, 1000);
+        c.insert(h, 1000, true);
         assert!(c.is_empty());
     }
 }

@@ -75,12 +75,15 @@ impl Channel {
         self.by_tag.get(tag).copied().unwrap_or(0)
     }
 
-    /// Fraction of `[0, horizon]` the medium spent transmitting.
+    /// Ratio of queued airtime to `[0, horizon]`. Deliberately uncapped:
+    /// a value above 1.0 means the medium is oversubscribed (more
+    /// airtime was queued than the horizon can carry) — callers that
+    /// render percentages cap at display time, never here.
     pub fn utilization(&self, horizon: f64) -> f64 {
         if horizon <= 0.0 {
             0.0
         } else {
-            (self.airtime_total / horizon).min(1.0)
+            self.airtime_total / horizon
         }
     }
 }
@@ -131,11 +134,22 @@ mod tests {
     }
 
     #[test]
-    fn utilization_bounded() {
+    fn utilization_is_airtime_over_horizon() {
         let mut c = Channel::new(1e6, 0.0);
         c.transmit(0.0, 1_000_000, "a");
         assert!((c.utilization(2.0) - 0.5).abs() < 1e-12);
         assert_eq!(c.utilization(0.0), 0.0);
-        assert!(c.utilization(0.5) <= 1.0);
+    }
+
+    #[test]
+    fn overloaded_channel_reads_above_one() {
+        // The satellite requirement: oversubscription is not hidden by a
+        // silent cap — two seconds of queued airtime against a one-second
+        // horizon reads as 2.0, not 1.0.
+        let mut c = Channel::new(1e6, 0.0);
+        c.transmit(0.0, 1_000_000, "a");
+        c.transmit(0.0, 1_000_000, "a");
+        assert!((c.utilization(1.0) - 2.0).abs() < 1e-12);
+        assert!(c.utilization(4.0) <= 1.0);
     }
 }

@@ -12,11 +12,17 @@
 //!
 //! Flow per blob: source uploads its frames → the blob's encode job
 //! queues on the origin fog's worker pool → on completion the blob is
-//! unicast to every local receiver over the cell channel and, in
-//! multi-fog scopes, pulled by remote fogs (mesh uplink or cloud relay,
-//! deduplicated by the weight cache) before their own cell broadcast.
-//! Label metadata ships once per shard after its last encode. A receiver
-//! that has everything fine-tunes for `epochs × frames × cost` seconds.
+//! redistributed under the configured [`RebroadcastPolicy`]: per-receiver
+//! cell unicast with per-receiver lazy backhaul (the legacy default), one
+//! shared airtime per cell, an eager cache-aware backhaul spanning tree,
+//! or receiver-driven pull. Remote fogs materialize blobs over the mesh
+//! uplink or cloud relay, deduplicated by the per-fog store — every
+//! payload class shares its capacity and retention rules, but only INR
+//! weight blobs count toward the weight-cache stats (JPEG baseline
+//! payloads land in separate relay counters, labels in an availability
+//! memo), so cross-method cache metrics stay fair. Label metadata ships
+//! once per shard after its last encode. A receiver that has everything
+//! fine-tunes for `epochs × frames × cost` seconds.
 
 use std::collections::HashMap;
 
@@ -29,6 +35,7 @@ use crate::data::generate_dataset;
 use super::cache::WeightCache;
 use super::channel::Channel;
 use super::events::{Event, EventQueue};
+use super::policy::{PULL_REQUEST_BYTES, RebroadcastPolicy};
 use super::report::{FleetReport, FogReport};
 use super::scenario::{FleetConfig, Topology};
 use super::traffic::{model_shard, ShardTraffic};
@@ -55,26 +62,37 @@ struct FogRt {
     trained_at: Vec<f64>,
     /// When a remote blob `(origin, blob)` became locally available.
     avail_remote: HashMap<(usize, usize), f64>,
+    /// Cell airtime avoided relative to per-receiver unicast (shared
+    /// airtime policies serve a whole cell with one transmission).
+    airtime_saved: f64,
+}
+
+/// Model the shard streams `fc` describes, one per fog: the same
+/// generator, split-half, frame cap, and `IDS_PER_SHARD`-spaced id
+/// bases `run` simulates (distinct bases keep blobs content-distinct
+/// across shards; `validate()` bounds `n_fogs` so they stay within
+/// u32). Public so benches, examples, and parity tests can replay the
+/// exact stream through [`simulate`] without re-deriving this loop.
+pub fn model_fleet_shards(cfg: &ArchConfig, fc: &FleetConfig) -> Vec<ShardTraffic> {
+    (0..fc.n_fogs)
+        .map(|f| {
+            let ds = generate_dataset(fc.profile, fc.seed.wrapping_add(f as u64), fc.n_sequences);
+            let (_pre, fine) = ds.split_half();
+            let fine = match fc.max_frames {
+                Some(m) => crate::coordinator::sim::cap_frames(&fine, m),
+                None => fine,
+            };
+            let ids_base = f as u32 * IDS_PER_SHARD;
+            model_shard(cfg, &fine, fc.method, &fc.enc, fc.upload_quality, ids_base)
+        })
+        .collect()
 }
 
 /// Generate per-fog datasets (the fine-tuning halves, mirroring
 /// `coordinator::sim`), model their traffic, and run the fleet.
 pub fn run(cfg: &ArchConfig, fc: &FleetConfig) -> Result<FleetReport> {
     fc.validate()?;
-    let mut shards = Vec::with_capacity(fc.n_fogs);
-    for f in 0..fc.n_fogs {
-        let ds = generate_dataset(fc.profile, fc.seed.wrapping_add(f as u64), fc.n_sequences);
-        let (_pre, fine) = ds.split_half();
-        let fine = match fc.max_frames {
-            Some(m) => crate::coordinator::sim::cap_frames(&fine, m),
-            None => fine,
-        };
-        // Distinct id bases keep blobs content-distinct across shards
-        // (`validate()` bounds n_fogs so this cannot overflow u32).
-        let ids_base = f as u32 * IDS_PER_SHARD;
-        shards.push(model_shard(cfg, &fine, fc.method, &fc.enc, fc.upload_quality, ids_base));
-    }
-    Ok(simulate(fc, shards))
+    Ok(simulate(fc, model_fleet_shards(cfg, fc)))
 }
 
 /// Run the engine over prebuilt shard traffic (one `ShardTraffic` per
@@ -104,6 +122,7 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
                 last_rx: vec![0.0; nr],
                 trained_at: vec![0.0; nr],
                 avail_remote: HashMap::new(),
+                airtime_saved: 0.0,
             }
         })
         .collect();
@@ -211,6 +230,7 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
     let mut report = FleetReport {
         scenario: fc.scenario.clone(),
         topology: fc.topology.name(),
+        policy: fc.policy.name(),
         method: fc.method.name().to_string(),
         n_fogs,
         n_edges: fc.n_edges,
@@ -222,11 +242,14 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
         broadcast_bytes: 0,
         label_bytes: 0,
         backhaul_bytes: 0,
+        pull_bytes: 0,
         total_bytes: 0,
         makespan_seconds: makespan,
+        airtime_saved_seconds: 0.0,
         encode_busy_seconds: 0.0,
         max_queue_depth: 0,
         cache: Default::default(),
+        relay: Default::default(),
         events: q.processed(),
         fogs: Vec::with_capacity(n_fogs),
     };
@@ -237,13 +260,12 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
             rt.cell.bytes_tagged("inr-broadcast") + rt.cell.bytes_tagged("jpeg-direct");
         report.label_bytes += rt.cell.bytes_tagged("labels");
         report.backhaul_bytes += backhaul;
+        report.pull_bytes += rt.cell.bytes_tagged("pull-request");
+        report.airtime_saved_seconds += rt.airtime_saved;
         report.encode_busy_seconds += rt.pool.busy_seconds;
         report.max_queue_depth = report.max_queue_depth.max(rt.pool.max_queue_depth);
-        report.cache.hits += rt.cache.stats.hits;
-        report.cache.misses += rt.cache.stats.misses;
-        report.cache.insertions += rt.cache.stats.insertions;
-        report.cache.evictions += rt.cache.stats.evictions;
-        report.cache.bytes_saved += rt.cache.stats.bytes_saved;
+        report.cache.absorb(&rt.cache.stats);
+        report.relay.absorb(&rt.cache.relay_stats);
         report.fogs.push(FogReport {
             fog: f,
             edges: fc.edges_of_fog(f),
@@ -255,6 +277,7 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
             max_queue_depth: rt.pool.max_queue_depth,
             cell_bytes: rt.cell.bytes_total(),
             cell_utilization: rt.cell.utilization(makespan),
+            airtime_saved_seconds: rt.airtime_saved,
             backhaul_bytes: backhaul,
             cache: rt.cache.stats,
             cache_blobs: rt.cache.len(),
@@ -266,20 +289,27 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
     report.total_bytes = report.upload_bytes
         + report.broadcast_bytes
         + report.label_bytes
-        + report.backhaul_bytes;
+        + report.backhaul_bytes
+        + report.pull_bytes;
     report
 }
 
-/// Ship one blob (or the label pseudo-blob) to every receiver in scope.
-/// Local receivers get a cell unicast; remote cells first materialize
-/// the blob at their fog (weight cache → backhaul fetch on miss).
+/// Ship one blob (or the label pseudo-blob) to every receiver in scope
+/// under the configured [`RebroadcastPolicy`]. Local receivers get the
+/// policy's cell leg; remote cells first materialize the blob at their
+/// fog (weight cache → backhaul fetch on miss, or an eager spanning-tree
+/// push) before their own cell leg.
 ///
-/// Deliberate semantics: a remote fog that cannot cache a blob (cache
-/// disabled via `cache_bytes = 0`, blob larger than the cache, or
-/// evicted) re-fetches it for every further receiver — without a store
-/// the fog cannot retain what it relays. That per-receiver backhaul is
-/// exactly the baseline `CacheStats::bytes_saved` measures against.
-/// Labels are control metadata held outside the weight cache, so their
+/// Deliberate `Unicast` semantics (kept byte-for-byte as the parity
+/// baseline): a remote fog that cannot cache a blob (cache disabled via
+/// `cache_bytes = 0`, blob larger than the cache, or evicted) re-fetches
+/// it for every further receiver — without a store the fog cannot retain
+/// what it relays. That per-receiver backhaul is exactly the baseline
+/// `CacheStats::bytes_saved` measures against, and it applies to every
+/// payload class identically (JPEG baseline blobs ride the same LRU with
+/// the same retention rules — only their *stats* land in the separate
+/// relay counters, keeping the INR weight-cache numbers method-fair).
+/// Labels are control metadata held outside the store, so their
 /// availability is tracked unconditionally in `avail_remote`.
 #[allow(clippy::too_many_arguments)]
 fn deliver(
@@ -296,24 +326,53 @@ fn deliver(
     tag: &'static str,
     cacheable: bool,
 ) {
-    for r in 0..fogs[origin].n_receivers {
-        let finish = fogs[origin].cell.transmit(now, bytes, tag);
-        q.push(finish, Event::Delivered { fog: origin, edge: r, origin, blob });
-    }
+    cell_leg(fc, &mut fogs[origin], q, now, origin, origin, blob, bytes, tag);
     if !scope_all {
         return;
     }
     let key = (origin, blob);
+    // Stats class: INR weight payloads feed the paper's cache metrics,
+    // everything else (the JPEG baseline) feeds the relay counters.
+    let weights = tag == "inr-broadcast";
+    if fc.policy.pushes_backhaul_tree() && cacheable {
+        tree_push(fc, fogs, cloud_up, now, origin, blob, bytes, hash, weights);
+    }
+    if fc.policy.shares_cell_airtime() {
+        // One materialization per remote fog (tree-pushed, cached, or a
+        // single lazy fetch), then one shared cell leg per remote cell.
+        for g in (0..fogs.len()).filter(|&g| g != origin) {
+            if fogs[g].n_receivers == 0 {
+                continue;
+            }
+            let memo = fogs[g].avail_remote.get(&key).copied();
+            let avail = if let Some(a) = memo {
+                a
+            } else if cacheable && fogs[g].cache.lookup(hash, bytes, weights) {
+                now
+            } else {
+                let a = fetch(fc, fogs, cloud_up, origin, g, now, blob, bytes);
+                if cacheable {
+                    fogs[g].cache.insert(hash, bytes, weights);
+                }
+                fogs[g].avail_remote.insert(key, a);
+                a
+            };
+            let start = if avail > now { avail } else { now };
+            cell_leg(fc, &mut fogs[g], q, start, g, origin, blob, bytes, tag);
+        }
+        return;
+    }
+    // Unicast: the legacy per-receiver flow, record-for-record.
     for g in (0..fogs.len()).filter(|&g| g != origin) {
         for r in 0..fogs[g].n_receivers {
-            let avail = if cacheable && fogs[g].cache.lookup(hash, bytes) {
+            let avail = if cacheable && fogs[g].cache.lookup(hash, bytes, weights) {
                 fogs[g].avail_remote.get(&key).copied().unwrap_or(now)
             } else if !cacheable && fogs[g].avail_remote.contains_key(&key) {
                 fogs[g].avail_remote[&key]
             } else {
                 let a = fetch(fc, fogs, cloud_up, origin, g, now, blob, bytes);
                 if cacheable {
-                    fogs[g].cache.insert(hash, bytes);
+                    fogs[g].cache.insert(hash, bytes, weights);
                 }
                 fogs[g].avail_remote.insert(key, a);
                 a
@@ -321,6 +380,126 @@ fn deliver(
             let start = if avail > now { avail } else { now };
             let finish = fogs[g].cell.transmit(start, bytes, tag);
             q.push(finish, Event::Delivered { fog: g, edge: r, origin, blob });
+        }
+    }
+}
+
+/// Put one blob on a fog's wireless cell. `Unicast` transmits once per
+/// receiver; shared-airtime policies transmit once for the whole cell
+/// (co-located receivers hear the same frame), with `ReceiverPull`
+/// first queueing one small request per receiver on the same medium.
+/// Credits the airtime avoided relative to unicast.
+#[allow(clippy::too_many_arguments)]
+fn cell_leg(
+    fc: &FleetConfig,
+    rt: &mut FogRt,
+    q: &mut EventQueue,
+    now: f64,
+    fog: usize,
+    origin: usize,
+    blob: usize,
+    bytes: u64,
+    tag: &'static str,
+) {
+    if !fc.policy.shares_cell_airtime() {
+        for r in 0..rt.n_receivers {
+            let finish = rt.cell.transmit(now, bytes, tag);
+            q.push(finish, Event::Delivered { fog, edge: r, origin, blob });
+        }
+        return;
+    }
+    if rt.n_receivers == 0 {
+        return;
+    }
+    if fc.policy.pulls() {
+        // Requests queue FIFO ahead of the payload on the shared cell;
+        // their airtime is a cost unicast does not pay, so it nets
+        // against the shared-payload saving below.
+        for _ in 0..rt.n_receivers {
+            rt.cell.transmit(now, PULL_REQUEST_BYTES, "pull-request");
+        }
+        rt.airtime_saved -= rt.n_receivers as f64 * rt.cell.airtime(PULL_REQUEST_BYTES);
+    }
+    let finish = rt.cell.transmit(now, bytes, tag);
+    rt.airtime_saved += (rt.n_receivers as f64 - 1.0) * rt.cell.airtime(bytes);
+    for r in 0..rt.n_receivers {
+        q.push(finish, Event::Delivered { fog, edge: r, origin, blob });
+    }
+}
+
+/// Eagerly push a cacheable blob along the backhaul spanning tree
+/// ([`RebroadcastPolicy::MulticastTree`]): each blob crosses each tree
+/// link exactly once, and fogs whose cache already holds the content are
+/// skipped (they can still relay what they hold). Receiver-less fogs
+/// take no part — unicast never routes to them, and the ≤-unicast byte
+/// guarantee must survive degenerate fleet shapes.
+#[allow(clippy::too_many_arguments)]
+fn tree_push(
+    fc: &FleetConfig,
+    fogs: &mut [FogRt],
+    cloud_up: &mut HashMap<(usize, usize), f64>,
+    now: f64,
+    origin: usize,
+    blob: usize,
+    bytes: u64,
+    hash: u64,
+    weights: bool,
+) {
+    let key = (origin, blob);
+    let n = fogs.len();
+    match fc.topology {
+        Topology::SingleFog => {}
+        // Mesh: a relay chain in ring order from the origin. Every hop
+        // leaves on the *sender's* uplink, so the per-blob backhaul load
+        // spreads across the fleet instead of serializing on the origin.
+        Topology::Sharded => {
+            let mut prev = origin;
+            let mut prev_avail = now;
+            for step in 1..n {
+                let g = (origin + step) % n;
+                if fogs[g].n_receivers == 0 {
+                    continue;
+                }
+                if fogs[g].cache.lookup(hash, bytes, weights) {
+                    fogs[g].avail_remote.insert(key, now);
+                    prev = g;
+                    prev_avail = now;
+                    continue;
+                }
+                let a = fogs[prev].uplink.transmit(prev_avail, bytes, "backhaul");
+                fogs[g].cache.insert(hash, bytes, weights);
+                fogs[g].avail_remote.insert(key, a);
+                prev = g;
+                prev_avail = a;
+            }
+        }
+        // Cloud relay: one uplink (deferred until some fog needs the
+        // blob), then per-fog downlink fan-out.
+        Topology::Hierarchical => {
+            let mut up_done = cloud_up.get(&key).copied();
+            for step in 1..n {
+                let g = (origin + step) % n;
+                if fogs[g].n_receivers == 0 {
+                    continue;
+                }
+                if fogs[g].cache.lookup(hash, bytes, weights) {
+                    fogs[g].avail_remote.insert(key, now);
+                    continue;
+                }
+                let up = match up_done {
+                    Some(t) => t,
+                    None => {
+                        let t = fogs[origin].uplink.transmit(now, bytes, "backhaul");
+                        cloud_up.insert(key, t);
+                        up_done = Some(t);
+                        t
+                    }
+                };
+                let start = if up > now { up } else { now };
+                let a = fogs[g].downlink.transmit(start, bytes, "backhaul");
+                fogs[g].cache.insert(hash, bytes, weights);
+                fogs[g].avail_remote.insert(key, a);
+            }
         }
     }
 }
@@ -488,6 +667,120 @@ mod tests {
         assert_eq!(r.backhaul_bytes as i64, (blob_backhaul + label_backhaul) as i64);
         assert_eq!(r.cache.misses, 2); // fog1 + fog2 first lookups
         assert_eq!(r.cache.hits, 2); // second receiver on each remote fog
+    }
+
+    #[test]
+    fn cell_multicast_shares_one_airtime_per_cell() {
+        let m = Method::RapidSingle;
+        let mut fc = base_fc(m, 4); // 1 source + 3 receivers
+        fc.policy = RebroadcastPolicy::CellMulticast;
+        let shard = tiny_shard(m, vec![1000, 2000], &[300, 500]);
+        let r = simulate(&fc, vec![shard.clone()]);
+        // Uploads are point-to-point and unchanged; each payload and the
+        // label blob cross the cell exactly once instead of once per
+        // receiver.
+        assert_eq!(r.upload_bytes, 3000);
+        assert_eq!(r.broadcast_bytes, 800);
+        assert_eq!(r.label_bytes, 16);
+        assert_eq!(r.pull_bytes, 0);
+        assert_eq!(r.total_bytes, 3816);
+        // Airtime saved vs unicast: 2 spare receivers × each payload's
+        // isolated airtime at 1 MB/s, zero latency.
+        assert!((r.airtime_saved_seconds - 2.0 * 816.0 / 1e6).abs() < 1e-12);
+        // Every receiver still observes every delivery.
+        assert_eq!(r.events, 2 + 2 + 9 + 3);
+        assert_eq!(r.policy, "cell-multicast");
+
+        let uni = simulate(&base_fc(m, 4), vec![shard]);
+        assert!(r.makespan_seconds <= uni.makespan_seconds + 1e-12);
+        assert!(r.total_bytes < uni.total_bytes);
+    }
+
+    #[test]
+    fn receiver_pull_pays_requests_but_shares_the_payload() {
+        let m = Method::RapidSingle;
+        let mut fc = base_fc(m, 4);
+        fc.policy = RebroadcastPolicy::ReceiverPull;
+        let r = simulate(&fc, vec![tiny_shard(m, vec![1000, 2000], &[300, 500])]);
+        // 3 receivers × (2 payloads + 1 label blob) × 64 B requests.
+        assert_eq!(r.pull_bytes, 9 * 64);
+        assert_eq!(r.broadcast_bytes, 800);
+        assert_eq!(r.label_bytes, 16);
+        assert_eq!(r.total_bytes, 3000 + 800 + 16 + 576);
+        // Airtime saved is NET of the request airtime the policy adds:
+        // 2 spare receivers × 816 payload bytes saved, minus 9 requests
+        // × 64 B the unicast baseline never sends.
+        let expect = (2.0 * 816.0 - 9.0 * 64.0) / 1e6;
+        assert!((r.airtime_saved_seconds - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multicast_tree_crosses_each_mesh_link_once() {
+        let m = Method::RapidSingle;
+        let mut fc = base_fc(m, 9); // 3 fogs × (1 source + 2 receivers)
+        fc.topology = Topology::Sharded;
+        fc.n_fogs = 3;
+        fc.policy = RebroadcastPolicy::MulticastTree;
+        let shards = vec![
+            tiny_shard(m, vec![500], &[400]),
+            tiny_shard(m, vec![500], &[0; 0]),
+            tiny_shard(m, vec![500], &[0; 0]),
+        ];
+        let r = simulate(&fc, shards.clone());
+        // The blob relays 0→1→2: one copy on fog 0's uplink, one on fog
+        // 1's, none on fog 2's. Fog 0's 8 B labels still fetch lazily
+        // from the origin (2 copies); the empty shards' labels are 0 B.
+        assert_eq!(r.fogs[0].backhaul_bytes, 400 + 8 + 8);
+        assert_eq!(r.fogs[1].backhaul_bytes, 400);
+        assert_eq!(r.fogs[2].backhaul_bytes, 0);
+        assert_eq!(r.backhaul_bytes, 816);
+        // One shared airtime per cell: 3 cells × 400 B.
+        assert_eq!(r.broadcast_bytes, 3 * 400);
+        assert_eq!(r.label_bytes, 3 * 8);
+        // The tree pushes exactly once per fog: cold misses, no hits.
+        assert_eq!(r.cache.misses, 2);
+        assert_eq!(r.cache.hits, 0);
+        assert_eq!(r.cache.insertions, 2);
+
+        // Same stream under unicast: identical backhaul (warm cache),
+        // strictly more broadcast bytes.
+        let mut uni = base_fc(m, 9);
+        uni.topology = Topology::Sharded;
+        uni.n_fogs = 3;
+        let u = simulate(&uni, shards);
+        assert_eq!(u.backhaul_bytes, r.backhaul_bytes);
+        assert_eq!(u.broadcast_bytes, 6 * 400);
+        assert!(r.redistribution_bytes() < u.redistribution_bytes());
+    }
+
+    #[test]
+    fn jpeg_baseline_blobs_stay_out_of_the_weight_cache_stats() {
+        // Regression for the cross-method comparison: jpeg-direct
+        // payloads used to be credited to the "INR weight cache" and
+        // inflate its hit/bytes_saved stats for the JPEG baseline. They
+        // still dedup through the same store (byte totals are identical
+        // in every cache config), but their counters land in the relay
+        // stats, leaving the weight-cache metrics at zero.
+        let m = Method::Jpeg { quality: 85 };
+        let mut fc = base_fc(m, 12); // 2 fogs × (1 source + 5 receivers)
+        fc.topology = Topology::Sharded;
+        fc.n_fogs = 2;
+        let r = simulate(&fc, vec![tiny_shard(m, vec![], &[300]), tiny_shard(m, vec![], &[600])]);
+        assert_eq!(r.cache.hits, 0, "jpeg blobs must not hit the INR cache stats");
+        assert_eq!(r.cache.misses, 0, "jpeg blobs must not miss the INR cache stats");
+        assert_eq!(r.cache.insertions, 0);
+        assert_eq!(r.cache.bytes_saved, 0);
+        // The relay store did the dedup work: per blob per remote fog,
+        // one miss + 4 further receivers served locally.
+        assert_eq!(r.relay.misses, 2);
+        assert_eq!(r.relay.hits, 2 * 4);
+        assert_eq!(r.relay.insertions, 2);
+        assert_eq!(r.relay.bytes_saved, 4 * 300 + 4 * 600);
+        // Byte totals unchanged: each blob and each 8 B label set
+        // crosses the mesh once per remote fog.
+        assert_eq!(r.backhaul_bytes, 300 + 600 + 8 + 8);
+        // 2 cells × 5 receivers × (300 + 600) per-receiver unicasts.
+        assert_eq!(r.broadcast_bytes, 2 * 5 * (300 + 600));
     }
 
     #[test]

@@ -78,17 +78,21 @@ impl EventQueue {
     }
 
     /// Schedule `event` at virtual `time`. Scheduling in the past is a
-    /// logic error in the engine (events may only create future work).
+    /// logic error in the engine (events may only create future work),
+    /// and the boundary is exact: `time == now` is the earliest legal
+    /// slot and keeps FIFO order among equal timestamps. There is no
+    /// past-tolerance band — an earlier revision accepted times up to
+    /// 1e-9 in the past and then silently clamped them to `now`,
+    /// reordering them behind events already queued at `now`; the engine
+    /// never produces past times (every transmit/schedule result is
+    /// ≥ the submitting event's time), so tolerated drift only masked
+    /// real bugs. The time is stored unmodified.
     pub fn push(&mut self, time: f64, event: Event) {
         assert!(time.is_finite(), "non-finite event time");
-        assert!(
-            time >= self.now - 1e-9,
-            "event scheduled in the past: {time} < {}",
-            self.now
-        );
+        assert!(time >= self.now, "event scheduled in the past: {time} < {}", self.now);
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Reverse(Scheduled { time: time.max(self.now), seq, event }));
+        self.heap.push(Reverse(Scheduled { time, seq, event }));
     }
 
     /// Pop the earliest event (FIFO among equal timestamps) and advance
@@ -187,5 +191,32 @@ mod tests {
         q.push(10.0, ev(0));
         q.pop();
         q.push(1.0, ev(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduled in the past")]
+    fn rejects_the_formerly_tolerated_past_band() {
+        // The satellite requirement: the tolerance and the clamp agree.
+        // An event 1e-9 in the past used to be accepted and silently
+        // reordered to `now`; it is now rejected at the exact boundary.
+        let mut q = EventQueue::new();
+        q.push(10.0, ev(0));
+        q.pop();
+        q.push(10.0 - 1e-9, ev(1));
+    }
+
+    #[test]
+    fn boundary_event_at_now_keeps_fifo_order_unclamped() {
+        let mut q = EventQueue::new();
+        q.push(5.0, ev(0));
+        q.pop();
+        // time == now is the earliest legal slot; it must neither panic
+        // nor be displaced behind later-pushed equal-time events.
+        q.push(5.0, ev(1));
+        q.push(5.0, ev(2));
+        let (t1, e1) = q.pop().unwrap();
+        assert_eq!((t1, e1), (5.0, ev(1)));
+        let (t2, e2) = q.pop().unwrap();
+        assert_eq!((t2, e2), (5.0, ev(2)));
     }
 }

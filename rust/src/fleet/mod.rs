@@ -13,7 +13,16 @@
 //!   jobs drain a queue instead of running inline;
 //! * [`cache`] — per-fog content-addressed INR weight cache keyed by a
 //!   hash of the packed [`crate::inr::Record`] bytes, deduplicating
-//!   backhaul fetches across receivers and re-broadcasts;
+//!   backhaul fetches across receivers and re-broadcasts. Every payload
+//!   class shares the store and its retention rules, but the stats are
+//!   split (weight vs relay counters) so the weight-cache metrics stay
+//!   method-fair against the JPEG baseline;
+//! * [`policy`] — re-broadcast policies over the same fleet: legacy
+//!   per-receiver `unicast` (the byte-parity default), `cell-multicast`
+//!   (one airtime per blob per cell), `multicast-tree` (cache-aware
+//!   backhaul spanning tree, each blob crosses each link once) and
+//!   `receiver-pull` (receiver-driven fetch, deduplicated by the weight
+//!   cache), selectable via `residual-inr fleet --policy`;
 //! * [`traffic`] — the session-free size/cost model: zero-weight packed
 //!   records whose byte sizes match the live encoder record-for-record;
 //! * [`scenario`] — `paper-10` / `sharded` / `hierarchical` topologies;
@@ -33,6 +42,7 @@ pub mod cache;
 pub mod channel;
 pub mod engine;
 pub mod events;
+pub mod policy;
 pub mod report;
 pub mod scenario;
 pub mod traffic;
@@ -40,8 +50,9 @@ pub mod workers;
 
 pub use cache::{blob_hash, CacheStats, WeightCache};
 pub use channel::Channel;
-pub use engine::{run, simulate};
+pub use engine::{model_fleet_shards, run, simulate};
 pub use events::{Event, EventQueue};
+pub use policy::RebroadcastPolicy;
 pub use report::{FleetReport, FogReport};
 pub use scenario::{FleetConfig, Topology};
 pub use traffic::{model_shard, Blob, ShardTraffic};

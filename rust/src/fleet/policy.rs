@@ -1,0 +1,136 @@
+//! Re-broadcast policies: how a fog redistributes an encoded blob.
+//!
+//! The paper's fog node *broadcasts* INR weights to its edge devices;
+//! the engine historically modeled every delivery as a per-receiver cell
+//! unicast plus a per-peer backhaul copy. A [`RebroadcastPolicy`]
+//! generalizes that one hard-coded flow into four communication
+//! disciplines over the same fleet:
+//!
+//! * [`Unicast`] — the legacy semantics and the byte-parity default:
+//!   one cell transmission per receiver, remote fogs fetch on demand
+//!   per receiver (deduplicated by the weight cache).
+//! * [`CellMulticast`] — the paper's actual broadcast: one airtime per
+//!   blob per cell serves every receiver in that cell; remote fogs
+//!   still fetch lazily, once per cell.
+//! * [`MulticastTree`] — cell multicast plus an eager, cache-aware
+//!   spanning tree over the backhaul: each blob crosses each tree link
+//!   exactly once (mesh fogs relay along a chain; the cloud relay
+//!   uplinks once and fans out on per-fog downlinks), skipping fogs
+//!   whose cache already holds the blob.
+//! * [`ReceiverPull`] — receiver-driven: each receiver posts a small
+//!   pull request on its cell and the fog answers with one shared
+//!   transmission that the co-located receivers overhear. The backhaul
+//!   leg is the same once-per-cell fetch as [`CellMulticast`]; what
+//!   distinguishes the policy is the explicit request traffic, whose
+//!   bytes and airtime the report accounts separately (and nets out of
+//!   the airtime-saved metric).
+//!
+//! All four run the identical shard streams, worker pools and channels,
+//! so reports are comparable method-for-method; the engine additionally
+//! tracks the airtime a shared-medium policy saves relative to unicast.
+//!
+//! [`Unicast`]: RebroadcastPolicy::Unicast
+//! [`CellMulticast`]: RebroadcastPolicy::CellMulticast
+//! [`MulticastTree`]: RebroadcastPolicy::MulticastTree
+//! [`ReceiverPull`]: RebroadcastPolicy::ReceiverPull
+
+/// Bytes of one receiver-pull request message (a content-hash + shard
+/// coordinate ask; accounted separately from payload broadcast bytes).
+pub const PULL_REQUEST_BYTES: u64 = 64;
+
+/// How fog cells redistribute encoded blobs to their receivers and to
+/// peer fogs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RebroadcastPolicy {
+    /// One cell transmission per receiver; remote fogs fetch on demand
+    /// per receiver, deduplicated by the weight cache (legacy default).
+    #[default]
+    Unicast,
+    /// One airtime per blob per cell; remote fogs fetch once per cell.
+    CellMulticast,
+    /// Cell multicast + eager cache-aware spanning tree on the backhaul.
+    MulticastTree,
+    /// Receivers pull; one overheard response per cell, with the
+    /// request traffic accounted explicitly (backhaul as CellMulticast).
+    ReceiverPull,
+}
+
+impl RebroadcastPolicy {
+    pub const ALL: [RebroadcastPolicy; 4] = [
+        RebroadcastPolicy::Unicast,
+        RebroadcastPolicy::CellMulticast,
+        RebroadcastPolicy::MulticastTree,
+        RebroadcastPolicy::ReceiverPull,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RebroadcastPolicy::Unicast => "unicast",
+            RebroadcastPolicy::CellMulticast => "cell-multicast",
+            RebroadcastPolicy::MulticastTree => "multicast-tree",
+            RebroadcastPolicy::ReceiverPull => "receiver-pull",
+        }
+    }
+
+    /// Parse a CLI policy name (with common aliases).
+    pub fn from_name(s: &str) -> Option<RebroadcastPolicy> {
+        match s {
+            "unicast" => Some(RebroadcastPolicy::Unicast),
+            "cell-multicast" | "multicast" | "broadcast" => {
+                Some(RebroadcastPolicy::CellMulticast)
+            }
+            "multicast-tree" | "tree" => Some(RebroadcastPolicy::MulticastTree),
+            "receiver-pull" | "pull" => Some(RebroadcastPolicy::ReceiverPull),
+            _ => None,
+        }
+    }
+
+    /// One cell airtime serves every receiver in the cell (the wireless
+    /// medium is shared, so co-located receivers hear the same frame).
+    pub fn shares_cell_airtime(&self) -> bool {
+        !matches!(self, RebroadcastPolicy::Unicast)
+    }
+
+    /// The backhaul leg is an eager push along a spanning tree at encode
+    /// time rather than a lazy fetch on first local demand.
+    pub fn pushes_backhaul_tree(&self) -> bool {
+        matches!(self, RebroadcastPolicy::MulticastTree)
+    }
+
+    /// Receivers post an explicit pull request before the payload ships.
+    pub fn pulls(&self) -> bool {
+        matches!(self, RebroadcastPolicy::ReceiverPull)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for p in RebroadcastPolicy::ALL {
+            assert_eq!(RebroadcastPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(RebroadcastPolicy::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn aliases_parse() {
+        use RebroadcastPolicy::*;
+        assert_eq!(RebroadcastPolicy::from_name("multicast"), Some(CellMulticast));
+        assert_eq!(RebroadcastPolicy::from_name("broadcast"), Some(CellMulticast));
+        assert_eq!(RebroadcastPolicy::from_name("tree"), Some(MulticastTree));
+        assert_eq!(RebroadcastPolicy::from_name("pull"), Some(ReceiverPull));
+    }
+
+    #[test]
+    fn default_is_the_byte_parity_unicast() {
+        assert_eq!(RebroadcastPolicy::default(), RebroadcastPolicy::Unicast);
+        assert!(!RebroadcastPolicy::Unicast.shares_cell_airtime());
+        assert!(RebroadcastPolicy::CellMulticast.shares_cell_airtime());
+        assert!(RebroadcastPolicy::MulticastTree.pushes_backhaul_tree());
+        assert!(RebroadcastPolicy::ReceiverPull.pulls());
+        assert!(!RebroadcastPolicy::ReceiverPull.pushes_backhaul_tree());
+    }
+}

@@ -19,7 +19,15 @@ pub struct FogReport {
     pub encode_wait_seconds: f64,
     pub max_queue_depth: usize,
     pub cell_bytes: u64,
+    /// Uncapped airtime/horizon ratio ([`crate::fleet::Channel`]
+    /// contract: above 1.0 = oversubscribed). Engine runs price this
+    /// against the makespan, which bounds it ≤ 1; consumers measuring
+    /// sub-horizon windows see the overload uncapped, and the printed
+    /// table renders anything above 100% as `100%+`.
     pub cell_utilization: f64,
+    /// Cell airtime avoided relative to per-receiver unicast (0 under
+    /// the `unicast` policy).
+    pub airtime_saved_seconds: f64,
     pub backhaul_bytes: u64,
     pub cache: CacheStats,
     pub cache_blobs: usize,
@@ -35,6 +43,8 @@ pub struct FogReport {
 pub struct FleetReport {
     pub scenario: String,
     pub topology: &'static str,
+    /// Re-broadcast policy the run was delivered under.
+    pub policy: &'static str,
     pub method: String,
     pub n_fogs: usize,
     pub n_edges: usize,
@@ -49,12 +59,22 @@ pub struct FleetReport {
     pub broadcast_bytes: u64,
     pub label_bytes: u64,
     pub backhaul_bytes: u64,
+    /// Receiver-pull request bytes (`receiver-pull` policy only;
+    /// accounted apart from the payload broadcast bytes).
+    pub pull_bytes: u64,
     pub total_bytes: u64,
     // Timeline.
     pub makespan_seconds: f64,
+    /// Cell airtime avoided fleet-wide relative to per-receiver unicast.
+    pub airtime_saved_seconds: f64,
     pub encode_busy_seconds: f64,
     pub max_queue_depth: usize,
+    /// INR weight-blob cache counters (the paper's cache metrics).
     pub cache: CacheStats,
+    /// Dedup counters for non-INR payloads (the JPEG baseline) relayed
+    /// through the same per-fog store — kept apart so `cache` stays
+    /// method-fair.
+    pub relay: CacheStats,
     pub events: u64,
     pub fogs: Vec<FogReport>,
 }
@@ -64,15 +84,22 @@ impl FleetReport {
         self.cache.hit_rate()
     }
 
-    /// Bytes that crossed a wireless cell (upload + broadcast + labels).
+    /// Bytes that crossed a wireless cell (upload + broadcast + labels
+    /// + pull requests).
     pub fn cell_bytes(&self) -> u64 {
-        self.upload_bytes + self.broadcast_bytes + self.label_bytes
+        self.upload_bytes + self.broadcast_bytes + self.label_bytes + self.pull_bytes
+    }
+
+    /// The byte total the re-broadcast policies are compared on (the
+    /// redistribution term: payload broadcasts + backhaul copies).
+    pub fn redistribution_bytes(&self) -> u64 {
+        self.broadcast_bytes + self.backhaul_bytes
     }
 
     pub fn print(&self) {
         println!(
-            "# fleet scenario={} topology={} method={} fogs={} edges={} receivers={}",
-            self.scenario, self.topology, self.method, self.n_fogs, self.n_edges,
+            "# fleet scenario={} topology={} policy={} method={} fogs={} edges={} receivers={}",
+            self.scenario, self.topology, self.policy, self.method, self.n_fogs, self.n_edges,
             self.n_receivers
         );
         println!("frames / blobs           : {} / {}", self.n_frames, self.n_blobs);
@@ -87,7 +114,16 @@ impl FleetReport {
         println!("broadcast bytes          : {}", fmt_bytes(self.broadcast_bytes));
         println!("label bytes              : {}", fmt_bytes(self.label_bytes));
         println!("backhaul bytes           : {}", fmt_bytes(self.backhaul_bytes));
+        if self.pull_bytes > 0 {
+            println!("pull request bytes       : {}", fmt_bytes(self.pull_bytes));
+        }
         println!("total network bytes      : {}", fmt_bytes(self.total_bytes));
+        if self.airtime_saved_seconds != 0.0 {
+            // Signed: receiver-pull can net a LOSS (request airtime
+            // exceeds the shared-payload saving on near-empty cells),
+            // and that must be visible, not hidden.
+            println!("airtime saved vs unicast : {:+.2} s", self.airtime_saved_seconds);
+        }
         println!("makespan                 : {:.2} s", self.makespan_seconds);
         println!("fog encode work          : {:.2} worker-s", self.encode_busy_seconds);
         println!("max encode queue depth   : {}", self.max_queue_depth);
@@ -98,6 +134,14 @@ impl FleetReport {
             100.0 * self.cache.hit_rate(),
             fmt_bytes(self.cache.bytes_saved)
         );
+        if self.relay.hits + self.relay.misses > 0 {
+            println!(
+                "relay store (non-INR)    : {} hits / {} misses, {} dedup'd",
+                self.relay.hits,
+                self.relay.misses,
+                fmt_bytes(self.relay.bytes_saved)
+            );
+        }
         println!("events processed         : {}", self.events);
         if self.fogs.len() > 1 {
             let mut t = Table::new(&[
@@ -112,7 +156,13 @@ impl FleetReport {
                     f.blobs.to_string(),
                     f.max_queue_depth.to_string(),
                     fmt_bytes(f.cell_bytes),
-                    format!("{:.0}%", 100.0 * f.cell_utilization),
+                    // The struct keeps the uncapped ratio; only the
+                    // rendering caps, flagging oversubscribed cells.
+                    if f.cell_utilization > 1.0 {
+                        "100%+".to_string()
+                    } else {
+                        format!("{:.0}%", 100.0 * f.cell_utilization)
+                    },
                     fmt_bytes(f.backhaul_bytes),
                     format!("{:.1}", 100.0 * f.cache.hit_rate()),
                     fmt_bytes(f.cache.bytes_saved),

@@ -25,6 +25,8 @@ use crate::coordinator::{EncoderConfig, Method};
 use crate::costmodel::CostBook;
 use crate::data::Profile;
 
+use super::policy::RebroadcastPolicy;
+
 /// How fog cells share encoded blobs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Topology {
@@ -92,6 +94,10 @@ pub struct FleetConfig {
     pub cache_bytes: u64,
     /// Fine-tuning epochs on a receiver.
     pub epochs: usize,
+    /// How blobs are redistributed to receivers and peer fogs
+    /// ([`RebroadcastPolicy::Unicast`] reproduces the legacy byte
+    /// totals record-for-record).
+    pub policy: RebroadcastPolicy,
 }
 
 impl FleetConfig {
@@ -121,6 +127,7 @@ impl FleetConfig {
             costs,
             cache_bytes: 64 << 20,
             epochs: 2,
+            policy: RebroadcastPolicy::Unicast,
         }
     }
 
@@ -249,6 +256,20 @@ mod tests {
         }
         assert_eq!(Topology::from_name("cloud"), Some(Topology::Hierarchical));
         assert_eq!(Topology::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn every_constructor_defaults_to_byte_parity_unicast() {
+        let m = Method::RapidSingle;
+        assert_eq!(FleetConfig::paper_10(m, book(m)).policy, RebroadcastPolicy::Unicast);
+        assert_eq!(
+            FleetConfig::from_scenario("sharded", m, book(m)).unwrap().policy,
+            RebroadcastPolicy::Unicast
+        );
+        assert_eq!(
+            FleetConfig::for_measured(m, Topology::Sharded, 2, 3, 1e6, 1, book(m)).policy,
+            RebroadcastPolicy::Unicast
+        );
     }
 
     #[test]

@@ -29,8 +29,10 @@
 //! * [`pipeline`] — grouped parallel decoding (§3.2) + baseline loaders
 //! * [`net`] — simulated wireless network (single shared medium)
 //! * [`fleet`] — discrete-event multi-fog scale-out simulator: event
-//!   queue, contention-aware channels, encode worker pools, and a
-//!   content-addressed INR weight cache per fog
+//!   queue, contention-aware channels, encode worker pools, a
+//!   content-addressed INR weight cache per fog, and pluggable
+//!   re-broadcast policies (unicast / cell-multicast / multicast-tree /
+//!   receiver-pull)
 //! * [`costmodel`] — virtual-time prices for the fleet engine: a
 //!   `Calibrated` model measured against the live PJRT session, with an
 //!   `Analytical` fallback (shape-derived) when `artifacts/` are absent

@@ -27,10 +27,17 @@ use residual_inr::coordinator::{
 };
 use residual_inr::costmodel::{self, Analytical, Calibrated, CostModel, CostSource};
 use residual_inr::data::Profile;
-use residual_inr::fleet::{FleetConfig, Topology};
+use residual_inr::fleet::{FleetConfig, RebroadcastPolicy, Topology};
 use residual_inr::runtime::Session;
 use residual_inr::util::cli::Args;
 use residual_inr::util::fmt_bytes;
+
+fn parse_policy(args: &Args) -> Result<RebroadcastPolicy> {
+    let s = args.get_or("policy", "unicast");
+    RebroadcastPolicy::from_name(s).ok_or_else(|| {
+        anyhow!("unknown policy {s} (unicast|cell-multicast|multicast-tree|receiver-pull)")
+    })
+}
 
 fn parse_method(s: &str, quality: u8) -> Result<Method> {
     Ok(match s {
@@ -65,14 +72,18 @@ fn main() -> Result<()> {
                  simulate   --method <jpeg|rapid|res-rapid|res-rapid-direct|nerv|res-nerv>\n\
                  \u{20}          --profile <dac-sdc|uav123|otb100>\n\
                  \u{20}          --sequences N --epochs N --receivers N --max-frames N [--no-grouping]\n\
-                 \u{20}          --fogs F --topology <sharded|hierarchical> (F > 1 runs the\n\
-                 \u{20}          live encoder per fog shard and reports fleet-wide makespan\n\
-                 \u{20}          from a cost model calibrated on the run; alias: sim)\n\
+                 \u{20}          --fogs F --topology <sharded|hierarchical> --policy P\n\
+                 \u{20}          (F > 1 runs the live encoder per fog shard and reports\n\
+                 \u{20}          fleet-wide makespan from a cost model calibrated on the\n\
+                 \u{20}          run; alias: sim)\n\
                  fleet      --scenario <paper-10|sharded|hierarchical> --method M --profile P\n\
                  \u{20}          --fogs N --edges N --workers K --sequences N --max-frames N\n\
                  \u{20}          --epochs N --seed S --cache-mb MB --cost <auto|analytical|calibrated>\n\
+                 \u{20}          --policy <unicast|cell-multicast|multicast-tree|receiver-pull>\n\
                  \u{20}          (paper-10 = 1 fog, 10 edge devices; sharded = per-fog shards\n\
-                 \u{20}          over mesh backhaul; hierarchical = cloud→fog→edge relay)\n\
+                 \u{20}          over mesh backhaul; hierarchical = cloud→fog→edge relay;\n\
+                 \u{20}          unicast = legacy byte-parity default, the others share one\n\
+                 \u{20}          airtime per cell and dedup or tree-push the backhaul)\n\
                  compress   --method M --profile P --max-frames N [--quality Q]\n\
                  commmodel  --devices K --alpha A [--receivers N]\n\
                  info\n\
@@ -107,17 +118,24 @@ fn simulate(args: &Args) -> Result<()> {
     if fogs <= 1 && args.get("topology").is_some() {
         return Err(anyhow!("--topology requires --fogs > 1 (the multi-fog measured pipeline)"));
     }
+    if fogs <= 1 && args.get("policy").is_some() {
+        return Err(anyhow!(
+            "--policy requires --fogs > 1 (use `fleet --policy` for synthetic runs)"
+        ));
+    }
     if fogs > 1 {
         let topology = args.get_or("topology", "sharded");
         let topology = Topology::from_name(topology)
             .ok_or_else(|| anyhow!("unknown topology {topology} (sharded|hierarchical)"))?;
-        let mf = MultiFogConfig { n_fogs: fogs, topology };
+        let policy = parse_policy(args)?;
+        let mf = MultiFogConfig { n_fogs: fogs, topology, policy };
         println!(
-            "# simulate method={} profile={} fogs={} topology={}",
+            "# simulate method={} profile={} fogs={} topology={} policy={}",
             sim.method.name(),
             profile.name(),
             fogs,
-            topology.name()
+            topology.name(),
+            policy.name()
         );
         // Artifact presence is a manifest read, not a PJRT session —
         // run_multi opens the real session itself.
@@ -145,6 +163,7 @@ fn simulate(args: &Args) -> Result<()> {
             fc.max_frames = sim.max_train_frames;
             fc.enc = sim.enc.clone();
             fc.upload_quality = sim.upload_quality;
+            fc.policy = policy;
             let report = residual_inr::fleet::run(&cfg, &fc)?;
             report.print();
             return Ok(());
@@ -208,6 +227,7 @@ fn fleet(args: &Args) -> Result<()> {
         );
     }
     let mut fc = FleetConfig::from_scenario(args.get_or("scenario", "paper-10"), method, costs)?;
+    fc.policy = parse_policy(args)?;
     fc.profile = profile;
     fc.n_fogs = args.get_usize("fogs", fc.n_fogs).map_err(|e| anyhow!(e))?;
     fc.n_edges = args.get_usize("edges", fc.n_edges).map_err(|e| anyhow!(e))?;

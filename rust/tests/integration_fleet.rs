@@ -10,10 +10,9 @@
 
 use residual_inr::commmodel as cm;
 use residual_inr::config::ArchConfig;
-use residual_inr::coordinator::sim::cap_frames;
 use residual_inr::coordinator::{EncoderConfig, Method};
 use residual_inr::costmodel::{Analytical, CostBook, CostModel};
-use residual_inr::data::{generate_dataset, Profile};
+use residual_inr::data::Profile;
 use residual_inr::fleet::{self, FleetConfig, ShardTraffic};
 use residual_inr::net::{NetSim, NodeId};
 
@@ -29,13 +28,7 @@ fn costs(m: Method) -> CostBook {
 
 /// Rebuild the exact shard `fleet::run` simulates for fog 0.
 fn shard_of(cfg: &ArchConfig, fc: &FleetConfig) -> ShardTraffic {
-    let ds = generate_dataset(fc.profile, fc.seed, fc.n_sequences);
-    let (_pre, fine) = ds.split_half();
-    let fine = match fc.max_frames {
-        Some(m) => cap_frames(&fine, m),
-        None => fine,
-    };
-    fleet::model_shard(cfg, &fine, fc.method, &fc.enc, fc.upload_quality, 0)
+    fleet::model_fleet_shards(cfg, fc).swap_remove(0)
 }
 
 /// Replay a shard through the legacy serialized NetSim exactly the way

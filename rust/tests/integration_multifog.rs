@@ -23,7 +23,7 @@ use residual_inr::coordinator::{
 };
 use residual_inr::costmodel::{Analytical, Calibrated, CostModel, CostSource};
 use residual_inr::data::{generate_dataset, Dataset, Profile};
-use residual_inr::fleet::{self, FleetConfig, ShardTraffic, Topology};
+use residual_inr::fleet::{self, FleetConfig, RebroadcastPolicy, ShardTraffic, Topology};
 use residual_inr::runtime::Session;
 
 fn cfg() -> ArchConfig {
@@ -178,7 +178,11 @@ fn measured_multifog_pipeline_end_to_end() {
     }
     let cfg = cfg();
     let sim = tiny_sim(Method::ResRapid { direct: false });
-    let mf = MultiFogConfig { n_fogs: 2, topology: Topology::Sharded };
+    let mf = MultiFogConfig {
+        n_fogs: 2,
+        topology: Topology::Sharded,
+        policy: RebroadcastPolicy::Unicast,
+    };
     let r = run_multi(&cfg, &sim, &mf).unwrap();
 
     // Per-shard structure.
@@ -220,4 +224,18 @@ fn measured_multifog_pipeline_end_to_end() {
     for v in [r.map_before, r.map50_after, r.map_after, r.mean_iou_after] {
         assert!((0.0..=1.0).contains(&v), "metric out of range: {v}");
     }
+
+    // The measured adapter under a shared-airtime policy still counts
+    // parity 0 (expected_cell_bytes is policy-aware) and redistributes
+    // strictly fewer bytes than unicast.
+    let mc = MultiFogConfig {
+        n_fogs: 2,
+        topology: Topology::Sharded,
+        policy: RebroadcastPolicy::CellMulticast,
+    };
+    let rm = run_multi(&cfg, &sim, &mc).unwrap();
+    assert_eq!(rm.byte_parity_mismatch, 0, "expected {} B", rm.expected_cell_bytes);
+    assert_eq!(rm.fleet.policy, "cell-multicast");
+    assert!(rm.fleet.redistribution_bytes() < r.fleet.redistribution_bytes());
+    assert!(rm.fleet.airtime_saved_seconds > 0.0);
 }

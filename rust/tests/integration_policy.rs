@@ -1,0 +1,162 @@
+//! Re-broadcast policy integration: `unicast` must reproduce the legacy
+//! engine's byte totals exactly on all three topologies (it is the
+//! byte-parity baseline every policy comparison is anchored to), and no
+//! other policy may ever exceed unicast on redistribution
+//! (broadcast + backhaul) bytes for the same shard stream — with the
+//! shared-airtime policies strictly below it whenever cells hold more
+//! than one receiver.
+//!
+//! Everything here is session-free: the traffic model packs zero-weight
+//! records whose sizes are shape-determined, so no PJRT artifacts are
+//! needed.
+
+use residual_inr::config::ArchConfig;
+use residual_inr::coordinator::{EncoderConfig, Method};
+use residual_inr::costmodel::{Analytical, CostBook, CostModel};
+use residual_inr::data::Profile;
+use residual_inr::fleet::{self, FleetConfig, RebroadcastPolicy, Topology};
+
+fn cfg() -> ArchConfig {
+    ArchConfig::load_default().unwrap()
+}
+
+fn costs(m: Method) -> CostBook {
+    Analytical::new(&cfg(), Profile::DacSdc, m, &EncoderConfig::fast()).book()
+}
+
+/// The configs the properties quantify over: every topology × a fog
+/// method (two seeds) and the serverless baseline (one — its shards are
+/// the priciest to model, real JPEG passes per frame).
+fn config_grid() -> Vec<FleetConfig> {
+    let mut out = Vec::new();
+    for (method, seeds) in [
+        (Method::ResRapid { direct: false }, &[7u64, 23][..]),
+        (Method::Jpeg { quality: 95 }, &[7][..]),
+    ] {
+        for scenario in ["paper-10", "sharded", "hierarchical"] {
+            for &seed in seeds {
+                let mut fc = FleetConfig::from_scenario(scenario, method, costs(method)).unwrap();
+                fc.seed = seed;
+                out.push(fc);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn unicast_reproduces_legacy_byte_totals_on_every_topology() {
+    // The legacy accounting, stated analytically: uploads land once on
+    // their own cell; every payload and label byte is unicast to each
+    // receiver in scope; each payload+label byte crosses the backhaul
+    // once per remote fog under the mesh (warm cache / relay memo) and
+    // once per remote fog plus one cloud uplink under the relay.
+    let cfg = cfg();
+    for fc in config_grid() {
+        let shards = fleet::model_fleet_shards(&cfg, &fc);
+        let payload: u64 = shards.iter().map(|s| s.payload_bytes()).sum();
+        let labels: u64 = shards.iter().map(|s| s.label_bytes()).sum();
+        let uploads: u64 = shards.iter().map(|s| s.upload_bytes()).sum();
+        let receivers: u64 = (0..fc.n_fogs).map(|f| fc.receivers_of_fog(f) as u64).sum();
+        let f = fc.n_fogs as u64;
+        let expected_backhaul = match fc.topology {
+            Topology::SingleFog => 0,
+            Topology::Sharded => (f - 1) * (payload + labels),
+            Topology::Hierarchical => f * (payload + labels),
+        };
+
+        let r = fleet::run(&cfg, &fc).unwrap();
+        let tag = format!("{} {} seed {}", fc.scenario, fc.method.name(), fc.seed);
+        assert_eq!(r.policy, "unicast", "{tag}");
+        assert_eq!(r.upload_bytes, uploads, "{tag} upload");
+        assert_eq!(r.broadcast_bytes, receivers * payload, "{tag} broadcast");
+        assert_eq!(r.label_bytes, receivers * labels, "{tag} labels");
+        assert_eq!(r.backhaul_bytes, expected_backhaul, "{tag} backhaul");
+        assert_eq!(r.pull_bytes, 0, "{tag} pull");
+        assert_eq!(
+            r.total_bytes,
+            uploads + receivers * (payload + labels) + expected_backhaul,
+            "{tag} total"
+        );
+        assert_eq!(r.airtime_saved_seconds, 0.0, "{tag} airtime");
+    }
+}
+
+#[test]
+fn no_policy_exceeds_unicast_redistribution_bytes() {
+    let cfg = cfg();
+    for base in config_grid() {
+        // One shard stream per config, replayed under every policy.
+        let shards = fleet::model_fleet_shards(&cfg, &base);
+        let uni = fleet::simulate(&base, shards.clone());
+        for policy in RebroadcastPolicy::ALL {
+            if policy == RebroadcastPolicy::Unicast {
+                continue; // `uni` above IS this run — nothing to compare.
+            }
+            let mut fc = base.clone();
+            fc.policy = policy;
+            let r = fleet::simulate(&fc, shards.clone());
+            let tag =
+                format!("{} {} {} seed {}", fc.scenario, fc.method.name(), policy.name(), fc.seed);
+            assert!(
+                r.redistribution_bytes() <= uni.redistribution_bytes(),
+                "{tag}: {} > unicast {}",
+                r.redistribution_bytes(),
+                uni.redistribution_bytes()
+            );
+            // Uploads are point-to-point and policy-independent.
+            assert_eq!(r.upload_bytes, uni.upload_bytes, "{tag} upload");
+            // Every cell here holds many receivers, so shared-airtime
+            // policies are strictly below unicast, not merely equal.
+            if policy.shares_cell_airtime() {
+                assert!(
+                    r.redistribution_bytes() < uni.redistribution_bytes(),
+                    "{tag}: sharing airtime must strictly reduce bytes"
+                );
+                assert!(r.airtime_saved_seconds > 0.0, "{tag} airtime");
+            }
+        }
+    }
+}
+
+#[test]
+fn receiver_pull_requests_are_accounted_apart_from_payload() {
+    let cfg = cfg();
+    let m = Method::ResRapid { direct: false };
+    let mut fc = FleetConfig::from_scenario("sharded", m, costs(m)).unwrap();
+    fc.policy = RebroadcastPolicy::ReceiverPull;
+    let r = fleet::run(&cfg, &fc).unwrap();
+    // One 64 B request per receiver per delivered blob (payload blobs +
+    // one label pseudo-blob per shard), counted outside broadcast bytes.
+    let receivers: u64 = (0..fc.n_fogs).map(|f| fc.receivers_of_fog(f) as u64).sum();
+    let expected = receivers
+        * (r.n_blobs as u64 + fc.n_fogs as u64)
+        * residual_inr::fleet::policy::PULL_REQUEST_BYTES;
+    assert_eq!(r.pull_bytes, expected);
+    assert_eq!(
+        r.total_bytes,
+        r.upload_bytes + r.broadcast_bytes + r.label_bytes + r.backhaul_bytes + r.pull_bytes
+    );
+}
+
+#[test]
+fn multicast_tree_keeps_mesh_backhaul_at_one_copy_per_link() {
+    // On the warm-cache mesh, unicast already dedups to one backhaul
+    // copy per remote fog; the eager tree must match that total exactly
+    // (each blob crosses each tree link once, never more) while the
+    // shared cell leg drops the broadcast term.
+    let cfg = cfg();
+    let m = Method::ResRapid { direct: false };
+    let mut uni = FleetConfig::from_scenario("sharded", m, costs(m)).unwrap();
+    uni.policy = RebroadcastPolicy::Unicast;
+    let mut tree = uni.clone();
+    tree.policy = RebroadcastPolicy::MulticastTree;
+    let ru = fleet::run(&cfg, &uni).unwrap();
+    let rt = fleet::run(&cfg, &tree).unwrap();
+    assert_eq!(rt.backhaul_bytes, ru.backhaul_bytes);
+    assert!(rt.broadcast_bytes < ru.broadcast_bytes);
+    // The tree pushes are cold per fog: no cache hits, one insertion per
+    // payload blob per remote fog.
+    assert_eq!(rt.cache.hits, 0);
+    assert_eq!(rt.cache.insertions as usize, (rt.n_fogs - 1) * rt.n_blobs);
+}
