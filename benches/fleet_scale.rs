@@ -3,9 +3,12 @@
 //! discrete-event fleet engine (single fog cell, the paper's topology,
 //! scaled from the 10-device testbed to 100 and 1000 edge devices), plus
 //! one multi-fog point per topology (sharded mesh / hierarchical relay,
-//! 4 fogs × 200 edges) and a re-broadcast policy sweep (unicast /
-//! cell-multicast / multicast-tree / receiver-pull) over both multi-fog
-//! scenarios, reported as redistribution bytes vs the unicast baseline.
+//! 4 fogs × 200 edges), a re-broadcast policy sweep (unicast /
+//! cell-multicast / multicast-tree / receiver-pull / auto) over both
+//! multi-fog scenarios reported as redistribution bytes vs the unicast
+//! baseline, and a lossy-link sweep (0–10% cell loss) recording each
+//! policy's repair/control overhead and goodput under its own repair
+//! discipline (ARQ vs NACK rounds vs re-request).
 //!
 //! This extends Fig 8 from analytical totals to a simulated timeline:
 //! the byte curves reproduce the §4 model (fog+INR grows with slope
@@ -141,8 +144,8 @@ fn main() -> anyhow::Result<()> {
         "makespan (s)",
     ]);
     let mut policy_rows = Vec::new();
-    // The shard streams depend only on dataset knobs, not topology or
-    // policy — model them once and replay for all 8 sweep points.
+    // The shard streams depend only on dataset knobs, not topology,
+    // policy or loss — model them once and replay for every sweep point.
     let mut sweep_base = FleetConfig::from_scenario("sharded", method, costs)?;
     sweep_base.max_frames = Some(frames);
     sweep_base.encode_workers = workers;
@@ -184,6 +187,53 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
+    // Lossy-link sweep: the honest policy comparison — every policy
+    // pays its own repair bill (ARQ retransmissions for unicast legs,
+    // NACK rounds for multicast, re-request ARQ for pull). Delivered
+    // bytes are loss-invariant by construction; the rows record what
+    // the wire additionally paid and the goodput fraction that leaves.
+    println!("\n== lossy-link sweep: 4 fogs x 200 edges, res-rapid, sharded ==");
+    let mut t = Table::new(&[
+        "loss", "policy", "delivered", "repair", "control", "goodput", "airtime saved (s)",
+        "makespan (s)",
+    ]);
+    let mut loss_rows = Vec::new();
+    for loss in [0.0, 0.02, 0.05, 0.1] {
+        for policy in RebroadcastPolicy::ALL {
+            let mut fc = FleetConfig::from_scenario("sharded", method, costs)?;
+            fc.max_frames = Some(frames);
+            fc.encode_workers = workers;
+            fc.policy = policy;
+            fc.loss_cell = loss;
+            fc.loss_backhaul = loss / 10.0; // wired backhaul: an order cleaner
+            let r = fleet::simulate(&fc, sweep_shards.clone());
+            t.row(&[
+                format!("{:.0}%", 100.0 * loss),
+                policy.name().to_string(),
+                fmt_bytes(r.total_bytes),
+                fmt_bytes(r.repair_bytes),
+                fmt_bytes(r.control_bytes),
+                format!("{:.1}%", 100.0 * r.goodput_ratio()),
+                format!("{:+.2}", r.airtime_saved_seconds),
+                format!("{:.2}", r.makespan_seconds),
+            ]);
+            loss_rows.push(Json::obj(vec![
+                ("loss", Json::Num(loss)),
+                ("policy", Json::Str(policy.name().to_string())),
+                ("total_bytes", Json::Num(r.total_bytes as f64)),
+                ("repair_bytes", Json::Num(r.repair_bytes as f64)),
+                ("control_bytes", Json::Num(r.control_bytes as f64)),
+                ("raw_bytes", Json::Num(r.raw_bytes() as f64)),
+                ("goodput_ratio", Json::Num(r.goodput_ratio())),
+                ("lost_frames", Json::Num(r.lost_frames as f64)),
+                ("retransmissions", Json::Num(r.retransmissions as f64)),
+                ("airtime_saved_seconds", Json::Num(r.airtime_saved_seconds)),
+                ("makespan_seconds", Json::Num(r.makespan_seconds)),
+            ]));
+        }
+    }
+    t.print();
+
     println!("\n== reduction vs serverless JPEG (paper Fig 8 regime) ==");
     let mut t = Table::new(&["devices", "rapid", "res-rapid"]);
     let mut reductions = Vec::new();
@@ -220,6 +270,7 @@ fn main() -> anyhow::Result<()> {
         ("single_fog", Json::Arr(rows)),
         ("multi_fog", Json::Arr(multi)),
         ("policy_sweep", Json::Arr(policy_rows)),
+        ("loss_sweep", Json::Arr(loss_rows)),
         ("reduction_vs_jpeg", Json::Arr(reductions)),
     ]);
     let out = residual_inr::config::find_repo_file("Cargo.toml")

@@ -7,8 +7,30 @@
 //! FIFO behind its `busy_until` horizon, so traffic within a cell
 //! contends while different cells overlap in time — the timeline overlap
 //! the single-fog simulator cannot express.
+//!
+//! Since the [`crate::fleet::link`] reliability layer landed, the
+//! channel also distinguishes *why* bytes were on the air: delivered
+//! payload (the only class that counts toward the per-tag byte totals
+//! policies are compared on), repair retransmissions, and control
+//! frames (NACKs, pull retries). Goodput is delivered bytes over a
+//! horizon; raw throughput additionally carries the repair/control
+//! overhead a lossy medium pays.
 
 use std::collections::BTreeMap;
+
+/// Why a transfer was on the medium. Delivered-class bytes feed the
+/// per-tag totals (policy comparisons); repair and control bytes are
+/// the reliability layer's overhead and are accounted apart, so
+/// delivered totals stay loss-invariant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TxClass {
+    /// First-copy payload: the bytes the run set out to move.
+    Delivered,
+    /// A retransmission of payload a receiver failed to get.
+    Repair,
+    /// A control-plane frame (NACK, pull retry): tiny, fixed-size.
+    Control,
+}
 
 /// One FIFO shared medium (a wireless cell or a point-to-point backhaul).
 #[derive(Debug, Clone)]
@@ -17,8 +39,12 @@ pub struct Channel {
     pub latency: f64,
     busy_until: f64,
     bytes_total: u64,
+    repair_bytes: u64,
+    control_bytes: u64,
     airtime_total: f64,
     transfers: u64,
+    repair_transfers: u64,
+    control_transfers: u64,
     by_tag: BTreeMap<&'static str, u64>,
 }
 
@@ -30,8 +56,12 @@ impl Channel {
             latency,
             busy_until: 0.0,
             bytes_total: 0,
+            repair_bytes: 0,
+            control_bytes: 0,
             airtime_total: 0.0,
             transfers: 0,
+            repair_transfers: 0,
+            control_transfers: 0,
             by_tag: BTreeMap::new(),
         }
     }
@@ -41,16 +71,44 @@ impl Channel {
         self.latency + bytes as f64 / self.bandwidth
     }
 
-    /// Submit a transfer at virtual time `now`; it starts when the medium
-    /// frees up (FIFO) and the completion time is returned.
+    /// Submit a delivered-class transfer at virtual time `now`; it
+    /// starts when the medium frees up (FIFO) and the completion time is
+    /// returned.
     pub fn transmit(&mut self, now: f64, bytes: u64, tag: &'static str) -> f64 {
+        self.transmit_class(now, bytes, tag, TxClass::Delivered)
+    }
+
+    /// Submit a transfer of an explicit [`TxClass`]. All classes contend
+    /// for the same FIFO medium and count toward raw bytes/airtime;
+    /// repair and control bytes additionally land in their own counters
+    /// and stay out of the delivered-class per-tag view — so
+    /// `bytes_tagged("inr-broadcast")` reads the same at any loss rate.
+    pub fn transmit_class(
+        &mut self,
+        now: f64,
+        bytes: u64,
+        tag: &'static str,
+        class: TxClass,
+    ) -> f64 {
         let start = if self.busy_until > now { self.busy_until } else { now };
         let finish = start + self.airtime(bytes);
         self.busy_until = finish;
         self.bytes_total += bytes;
         self.airtime_total += self.airtime(bytes);
         self.transfers += 1;
-        *self.by_tag.entry(tag).or_insert(0) += bytes;
+        match class {
+            TxClass::Delivered => {
+                *self.by_tag.entry(tag).or_insert(0) += bytes;
+            }
+            TxClass::Repair => {
+                self.repair_bytes += bytes;
+                self.repair_transfers += 1;
+            }
+            TxClass::Control => {
+                self.control_bytes += bytes;
+                self.control_transfers += 1;
+            }
+        }
         finish
     }
 
@@ -59,8 +117,36 @@ impl Channel {
         self.busy_until
     }
 
+    /// Raw bytes: everything that occupied the medium, including repair
+    /// retransmissions and control frames.
     pub fn bytes_total(&self) -> u64 {
         self.bytes_total
+    }
+
+    /// Delivered-class bytes: raw minus repair minus control. Invariant
+    /// under the loss rate — losing a copy costs repair bytes, never a
+    /// second delivered copy.
+    pub fn delivered_bytes(&self) -> u64 {
+        self.bytes_total - self.repair_bytes - self.control_bytes
+    }
+
+    /// Bytes retransmitted by the reliability layer (ARQ retries,
+    /// multicast repair re-airs).
+    pub fn repair_bytes(&self) -> u64 {
+        self.repair_bytes
+    }
+
+    /// Control-plane bytes (NACK frames, pull retries).
+    pub fn control_bytes(&self) -> u64 {
+        self.control_bytes
+    }
+
+    pub fn repair_transfers(&self) -> u64 {
+        self.repair_transfers
+    }
+
+    pub fn control_transfers(&self) -> u64 {
+        self.control_transfers
     }
 
     pub fn airtime_total(&self) -> f64 {
@@ -84,6 +170,27 @@ impl Channel {
             0.0
         } else {
             self.airtime_total / horizon
+        }
+    }
+
+    /// Raw throughput over `[0, horizon]` in bytes/s: every byte that
+    /// occupied the medium, repair and control included.
+    pub fn raw_throughput(&self, horizon: f64) -> f64 {
+        if horizon <= 0.0 {
+            0.0
+        } else {
+            self.bytes_total as f64 / horizon
+        }
+    }
+
+    /// Goodput over `[0, horizon]` in bytes/s: delivered-class bytes
+    /// only. `goodput <= raw_throughput`, with equality iff the link
+    /// never repaired.
+    pub fn goodput(&self, horizon: f64) -> f64 {
+        if horizon <= 0.0 {
+            0.0
+        } else {
+            self.delivered_bytes() as f64 / horizon
         }
     }
 }
@@ -139,6 +246,38 @@ mod tests {
         c.transmit(0.0, 1_000_000, "a");
         assert!((c.utilization(2.0) - 0.5).abs() < 1e-12);
         assert_eq!(c.utilization(0.0), 0.0);
+    }
+
+    #[test]
+    fn repair_and_control_classes_stay_out_of_delivered_totals() {
+        let mut c = Channel::new(1e6, 0.0);
+        c.transmit(0.0, 1000, "inr-broadcast");
+        c.transmit_class(0.0, 1000, "arq-repair", TxClass::Repair);
+        c.transmit_class(0.0, 64, "nack", TxClass::Control);
+        // Raw view carries everything; the delivered per-tag view only
+        // the first copy.
+        assert_eq!(c.bytes_total(), 2064);
+        assert_eq!(c.delivered_bytes(), 1000);
+        assert_eq!(c.repair_bytes(), 1000);
+        assert_eq!(c.control_bytes(), 64);
+        assert_eq!(c.bytes_tagged("inr-broadcast"), 1000);
+        assert_eq!(c.bytes_tagged("arq-repair"), 0, "repair stays out of tags");
+        assert_eq!(c.repair_transfers(), 1);
+        assert_eq!(c.control_transfers(), 1);
+        assert_eq!(c.transfers(), 3);
+    }
+
+    #[test]
+    fn goodput_is_delivered_over_horizon_and_below_raw() {
+        let mut c = Channel::new(1e6, 0.0);
+        c.transmit(0.0, 1_000_000, "a");
+        c.transmit_class(0.0, 500_000, "r", TxClass::Repair);
+        assert!((c.raw_throughput(2.0) - 750_000.0).abs() < 1e-9);
+        assert!((c.goodput(2.0) - 500_000.0).abs() < 1e-9);
+        assert!(c.goodput(2.0) <= c.raw_throughput(2.0));
+        assert_eq!(c.goodput(0.0), 0.0);
+        // Repair occupies real airtime: contention is raw, not goodput.
+        assert!((c.utilization(1.5) - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -15,14 +15,27 @@
 //! redistributed under the configured [`RebroadcastPolicy`]: per-receiver
 //! cell unicast with per-receiver lazy backhaul (the legacy default), one
 //! shared airtime per cell, an eager cache-aware backhaul spanning tree,
-//! or receiver-driven pull. Remote fogs materialize blobs over the mesh
-//! uplink or cloud relay, deduplicated by the per-fog store — every
-//! payload class shares its capacity and retention rules, but only INR
-//! weight blobs count toward the weight-cache stats (JPEG baseline
-//! payloads land in separate relay counters, labels in an availability
-//! memo), so cross-method cache metrics stay fair. Label metadata ships
-//! once per shard after its last encode. A receiver that has everything
-//! fine-tunes for `epochs × frames × cost` seconds.
+//! receiver-driven pull, or per-blob `auto` selection. Remote fogs
+//! materialize blobs over the mesh uplink or cloud relay, deduplicated
+//! by the per-fog store — every payload class shares its capacity and
+//! retention rules, but only INR weight blobs count toward the
+//! weight-cache stats (JPEG baseline payloads land in separate relay
+//! counters, labels in an availability memo), so cross-method cache
+//! metrics stay fair. Label metadata ships once per shard after its last
+//! encode. A receiver that has everything fine-tunes for
+//! `epochs × frames × cost` seconds.
+//!
+//! Every transfer runs as a [`super::link`] transaction: a seeded
+//! Bernoulli loss process drops receptions and the policy's repair
+//! discipline (per-receiver ARQ or NACK rounds) re-airs until everyone
+//! holds the payload, charging repair/control bytes apart from the
+//! delivered totals. With `loss = 0` the transactions reduce to the
+//! exact pre-link transmit sequence — the refactor's correctness
+//! anchor. Receivers may also *join mid-run* ([`FleetConfig::joins`]):
+//! a joiner is activated by [`Event::ReceiverJoin`], catches up on
+//! everything already delivered (dedicated ARQ copies out of the fog
+//! cache, materialized over the backhaul on demand) and rides every
+//! later delivery live.
 
 use std::collections::HashMap;
 
@@ -33,9 +46,9 @@ use crate::coordinator::Method;
 use crate::data::generate_dataset;
 
 use super::cache::WeightCache;
-use super::channel::Channel;
 use super::events::{Event, EventQueue};
-use super::policy::{PULL_REQUEST_BYTES, RebroadcastPolicy};
+use super::link::{self, Link, NO_EDGE};
+use super::policy::{CellMode, PULL_REQUEST_BYTES, RebroadcastPolicy};
 use super::report::{FleetReport, FogReport};
 use super::scenario::{FleetConfig, Topology};
 use super::traffic::{model_shard, ShardTraffic};
@@ -47,13 +60,24 @@ pub(crate) const IDS_PER_SHARD: u32 = 1_000_000;
 
 /// Runtime state of one fog cell.
 struct FogRt {
-    cell: Channel,
-    uplink: Channel,
-    downlink: Channel,
+    cell: Link,
+    uplink: Link,
+    downlink: Link,
     pool: WorkerPool,
     cache: WeightCache,
     traffic: ShardTraffic,
-    n_receivers: usize,
+    /// Receivers present from `t = 0` (mid-run joiners come on top).
+    n_initial: usize,
+    /// Per-receiver activity: initial receivers start `true`, joiners
+    /// flip on when their [`Event::ReceiverJoin`] pops.
+    rx_active: Vec<bool>,
+    /// Count of `true` entries in `rx_active` (kept in sync by
+    /// [`join_receiver`]), so the hot path never scans.
+    n_active: usize,
+    /// All receiver indices, prebuilt: the delivery legs borrow this
+    /// allocation-free whenever every receiver is active (always true
+    /// without churn, and again once the last joiner has landed).
+    all_rx: Vec<usize>,
     /// Blobs of this shard not yet encoded.
     remaining: usize,
     /// Per-receiver delivery count / latest delivery / training finish.
@@ -62,9 +86,46 @@ struct FogRt {
     trained_at: Vec<f64>,
     /// When a remote blob `(origin, blob)` became locally available.
     avail_remote: HashMap<(usize, usize), f64>,
-    /// Cell airtime avoided relative to per-receiver unicast (shared
-    /// airtime policies serve a whole cell with one transmission).
+    /// Cell airtime avoided relative to the *expected* per-receiver-ARQ
+    /// baseline (exactly the PR-4 unicast baseline when `loss = 0`).
     airtime_saved: f64,
+    /// Reliability counters (payload losses, NACK/retry control frames,
+    /// payload repair transmissions — cell and backhaul legs).
+    losses: u64,
+    nacks: u64,
+    retransmissions: u64,
+}
+
+impl FogRt {
+    /// Active receiver indices for the churn transition window (some
+    /// joiners still pending); the all-active case borrows `all_rx`
+    /// instead — see [`cell_leg`].
+    fn active_rx(&self) -> Vec<usize> {
+        (0..self.rx_active.len()).filter(|&r| self.rx_active[r]).collect()
+    }
+
+    fn absorb_leg(&mut self, out: &link::LegOutcome) {
+        self.losses += out.losses;
+        self.nacks += out.nacks;
+        self.retransmissions += out.retransmissions;
+    }
+
+    fn absorb_tx(&mut self, tx: &link::TxResult) {
+        self.losses += tx.losses;
+        self.retransmissions += tx.retransmissions;
+    }
+}
+
+/// One delivered blob (or the label pseudo-blob), memoized so mid-run
+/// joiners can catch up on everything the fleet already shipped.
+#[derive(Debug, Clone, Copy)]
+struct CatalogEntry {
+    origin: usize,
+    blob: usize,
+    bytes: u64,
+    hash: u64,
+    tag: &'static str,
+    cacheable: bool,
 }
 
 /// Model the shard streams `fc` describes, one per fog: the same
@@ -98,7 +159,16 @@ pub fn run(cfg: &ArchConfig, fc: &FleetConfig) -> Result<FleetReport> {
 /// Run the engine over prebuilt shard traffic (one `ShardTraffic` per
 /// fog). This is the entry point `coordinator::sim` uses with *measured*
 /// records.
+///
+/// Panics on an invalid config (see [`FleetConfig::validate`]) — the
+/// new link-layer fields (loss rates, churn joins, backhaul overrides)
+/// are indexed by fog and would otherwise fail deep in the timeline
+/// with an opaque out-of-bounds instead of the validation message.
+/// Fallible callers should use [`run`].
 pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
+    if let Err(e) = fc.validate() {
+        panic!("invalid FleetConfig for simulate: {e}");
+    }
     assert_eq!(shards.len(), fc.n_fogs, "one shard per fog");
     let scope_all = fc.topology != Topology::SingleFog && fc.n_fogs > 1;
     let n_fogs = fc.n_fogs;
@@ -108,21 +178,42 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
         .enumerate()
         .map(|(f, t)| {
             let nr = fc.receivers_of_fog(f);
+            let nj = fc.joins_of_fog(f);
             let remaining = t.blobs.len();
+            let mut rx_active = vec![true; nr];
+            rx_active.extend(std::iter::repeat(false).take(nj));
             FogRt {
-                cell: Channel::new(fc.bandwidth, fc.latency),
-                uplink: Channel::new(fc.backhaul_bandwidth, fc.latency),
-                downlink: Channel::new(fc.backhaul_bandwidth, fc.latency),
+                cell: Link::new(fc.bandwidth, fc.latency, fc.loss_cell, fc.seed, 3 * f as u64),
+                uplink: Link::new(
+                    fc.backhaul_bandwidth_of(f),
+                    fc.latency,
+                    fc.loss_backhaul,
+                    fc.seed,
+                    3 * f as u64 + 1,
+                ),
+                downlink: Link::new(
+                    fc.backhaul_bandwidth_of(f),
+                    fc.latency,
+                    fc.loss_backhaul,
+                    fc.seed,
+                    3 * f as u64 + 2,
+                ),
                 pool: WorkerPool::new(fc.encode_workers),
                 cache: WeightCache::new(fc.cache_bytes),
                 traffic: t,
-                n_receivers: nr,
+                n_initial: nr,
+                rx_active,
+                n_active: nr,
+                all_rx: (0..nr + nj).collect(),
                 remaining,
-                received: vec![0; nr],
-                last_rx: vec![0.0; nr],
-                trained_at: vec![0.0; nr],
+                received: vec![0; nr + nj],
+                last_rx: vec![0.0; nr + nj],
+                trained_at: vec![0.0; nr + nj],
                 avail_remote: HashMap::new(),
                 airtime_saved: 0.0,
+                losses: 0,
+                nacks: 0,
+                retransmissions: 0,
             }
         })
         .collect();
@@ -132,8 +223,16 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
 
     let mut q = EventQueue::new();
     let mut cloud_up: HashMap<(usize, usize), f64> = HashMap::new();
+    let mut catalog: Vec<CatalogEntry> = Vec::new();
 
-    // --- Seed the timeline: uploads + encode readiness -----------------
+    // --- Seed the timeline: churn, uploads + encode readiness ----------
+    {
+        let mut next_edge: Vec<usize> = (0..n_fogs).map(|f| fogs[f].n_initial).collect();
+        for j in &fc.joins {
+            q.push(j.at, Event::ReceiverJoin { fog: j.fog, edge: next_edge[j.fog] });
+            next_edge[j.fog] += 1;
+        }
+    }
     for f in 0..n_fogs {
         if matches!(fogs[f].traffic.method, Method::Jpeg { .. }) {
             // Serverless: no upload leg; the source compresses locally.
@@ -143,8 +242,12 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
         } else {
             let uploads = fogs[f].traffic.uploads.clone();
             let mut finishes = Vec::with_capacity(uploads.len());
-            for u in uploads {
-                finishes.push(fogs[f].cell.transmit(0.0, u, "jpeg-upload"));
+            for (i, u) in uploads.into_iter().enumerate() {
+                // Source → fog is a point-to-point leg: stop-and-wait
+                // ARQ on the cell (one plain transmit at loss 0).
+                let tx = fogs[f].cell.reliable(&mut q, 0.0, u, "jpeg-upload", f, NO_EDGE, f, i);
+                fogs[f].absorb_tx(&tx);
+                finishes.push(tx.finish);
             }
             let ready: Vec<(usize, usize)> = fogs[f]
                 .traffic
@@ -165,8 +268,8 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
             // Empty shard: nothing encodes, but labels still ship.
             let lb = fogs[f].traffic.label_bytes();
             let label_id = fogs[f].traffic.blobs.len();
-            deliver(fc, &mut fogs, &mut q, &mut cloud_up, scope_all, 0.0, f, label_id, lb, 0,
-                "labels", false);
+            deliver(fc, &mut fogs, &mut q, &mut cloud_up, &mut catalog, scope_all, 0.0, f,
+                label_id, lb, 0, "labels", false);
         }
     }
 
@@ -189,13 +292,13 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
                     let b = &fogs[fog].traffic.blobs[blob];
                     (b.bytes, b.hash, b.tag)
                 };
-                deliver(fc, &mut fogs, &mut q, &mut cloud_up, scope_all, now, fog, blob, bytes,
-                    hash, tag, true);
+                deliver(fc, &mut fogs, &mut q, &mut cloud_up, &mut catalog, scope_all, now, fog,
+                    blob, bytes, hash, tag, true);
                 if fogs[fog].remaining == 0 {
                     let lb = fogs[fog].traffic.label_bytes();
                     let label_id = fogs[fog].traffic.blobs.len();
-                    deliver(fc, &mut fogs, &mut q, &mut cloud_up, scope_all, now, fog, label_id,
-                        lb, 0, "labels", false);
+                    deliver(fc, &mut fogs, &mut q, &mut cloud_up, &mut catalog, scope_all, now,
+                        fog, label_id, lb, 0, "labels", false);
                 }
             }
             Event::Delivered { fog, edge, .. } => {
@@ -222,6 +325,12 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
             Event::TrainDone { fog, edge } => {
                 fogs[fog].trained_at[edge] = now;
             }
+            Event::ReceiverJoin { fog, edge } => {
+                join_receiver(fc, &mut fogs, &mut q, &mut cloud_up, &catalog, now, fog, edge);
+            }
+            // Link-layer markers: the state change happened when the
+            // transaction ran; popping them keeps the timeline honest.
+            Event::Lost { .. } | Event::Nack { .. } | Event::Repair { .. } => {}
         }
     }
     let makespan = q.now();
@@ -235,15 +344,24 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
         n_fogs,
         n_edges: fc.n_edges,
         n_receivers: (0..n_fogs).map(|f| fc.receivers_of_fog(f)).sum(),
+        joined_receivers: fc.joins.len(),
         n_frames: total_frames,
         n_blobs: total_blobs,
         costs: fc.costs,
+        loss_cell: fc.loss_cell,
+        loss_backhaul: fc.loss_backhaul,
         upload_bytes: 0,
         broadcast_bytes: 0,
         label_bytes: 0,
         backhaul_bytes: 0,
         pull_bytes: 0,
+        catchup_bytes: 0,
+        repair_bytes: 0,
+        control_bytes: 0,
         total_bytes: 0,
+        lost_frames: 0,
+        nack_frames: 0,
+        retransmissions: 0,
         makespan_seconds: makespan,
         airtime_saved_seconds: 0.0,
         encode_busy_seconds: 0.0,
@@ -254,13 +372,25 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
         fogs: Vec::with_capacity(n_fogs),
     };
     for (f, rt) in fogs.iter().enumerate() {
-        let backhaul = rt.uplink.bytes_total() + rt.downlink.bytes_total();
-        report.upload_bytes += rt.cell.bytes_tagged("jpeg-upload");
+        let cell = rt.cell.channel();
+        let (up, down) = (rt.uplink.channel(), rt.downlink.channel());
+        // Backhaul (like every delivered-class total) excludes repair:
+        // delivered bytes are loss-invariant, repair is counted apart.
+        let backhaul = up.delivered_bytes() + down.delivered_bytes();
+        let repair = cell.repair_bytes() + up.repair_bytes() + down.repair_bytes();
+        let control = cell.control_bytes() + up.control_bytes() + down.control_bytes();
+        report.upload_bytes += cell.bytes_tagged("jpeg-upload");
         report.broadcast_bytes +=
-            rt.cell.bytes_tagged("inr-broadcast") + rt.cell.bytes_tagged("jpeg-direct");
-        report.label_bytes += rt.cell.bytes_tagged("labels");
+            cell.bytes_tagged("inr-broadcast") + cell.bytes_tagged("jpeg-direct");
+        report.label_bytes += cell.bytes_tagged("labels");
         report.backhaul_bytes += backhaul;
-        report.pull_bytes += rt.cell.bytes_tagged("pull-request");
+        report.pull_bytes += cell.bytes_tagged("pull-request");
+        report.catchup_bytes += cell.bytes_tagged("catchup");
+        report.repair_bytes += repair;
+        report.control_bytes += control;
+        report.lost_frames += rt.losses;
+        report.nack_frames += rt.nacks;
+        report.retransmissions += rt.retransmissions;
         report.airtime_saved_seconds += rt.airtime_saved;
         report.encode_busy_seconds += rt.pool.busy_seconds;
         report.max_queue_depth = report.max_queue_depth.max(rt.pool.max_queue_depth);
@@ -269,16 +399,20 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
         report.fogs.push(FogReport {
             fog: f,
             edges: fc.edges_of_fog(f),
-            receivers: rt.n_receivers,
+            receivers: rt.n_initial,
+            joined: rt.rx_active.len() - rt.n_initial,
             shard_frames: rt.traffic.n_frames,
             blobs: rt.traffic.blobs.len(),
             encode_busy_seconds: rt.pool.busy_seconds,
             encode_wait_seconds: rt.pool.wait_seconds,
             max_queue_depth: rt.pool.max_queue_depth,
-            cell_bytes: rt.cell.bytes_total(),
-            cell_utilization: rt.cell.utilization(makespan),
+            cell_bytes: cell.bytes_total(),
+            cell_utilization: cell.utilization(makespan),
             airtime_saved_seconds: rt.airtime_saved,
             backhaul_bytes: backhaul,
+            repair_bytes: repair,
+            control_bytes: control,
+            catchup_bytes: cell.bytes_tagged("catchup"),
             cache: rt.cache.stats,
             cache_blobs: rt.cache.len(),
             cache_used_bytes: rt.cache.used_bytes(),
@@ -290,7 +424,8 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
         + report.broadcast_bytes
         + report.label_bytes
         + report.backhaul_bytes
-        + report.pull_bytes;
+        + report.pull_bytes
+        + report.catchup_bytes;
     report
 }
 
@@ -298,7 +433,8 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
 /// under the configured [`RebroadcastPolicy`]. Local receivers get the
 /// policy's cell leg; remote cells first materialize the blob at their
 /// fog (weight cache → backhaul fetch on miss, or an eager spanning-tree
-/// push) before their own cell leg.
+/// push) before their own cell leg. Every blob is memoized in the
+/// catch-up catalog so mid-run joiners can replay it.
 ///
 /// Deliberate `Unicast` semantics (kept byte-for-byte as the parity
 /// baseline): a remote fog that cannot cache a blob (cache disabled via
@@ -317,6 +453,7 @@ fn deliver(
     fogs: &mut [FogRt],
     q: &mut EventQueue,
     cloud_up: &mut HashMap<(usize, usize), f64>,
+    catalog: &mut Vec<CatalogEntry>,
     scope_all: bool,
     now: f64,
     origin: usize,
@@ -326,51 +463,45 @@ fn deliver(
     tag: &'static str,
     cacheable: bool,
 ) {
+    let entry = CatalogEntry { origin, blob, bytes, hash, tag, cacheable };
+    catalog.push(entry);
     cell_leg(fc, &mut fogs[origin], q, now, origin, origin, blob, bytes, tag);
     if !scope_all {
         return;
     }
-    let key = (origin, blob);
     // Stats class: INR weight payloads feed the paper's cache metrics,
     // everything else (the JPEG baseline) feeds the relay counters.
     let weights = tag == "inr-broadcast";
     if fc.policy.pushes_backhaul_tree() && cacheable {
-        tree_push(fc, fogs, cloud_up, now, origin, blob, bytes, hash, weights);
+        tree_push(fc, fogs, q, cloud_up, now, origin, blob, bytes, hash, weights);
     }
     if fc.policy.shares_cell_airtime() {
         // One materialization per remote fog (tree-pushed, cached, or a
-        // single lazy fetch), then one shared cell leg per remote cell.
+        // single lazy fetch), then one policy-shaped cell leg per
+        // remote cell.
         for g in (0..fogs.len()).filter(|&g| g != origin) {
-            if fogs[g].n_receivers == 0 {
+            if fogs[g].n_active == 0 {
                 continue;
             }
-            let memo = fogs[g].avail_remote.get(&key).copied();
-            let avail = if let Some(a) = memo {
-                a
-            } else if cacheable && fogs[g].cache.lookup(hash, bytes, weights) {
-                now
-            } else {
-                let a = fetch(fc, fogs, cloud_up, origin, g, now, blob, bytes);
-                if cacheable {
-                    fogs[g].cache.insert(hash, bytes, weights);
-                }
-                fogs[g].avail_remote.insert(key, a);
-                a
-            };
+            let avail = materialize(fc, fogs, q, cloud_up, now, g, &entry);
             let start = if avail > now { avail } else { now };
             cell_leg(fc, &mut fogs[g], q, start, g, origin, blob, bytes, tag);
         }
         return;
     }
     // Unicast: the legacy per-receiver flow, record-for-record.
+    let key = (origin, blob);
     for g in (0..fogs.len()).filter(|&g| g != origin) {
-        for r in 0..fogs[g].n_receivers {
+        for r in 0..fogs[g].rx_active.len() {
+            if !fogs[g].rx_active[r] {
+                continue;
+            }
             let avail = if cacheable && fogs[g].cache.lookup(hash, bytes, weights) {
                 fogs[g].avail_remote.get(&key).copied().unwrap_or(now)
             } else if !cacheable && fogs[g].avail_remote.contains_key(&key) {
                 fogs[g].avail_remote[&key]
             } else {
-                let a = fetch(fc, fogs, cloud_up, origin, g, now, blob, bytes);
+                let a = fetch(fc, fogs, q, cloud_up, origin, g, now, blob, bytes);
                 if cacheable {
                     fogs[g].cache.insert(hash, bytes, weights);
                 }
@@ -378,17 +509,52 @@ fn deliver(
                 a
             };
             let start = if avail > now { avail } else { now };
-            let finish = fogs[g].cell.transmit(start, bytes, tag);
-            q.push(finish, Event::Delivered { fog: g, edge: r, origin, blob });
+            let p = fogs[g].cell.loss_rate();
+            let baseline = fogs[g].cell.airtime(bytes) / (1.0 - p);
+            let tx = fogs[g].cell.reliable(q, start, bytes, tag, g, r, origin, blob);
+            fogs[g].absorb_tx(&tx);
+            fogs[g].airtime_saved += baseline - tx.airtime;
+            q.push(tx.finish, Event::Delivered { fog: g, edge: r, origin, blob });
         }
     }
 }
 
-/// Put one blob on a fog's wireless cell. `Unicast` transmits once per
-/// receiver; shared-airtime policies transmit once for the whole cell
-/// (co-located receivers hear the same frame), with `ReceiverPull`
-/// first queueing one small request per receiver on the same medium.
-/// Credits the airtime avoided relative to unicast.
+/// Make a remote blob locally available at fog `g`: availability memo →
+/// weight-cache lookup → lazy backhaul fetch (cache-inserted and
+/// memoized). Shared by the shared-airtime delivery branch and joiner
+/// catch-up.
+fn materialize(
+    fc: &FleetConfig,
+    fogs: &mut [FogRt],
+    q: &mut EventQueue,
+    cloud_up: &mut HashMap<(usize, usize), f64>,
+    now: f64,
+    g: usize,
+    e: &CatalogEntry,
+) -> f64 {
+    let key = (e.origin, e.blob);
+    let weights = e.tag == "inr-broadcast";
+    if let Some(a) = fogs[g].avail_remote.get(&key).copied() {
+        return a;
+    }
+    if e.cacheable && fogs[g].cache.lookup(e.hash, e.bytes, weights) {
+        return now;
+    }
+    let a = fetch(fc, fogs, q, cloud_up, e.origin, g, now, e.blob, e.bytes);
+    if e.cacheable {
+        fogs[g].cache.insert(e.hash, e.bytes, weights);
+    }
+    fogs[g].avail_remote.insert(key, a);
+    a
+}
+
+/// Put one blob on a fog's wireless cell as the link transaction the
+/// policy (and, for `auto`, this cell's population/blob size/loss rate)
+/// selects: one ARQ transfer per receiver, one shared copy with NACK
+/// repair rounds, or pull requests + a shared copy with per-receiver
+/// re-request repair. Credits the airtime saved (or lost) against the
+/// expected per-receiver-ARQ baseline — accumulated per receiver so a
+/// `loss = 0` unicast leg nets exactly zero.
 #[allow(clippy::too_many_arguments)]
 fn cell_leg(
     fc: &FleetConfig,
@@ -401,42 +567,105 @@ fn cell_leg(
     bytes: u64,
     tag: &'static str,
 ) {
-    if !fc.policy.shares_cell_airtime() {
-        for r in 0..rt.n_receivers {
-            let finish = rt.cell.transmit(now, bytes, tag);
-            q.push(finish, Event::Delivered { fog, edge: r, origin, blob });
-        }
+    if rt.n_active == 0 {
         return;
     }
-    if rt.n_receivers == 0 {
-        return;
+    // Borrow the prebuilt index list when every receiver is active (the
+    // churn-free common case); allocate only inside a join window.
+    let owned;
+    let rxs: &[usize] = if rt.n_active == rt.all_rx.len() {
+        &rt.all_rx
+    } else {
+        owned = rt.active_rx();
+        &owned
+    };
+    let p = rt.cell.loss_rate();
+    let ch = rt.cell.channel();
+    let mode = fc.policy.cell_mode(rxs.len(), bytes, p, ch.bandwidth, ch.latency);
+    // Expected-unicast baseline, accumulated per receiver in the same
+    // order the legs accumulate actual airtime: at `loss = 0` the two
+    // sums are bit-identical for `PerReceiver`, so unicast nets 0.0
+    // exactly and the shared modes net the PR-4 `(n-1)·airtime` values.
+    let per_rx = rt.cell.airtime(bytes) / (1.0 - p);
+    let mut baseline = 0.0;
+    for _ in rxs {
+        baseline += per_rx;
     }
-    if fc.policy.pulls() {
-        // Requests queue FIFO ahead of the payload on the shared cell;
-        // their airtime is a cost unicast does not pay, so it nets
-        // against the shared-payload saving below.
-        for _ in 0..rt.n_receivers {
-            rt.cell.transmit(now, PULL_REQUEST_BYTES, "pull-request");
+    let out = match mode {
+        CellMode::PerReceiver => {
+            rt.cell.per_receiver_leg(q, now, bytes, tag, fog, origin, blob, rxs)
         }
-        rt.airtime_saved -= rt.n_receivers as f64 * rt.cell.airtime(PULL_REQUEST_BYTES);
-    }
-    let finish = rt.cell.transmit(now, bytes, tag);
-    rt.airtime_saved += (rt.n_receivers as f64 - 1.0) * rt.cell.airtime(bytes);
-    for r in 0..rt.n_receivers {
-        q.push(finish, Event::Delivered { fog, edge: r, origin, blob });
+        CellMode::SharedNack => {
+            rt.cell.shared_nack_leg(q, now, bytes, tag, fog, origin, blob, rxs)
+        }
+        CellMode::SharedPull => rt.cell.shared_pull_leg(
+            q,
+            now,
+            bytes,
+            tag,
+            PULL_REQUEST_BYTES,
+            fog,
+            origin,
+            blob,
+            rxs,
+        ),
+    };
+    rt.airtime_saved += baseline - out.actual_airtime;
+    rt.absorb_leg(&out);
+}
+
+/// Activate a mid-run joiner and replay everything already delivered:
+/// one dedicated catch-up ARQ copy per catalog entry out of the fog's
+/// cache (remote blobs materialize over the backhaul on demand). Every
+/// blob encoded *after* the join reaches the joiner through the normal
+/// live legs — between catch-up and live delivery the joiner sees each
+/// blob exactly once.
+#[allow(clippy::too_many_arguments)]
+fn join_receiver(
+    fc: &FleetConfig,
+    fogs: &mut [FogRt],
+    q: &mut EventQueue,
+    cloud_up: &mut HashMap<(usize, usize), f64>,
+    catalog: &[CatalogEntry],
+    now: f64,
+    fog: usize,
+    edge: usize,
+) {
+    fogs[fog].rx_active[edge] = true;
+    fogs[fog].n_active += 1;
+    for e in catalog {
+        let avail = if e.origin == fog {
+            now // locally encoded: the fog holds what it produced
+        } else {
+            materialize(fc, fogs, q, cloud_up, now, fog, e)
+        };
+        let start = if avail > now { avail } else { now };
+        let rt = &mut fogs[fog];
+        let p = rt.cell.loss_rate();
+        let baseline = rt.cell.airtime(e.bytes) / (1.0 - p);
+        let out = rt.cell.catchup_leg(q, start, e.bytes, fog, edge, e.origin, e.blob);
+        rt.airtime_saved += baseline - out.actual_airtime;
+        rt.absorb_leg(&out);
     }
 }
 
-/// Eagerly push a cacheable blob along the backhaul spanning tree
-/// ([`RebroadcastPolicy::MulticastTree`]): each blob crosses each tree
-/// link exactly once, and fogs whose cache already holds the content are
-/// skipped (they can still relay what they hold). Receiver-less fogs
+/// Eagerly push a cacheable blob along the backhaul relay plan
+/// ([`RebroadcastPolicy::MulticastTree`]): each blob crosses exactly one
+/// tree link per target fog, and fogs whose cache already holds the
+/// content are skipped (they still serve as relays). Receiver-less fogs
 /// take no part — unicast never routes to them, and the ≤-unicast byte
 /// guarantee must survive degenerate fleet shapes.
+///
+/// Mesh plans come from [`link::relay_plan`]: the PR-4 ring chain when
+/// backhaul bandwidths are uniform (byte- and timing-parity fallback),
+/// a bandwidth-weighted tree when they are heterogeneous — fast fogs
+/// join early and fan out, cutting the tail latency the ring chain
+/// serializes through slow hops.
 #[allow(clippy::too_many_arguments)]
 fn tree_push(
     fc: &FleetConfig,
     fogs: &mut [FogRt],
+    q: &mut EventQueue,
     cloud_up: &mut HashMap<(usize, usize), f64>,
     now: f64,
     origin: usize,
@@ -449,28 +678,39 @@ fn tree_push(
     let n = fogs.len();
     match fc.topology {
         Topology::SingleFog => {}
-        // Mesh: a relay chain in ring order from the origin. Every hop
-        // leaves on the *sender's* uplink, so the per-blob backhaul load
-        // spreads across the fleet instead of serializing on the origin.
+        // Mesh: every hop leaves on the *sender's* uplink, so the
+        // per-blob backhaul load spreads across the fleet instead of
+        // serializing on the origin.
         Topology::Sharded => {
-            let mut prev = origin;
-            let mut prev_avail = now;
+            let mut targets = Vec::new();
+            let mut seeded = Vec::new();
             for step in 1..n {
                 let g = (origin + step) % n;
-                if fogs[g].n_receivers == 0 {
+                if fogs[g].n_active == 0 {
                     continue;
                 }
                 if fogs[g].cache.lookup(hash, bytes, weights) {
                     fogs[g].avail_remote.insert(key, now);
-                    prev = g;
-                    prev_avail = now;
-                    continue;
+                    seeded.push(g);
+                } else {
+                    targets.push(g);
                 }
-                let a = fogs[prev].uplink.transmit(prev_avail, bytes, "backhaul");
-                fogs[g].cache.insert(hash, bytes, weights);
-                fogs[g].avail_remote.insert(key, a);
-                prev = g;
-                prev_avail = a;
+            }
+            let bw: Vec<f64> = (0..n).map(|f| fogs[f].uplink.channel().bandwidth).collect();
+            let mut avail: HashMap<usize, f64> = HashMap::new();
+            avail.insert(origin, now);
+            for &g in &seeded {
+                avail.insert(g, now);
+            }
+            for hop in link::relay_plan(origin, n, &targets, &seeded, &bw) {
+                let start = avail[&hop.parent];
+                let tx = fogs[hop.parent].uplink.reliable(
+                    q, start, bytes, "backhaul", hop.child, NO_EDGE, origin, blob,
+                );
+                fogs[hop.child].absorb_tx(&tx);
+                fogs[hop.child].cache.insert(hash, bytes, weights);
+                fogs[hop.child].avail_remote.insert(key, tx.finish);
+                avail.insert(hop.child, tx.finish);
             }
         }
         // Cloud relay: one uplink (deferred until some fog needs the
@@ -479,7 +719,7 @@ fn tree_push(
             let mut up_done = cloud_up.get(&key).copied();
             for step in 1..n {
                 let g = (origin + step) % n;
-                if fogs[g].n_receivers == 0 {
+                if fogs[g].n_active == 0 {
                     continue;
                 }
                 if fogs[g].cache.lookup(hash, bytes, weights) {
@@ -489,25 +729,34 @@ fn tree_push(
                 let up = match up_done {
                     Some(t) => t,
                     None => {
-                        let t = fogs[origin].uplink.transmit(now, bytes, "backhaul");
-                        cloud_up.insert(key, t);
-                        up_done = Some(t);
-                        t
+                        let tx = fogs[origin].uplink.reliable(
+                            q, now, bytes, "backhaul", origin, NO_EDGE, origin, blob,
+                        );
+                        fogs[origin].absorb_tx(&tx);
+                        cloud_up.insert(key, tx.finish);
+                        up_done = Some(tx.finish);
+                        tx.finish
                     }
                 };
                 let start = if up > now { up } else { now };
-                let a = fogs[g].downlink.transmit(start, bytes, "backhaul");
+                let tx = fogs[g].downlink.reliable(
+                    q, start, bytes, "backhaul", g, NO_EDGE, origin, blob,
+                );
+                fogs[g].absorb_tx(&tx);
                 fogs[g].cache.insert(hash, bytes, weights);
-                fogs[g].avail_remote.insert(key, a);
+                fogs[g].avail_remote.insert(key, tx.finish);
             }
         }
     }
 }
 
-/// Move a blob from its origin fog to `dst` over the backhaul.
+/// Move a blob from its origin fog to `dst` over the backhaul (a
+/// point-to-point reliable link transaction).
+#[allow(clippy::too_many_arguments)]
 fn fetch(
     fc: &FleetConfig,
     fogs: &mut [FogRt],
+    q: &mut EventQueue,
     cloud_up: &mut HashMap<(usize, usize), f64>,
     origin: usize,
     dst: usize,
@@ -518,20 +767,32 @@ fn fetch(
     match fc.topology {
         Topology::SingleFog => now,
         // Mesh: a point-to-point copy out of the origin fog's uplink.
-        Topology::Sharded => fogs[origin].uplink.transmit(now, bytes, "backhaul"),
+        Topology::Sharded => {
+            let tx =
+                fogs[origin].uplink.reliable(q, now, bytes, "backhaul", dst, NO_EDGE, origin, blob);
+            fogs[dst].absorb_tx(&tx);
+            tx.finish
+        }
         // Cloud relay: one uplink per blob (memoized), then the consuming
         // fog's downlink.
         Topology::Hierarchical => {
             let up_done = match cloud_up.get(&(origin, blob)) {
                 Some(&t) => t,
                 None => {
-                    let t = fogs[origin].uplink.transmit(now, bytes, "backhaul");
-                    cloud_up.insert((origin, blob), t);
-                    t
+                    let tx = fogs[origin].uplink.reliable(
+                        q, now, bytes, "backhaul", origin, NO_EDGE, origin, blob,
+                    );
+                    fogs[origin].absorb_tx(&tx);
+                    cloud_up.insert((origin, blob), tx.finish);
+                    tx.finish
                 }
             };
             let start = if up_done > now { up_done } else { now };
-            fogs[dst].downlink.transmit(start, bytes, "backhaul")
+            let tx = fogs[dst].downlink.reliable(
+                q, start, bytes, "backhaul", dst, NO_EDGE, origin, blob,
+            );
+            fogs[dst].absorb_tx(&tx);
+            tx.finish
         }
     }
 }
@@ -542,6 +803,7 @@ mod tests {
     use crate::coordinator::EncoderConfig;
     use crate::coordinator::Method;
     use crate::costmodel::{CostBook, CostSource};
+    use crate::fleet::scenario::JoinSpec;
     use crate::fleet::traffic::blob_from_record;
     use crate::inr::Record;
 
@@ -600,6 +862,12 @@ mod tests {
         // delivered + 3 train-done.
         assert_eq!(r.events, 2 + 2 + 9 + 3);
         assert_eq!(r.cache.hits + r.cache.misses, 0);
+        // Loss-free: the reliability layer left no trace.
+        assert_eq!(r.repair_bytes, 0);
+        assert_eq!(r.control_bytes, 0);
+        assert_eq!(r.lost_frames, 0);
+        assert_eq!(r.raw_bytes(), r.total_bytes);
+        assert_eq!(r.goodput_ratio(), 1.0);
     }
 
     #[test]
@@ -791,5 +1059,215 @@ mod tests {
         let r = simulate(&fc, vec![shard]);
         assert_eq!(r.total_bytes, 0); // 0-byte labels, latency only
         assert_eq!(r.events, 2 + 2); // labels to 2 receivers + 2 train-done
+    }
+
+    // --- Lossy-link layer ---------------------------------------------
+
+    /// A 2-fog sharded fleet with enough transfers that any plausible
+    /// seed at the given loss rates must lose *something*.
+    fn lossy_fleet(loss_cell: f64, loss_backhaul: f64, seed: u64) -> FleetReport {
+        let m = Method::RapidSingle;
+        let mut fc = base_fc(m, 12); // 2 fogs × (1 source + 5 receivers)
+        fc.topology = Topology::Sharded;
+        fc.n_fogs = 2;
+        fc.loss_cell = loss_cell;
+        fc.loss_backhaul = loss_backhaul;
+        fc.seed = seed;
+        let shards = vec![
+            tiny_shard(m, vec![1000, 2000], &[300, 500]),
+            tiny_shard(m, vec![1000], &[600]),
+        ];
+        simulate(&fc, shards)
+    }
+
+    #[test]
+    fn delivered_bytes_are_loss_invariant_under_arq() {
+        let clean = lossy_fleet(0.0, 0.0, 7);
+        let lossy = lossy_fleet(0.3, 0.2, 7);
+        // Every delivered-class field is identical: loss costs repair
+        // bytes, never a second delivered copy.
+        assert_eq!(lossy.upload_bytes, clean.upload_bytes);
+        assert_eq!(lossy.broadcast_bytes, clean.broadcast_bytes);
+        assert_eq!(lossy.label_bytes, clean.label_bytes);
+        assert_eq!(lossy.backhaul_bytes, clean.backhaul_bytes);
+        assert_eq!(lossy.total_bytes, clean.total_bytes);
+        // ...but the wire paid for it.
+        assert!(lossy.repair_bytes > 0, "p=0.3 over dozens of copies must repair");
+        assert_eq!(lossy.lost_frames, lossy.retransmissions, "ARQ: one repair per loss");
+        assert_eq!(lossy.nack_frames, 0, "unicast repairs by timeout, not NACK");
+        assert_eq!(lossy.control_bytes, 0);
+        assert!(lossy.raw_bytes() > lossy.total_bytes);
+        assert!(lossy.goodput_ratio() < 1.0);
+        assert!(lossy.events > clean.events, "loss/repair markers join the event log");
+        // The lossless run shows no reliability-layer traffic at all.
+        assert_eq!(clean.repair_bytes, 0);
+        assert_eq!(clean.lost_frames, 0);
+    }
+
+    #[test]
+    fn nack_rounds_repair_shared_copies() {
+        // Serverless JPEG: no upload leg, so *every* loss is a shared
+        // cell-leg reception miss and every miss NACKs exactly once.
+        // (An INR method's uploads also ride the cell, but repair by
+        // ARQ — their losses would count in lost_frames without a NACK.)
+        let m = Method::Jpeg { quality: 85 };
+        let mut fc = base_fc(m, 10); // 9 receivers: shared copies, many draws
+        fc.policy = RebroadcastPolicy::CellMulticast;
+        fc.loss_cell = 0.4;
+        // 5 delivered sets (4 blobs + labels) × 9 receivers: p=0.4
+        // cannot draw all-clear over 45+ receptions.
+        let shard = tiny_shard(m, vec![], &[300, 500, 200, 400]);
+        let r = simulate(&fc, vec![shard.clone()]);
+        assert!(r.lost_frames > 0, "p=0.4 over 45+ receptions must lose");
+        assert_eq!(r.nack_frames, r.lost_frames);
+        assert_eq!(r.control_bytes, r.nack_frames * super::link::CONTROL_BYTES);
+        // Shared repair: fewer re-airs than losses is the whole point of
+        // NACK multicast (one round serves every missing receiver).
+        assert!(r.retransmissions <= r.lost_frames);
+        assert!(r.repair_bytes > 0);
+        // Delivered view identical to the clean multicast run.
+        let mut clean = base_fc(m, 10);
+        clean.policy = RebroadcastPolicy::CellMulticast;
+        let c = simulate(&clean, vec![shard]);
+        assert_eq!(r.broadcast_bytes, c.broadcast_bytes);
+        assert_eq!(r.total_bytes, c.total_bytes);
+    }
+
+    #[test]
+    fn seeded_loss_is_deterministic_and_seed_sensitive() {
+        let a = lossy_fleet(0.25, 0.1, 42);
+        let b = lossy_fleet(0.25, 0.1, 42);
+        assert_eq!(a.repair_bytes, b.repair_bytes);
+        assert_eq!(a.lost_frames, b.lost_frames);
+        assert_eq!(a.retransmissions, b.retransmissions);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.makespan_seconds.to_bits(), b.makespan_seconds.to_bits());
+        assert_eq!(a.airtime_saved_seconds.to_bits(), b.airtime_saved_seconds.to_bits());
+        let c = lossy_fleet(0.25, 0.1, 43);
+        assert_ne!(
+            (a.repair_bytes, a.lost_frames, a.makespan_seconds.to_bits()),
+            (c.repair_bytes, c.lost_frames, c.makespan_seconds.to_bits()),
+            "a different seed must draw a different loss pattern"
+        );
+    }
+
+    #[test]
+    fn joiner_catches_up_from_the_fog_cache() {
+        let m = Method::RapidSingle;
+        let mut fc = base_fc(m, 3); // 1 source + 2 receivers
+        fc.joins = vec![JoinSpec { fog: 0, at: 1.0 }];
+        // Timeline: 1000 B upload (1 ms), 100-step encode (100 ms), two
+        // 400 B unicasts, two 8 B label copies — all long done when the
+        // joiner arrives at t = 1.0 and replays blob + labels (408 B).
+        let r = simulate(&fc, vec![tiny_shard(m, vec![1000], &[400])]);
+        assert_eq!(r.joined_receivers, 1);
+        assert_eq!(r.fogs[0].joined, 1);
+        assert_eq!(r.broadcast_bytes, 2 * 400, "live copies went to the initial pair");
+        assert_eq!(r.label_bytes, 2 * 8);
+        assert_eq!(r.catchup_bytes, 400 + 8);
+        assert_eq!(r.fogs[0].catchup_bytes, 408);
+        assert_eq!(r.total_bytes, 1000 + 800 + 16 + 408);
+        // Catch-up is a dedicated copy: the expected-ARQ baseline nets
+        // to exactly zero at loss 0, like every unicast leg.
+        assert_eq!(r.airtime_saved_seconds, 0.0);
+        // The joiner trains after its catch-up: 1.0 + 408 B at 1 MB/s +
+        // one 1-frame epoch at 1 ms.
+        assert!((r.makespan_seconds - (1.0 + 408e-6 + 1e-3)).abs() < 1e-9);
+        // 1 ready + 1 done + 4 live delivered + 1 join + 2 catch-up
+        // delivered + 3 train-done.
+        assert_eq!(r.events, 1 + 1 + 4 + 1 + 2 + 3);
+    }
+
+    #[test]
+    fn early_joiner_needs_no_catchup() {
+        let m = Method::RapidSingle;
+        let mut fc = base_fc(m, 3);
+        fc.joins = vec![JoinSpec { fog: 0, at: 0.0 }];
+        let r = simulate(&fc, vec![tiny_shard(m, vec![1000], &[400])]);
+        // Joined before anything encoded: every delivery is live.
+        assert_eq!(r.catchup_bytes, 0);
+        assert_eq!(r.broadcast_bytes, 3 * 400);
+        assert_eq!(r.label_bytes, 3 * 8);
+        // All three receivers (2 initial + 1 joiner) train.
+        assert_eq!(r.events, 1 + 1 + 6 + 1 + 3);
+    }
+
+    #[test]
+    fn joiner_under_multicast_gets_dedicated_catchup_but_shares_live_legs() {
+        let m = Method::RapidSingle;
+        let mut fc = base_fc(m, 3);
+        fc.policy = RebroadcastPolicy::CellMulticast;
+        fc.joins = vec![JoinSpec { fog: 0, at: 1.0 }];
+        let r = simulate(&fc, vec![tiny_shard(m, vec![1000], &[400])]);
+        // Live legs shared one airtime across the 2 initial receivers;
+        // the late joiner replays both sets as dedicated copies.
+        assert_eq!(r.broadcast_bytes, 400);
+        assert_eq!(r.label_bytes, 8);
+        assert_eq!(r.catchup_bytes, 408);
+        // Airtime saved: one spare receiver on each live shared leg;
+        // the catch-up copy nets zero.
+        assert!((r.airtime_saved_seconds - 408.0 / 1e6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auto_policy_shares_populated_cells_and_matches_multicast_at_loss_zero() {
+        let m = Method::RapidSingle;
+        let shard = tiny_shard(m, vec![1000, 2000], &[300, 500]);
+        let mut auto = base_fc(m, 4); // 3 receivers: sharing wins every blob
+        auto.policy = RebroadcastPolicy::Auto;
+        let ra = simulate(&auto, vec![shard.clone()]);
+        let mut mc = base_fc(m, 4);
+        mc.policy = RebroadcastPolicy::CellMulticast;
+        let rm = simulate(&mc, vec![shard.clone()]);
+        assert_eq!(ra.policy, "auto");
+        assert_eq!(ra.broadcast_bytes, rm.broadcast_bytes);
+        assert_eq!(ra.total_bytes, rm.total_bytes);
+        assert_eq!(ra.pull_bytes, 0);
+        assert!((ra.airtime_saved_seconds - rm.airtime_saved_seconds).abs() < 1e-12);
+
+        // A single-receiver cell ties: auto falls back to per-receiver
+        // ARQ and reproduces the unicast byte totals.
+        let mut auto1 = base_fc(m, 2);
+        auto1.policy = RebroadcastPolicy::Auto;
+        let ra1 = simulate(&auto1, vec![shard.clone()]);
+        let r_uni = simulate(&base_fc(m, 2), vec![shard]);
+        assert_eq!(ra1.total_bytes, r_uni.total_bytes);
+        assert_eq!(ra1.airtime_saved_seconds, 0.0, "n = 1: no airtime to save");
+    }
+
+    #[test]
+    fn weighted_tree_cuts_relay_latency_on_heterogeneous_backhaul() {
+        let m = Method::RapidSingle;
+        let shards = || {
+            vec![
+                tiny_shard(m, vec![500], &[400]),
+                tiny_shard(m, vec![500], &[0; 0]),
+                tiny_shard(m, vec![500], &[0; 0]),
+            ]
+        };
+        let mk = |bws: Option<Vec<f64>>| {
+            let mut fc = base_fc(m, 9);
+            fc.topology = Topology::Sharded;
+            fc.n_fogs = 3;
+            fc.policy = RebroadcastPolicy::MulticastTree;
+            fc.backhaul_bandwidth = 1e5; // slow mesh: relay latency dominates
+            fc.backhaul_bandwidths = bws;
+            fc
+        };
+        let ring = simulate(&mk(None), shards());
+        // Fog 1 gets a 10x uplink: the planner relays 0→1, then 1→2,
+        // instead of serializing 400 B twice over 1e5 B/s links.
+        let tree = simulate(&mk(Some(vec![1e5, 1e6, 1e5])), shards());
+        // Bytes are identical — the tree reshapes latency, never bytes.
+        assert_eq!(tree.backhaul_bytes, ring.backhaul_bytes);
+        assert_eq!(tree.broadcast_bytes, ring.broadcast_bytes);
+        assert_eq!(tree.cache.insertions, ring.cache.insertions);
+        // ...but the last relay hop lands strictly earlier.
+        assert!(
+            tree.makespan_seconds < ring.makespan_seconds,
+            "tree {} vs ring {}",
+            tree.makespan_seconds,
+            ring.makespan_seconds
+        );
     }
 }

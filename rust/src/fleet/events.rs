@@ -13,6 +13,14 @@ use std::collections::BinaryHeap;
 /// One typed simulation event. `fog`/`edge` are indices into the engine's
 /// fog table and the fog's local receiver table; `blob` indexes the origin
 /// shard's blob list (`blobs.len()` denotes the label pseudo-blob).
+///
+/// The loss/NACK/repair kinds are emitted by the [`super::link`]
+/// reliability layer. Their state changes are applied when the link
+/// transaction runs (the channel timeline is computed inline); the
+/// events keep the popped timeline honest — a lossy run's event log
+/// shows every miss, every NACK, and every repair at the virtual time
+/// it happened. A `loss = 0` run emits none of them, so event counts
+/// reproduce the pre-link engine exactly.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Event {
     /// A blob's input data is complete at the fog; enqueue an encode job.
@@ -23,6 +31,18 @@ pub enum Event {
     Delivered { fog: usize, edge: usize, origin: usize, blob: usize },
     /// A receiver finished fine-tuning on everything it received.
     TrainDone { fog: usize, edge: usize },
+    /// A receiver (or backhaul peer, `edge = usize::MAX`) failed to
+    /// decode a payload transmission — the Bernoulli loss draw came up.
+    Lost { fog: usize, edge: usize, origin: usize, blob: usize },
+    /// A receiver posted a 64 B control frame asking for repair (a NACK
+    /// under the multicast policies, a pull retry under receiver-pull).
+    Nack { fog: usize, edge: usize, origin: usize, blob: usize },
+    /// The fog put a repair copy on the air (a shared re-air for the
+    /// NACK policies, a dedicated retransmission for ARQ legs).
+    Repair { fog: usize, origin: usize, blob: usize },
+    /// A receiver joined its cell mid-run (churn); the engine replays
+    /// everything already delivered from the fog's cache.
+    ReceiverJoin { fog: usize, edge: usize },
 }
 
 /// An event scheduled at a virtual time with a FIFO tie-break sequence.

@@ -1,0 +1,671 @@
+//! Lossy-link reliability layer: seeded Bernoulli loss + per-policy
+//! repair (ARQ / NACK) over the FIFO [`Channel`]s.
+//!
+//! The paper's 5.16x transmission reduction is measured over real
+//! wireless cells, where loss and retransmission are the norm. Before
+//! this layer existed the engine's delivery path was lossless, which
+//! made the shared-airtime policies *dishonest*: multicast gives up
+//! per-receiver ARQ, so comparing it byte-for-byte against unicast on a
+//! perfect medium overstates its win. Every delivery now runs as a link
+//! transaction that pays its policy's true repair cost:
+//!
+//! * **Loss model** — each [`Link`] owns a deterministic
+//!   [`Pcg32`](crate::util::rng::Pcg32) stream (seeded per channel from
+//!   the fleet seed) and drops each payload *reception* i.i.d. with the
+//!   configured probability. Cell and backhaul rates are configured
+//!   independently in [`crate::fleet::FleetConfig`]. Control frames
+//!   (NACKs, pull retries) are modeled loss-free: they are tiny and
+//!   heavily coded, and their loss costs timeout latency, not payload
+//!   bytes.
+//! * **Stop-and-wait ARQ** ([`Link::reliable`]) — point-to-point legs
+//!   (uploads, backhaul transfers, unicast and catch-up cell copies):
+//!   the sender retransmits the full payload on each loss until the
+//!   receiver holds it. Retransmissions are repair-class
+//!   ([`TxClass::Repair`]) — they occupy real airtime and real bytes
+//!   but never inflate the delivered-class totals, so delivered bytes
+//!   are invariant in the loss rate.
+//! * **NACK repair rounds** ([`shared_nack_leg`]) — shared-airtime legs
+//!   (`cell-multicast`, `multicast-tree`): one transmission serves the
+//!   cell; receivers that missed it each post a [`CONTROL_BYTES`] NACK
+//!   and the fog re-airs *one* shared repair copy per round until every
+//!   receiver in the cell holds the blob.
+//! * **Pull re-request ARQ** ([`shared_pull_leg`]) — `receiver-pull`
+//!   keeps its shared initial response, but repair is receiver-driven
+//!   and per-receiver: a receiver that missed the payload re-requests
+//!   (a control frame) and gets a *dedicated* retransmission — pull
+//!   forgoes coordinated shared repair, and pays for it under loss.
+//!
+//! Every transaction emits [`Event::Lost`] / [`Event::Nack`] /
+//! [`Event::Repair`] markers at the virtual times they happen, so the
+//! popped event log of a lossy run is self-describing. With `loss = 0`
+//! no draw is made, no marker is emitted and no repair byte is spent:
+//! the transactions reduce to the exact pre-link transmit sequence,
+//! which is the refactor's byte-parity anchor.
+//!
+//! The module also hosts the expected-airtime algebra the `auto` policy
+//! and the honest `airtime_saved` metric are built on
+//! ([`expected_unicast_airtime`] / [`expected_multicast_airtime`]), and
+//! the bandwidth-weighted backhaul relay planner ([`relay_plan`]) that
+//! replaces the ring chain on heterogeneous meshes.
+
+use crate::util::rng::Pcg32;
+
+use super::channel::{Channel, TxClass};
+use super::events::{Event, EventQueue};
+
+/// Bytes of one repair-control frame (a NACK or a pull re-request: a
+/// content-hash + shard coordinate ask). Matches the receiver-pull
+/// request size — both are minimal content-addressed asks.
+pub const CONTROL_BYTES: u64 = 64;
+
+/// Receiver index used in loss/repair marker events for point-to-point
+/// legs that have no cell receiver (uploads, backhaul transfers).
+pub const NO_EDGE: usize = usize::MAX;
+
+/// One lossy shared medium: a FIFO [`Channel`] plus a seeded Bernoulli
+/// reception-loss process and the repair disciplines that run over it.
+#[derive(Debug)]
+pub struct Link {
+    ch: Channel,
+    loss: f64,
+    rng: Pcg32,
+}
+
+/// Outcome of one point-to-point reliable transfer.
+#[derive(Debug, Clone, Copy)]
+pub struct TxResult {
+    /// Virtual time the receiver finally held the payload.
+    pub finish: f64,
+    /// Payload copies lost before the one that landed.
+    pub losses: u64,
+    /// Repair-class retransmissions (== `losses` for ARQ).
+    pub retransmissions: u64,
+    /// Airtime this transfer actually occupied (all attempts).
+    pub airtime: f64,
+}
+
+/// Outcome of one cell leg (a blob crossing one wireless cell to every
+/// active receiver under some repair discipline).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LegOutcome {
+    /// Cell airtime the leg actually occupied: payload, repair copies
+    /// and control frames included.
+    pub actual_airtime: f64,
+    /// Payload receptions lost (across all receivers and rounds).
+    pub losses: u64,
+    /// Control frames posted (NACKs / pull retries).
+    pub nacks: u64,
+    /// Payload repair transmissions (shared re-airs or dedicated).
+    pub retransmissions: u64,
+}
+
+impl LegOutcome {
+    fn absorb_tx(&mut self, tx: &TxResult) {
+        self.actual_airtime += tx.airtime;
+        self.losses += tx.losses;
+        self.retransmissions += tx.retransmissions;
+    }
+}
+
+impl Link {
+    /// A link over its own channel and an independent loss stream.
+    /// `stream` must be unique per channel (the engine derives it from
+    /// the fog index and channel kind) so loss draws never correlate
+    /// across channels; `seed` is the fleet seed, so the whole run is
+    /// reproducible from one number.
+    pub fn new(bandwidth: f64, latency: f64, loss: f64, seed: u64, stream: u64) -> Link {
+        assert!((0.0..1.0).contains(&loss), "loss must be in [0, 1): {loss}");
+        Link {
+            ch: Channel::new(bandwidth, latency),
+            loss,
+            // Salted so link draws are independent of every other
+            // consumer of the fleet seed (dataset synthesis etc.).
+            rng: Pcg32::new(seed ^ 0x4c49_4e4b_u64, stream),
+        }
+    }
+
+    /// The underlying channel (report accounting reads it).
+    pub fn channel(&self) -> &Channel {
+        &self.ch
+    }
+
+    pub fn loss_rate(&self) -> f64 {
+        self.loss
+    }
+
+    /// Airtime of one transfer in isolation (no queueing).
+    pub fn airtime(&self, bytes: u64) -> f64 {
+        self.ch.airtime(bytes)
+    }
+
+    /// One Bernoulli reception draw. `loss = 0` never consults the RNG,
+    /// so loss-free runs are draw-for-draw identical to the pre-link
+    /// engine (and cheaper).
+    fn lost(&mut self) -> bool {
+        self.loss > 0.0 && self.rng.chance(self.loss)
+    }
+
+    /// Unreliable delivered-class transmit (no repair, no draw): the
+    /// raw channel primitive, for traffic the reliability layer wraps
+    /// itself.
+    pub fn transmit(&mut self, now: f64, bytes: u64, tag: &'static str) -> f64 {
+        self.ch.transmit(now, bytes, tag)
+    }
+
+    /// Point-to-point stop-and-wait ARQ: transmit, and on each loss
+    /// retransmit (repair-class) until the receiver holds the payload.
+    /// The first copy is delivered-class under `tag`; `fog`/`edge`/
+    /// `origin`/`blob` label the loss/repair marker events ([`NO_EDGE`]
+    /// for legs without a cell receiver).
+    #[allow(clippy::too_many_arguments)]
+    pub fn reliable(
+        &mut self,
+        q: &mut EventQueue,
+        now: f64,
+        bytes: u64,
+        tag: &'static str,
+        fog: usize,
+        edge: usize,
+        origin: usize,
+        blob: usize,
+    ) -> TxResult {
+        let a = self.airtime(bytes);
+        let mut finish = self.ch.transmit(now, bytes, tag);
+        let mut out = TxResult { finish, losses: 0, retransmissions: 0, airtime: a };
+        while self.lost() {
+            q.push(finish, Event::Lost { fog, edge, origin, blob });
+            out.losses += 1;
+            // The sender learns of the loss at the attempt's finish
+            // (timeout/feedback is latency-free by model; the payload
+            // airtime dominates) and immediately re-airs.
+            finish = self.ch.transmit_class(finish, bytes, "arq-repair", TxClass::Repair);
+            q.push(finish, Event::Repair { fog, origin, blob });
+            out.retransmissions += 1;
+            out.airtime += a;
+        }
+        out.finish = finish;
+        out
+    }
+
+    /// Per-receiver cell leg: one independent ARQ transfer per active
+    /// receiver (the `unicast` discipline, and `auto`'s fallback mode).
+    /// Pushes one [`Event::Delivered`] per receiver.
+    #[allow(clippy::too_many_arguments)]
+    pub fn per_receiver_leg(
+        &mut self,
+        q: &mut EventQueue,
+        now: f64,
+        bytes: u64,
+        tag: &'static str,
+        fog: usize,
+        origin: usize,
+        blob: usize,
+        rxs: &[usize],
+    ) -> LegOutcome {
+        let mut out = LegOutcome::default();
+        for &r in rxs {
+            let tx = self.reliable(q, now, bytes, tag, fog, r, origin, blob);
+            out.absorb_tx(&tx);
+            q.push(tx.finish, Event::Delivered { fog, edge: r, origin, blob });
+        }
+        out
+    }
+
+    /// Shared cell leg with NACK repair rounds (`cell-multicast` /
+    /// `multicast-tree`): one transmission serves the cell; receivers
+    /// that missed it each post a [`CONTROL_BYTES`] NACK, the fog
+    /// re-airs one shared repair copy, and the round repeats until
+    /// every receiver holds the blob.
+    #[allow(clippy::too_many_arguments)]
+    pub fn shared_nack_leg(
+        &mut self,
+        q: &mut EventQueue,
+        now: f64,
+        bytes: u64,
+        tag: &'static str,
+        fog: usize,
+        origin: usize,
+        blob: usize,
+        rxs: &[usize],
+    ) -> LegOutcome {
+        let mut out = LegOutcome::default();
+        let a = self.airtime(bytes);
+        let a_ctl = self.airtime(CONTROL_BYTES);
+        let mut finish = self.ch.transmit(now, bytes, tag);
+        out.actual_airtime += a;
+        let mut missing: Vec<usize> = Vec::new();
+        for &r in rxs {
+            if self.lost() {
+                q.push(finish, Event::Lost { fog, edge: r, origin, blob });
+                out.losses += 1;
+                missing.push(r);
+            } else {
+                q.push(finish, Event::Delivered { fog, edge: r, origin, blob });
+            }
+        }
+        while !missing.is_empty() {
+            // NACKs queue FIFO on the cell the moment the failed copy
+            // finished; the repair re-air queues behind them.
+            for &r in &missing {
+                let f = self.ch.transmit_class(finish, CONTROL_BYTES, "nack", TxClass::Control);
+                q.push(f, Event::Nack { fog, edge: r, origin, blob });
+                out.nacks += 1;
+                out.actual_airtime += a_ctl;
+            }
+            finish = self.ch.transmit_class(finish, bytes, "mcast-repair", TxClass::Repair);
+            q.push(finish, Event::Repair { fog, origin, blob });
+            out.retransmissions += 1;
+            out.actual_airtime += a;
+            missing.retain(|&r| {
+                if self.lost() {
+                    q.push(finish, Event::Lost { fog, edge: r, origin, blob });
+                    out.losses += 1;
+                    true
+                } else {
+                    q.push(finish, Event::Delivered { fog, edge: r, origin, blob });
+                    false
+                }
+            });
+        }
+        out
+    }
+
+    /// Receiver-pull cell leg: every active receiver posts a pull
+    /// request (delivered-class, the policy's signature traffic), the
+    /// fog answers with one shared transmission, and receivers that
+    /// missed it repair by per-receiver ARQ — re-request (control
+    /// frame) plus a dedicated retransmission, no coordinated re-air.
+    #[allow(clippy::too_many_arguments)]
+    pub fn shared_pull_leg(
+        &mut self,
+        q: &mut EventQueue,
+        now: f64,
+        bytes: u64,
+        tag: &'static str,
+        request_bytes: u64,
+        fog: usize,
+        origin: usize,
+        blob: usize,
+        rxs: &[usize],
+    ) -> LegOutcome {
+        let mut out = LegOutcome::default();
+        let a = self.airtime(bytes);
+        let a_req = self.airtime(request_bytes);
+        let a_ctl = self.airtime(CONTROL_BYTES);
+        for _ in rxs {
+            self.ch.transmit(now, request_bytes, "pull-request");
+            out.actual_airtime += a_req;
+        }
+        let first = self.ch.transmit(now, bytes, tag);
+        out.actual_airtime += a;
+        for &r in rxs {
+            if !self.lost() {
+                q.push(first, Event::Delivered { fog, edge: r, origin, blob });
+                continue;
+            }
+            q.push(first, Event::Lost { fog, edge: r, origin, blob });
+            out.losses += 1;
+            let mut t = first;
+            loop {
+                let fq = self.ch.transmit_class(t, CONTROL_BYTES, "pull-retry", TxClass::Control);
+                q.push(fq, Event::Nack { fog, edge: r, origin, blob });
+                out.nacks += 1;
+                out.actual_airtime += a_ctl;
+                let fr = self.ch.transmit_class(fq, bytes, "arq-repair", TxClass::Repair);
+                q.push(fr, Event::Repair { fog, origin, blob });
+                out.retransmissions += 1;
+                out.actual_airtime += a;
+                if self.lost() {
+                    q.push(fr, Event::Lost { fog, edge: r, origin, blob });
+                    out.losses += 1;
+                    t = fr;
+                } else {
+                    q.push(fr, Event::Delivered { fog, edge: r, origin, blob });
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Catch-up leg for a receiver that joined mid-run: one dedicated
+    /// ARQ copy out of the fog's cache, accounted in its own
+    /// delivered-class tag so churn traffic is visible apart from the
+    /// live broadcast totals.
+    #[allow(clippy::too_many_arguments)]
+    pub fn catchup_leg(
+        &mut self,
+        q: &mut EventQueue,
+        now: f64,
+        bytes: u64,
+        fog: usize,
+        edge: usize,
+        origin: usize,
+        blob: usize,
+    ) -> LegOutcome {
+        let mut out = LegOutcome::default();
+        let tx = self.reliable(q, now, bytes, "catchup", fog, edge, origin, blob);
+        out.absorb_tx(&tx);
+        q.push(tx.finish, Event::Delivered { fog, edge, origin, blob });
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Expected-airtime algebra (the honest baseline + the `auto` decision).
+// ---------------------------------------------------------------------
+
+/// Expected cell airtime to deliver `bytes` to `n` receivers by
+/// per-receiver stop-and-wait ARQ at reception-loss `p`: each receiver
+/// needs `Geometric(1-p)` copies, `n·a/(1-p)` in expectation. This is
+/// the baseline [`crate::fleet::FleetReport::airtime_saved_seconds`]
+/// nets every policy (unicast included) against — at `p = 0` it reduces
+/// to the PR-4 `n` copies exactly.
+pub fn expected_unicast_airtime(n: usize, bytes: u64, p: f64, bandwidth: f64, latency: f64) -> f64 {
+    n as f64 * (latency + bytes as f64 / bandwidth) / (1.0 - p)
+}
+
+/// Expected number of payload transmissions for one shared copy + NACK
+/// repair rounds to reach all `n` receivers at loss `p`: the max of `n`
+/// i.i.d. `Geometric(1-p)` attempt counts, `Σ_{t≥0} (1 - (1-p^t)^n)`.
+pub fn expected_shared_transmissions(n: usize, p: f64) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let mut e = 0.0;
+    let mut pt = 1.0; // p^t
+    for _ in 0..10_000 {
+        let term = 1.0 - (1.0 - pt).powi(n as i32);
+        e += term;
+        if term < 1e-12 {
+            break;
+        }
+        pt *= p;
+    }
+    e
+}
+
+/// Expected cell airtime for the NACK-multicast discipline: shared
+/// payload rounds plus one [`CONTROL_BYTES`] NACK per receiver per
+/// missed reception (`n·p/(1-p)` NACKs in expectation).
+pub fn expected_multicast_airtime(
+    n: usize,
+    bytes: u64,
+    p: f64,
+    bandwidth: f64,
+    latency: f64,
+) -> f64 {
+    let a = latency + bytes as f64 / bandwidth;
+    let a_ctl = latency + CONTROL_BYTES as f64 / bandwidth;
+    expected_shared_transmissions(n, p) * a + n as f64 * p / (1.0 - p) * a_ctl
+}
+
+/// The `auto` policy's per-blob decision: share the cell airtime iff
+/// NACK-multicast beats per-receiver ARQ in expected airtime for this
+/// cell population, blob size and loss rate. Single-receiver cells tie
+/// and fall back to the simpler per-receiver leg.
+pub fn auto_shares_airtime(n: usize, bytes: u64, p: f64, bandwidth: f64, latency: f64) -> bool {
+    n > 1
+        && expected_multicast_airtime(n, bytes, p, bandwidth, latency)
+            < expected_unicast_airtime(n, bytes, p, bandwidth, latency)
+}
+
+// ---------------------------------------------------------------------
+// Backhaul relay planning (the multicast-tree mesh).
+// ---------------------------------------------------------------------
+
+/// One planned mesh relay hop: `parent` transmits on its own uplink to
+/// `child`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RelayHop {
+    pub parent: usize,
+    pub child: usize,
+}
+
+/// Plan the mesh relay order for one blob from `origin` to `targets`
+/// (fogs that need the blob, excluding fogs that already hold it —
+/// holders are passed in `seeded` and serve as extra relay roots).
+///
+/// * Uniform uplink bandwidths → the PR-4 ring chain from the origin,
+///   in ring order (the tested fallback; byte totals and timing are
+///   preserved exactly).
+/// * Heterogeneous bandwidths → a bandwidth-weighted tree: children
+///   attach in descending own-uplink bandwidth (fast fogs join early so
+///   they can relay), each to the in-tree parent with the fastest
+///   uplink. Every blob still crosses exactly one link per target — the
+///   tree reshapes *latency*, never bytes — but tail latency stops
+///   serializing through slow hops the way the ring chain does.
+///
+/// Ties break on ring distance from the origin, so plans are fully
+/// deterministic.
+pub fn relay_plan(
+    origin: usize,
+    n_fogs: usize,
+    targets: &[usize],
+    seeded: &[usize],
+    uplink_bw: &[f64],
+) -> Vec<RelayHop> {
+    let ring_dist = |g: usize| (g + n_fogs - origin) % n_fogs;
+    let uniform = uplink_bw.windows(2).all(|w| w[0] == w[1]);
+    if uniform {
+        // Ring chain: origin → next → next, holders relaying in place.
+        let mut in_ring: Vec<usize> = targets.iter().chain(seeded).copied().collect();
+        in_ring.sort_by_key(|&g| ring_dist(g));
+        let mut prev = origin;
+        let mut hops = Vec::new();
+        for g in in_ring {
+            if targets.contains(&g) {
+                hops.push(RelayHop { parent: prev, child: g });
+            }
+            prev = g; // holders advance the chain without a hop
+        }
+        return hops;
+    }
+    // Bandwidth-weighted tree.
+    let mut relays: Vec<usize> = std::iter::once(origin).chain(seeded.iter().copied()).collect();
+    let mut pending: Vec<usize> = targets.to_vec();
+    // Fast fogs first (they become useful relays), ties in ring order.
+    pending.sort_by(|&a, &b| {
+        uplink_bw[b].total_cmp(&uplink_bw[a]).then(ring_dist(a).cmp(&ring_dist(b)))
+    });
+    let mut hops = Vec::with_capacity(pending.len());
+    for g in pending {
+        let parent = *relays
+            .iter()
+            .max_by(|&&x, &&y| {
+                uplink_bw[x].total_cmp(&uplink_bw[y]).then(ring_dist(y).cmp(&ring_dist(x)))
+            })
+            .expect("relay set starts non-empty");
+        hops.push(RelayHop { parent, child: g });
+        relays.push(g);
+    }
+    hops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lossy(loss: f64, seed: u64) -> Link {
+        Link::new(1e6, 0.0, loss, seed, 0)
+    }
+
+    #[test]
+    fn loss_free_reliable_is_one_plain_transmit() {
+        let mut l = lossy(0.0, 7);
+        let mut q = EventQueue::new();
+        let tx = l.reliable(&mut q, 0.0, 1_000_000, "x", 0, NO_EDGE, 0, 0);
+        assert_eq!(tx.losses, 0);
+        assert_eq!(tx.retransmissions, 0);
+        assert!((tx.finish - 1.0).abs() < 1e-12);
+        assert!(q.is_empty(), "no marker events at loss 0");
+        assert_eq!(l.channel().repair_bytes(), 0);
+        assert_eq!(l.channel().delivered_bytes(), 1_000_000);
+    }
+
+    #[test]
+    fn arq_repairs_exactly_once_per_loss() {
+        // Whatever the seed draws, the invariants hold: one repair copy
+        // per loss, delivered-class bytes loss-invariant, markers paired.
+        let mut l = lossy(0.5, 42);
+        let mut q = EventQueue::new();
+        let mut losses = 0;
+        for i in 0..200 {
+            let tx = l.reliable(&mut q, 0.0, 1000, "x", 0, NO_EDGE, 0, i);
+            assert_eq!(tx.retransmissions, tx.losses);
+            assert!((tx.airtime - (1 + tx.losses) as f64 * 1e-3).abs() < 1e-9);
+            losses += tx.losses;
+        }
+        assert!(losses > 50, "p=0.5 over 200 sends must lose often: {losses}");
+        assert_eq!(l.channel().repair_bytes(), losses * 1000);
+        assert_eq!(l.channel().delivered_bytes(), 200 * 1000);
+        assert_eq!(q.len() as u64, 2 * losses, "one Lost + one Repair per loss");
+    }
+
+    #[test]
+    fn nack_leg_reaches_every_receiver_with_one_nack_per_miss() {
+        let mut l = lossy(0.4, 11);
+        let mut q = EventQueue::new();
+        let rxs: Vec<usize> = (0..8).collect();
+        // 20 legs × 8 receivers: p=0.4 cannot draw all-clear (0.6^160).
+        let mut total = LegOutcome::default();
+        for b in 0..20 {
+            let out = l.shared_nack_leg(&mut q, 0.0, 10_000, "b", 0, 0, b, &rxs);
+            assert_eq!(out.nacks, out.losses, "every miss NACKs exactly once");
+            total.nacks += out.nacks;
+            total.losses += out.losses;
+            total.retransmissions += out.retransmissions;
+        }
+        assert!(total.retransmissions >= 1, "p=0.4 over 160 receptions must repair");
+        assert!(total.retransmissions <= total.losses, "shared re-airs amortize misses");
+        assert_eq!(l.channel().control_bytes(), total.nacks * CONTROL_BYTES);
+        assert_eq!(l.channel().repair_bytes(), total.retransmissions * 10_000);
+        // Exactly one Delivered per receiver per leg among the events.
+        let mut delivered = 0;
+        while let Some((_, e)) = q.pop() {
+            if matches!(e, Event::Delivered { .. }) {
+                delivered += 1;
+            }
+        }
+        assert_eq!(delivered, 20 * 8);
+    }
+
+    #[test]
+    fn nack_leg_at_loss_zero_is_one_shared_copy() {
+        let mut l = lossy(0.0, 1);
+        let mut q = EventQueue::new();
+        let out = l.shared_nack_leg(&mut q, 0.0, 5000, "b", 0, 0, 0, &[0, 1, 2]);
+        assert_eq!((out.losses, out.nacks, out.retransmissions), (0, 0, 0));
+        assert!((out.actual_airtime - 5e-3).abs() < 1e-12);
+        assert_eq!(l.channel().bytes_total(), 5000);
+        assert_eq!(q.len(), 3, "three Delivered, no markers");
+    }
+
+    #[test]
+    fn pull_leg_repairs_with_dedicated_copies() {
+        let mut l = lossy(0.4, 13);
+        let mut q = EventQueue::new();
+        let rxs: Vec<usize> = (0..8).collect();
+        // 20 legs so p=0.4 cannot draw all-clear across 160 receptions.
+        let mut total = LegOutcome::default();
+        for b in 0..20 {
+            let out = l.shared_pull_leg(&mut q, 0.0, 10_000, "b", 64, 0, 0, b, &rxs);
+            // Receiver-driven repair: one retry + one dedicated copy per
+            // miss — pull forgoes shared re-airs entirely.
+            assert_eq!(out.nacks, out.losses);
+            assert_eq!(out.retransmissions, out.losses);
+            total.nacks += out.nacks;
+            total.losses += out.losses;
+            total.retransmissions += out.retransmissions;
+        }
+        assert!(total.losses > 0, "p=0.4 over 160 receptions must lose");
+        assert_eq!(l.channel().bytes_tagged("pull-request"), 20 * 8 * 64);
+        assert_eq!(l.channel().repair_bytes(), total.retransmissions * 10_000);
+        assert_eq!(l.channel().control_bytes(), total.nacks * CONTROL_BYTES);
+    }
+
+    #[test]
+    fn same_seed_same_draws_different_seed_different_draws() {
+        let run = |seed: u64| {
+            let mut l = lossy(0.3, seed);
+            let mut q = EventQueue::new();
+            (0..50)
+                .map(|i| l.reliable(&mut q, 0.0, 100, "x", 0, NO_EDGE, 0, i).losses)
+                .collect::<Vec<u64>>()
+        };
+        assert_eq!(run(9), run(9), "seeded loss must be deterministic");
+        assert_ne!(run(9), run(10), "different seeds must draw differently");
+    }
+
+    #[test]
+    fn expected_airtime_reduces_to_lossless_algebra_at_p_zero() {
+        assert!((expected_shared_transmissions(5, 0.0) - 1.0).abs() < 1e-12);
+        let uni = expected_unicast_airtime(9, 1000, 0.0, 1e6, 0.0);
+        assert!((uni - 9.0 * 1e-3).abs() < 1e-12);
+        let mc = expected_multicast_airtime(9, 1000, 0.0, 1e6, 0.0);
+        assert!((mc - 1e-3).abs() < 1e-12);
+        assert!(auto_shares_airtime(9, 1000, 0.0, 1e6, 0.0));
+        assert!(!auto_shares_airtime(1, 1000, 0.0, 1e6, 0.0), "n = 1 ties: keep ARQ");
+        assert!(!auto_shares_airtime(0, 1000, 0.0, 1e6, 0.0));
+    }
+
+    #[test]
+    fn expected_airtime_is_monotone_in_loss_and_auto_flips_for_tiny_blobs() {
+        // More loss → more expected airtime, for both disciplines.
+        let mut last_u = 0.0;
+        let mut last_m = 0.0;
+        for p in [0.0, 0.1, 0.3, 0.5] {
+            let u = expected_unicast_airtime(9, 10_000, p, 1e6, 0.0);
+            let m = expected_multicast_airtime(9, 10_000, p, 1e6, 0.0);
+            assert!(u >= last_u && m >= last_m, "p={p}");
+            last_u = u;
+            last_m = m;
+        }
+        // Large blob, populated cell: sharing wins even at heavy loss.
+        assert!(auto_shares_airtime(9, 100_000, 0.5, 1e6, 0.0));
+        // Payload no larger than the NACK frame: per-receiver ARQ costs
+        // n·a/(1-p) while multicast adds NACK traffic of the same size on
+        // top of its repair rounds — sharing must lose at heavy loss.
+        assert!(!auto_shares_airtime(2, 64, 0.6, 1e6, 0.0));
+    }
+
+    #[test]
+    fn relay_plan_uniform_is_the_ring_chain() {
+        let bw = vec![1e7; 4];
+        let hops = relay_plan(1, 4, &[2, 3, 0], &[], &bw);
+        assert_eq!(
+            hops,
+            vec![
+                RelayHop { parent: 1, child: 2 },
+                RelayHop { parent: 2, child: 3 },
+                RelayHop { parent: 3, child: 0 },
+            ]
+        );
+        // A holder mid-ring relays in place: no hop to it, but it
+        // becomes the parent of the next fog down the ring.
+        let hops = relay_plan(1, 4, &[3, 0], &[2], &bw);
+        assert_eq!(
+            hops,
+            vec![RelayHop { parent: 2, child: 3 }, RelayHop { parent: 3, child: 0 }]
+        );
+    }
+
+    #[test]
+    fn relay_plan_heterogeneous_prefers_fast_uplinks() {
+        // Fog 2 has a 10x uplink: it must attach directly to the origin
+        // and then relay everyone else, instead of the ring 0→1→2→3.
+        let bw = vec![1e6, 1e6, 1e7, 1e6];
+        let hops = relay_plan(0, 4, &[1, 2, 3], &[], &bw);
+        assert_eq!(hops[0], RelayHop { parent: 0, child: 2 });
+        assert_eq!(hops[1], RelayHop { parent: 2, child: 1 });
+        assert_eq!(hops[2], RelayHop { parent: 2, child: 3 });
+        // Still one crossing per target fog.
+        assert_eq!(hops.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "loss must be in [0, 1)")]
+    fn link_rejects_certain_loss() {
+        let _ = Link::new(1e6, 0.0, 1.0, 0, 0);
+    }
+}

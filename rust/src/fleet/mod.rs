@@ -8,7 +8,16 @@
 //!
 //! * [`events`] — virtual-time event queue (typed events, FIFO ties);
 //! * [`channel`] — contention-aware FIFO channels (one per wireless
-//!   cell, plus per-fog backhaul links), so cells overlap in time;
+//!   cell, plus per-fog backhaul links), so cells overlap in time, with
+//!   delivered vs repair vs control byte classes and goodput-vs-raw
+//!   throughput accounting;
+//! * [`link`] — the lossy-link reliability layer: seeded Bernoulli
+//!   reception loss per channel, per-receiver stop-and-wait ARQ for
+//!   point-to-point legs, NACK-based shared repair rounds for multicast
+//!   legs, receiver-driven re-request repair for pull, the
+//!   expected-airtime algebra behind `--policy auto`, and the
+//!   bandwidth-weighted backhaul relay planner. With `loss = 0` every
+//!   transaction reduces to the exact lossless transmit sequence;
 //! * [`workers`] — per-fog encode worker pools: K concurrent INR encode
 //!   jobs drain a queue instead of running inline;
 //! * [`cache`] — per-fog content-addressed INR weight cache keyed by a
@@ -20,15 +29,19 @@
 //! * [`policy`] — re-broadcast policies over the same fleet: legacy
 //!   per-receiver `unicast` (the byte-parity default), `cell-multicast`
 //!   (one airtime per blob per cell), `multicast-tree` (cache-aware
-//!   backhaul spanning tree, each blob crosses each link once) and
+//!   backhaul spanning tree, each blob crosses each link once),
 //!   `receiver-pull` (receiver-driven fetch, deduplicated by the weight
-//!   cache), selectable via `residual-inr fleet --policy`;
+//!   cache) and `auto` (per-blob unicast-vs-multicast selection from
+//!   cell population, blob size and loss rate), selectable via
+//!   `residual-inr fleet --policy`. Under loss each policy pays its own
+//!   repair discipline's true cost;
 //! * [`traffic`] — the session-free size/cost model: zero-weight packed
 //!   records whose byte sizes match the live encoder record-for-record;
-//! * [`scenario`] — `paper-10` / `sharded` / `hierarchical` topologies;
-//!   virtual-time prices come from a [`crate::costmodel::CostBook`]
-//!   (calibrated against live PJRT timing, or analytical), never from
-//!   hard-coded constants;
+//! * [`scenario`] — `paper-10` / `sharded` / `hierarchical` topologies,
+//!   cell/backhaul loss rates, receiver churn ([`scenario::JoinSpec`])
+//!   and per-fog backhaul bandwidth overrides; virtual-time prices come
+//!   from a [`crate::costmodel::CostBook`] (calibrated against live
+//!   PJRT timing, or analytical), never from hard-coded constants;
 //! * [`engine`] — the event loop tying it together;
 //! * [`report`] — per-fog and fleet-wide reports (including which cost
 //!   model priced the run).
@@ -42,6 +55,7 @@ pub mod cache;
 pub mod channel;
 pub mod engine;
 pub mod events;
+pub mod link;
 pub mod policy;
 pub mod report;
 pub mod scenario;
@@ -49,11 +63,12 @@ pub mod traffic;
 pub mod workers;
 
 pub use cache::{blob_hash, CacheStats, WeightCache};
-pub use channel::Channel;
+pub use channel::{Channel, TxClass};
 pub use engine::{model_fleet_shards, run, simulate};
 pub use events::{Event, EventQueue};
-pub use policy::RebroadcastPolicy;
+pub use link::Link;
+pub use policy::{CellMode, RebroadcastPolicy};
 pub use report::{FleetReport, FogReport};
-pub use scenario::{FleetConfig, Topology};
+pub use scenario::{FleetConfig, JoinSpec, Topology};
 pub use traffic::{model_shard, Blob, ShardTraffic};
 pub use workers::WorkerPool;

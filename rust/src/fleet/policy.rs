@@ -3,7 +3,7 @@
 //! The paper's fog node *broadcasts* INR weights to its edge devices;
 //! the engine historically modeled every delivery as a per-receiver cell
 //! unicast plus a per-peer backhaul copy. A [`RebroadcastPolicy`]
-//! generalizes that one hard-coded flow into four communication
+//! generalizes that one hard-coded flow into five communication
 //! disciplines over the same fleet:
 //!
 //! * [`Unicast`] — the legacy semantics and the byte-parity default:
@@ -24,19 +24,44 @@
 //!   distinguishes the policy is the explicit request traffic, whose
 //!   bytes and airtime the report accounts separately (and nets out of
 //!   the airtime-saved metric).
+//! * [`Auto`] — per-blob selection: each cell leg independently picks
+//!   per-receiver ARQ or NACK-multicast from the cell population, the
+//!   blob size, and the loss rate, using the expected-airtime algebra
+//!   in [`super::link`]. This is the decision the (now honest)
+//!   `airtime_saved_seconds` accounting measures.
 //!
-//! All four run the identical shard streams, worker pools and channels,
-//! so reports are comparable method-for-method; the engine additionally
-//! tracks the airtime a shared-medium policy saves relative to unicast.
+//! All policies run the identical shard streams, worker pools and
+//! channels, so reports are comparable method-for-method — and since
+//! the [`super::link`] reliability layer landed, each policy also pays
+//! its true repair cost under loss: per-receiver stop-and-wait ARQ for
+//! [`Unicast`] legs (and receiver-driven re-request ARQ for
+//! [`ReceiverPull`]), shared NACK repair rounds for the multicast legs.
+//! The engine additionally tracks the airtime a policy saves relative
+//! to the *expected* per-receiver-ARQ baseline.
 //!
 //! [`Unicast`]: RebroadcastPolicy::Unicast
 //! [`CellMulticast`]: RebroadcastPolicy::CellMulticast
 //! [`MulticastTree`]: RebroadcastPolicy::MulticastTree
 //! [`ReceiverPull`]: RebroadcastPolicy::ReceiverPull
+//! [`Auto`]: RebroadcastPolicy::Auto
+
+use super::link;
 
 /// Bytes of one receiver-pull request message (a content-hash + shard
 /// coordinate ask; accounted separately from payload broadcast bytes).
 pub const PULL_REQUEST_BYTES: u64 = 64;
+
+/// How one cell leg moves a blob to the cell's active receivers — the
+/// link-transaction shape [`super::engine`] asks [`super::link`] to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellMode {
+    /// One independent stop-and-wait ARQ transfer per receiver.
+    PerReceiver,
+    /// One shared transmission + NACK repair rounds.
+    SharedNack,
+    /// Pull requests, one shared response, per-receiver re-request ARQ.
+    SharedPull,
+}
 
 /// How fog cells redistribute encoded blobs to their receivers and to
 /// peer fogs.
@@ -53,14 +78,18 @@ pub enum RebroadcastPolicy {
     /// Receivers pull; one overheard response per cell, with the
     /// request traffic accounted explicitly (backhaul as CellMulticast).
     ReceiverPull,
+    /// Per-blob unicast-vs-multicast selection from cell population,
+    /// blob size and loss rate (backhaul as CellMulticast).
+    Auto,
 }
 
 impl RebroadcastPolicy {
-    pub const ALL: [RebroadcastPolicy; 4] = [
+    pub const ALL: [RebroadcastPolicy; 5] = [
         RebroadcastPolicy::Unicast,
         RebroadcastPolicy::CellMulticast,
         RebroadcastPolicy::MulticastTree,
         RebroadcastPolicy::ReceiverPull,
+        RebroadcastPolicy::Auto,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -69,6 +98,7 @@ impl RebroadcastPolicy {
             RebroadcastPolicy::CellMulticast => "cell-multicast",
             RebroadcastPolicy::MulticastTree => "multicast-tree",
             RebroadcastPolicy::ReceiverPull => "receiver-pull",
+            RebroadcastPolicy::Auto => "auto",
         }
     }
 
@@ -81,12 +111,17 @@ impl RebroadcastPolicy {
             }
             "multicast-tree" | "tree" => Some(RebroadcastPolicy::MulticastTree),
             "receiver-pull" | "pull" => Some(RebroadcastPolicy::ReceiverPull),
+            "auto" => Some(RebroadcastPolicy::Auto),
             _ => None,
         }
     }
 
-    /// One cell airtime serves every receiver in the cell (the wireless
-    /// medium is shared, so co-located receivers hear the same frame).
+    /// One cell airtime *may* serve every receiver in the cell (the
+    /// wireless medium is shared, so co-located receivers hear the same
+    /// frame). For [`Auto`] the per-blob decision is made by
+    /// [`cell_mode`](Self::cell_mode); `true` here means the policy
+    /// never uses the legacy per-receiver backhaul re-fetch path —
+    /// remote fogs materialize each blob once per cell.
     pub fn shares_cell_airtime(&self) -> bool {
         !matches!(self, RebroadcastPolicy::Unicast)
     }
@@ -101,6 +136,34 @@ impl RebroadcastPolicy {
     pub fn pulls(&self) -> bool {
         matches!(self, RebroadcastPolicy::ReceiverPull)
     }
+
+    /// The link transaction one cell leg runs under this policy, for a
+    /// cell with `n_active` receivers, a `bytes`-sized blob, and the
+    /// cell's loss/bandwidth/latency. Static for every policy except
+    /// [`Auto`], which decides per blob by expected airtime.
+    pub fn cell_mode(
+        &self,
+        n_active: usize,
+        bytes: u64,
+        loss: f64,
+        bandwidth: f64,
+        latency: f64,
+    ) -> CellMode {
+        match self {
+            RebroadcastPolicy::Unicast => CellMode::PerReceiver,
+            RebroadcastPolicy::CellMulticast | RebroadcastPolicy::MulticastTree => {
+                CellMode::SharedNack
+            }
+            RebroadcastPolicy::ReceiverPull => CellMode::SharedPull,
+            RebroadcastPolicy::Auto => {
+                if link::auto_shares_airtime(n_active, bytes, loss, bandwidth, latency) {
+                    CellMode::SharedNack
+                } else {
+                    CellMode::PerReceiver
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -113,6 +176,24 @@ mod tests {
             assert_eq!(RebroadcastPolicy::from_name(p.name()), Some(p));
         }
         assert_eq!(RebroadcastPolicy::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn cell_modes_map_policies_to_link_transactions() {
+        use RebroadcastPolicy::*;
+        assert_eq!(Unicast.cell_mode(9, 1000, 0.0, 1e6, 0.0), CellMode::PerReceiver);
+        assert_eq!(CellMulticast.cell_mode(9, 1000, 0.0, 1e6, 0.0), CellMode::SharedNack);
+        assert_eq!(MulticastTree.cell_mode(9, 1000, 0.0, 1e6, 0.0), CellMode::SharedNack);
+        assert_eq!(ReceiverPull.cell_mode(9, 1000, 0.0, 1e6, 0.0), CellMode::SharedPull);
+        // Auto: populated cell shares; single receiver ties → ARQ; a
+        // 64 B payload at heavy loss loses to per-receiver ARQ (NACKs
+        // cost as much as payload copies).
+        assert_eq!(Auto.cell_mode(9, 1000, 0.0, 1e6, 0.0), CellMode::SharedNack);
+        assert_eq!(Auto.cell_mode(1, 1000, 0.0, 1e6, 0.0), CellMode::PerReceiver);
+        assert_eq!(Auto.cell_mode(2, 64, 0.6, 1e6, 0.0), CellMode::PerReceiver);
+        assert!(Auto.shares_cell_airtime(), "auto materializes once per cell");
+        assert!(!Auto.pushes_backhaul_tree());
+        assert!(!Auto.pulls());
     }
 
     #[test]

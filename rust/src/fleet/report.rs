@@ -11,13 +11,17 @@ use super::cache::CacheStats;
 pub struct FogReport {
     pub fog: usize,
     pub edges: usize,
+    /// Receivers present from `t = 0`.
     pub receivers: usize,
+    /// Receivers that joined this cell mid-run (churn).
+    pub joined: usize,
     pub shard_frames: usize,
     pub blobs: usize,
     /// Worker-seconds of encode work and total queue wait.
     pub encode_busy_seconds: f64,
     pub encode_wait_seconds: f64,
     pub max_queue_depth: usize,
+    /// Raw bytes on this cell's air (repair and control included).
     pub cell_bytes: u64,
     /// Uncapped airtime/horizon ratio ([`crate::fleet::Channel`]
     /// contract: above 1.0 = oversubscribed). Engine runs price this
@@ -25,10 +29,17 @@ pub struct FogReport {
     /// sub-horizon windows see the overload uncapped, and the printed
     /// table renders anything above 100% as `100%+`.
     pub cell_utilization: f64,
-    /// Cell airtime avoided relative to per-receiver unicast (0 under
-    /// the `unicast` policy).
+    /// Cell airtime avoided relative to the expected per-receiver-ARQ
+    /// baseline (exactly 0 for a `loss = 0` unicast run).
     pub airtime_saved_seconds: f64,
+    /// Delivered-class backhaul bytes (loss-invariant).
     pub backhaul_bytes: u64,
+    /// Repair retransmission bytes (cell + backhaul legs of this fog).
+    pub repair_bytes: u64,
+    /// Control-frame bytes (NACKs, pull retries).
+    pub control_bytes: u64,
+    /// Catch-up delivery bytes to mid-run joiners.
+    pub catchup_bytes: u64,
     pub cache: CacheStats,
     pub cache_blobs: usize,
     pub cache_used_bytes: u64,
@@ -48,13 +59,22 @@ pub struct FleetReport {
     pub method: String,
     pub n_fogs: usize,
     pub n_edges: usize,
+    /// Receivers present from `t = 0`; mid-run joiners are counted in
+    /// `joined_receivers`.
     pub n_receivers: usize,
+    /// Receivers that joined mid-run (churn).
+    pub joined_receivers: usize,
     pub n_frames: usize,
     pub n_blobs: usize,
     /// Virtual-time prices the run was simulated with (and their source:
     /// calibrated against live PJRT timing, or analytical).
     pub costs: CostBook,
-    // Byte accounting across all wireless cells + backhaul links.
+    /// Bernoulli reception-loss rates the run was delivered under.
+    pub loss_cell: f64,
+    pub loss_backhaul: f64,
+    // Byte accounting across all wireless cells + backhaul links. Every
+    // field below is delivered-class: invariant in the loss rate (a
+    // lost copy costs repair bytes, never a second delivered copy).
     pub upload_bytes: u64,
     pub broadcast_bytes: u64,
     pub label_bytes: u64,
@@ -62,10 +82,32 @@ pub struct FleetReport {
     /// Receiver-pull request bytes (`receiver-pull` policy only;
     /// accounted apart from the payload broadcast bytes).
     pub pull_bytes: u64,
+    /// Catch-up copies delivered to mid-run joiners (churn traffic,
+    /// visible apart from the live broadcast totals).
+    pub catchup_bytes: u64,
+    /// Delivered-class total (`upload + broadcast + label + backhaul +
+    /// pull + catchup`); see [`raw_bytes`](Self::raw_bytes) for the
+    /// wire total including repair overhead.
     pub total_bytes: u64,
+    // Reliability-layer overhead (the price of loss, accounted apart).
+    /// Payload bytes retransmitted (ARQ retries + multicast re-airs).
+    pub repair_bytes: u64,
+    /// Control-frame bytes (NACKs, pull retries).
+    pub control_bytes: u64,
+    /// Payload receptions lost across all links.
+    pub lost_frames: u64,
+    /// NACK / pull-retry control frames posted.
+    pub nack_frames: u64,
+    /// Payload repair transmissions (dedicated + shared re-airs).
+    pub retransmissions: u64,
     // Timeline.
     pub makespan_seconds: f64,
-    /// Cell airtime avoided fleet-wide relative to per-receiver unicast.
+    /// Cell airtime avoided fleet-wide relative to the *expected*
+    /// per-receiver stop-and-wait-ARQ baseline `n·airtime/(1-loss)` per
+    /// delivery. Net of every repair and control frame the policy put
+    /// on the air, so it is the honest quantity `--policy auto` decides
+    /// by. A `loss = 0` unicast run reads exactly 0; a lossy unicast
+    /// run fluctuates around 0 (its actual draws vs the expectation).
     pub airtime_saved_seconds: f64,
     pub encode_busy_seconds: f64,
     pub max_queue_depth: usize,
@@ -84,10 +126,14 @@ impl FleetReport {
         self.cache.hit_rate()
     }
 
-    /// Bytes that crossed a wireless cell (upload + broadcast + labels
-    /// + pull requests).
+    /// Delivered-class bytes that crossed a wireless cell (upload +
+    /// broadcast + labels + pull requests + joiner catch-up).
     pub fn cell_bytes(&self) -> u64 {
-        self.upload_bytes + self.broadcast_bytes + self.label_bytes + self.pull_bytes
+        self.upload_bytes
+            + self.broadcast_bytes
+            + self.label_bytes
+            + self.pull_bytes
+            + self.catchup_bytes
     }
 
     /// The byte total the re-broadcast policies are compared on (the
@@ -96,12 +142,41 @@ impl FleetReport {
         self.broadcast_bytes + self.backhaul_bytes
     }
 
+    /// Everything that occupied a medium: delivered traffic plus the
+    /// repair/control overhead the reliability layer paid.
+    pub fn raw_bytes(&self) -> u64 {
+        self.total_bytes + self.repair_bytes + self.control_bytes
+    }
+
+    /// Delivered fraction of the raw wire traffic: 1.0 on a clean run,
+    /// strictly below once the link layer repairs. Non-increasing in
+    /// the loss rate (delivered bytes are loss-invariant while repair
+    /// bytes only grow).
+    pub fn goodput_ratio(&self) -> f64 {
+        let raw = self.raw_bytes();
+        if raw == 0 {
+            1.0
+        } else {
+            self.total_bytes as f64 / raw as f64
+        }
+    }
+
     pub fn print(&self) {
         println!(
             "# fleet scenario={} topology={} policy={} method={} fogs={} edges={} receivers={}",
             self.scenario, self.topology, self.policy, self.method, self.n_fogs, self.n_edges,
             self.n_receivers
         );
+        if self.loss_cell > 0.0 || self.loss_backhaul > 0.0 {
+            println!(
+                "link loss (cell/backhaul): {:.1}% / {:.1}%",
+                100.0 * self.loss_cell,
+                100.0 * self.loss_backhaul
+            );
+        }
+        if self.joined_receivers > 0 {
+            println!("receivers joined mid-run : {}", self.joined_receivers);
+        }
         println!("frames / blobs           : {} / {}", self.n_frames, self.n_blobs);
         println!(
             "cost model               : {} ({:.2e} s/step, {:.2e} s/jpeg, {:.2e} s/frame train)",
@@ -117,7 +192,25 @@ impl FleetReport {
         if self.pull_bytes > 0 {
             println!("pull request bytes       : {}", fmt_bytes(self.pull_bytes));
         }
+        if self.catchup_bytes > 0 {
+            println!("joiner catch-up bytes    : {}", fmt_bytes(self.catchup_bytes));
+        }
         println!("total network bytes      : {}", fmt_bytes(self.total_bytes));
+        if self.repair_bytes > 0 || self.control_bytes > 0 {
+            println!(
+                "repair / control bytes   : {} / {} ({} lost, {} NACKs, {} retransmissions)",
+                fmt_bytes(self.repair_bytes),
+                fmt_bytes(self.control_bytes),
+                self.lost_frames,
+                self.nack_frames,
+                self.retransmissions
+            );
+            println!(
+                "raw wire bytes / goodput : {} / {:.1}%",
+                fmt_bytes(self.raw_bytes()),
+                100.0 * self.goodput_ratio()
+            );
+        }
         if self.airtime_saved_seconds != 0.0 {
             // Signed: receiver-pull can net a LOSS (request airtime
             // exceeds the shared-payload saving on near-empty cells),
@@ -146,12 +239,16 @@ impl FleetReport {
         if self.fogs.len() > 1 {
             let mut t = Table::new(&[
                 "fog", "edges", "frames", "blobs", "queue", "cell", "util", "backhaul",
-                "cache hit%", "saved", "done (s)",
+                "repair", "cache hit%", "saved", "done (s)",
             ]);
             for f in &self.fogs {
                 t.row(&[
                     f.fog.to_string(),
-                    f.edges.to_string(),
+                    if f.joined > 0 {
+                        format!("{}+{}", f.edges, f.joined)
+                    } else {
+                        f.edges.to_string()
+                    },
                     f.shard_frames.to_string(),
                     f.blobs.to_string(),
                     f.max_queue_depth.to_string(),
@@ -164,6 +261,7 @@ impl FleetReport {
                         format!("{:.0}%", 100.0 * f.cell_utilization)
                     },
                     fmt_bytes(f.backhaul_bytes),
+                    fmt_bytes(f.repair_bytes),
                     format!("{:.1}", 100.0 * f.cache.hit_rate()),
                     fmt_bytes(f.cache.bytes_saved),
                     format!("{:.2}", f.trained_at),

@@ -62,6 +62,42 @@ impl Topology {
 /// (wired fog↔fog / fog↔cloud links are faster than the wireless cell).
 pub const BACKHAUL_FACTOR: f64 = 10.0;
 
+/// Highest accepted Bernoulli loss rate. Physical cells sit well below
+/// this; the bound keeps the geometric repair loops short (expected
+/// ≤ 10 copies per reception) and every run finite.
+pub const MAX_LOSS: f64 = 0.9;
+
+/// One receiver joining its fog cell mid-run (churn): the engine
+/// activates the receiver at `at` seconds of virtual time and replays
+/// everything already delivered from the fog cache as catch-up traffic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JoinSpec {
+    pub fog: usize,
+    pub at: f64,
+}
+
+/// Parse a CLI `--churn` spec: comma-separated join times, each either
+/// a bare virtual time (`2.5`, fog assigned round-robin) or
+/// `fog:time` (`1:2.5`). Returns the joins in spec order.
+pub fn parse_churn(spec: &str, n_fogs: usize) -> Result<Vec<JoinSpec>> {
+    let mut joins = Vec::new();
+    for (i, entry) in spec.split(',').filter(|e| !e.trim().is_empty()).enumerate() {
+        let entry = entry.trim();
+        let (fog, at) = match entry.split_once(':') {
+            Some((f, t)) => (
+                f.trim().parse::<usize>().map_err(|_| anyhow!("bad churn fog in {entry:?}"))?,
+                t.trim().parse::<f64>().map_err(|_| anyhow!("bad churn time in {entry:?}"))?,
+            ),
+            None => (
+                i % n_fogs.max(1),
+                entry.parse::<f64>().map_err(|_| anyhow!("bad churn time in {entry:?}"))?,
+            ),
+        };
+        joins.push(JoinSpec { fog, at });
+    }
+    Ok(joins)
+}
+
 /// Full parameter set of one fleet run.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
@@ -98,6 +134,23 @@ pub struct FleetConfig {
     /// ([`RebroadcastPolicy::Unicast`] reproduces the legacy byte
     /// totals record-for-record).
     pub policy: RebroadcastPolicy,
+    /// Bernoulli probability that one cell *reception* is lost (drawn
+    /// independently per receiver per payload copy, deterministic per
+    /// seed). `0` disables the loss model entirely — no draw, no repair
+    /// byte, byte totals identical to the lossless engine.
+    pub loss_cell: f64,
+    /// Bernoulli loss probability per backhaul transfer (wired links
+    /// are typically far cleaner than the wireless cell; configured
+    /// independently).
+    pub loss_backhaul: f64,
+    /// Receivers joining mid-run (churn). Empty = the static fleet.
+    pub joins: Vec<JoinSpec>,
+    /// Per-fog backhaul bandwidth overrides (uplink and downlink of fog
+    /// `f`). `None` = every fog uses `backhaul_bandwidth`. Uniform
+    /// bandwidths keep the `multicast-tree` mesh relay on the ring
+    /// chain; heterogeneous ones switch it to the bandwidth-weighted
+    /// tree ([`crate::fleet::link::relay_plan`]).
+    pub backhaul_bandwidths: Option<Vec<f64>>,
 }
 
 impl FleetConfig {
@@ -128,6 +181,10 @@ impl FleetConfig {
             cache_bytes: 64 << 20,
             epochs: 2,
             policy: RebroadcastPolicy::Unicast,
+            loss_cell: 0.0,
+            loss_backhaul: 0.0,
+            joins: Vec::new(),
+            backhaul_bandwidths: None,
         }
     }
 
@@ -182,8 +239,24 @@ impl FleetConfig {
     }
 
     /// Receivers of fog `f` (its edges minus the one source device).
+    /// Counts the receivers present from `t = 0`; mid-run joiners
+    /// ([`FleetConfig::joins`]) come on top.
     pub fn receivers_of_fog(&self, f: usize) -> usize {
         self.edges_of_fog(f).saturating_sub(1)
+    }
+
+    /// Mid-run joiners of fog `f`.
+    pub fn joins_of_fog(&self, f: usize) -> usize {
+        self.joins.iter().filter(|j| j.fog == f).count()
+    }
+
+    /// Backhaul bandwidth of fog `f`'s uplink/downlink (per-fog override
+    /// or the fleet-wide default).
+    pub fn backhaul_bandwidth_of(&self, f: usize) -> f64 {
+        match &self.backhaul_bandwidths {
+            Some(bws) => bws[f],
+            None => self.backhaul_bandwidth,
+        }
     }
 
     /// Upper bound on fog count: keeps per-shard record-id bases
@@ -211,6 +284,42 @@ impl FleetConfig {
         }
         if self.topology == Topology::SingleFog && self.n_fogs != 1 {
             return Err(anyhow!("single-fog scenario requires --fogs 1"));
+        }
+        for (label, p) in [("cell", self.loss_cell), ("backhaul", self.loss_backhaul)] {
+            if !(0.0..=MAX_LOSS).contains(&p) {
+                return Err(anyhow!("{label} loss must be in [0, {MAX_LOSS}], got {p}"));
+            }
+        }
+        for j in &self.joins {
+            if j.fog >= self.n_fogs {
+                return Err(anyhow!("churn join targets fog {} of {}", j.fog, self.n_fogs));
+            }
+            if !j.at.is_finite() || j.at < 0.0 {
+                return Err(anyhow!("churn join time must be finite and >= 0, got {}", j.at));
+            }
+            // Joiner-only cells would make live shared-leg traffic
+            // depend on the join schedule, which the analytic byte
+            // expectations (`coordinator::sim::expected_cell_bytes`)
+            // deliberately do not model — churn augments populated
+            // cells, it does not bootstrap empty ones.
+            if self.receivers_of_fog(j.fog) == 0 {
+                return Err(anyhow!(
+                    "churn join targets fog {} which has no initial receivers",
+                    j.fog
+                ));
+            }
+        }
+        if let Some(bws) = &self.backhaul_bandwidths {
+            if bws.len() != self.n_fogs {
+                return Err(anyhow!(
+                    "backhaul_bandwidths must list one bandwidth per fog ({} != {})",
+                    bws.len(),
+                    self.n_fogs
+                ));
+            }
+            if bws.iter().any(|&b| !(b > 0.0)) {
+                return Err(anyhow!("backhaul bandwidths must be positive"));
+            }
         }
         Ok(())
     }
@@ -321,5 +430,74 @@ mod tests {
         let mut fc = FleetConfig::from_scenario("sharded", m, book(m)).unwrap();
         fc.n_edges = 2; // fewer edges than fogs
         assert!(fc.validate().is_err());
+    }
+
+    #[test]
+    fn defaults_are_lossless_and_static() {
+        let m = Method::RapidSingle;
+        let fc = FleetConfig::paper_10(m, book(m));
+        assert_eq!(fc.loss_cell, 0.0);
+        assert_eq!(fc.loss_backhaul, 0.0);
+        assert!(fc.joins.is_empty());
+        assert!(fc.backhaul_bandwidths.is_none());
+        assert_eq!(fc.backhaul_bandwidth_of(0), fc.backhaul_bandwidth);
+    }
+
+    #[test]
+    fn validation_bounds_loss_churn_and_backhaul_overrides() {
+        let m = Method::RapidSingle;
+        let mk = || FleetConfig::from_scenario("sharded", m, book(m)).unwrap();
+        let mut fc = mk();
+        fc.loss_cell = MAX_LOSS;
+        assert!(fc.validate().is_ok());
+        fc.loss_cell = MAX_LOSS + 0.01;
+        assert!(fc.validate().is_err());
+        let mut fc = mk();
+        fc.loss_backhaul = -0.1;
+        assert!(fc.validate().is_err());
+        let mut fc = mk();
+        fc.joins = vec![JoinSpec { fog: 4, at: 1.0 }]; // only fogs 0..4 exist
+        assert!(fc.validate().is_err());
+        fc.joins = vec![JoinSpec { fog: 1, at: -1.0 }];
+        assert!(fc.validate().is_err());
+        fc.joins = vec![JoinSpec { fog: 1, at: 2.5 }];
+        assert!(fc.validate().is_ok());
+        assert_eq!(fc.joins_of_fog(1), 1);
+        assert_eq!(fc.joins_of_fog(0), 0);
+        // Joiner-only cells are rejected: churn augments populated
+        // cells (the analytic byte parity depends on it).
+        let mut fc = mk();
+        fc.n_edges = fc.n_fogs; // one source per fog, zero receivers
+        fc.joins = vec![JoinSpec { fog: 1, at: 2.5 }];
+        assert!(fc.validate().is_err());
+        let mut fc = mk();
+        fc.backhaul_bandwidths = Some(vec![1e6; 3]); // 4 fogs need 4 entries
+        assert!(fc.validate().is_err());
+        fc.backhaul_bandwidths = Some(vec![1e6, 2e6, 3e6, 4e6]);
+        assert!(fc.validate().is_ok());
+        assert_eq!(fc.backhaul_bandwidth_of(2), 3e6);
+        fc.backhaul_bandwidths = Some(vec![1e6, 0.0, 3e6, 4e6]);
+        assert!(fc.validate().is_err());
+    }
+
+    #[test]
+    fn churn_specs_parse_round_robin_and_pinned() {
+        let joins = parse_churn("1.5, 2.5,3.5", 2).unwrap();
+        assert_eq!(
+            joins,
+            vec![
+                JoinSpec { fog: 0, at: 1.5 },
+                JoinSpec { fog: 1, at: 2.5 },
+                JoinSpec { fog: 0, at: 3.5 },
+            ]
+        );
+        let joins = parse_churn("3:0.25,0:9", 4).unwrap();
+        assert_eq!(
+            joins,
+            vec![JoinSpec { fog: 3, at: 0.25 }, JoinSpec { fog: 0, at: 9.0 }]
+        );
+        assert!(parse_churn("", 4).unwrap().is_empty());
+        assert!(parse_churn("abc", 4).is_err());
+        assert!(parse_churn("1:xyz", 4).is_err());
     }
 }

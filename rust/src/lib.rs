@@ -29,10 +29,11 @@
 //! * [`pipeline`] — grouped parallel decoding (§3.2) + baseline loaders
 //! * [`net`] — simulated wireless network (single shared medium)
 //! * [`fleet`] — discrete-event multi-fog scale-out simulator: event
-//!   queue, contention-aware channels, encode worker pools, a
-//!   content-addressed INR weight cache per fog, and pluggable
-//!   re-broadcast policies (unicast / cell-multicast / multicast-tree /
-//!   receiver-pull)
+//!   queue, contention-aware channels, a lossy-link reliability layer
+//!   (seeded Bernoulli loss, per-policy ARQ/NACK repair, receiver
+//!   churn), encode worker pools, a content-addressed INR weight cache
+//!   per fog, and pluggable re-broadcast policies (unicast /
+//!   cell-multicast / multicast-tree / receiver-pull / auto)
 //! * [`costmodel`] — virtual-time prices for the fleet engine: a
 //!   `Calibrated` model measured against the live PJRT session, with an
 //!   `Analytical` fallback (shape-derived) when `artifacts/` are absent

@@ -27,7 +27,8 @@ use residual_inr::coordinator::{
 };
 use residual_inr::costmodel::{self, Analytical, Calibrated, CostModel, CostSource};
 use residual_inr::data::Profile;
-use residual_inr::fleet::{FleetConfig, RebroadcastPolicy, Topology};
+use residual_inr::fleet::scenario::parse_churn;
+use residual_inr::fleet::{FleetConfig, JoinSpec, RebroadcastPolicy, Topology};
 use residual_inr::runtime::Session;
 use residual_inr::util::cli::Args;
 use residual_inr::util::fmt_bytes;
@@ -35,8 +36,22 @@ use residual_inr::util::fmt_bytes;
 fn parse_policy(args: &Args) -> Result<RebroadcastPolicy> {
     let s = args.get_or("policy", "unicast");
     RebroadcastPolicy::from_name(s).ok_or_else(|| {
-        anyhow!("unknown policy {s} (unicast|cell-multicast|multicast-tree|receiver-pull)")
+        anyhow!("unknown policy {s} (unicast|cell-multicast|multicast-tree|receiver-pull|auto)")
     })
+}
+
+/// Parse the lossy-link / churn knobs shared by `fleet` and `sim`:
+/// `--loss` (cell reception loss), `--backhaul-loss` (defaults to 0 —
+/// wired links are clean unless said otherwise), `--churn` (join
+/// times, see [`parse_churn`]).
+fn parse_link_args(args: &Args, n_fogs: usize) -> Result<(f64, f64, Vec<JoinSpec>)> {
+    let loss = args.get_f64("loss", 0.0).map_err(|e| anyhow!(e))?;
+    let backhaul_loss = args.get_f64("backhaul-loss", 0.0).map_err(|e| anyhow!(e))?;
+    let joins = match args.get("churn") {
+        Some(spec) => parse_churn(spec, n_fogs)?,
+        None => Vec::new(),
+    };
+    Ok((loss, backhaul_loss, joins))
 }
 
 fn parse_method(s: &str, quality: u8) -> Result<Method> {
@@ -73,17 +88,28 @@ fn main() -> Result<()> {
                  \u{20}          --profile <dac-sdc|uav123|otb100>\n\
                  \u{20}          --sequences N --epochs N --receivers N --max-frames N [--no-grouping]\n\
                  \u{20}          --fogs F --topology <sharded|hierarchical> --policy P\n\
+                 \u{20}          --loss P --churn T1,T2,..\n\
                  \u{20}          (F > 1 runs the live encoder per fog shard and reports\n\
                  \u{20}          fleet-wide makespan from a cost model calibrated on the\n\
                  \u{20}          run; alias: sim)\n\
                  fleet      --scenario <paper-10|sharded|hierarchical> --method M --profile P\n\
                  \u{20}          --fogs N --edges N --workers K --sequences N --max-frames N\n\
                  \u{20}          --epochs N --seed S --cache-mb MB --cost <auto|analytical|calibrated>\n\
-                 \u{20}          --policy <unicast|cell-multicast|multicast-tree|receiver-pull>\n\
+                 \u{20}          --policy <unicast|cell-multicast|multicast-tree|receiver-pull|auto>\n\
+                 \u{20}          --loss P --backhaul-loss P --churn T1,T2,..\n\
                  \u{20}          (paper-10 = 1 fog, 10 edge devices; sharded = per-fog shards\n\
                  \u{20}          over mesh backhaul; hierarchical = cloud→fog→edge relay;\n\
                  \u{20}          unicast = legacy byte-parity default, the others share one\n\
-                 \u{20}          airtime per cell and dedup or tree-push the backhaul)\n\
+                 \u{20}          airtime per cell and dedup or tree-push the backhaul;\n\
+                 \u{20}          auto picks unicast-vs-multicast per blob from cell\n\
+                 \u{20}          population, blob size and loss rate.\n\
+                 \u{20}          --loss P drops each cell reception with probability P:\n\
+                 \u{20}          unicast legs repair by stop-and-wait ARQ, multicast legs\n\
+                 \u{20}          by 64 B NACKs + shared re-airs, pull legs by re-request;\n\
+                 \u{20}          repair/control bytes are reported apart, so delivered\n\
+                 \u{20}          totals stay loss-invariant. --churn T1,T2 adds receivers\n\
+                 \u{20}          joining at those times [fog:T pins a fog], served catch-up\n\
+                 \u{20}          from the fog cache)\n\
                  compress   --method M --profile P --max-frames N [--quality Q]\n\
                  commmodel  --devices K --alpha A [--receivers N]\n\
                  info\n\
@@ -118,9 +144,17 @@ fn simulate(args: &Args) -> Result<()> {
     if fogs <= 1 && args.get("topology").is_some() {
         return Err(anyhow!("--topology requires --fogs > 1 (the multi-fog measured pipeline)"));
     }
-    if fogs <= 1 && args.get("policy").is_some() {
+    for flag in ["policy", "loss", "churn"] {
+        if fogs <= 1 && args.get(flag).is_some() {
+            return Err(anyhow!(
+                "--{flag} requires --fogs > 1 (use `fleet --{flag}` for synthetic runs)"
+            ));
+        }
+    }
+    if args.get("backhaul-loss").is_some() {
         return Err(anyhow!(
-            "--policy requires --fogs > 1 (use `fleet --policy` for synthetic runs)"
+            "sim applies --loss to cells and backhaul alike; use `fleet --backhaul-loss` \
+             for split rates"
         ));
     }
     if fogs > 1 {
@@ -128,14 +162,17 @@ fn simulate(args: &Args) -> Result<()> {
         let topology = Topology::from_name(topology)
             .ok_or_else(|| anyhow!("unknown topology {topology} (sharded|hierarchical)"))?;
         let policy = parse_policy(args)?;
-        let mf = MultiFogConfig { n_fogs: fogs, topology, policy };
+        let (loss, _backhaul_loss, joins) = parse_link_args(args, fogs)?;
+        let mf = MultiFogConfig { n_fogs: fogs, topology, policy, loss, joins };
         println!(
-            "# simulate method={} profile={} fogs={} topology={} policy={}",
+            "# simulate method={} profile={} fogs={} topology={} policy={} loss={} churn={}",
             sim.method.name(),
             profile.name(),
             fogs,
             topology.name(),
-            policy.name()
+            policy.name(),
+            mf.loss,
+            mf.joins.len()
         );
         // Artifact presence is a manifest read, not a PJRT session —
         // run_multi opens the real session itself.
@@ -164,6 +201,9 @@ fn simulate(args: &Args) -> Result<()> {
             fc.enc = sim.enc.clone();
             fc.upload_quality = sim.upload_quality;
             fc.policy = policy;
+            fc.loss_cell = mf.loss;
+            fc.loss_backhaul = mf.loss;
+            fc.joins = mf.joins.clone();
             let report = residual_inr::fleet::run(&cfg, &fc)?;
             report.print();
             return Ok(());
@@ -248,6 +288,10 @@ fn fleet(args: &Args) -> Result<()> {
     fc.backhaul_bandwidth = fc.bandwidth * residual_inr::fleet::scenario::BACKHAUL_FACTOR;
     fc.backhaul_bandwidth =
         args.get_f64("backhaul", fc.backhaul_bandwidth).map_err(|e| anyhow!(e))?;
+    let (loss, backhaul_loss, joins) = parse_link_args(args, fc.n_fogs)?;
+    fc.loss_cell = loss;
+    fc.loss_backhaul = backhaul_loss;
+    fc.joins = joins;
     let report = residual_inr::fleet::run(&cfg, &fc)?;
     report.print();
     Ok(())

@@ -178,11 +178,7 @@ fn measured_multifog_pipeline_end_to_end() {
     }
     let cfg = cfg();
     let sim = tiny_sim(Method::ResRapid { direct: false });
-    let mf = MultiFogConfig {
-        n_fogs: 2,
-        topology: Topology::Sharded,
-        policy: RebroadcastPolicy::Unicast,
-    };
+    let mf = MultiFogConfig::new(2, Topology::Sharded, RebroadcastPolicy::Unicast);
     let r = run_multi(&cfg, &sim, &mf).unwrap();
 
     // Per-shard structure.
@@ -228,14 +224,21 @@ fn measured_multifog_pipeline_end_to_end() {
     // The measured adapter under a shared-airtime policy still counts
     // parity 0 (expected_cell_bytes is policy-aware) and redistributes
     // strictly fewer bytes than unicast.
-    let mc = MultiFogConfig {
-        n_fogs: 2,
-        topology: Topology::Sharded,
-        policy: RebroadcastPolicy::CellMulticast,
-    };
+    let mc = MultiFogConfig::new(2, Topology::Sharded, RebroadcastPolicy::CellMulticast);
     let rm = run_multi(&cfg, &sim, &mc).unwrap();
     assert_eq!(rm.byte_parity_mismatch, 0, "expected {} B", rm.expected_cell_bytes);
     assert_eq!(rm.fleet.policy, "cell-multicast");
     assert!(rm.fleet.redistribution_bytes() < r.fleet.redistribution_bytes());
     assert!(rm.fleet.airtime_saved_seconds > 0.0);
+
+    // Under loss the measured adapter still counts parity 0: delivered
+    // bytes are loss-invariant (repair is accounted apart) — the link
+    // refactor's honesty contract on the measured pipeline.
+    let mut lossy = MultiFogConfig::new(2, Topology::Sharded, RebroadcastPolicy::CellMulticast);
+    lossy.loss = 0.15;
+    let rl = run_multi(&cfg, &sim, &lossy).unwrap();
+    assert_eq!(rl.byte_parity_mismatch, 0, "expected {} B", rl.expected_cell_bytes);
+    assert_eq!(rl.fleet.total_bytes, rm.fleet.total_bytes, "delivered view is loss-invariant");
+    assert!(rl.fleet.repair_bytes > 0, "a lossy run must pay repair");
+    assert!(rl.fleet.goodput_ratio() < 1.0);
 }

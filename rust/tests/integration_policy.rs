@@ -140,6 +140,161 @@ fn receiver_pull_requests_are_accounted_apart_from_payload() {
 }
 
 #[test]
+fn zero_loss_leaves_no_reliability_trace() {
+    // The refactor's correctness anchor, stated directly: with loss = 0
+    // the link transactions reduce to the exact lossless transmit
+    // sequence — no repair byte, no control frame, no marker event, raw
+    // wire bytes equal to the delivered totals — for every policy on
+    // every topology.
+    let cfg = cfg();
+    for base in config_grid() {
+        let shards = fleet::model_fleet_shards(&cfg, &base);
+        for policy in RebroadcastPolicy::ALL {
+            let mut fc = base.clone();
+            fc.policy = policy;
+            assert_eq!(fc.loss_cell, 0.0);
+            assert_eq!(fc.loss_backhaul, 0.0);
+            let r = fleet::simulate(&fc, shards.clone());
+            let tag = format!("{} {} {}", fc.scenario, fc.method.name(), policy.name());
+            assert_eq!(r.repair_bytes, 0, "{tag} repair");
+            assert_eq!(r.control_bytes, 0, "{tag} control");
+            assert_eq!(r.catchup_bytes, 0, "{tag} catchup");
+            assert_eq!(r.lost_frames, 0, "{tag} losses");
+            assert_eq!(r.nack_frames, 0, "{tag} nacks");
+            assert_eq!(r.retransmissions, 0, "{tag} retransmissions");
+            assert_eq!(r.raw_bytes(), r.total_bytes, "{tag} raw");
+            assert_eq!(r.goodput_ratio(), 1.0, "{tag} goodput");
+        }
+    }
+}
+
+#[test]
+fn seeded_loss_is_deterministic_and_repair_is_monotone() {
+    // One shard stream, replayed under every policy across a loss
+    // sweep: the same seed must reproduce the report bit-for-bit, the
+    // delivered-class totals must not move at all, and the repair bill
+    // (hence the goodput ratio) must be monotone in the loss rate.
+    let cfg = cfg();
+    let m = Method::ResRapid { direct: false };
+    let base = FleetConfig::from_scenario("sharded", m, costs(m)).unwrap();
+    let shards = fleet::model_fleet_shards(&cfg, &base);
+    for policy in RebroadcastPolicy::ALL {
+        let mut last_repair = 0u64;
+        let mut last_goodput = 1.0f64;
+        let mut clean_total = None;
+        for loss in [0.0, 0.05, 0.15, 0.3] {
+            let mut fc = base.clone();
+            fc.policy = policy;
+            fc.loss_cell = loss;
+            fc.loss_backhaul = loss / 2.0;
+            let r = fleet::simulate(&fc, shards.clone());
+            let tag = format!("{} loss {loss}", policy.name());
+            // Determinism: an identical run is bit-identical.
+            let r2 = fleet::simulate(&fc, shards.clone());
+            assert_eq!(r.repair_bytes, r2.repair_bytes, "{tag} repair determinism");
+            assert_eq!(r.lost_frames, r2.lost_frames, "{tag} loss determinism");
+            assert_eq!(r.events, r2.events, "{tag} event determinism");
+            assert_eq!(
+                r.makespan_seconds.to_bits(),
+                r2.makespan_seconds.to_bits(),
+                "{tag} timeline determinism"
+            );
+            // Delivered view is loss-invariant.
+            let total = (r.upload_bytes, r.broadcast_bytes, r.label_bytes, r.backhaul_bytes,
+                r.pull_bytes, r.total_bytes);
+            match clean_total {
+                None => clean_total = Some(total),
+                Some(t) => assert_eq!(total, t, "{tag} delivered bytes moved under loss"),
+            }
+            // Repair monotone up, goodput monotone down. (The loss
+            // draws are i.i.d. per reception over tens of thousands of
+            // receptions here, so the deterministic sample tracks the
+            // expectation with enormous margin between these rates.)
+            assert!(
+                r.repair_bytes >= last_repair,
+                "{tag}: repair {} < {}",
+                r.repair_bytes,
+                last_repair
+            );
+            assert!(
+                r.goodput_ratio() <= last_goodput + 1e-12,
+                "{tag}: goodput {} > {}",
+                r.goodput_ratio(),
+                last_goodput
+            );
+            if loss > 0.0 {
+                assert!(r.repair_bytes > last_repair, "{tag}: repair must grow");
+                assert!(r.lost_frames > 0, "{tag}: thousands of receptions must lose");
+            }
+            last_repair = r.repair_bytes;
+            last_goodput = r.goodput_ratio();
+        }
+    }
+}
+
+#[test]
+fn churn_adds_exactly_one_copy_per_joiner_under_unicast() {
+    let cfg = cfg();
+    let m = Method::ResRapid { direct: false };
+    let base = FleetConfig::from_scenario("sharded", m, costs(m)).unwrap();
+    let shards = fleet::model_fleet_shards(&cfg, &base);
+    let per_set: u64 =
+        shards.iter().map(|s| s.payload_bytes() + s.label_bytes()).sum();
+    let plain = fleet::simulate(&base, shards.clone());
+
+    let mut fc = base.clone();
+    // One early joiner (rides every delivery live) and one far past the
+    // lossless makespan (pure catch-up from the fog caches).
+    fc.joins = vec![
+        residual_inr::fleet::JoinSpec { fog: 2, at: 0.0 },
+        residual_inr::fleet::JoinSpec { fog: 0, at: plain.makespan_seconds + 10.0 },
+    ];
+    let r = fleet::simulate(&fc, shards.clone());
+    assert_eq!(r.joined_receivers, 2);
+    // Each joiner receives every payload + label set exactly once —
+    // catch-up or live, the sum is schedule-independent.
+    assert_eq!(r.total_bytes, plain.total_bytes + 2 * per_set);
+    // The late joiner replayed everything as catch-up; the early one
+    // cost live copies instead.
+    assert_eq!(r.catchup_bytes, per_set);
+    assert_eq!(r.broadcast_bytes + r.label_bytes,
+        plain.broadcast_bytes + plain.label_bytes + per_set);
+    // Warm caches: catch-up adds no backhaul.
+    assert_eq!(r.backhaul_bytes, plain.backhaul_bytes);
+    // Every receiver, joiners included, finished training.
+    assert!(r.makespan_seconds > plain.makespan_seconds + 10.0);
+    assert_eq!(r.airtime_saved_seconds, 0.0, "unicast + catch-up nets zero at loss 0");
+}
+
+#[test]
+fn auto_matches_cell_multicast_on_populated_loss_free_cells() {
+    // At loss = 0 with dozens of receivers per cell, sharing strictly
+    // beats per-receiver ARQ for every blob, so `auto` must reproduce
+    // cell-multicast byte-for-byte — the honest accounting and the
+    // per-blob decision agree.
+    let cfg = cfg();
+    let m = Method::ResRapid { direct: false };
+    for scenario in ["paper-10", "sharded", "hierarchical"] {
+        let base = FleetConfig::from_scenario(scenario, m, costs(m)).unwrap();
+        let shards = fleet::model_fleet_shards(&cfg, &base);
+        let mut auto = base.clone();
+        auto.policy = RebroadcastPolicy::Auto;
+        let mut mc = base.clone();
+        mc.policy = RebroadcastPolicy::CellMulticast;
+        let ra = fleet::simulate(&auto, shards.clone());
+        let rm = fleet::simulate(&mc, shards.clone());
+        assert_eq!(ra.broadcast_bytes, rm.broadcast_bytes, "{scenario}");
+        assert_eq!(ra.backhaul_bytes, rm.backhaul_bytes, "{scenario}");
+        assert_eq!(ra.total_bytes, rm.total_bytes, "{scenario}");
+        assert_eq!(ra.pull_bytes, 0, "{scenario}");
+        assert!(
+            (ra.airtime_saved_seconds - rm.airtime_saved_seconds).abs() < 1e-9,
+            "{scenario}"
+        );
+    }
+}
+
+#[test]
 fn multicast_tree_keeps_mesh_backhaul_at_one_copy_per_link() {
     // On the warm-cache mesh, unicast already dedups to one backhaul
     // copy per remote fog; the eager tree must match that total exactly
