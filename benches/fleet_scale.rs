@@ -8,7 +8,9 @@
 //! multi-fog scenarios reported as redistribution bytes vs the unicast
 //! baseline, and a lossy-link sweep (0–10% cell loss) recording each
 //! policy's repair/control overhead and goodput under its own repair
-//! discipline (ARQ vs NACK rounds vs re-request).
+//! discipline (ARQ vs NACK rounds vs re-request), and a scaling curve
+//! (10^3–10^6 edges, exact oracle vs `--cell-mode aggregate`) recording
+//! engine wall-clock, event throughput and the aggregate speedup.
 //!
 //! This extends Fig 8 from analytical totals to a simulated timeline:
 //! the byte curves reproduce the §4 model (fog+INR grows with slope
@@ -29,7 +31,7 @@ use residual_inr::config::ArchConfig;
 use residual_inr::coordinator::{EncoderConfig, Method};
 use residual_inr::costmodel;
 use residual_inr::data::Profile;
-use residual_inr::fleet::{self, FleetConfig, FleetReport, RebroadcastPolicy};
+use residual_inr::fleet::{self, CellSimMode, FleetConfig, FleetReport, RebroadcastPolicy};
 use residual_inr::util::fmt_bytes;
 use residual_inr::util::json::Json;
 
@@ -234,6 +236,96 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
+    // Scaling curve: the tentpole measurement. The same sharded shard
+    // stream redistributed to 10^3..10^6 edge devices, exact oracle vs
+    // aggregate cells, with the engine's wall-clock time and event
+    // throughput. The exact path's event count scales with receivers;
+    // the aggregate path's does not — the speedup column is the whole
+    // argument for `--cell-mode aggregate`.
+    println!("\n== scaling curve: sharded 4 fogs, res-rapid, exact vs aggregate ==");
+    let mut t = Table::new(&[
+        "edges", "mode", "threads", "events", "engine wall (s)", "events/s", "speedup",
+    ]);
+    let mut scaling_rows = Vec::new();
+    for &edges in &[1_000usize, 10_000, 100_000, 1_000_000] {
+        let run_mode = |mode: CellSimMode, threads: usize| {
+            let mut fc = FleetConfig::from_scenario("sharded", method, costs).unwrap();
+            fc.max_frames = Some(frames);
+            fc.encode_workers = workers;
+            fc.n_edges = edges;
+            fc.cell_sim = mode;
+            fc.threads = threads;
+            let t0 = std::time::Instant::now();
+            let r = fleet::simulate(&fc, sweep_shards.clone());
+            (r, t0.elapsed().as_secs_f64())
+        };
+        let (ex, ex_wall) = run_mode(CellSimMode::Exact, 0);
+        let (ag, ag_wall) = run_mode(CellSimMode::Aggregate, 0);
+        assert_eq!(
+            ag.total_bytes, ex.total_bytes,
+            "aggregate parity must hold at loss 0 ({edges} edges)"
+        );
+        let speedup = ex_wall / ag_wall.max(1e-9);
+        for (mode, r, wall, speed) in
+            [("exact", &ex, ex_wall, 1.0), ("aggregate", &ag, ag_wall, speedup)]
+        {
+            t.row(&[
+                edges.to_string(),
+                mode.to_string(),
+                "0".to_string(),
+                r.events.to_string(),
+                format!("{wall:.3}"),
+                format!("{:.0}", r.events as f64 / wall.max(1e-9)),
+                format!("{speed:.1}x"),
+            ]);
+            scaling_rows.push(Json::obj(vec![
+                ("edges", Json::Num(edges as f64)),
+                ("cell_mode", Json::Str(mode.to_string())),
+                ("threads", Json::Num(0.0)),
+                ("events", Json::Num(r.events as f64)),
+                ("engine_wall_seconds", Json::Num(wall)),
+                ("events_per_second", Json::Num(r.events as f64 / wall.max(1e-9))),
+                ("total_bytes", Json::Num(r.total_bytes as f64)),
+                ("makespan_seconds", Json::Num(r.makespan_seconds)),
+                ("speedup_vs_exact", Json::Num(speed)),
+            ]));
+        }
+    }
+    // One windowed point at the top scale: the exact oracle on worker
+    // threads (the aggregate path is already event-starved, so threading
+    // pays off on the per-receiver timeline).
+    {
+        let mut fc = FleetConfig::from_scenario("sharded", method, costs)?;
+        fc.max_frames = Some(frames);
+        fc.encode_workers = workers;
+        fc.n_edges = 1_000_000;
+        fc.threads = 4;
+        fc.cell_sim = CellSimMode::Exact;
+        let t0 = std::time::Instant::now();
+        let r = fleet::simulate(&fc, sweep_shards.clone());
+        let wall = t0.elapsed().as_secs_f64();
+        t.row(&[
+            "1000000".to_string(),
+            "exact".to_string(),
+            "4".to_string(),
+            r.events.to_string(),
+            format!("{wall:.3}"),
+            format!("{:.0}", r.events as f64 / wall.max(1e-9)),
+            "-".to_string(),
+        ]);
+        scaling_rows.push(Json::obj(vec![
+            ("edges", Json::Num(1_000_000.0)),
+            ("cell_mode", Json::Str("exact".to_string())),
+            ("threads", Json::Num(4.0)),
+            ("events", Json::Num(r.events as f64)),
+            ("engine_wall_seconds", Json::Num(wall)),
+            ("events_per_second", Json::Num(r.events as f64 / wall.max(1e-9))),
+            ("total_bytes", Json::Num(r.total_bytes as f64)),
+            ("makespan_seconds", Json::Num(r.makespan_seconds)),
+        ]));
+    }
+    t.print();
+
     println!("\n== reduction vs serverless JPEG (paper Fig 8 regime) ==");
     let mut t = Table::new(&["devices", "rapid", "res-rapid"]);
     let mut reductions = Vec::new();
@@ -271,6 +363,7 @@ fn main() -> anyhow::Result<()> {
         ("multi_fog", Json::Arr(multi)),
         ("policy_sweep", Json::Arr(policy_rows)),
         ("loss_sweep", Json::Arr(loss_rows)),
+        ("scaling_curve", Json::Arr(scaling_rows)),
         ("reduction_vs_jpeg", Json::Arr(reductions)),
     ]);
     let out = residual_inr::config::find_repo_file("Cargo.toml")

@@ -35,7 +35,9 @@ use crate::config::ArchConfig;
 use crate::costmodel::{Analytical, Calibrated, CostBook, CostModel};
 use crate::data::{generate_dataset, BBox, Dataset, ImageRGB, Profile};
 use crate::fleet::policy::{CellMode, PULL_REQUEST_BYTES};
-use crate::fleet::{FleetConfig, FleetReport, JoinSpec, RebroadcastPolicy, ShardTraffic, Topology};
+use crate::fleet::{
+    CellSimMode, FleetConfig, FleetReport, JoinSpec, RebroadcastPolicy, ShardTraffic, Topology,
+};
 use crate::inr::Record;
 use crate::metrics::{map50, map50_95, mean_iou};
 use crate::net::{NetSim, NodeId};
@@ -607,12 +609,28 @@ pub struct MultiFogConfig {
     pub loss: f64,
     /// Receivers joining mid-run in the fleet adaptation (churn).
     pub joins: Vec<JoinSpec>,
+    /// Cell simulation mode the fleet adaptation runs under
+    /// (`--cell-mode`): exact per-receiver events, closed-form aggregate
+    /// cell rounds, or the population-threshold auto switch. The default
+    /// keeps measured-pipeline cells exact.
+    pub cell_sim: CellSimMode,
+    /// Worker threads for the fleet adaptation's windowed parallel
+    /// executor (`--threads`; `0` = sequential).
+    pub threads: usize,
 }
 
 impl MultiFogConfig {
     /// Lossless, churn-free adaptation of `n_fogs` cells.
     pub fn new(n_fogs: usize, topology: Topology, policy: RebroadcastPolicy) -> MultiFogConfig {
-        MultiFogConfig { n_fogs, topology, policy, loss: 0.0, joins: Vec::new() }
+        MultiFogConfig {
+            n_fogs,
+            topology,
+            policy,
+            loss: 0.0,
+            joins: Vec::new(),
+            cell_sim: CellSimMode::default(),
+            threads: 0,
+        }
     }
 }
 
@@ -804,6 +822,8 @@ pub fn run_multi(cfg: &ArchConfig, sim: &SimConfig, mf: &MultiFogConfig) -> Resu
     fleet_cfg.loss_cell = mf.loss;
     fleet_cfg.loss_backhaul = mf.loss;
     fleet_cfg.joins = mf.joins.clone();
+    fleet_cfg.cell_sim = mf.cell_sim;
+    fleet_cfg.threads = mf.threads;
     fleet_cfg.validate()?;
     let traffic: Vec<ShardTraffic> = shards.iter().map(|s| s.traffic.clone()).collect();
     let fleet = crate::fleet::simulate(&fleet_cfg, traffic);

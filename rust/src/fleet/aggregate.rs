@@ -1,0 +1,378 @@
+//! Aggregate cell mode: collapse a `(blob, cell)` multicast round into
+//! one expectation-valued macro transaction.
+//!
+//! The exact engine schedules one `Delivered` event (and one loss draw
+//! chain) per receiver per blob — at 10^6 edges per cell that is 10^6
+//! events per blob and the event queue, not the modeled network, becomes
+//! the bottleneck. This module replaces the per-receiver realization
+//! with its closed-form expectation, already encoded in the
+//! [`super::link`] algebra the `auto` policy and the `airtime_saved`
+//! baseline are built on:
+//!
+//! * per-receiver ARQ → [`link::expected_unicast_airtime`]: `n·a/(1-p)`
+//!   expected airtime, `n·p/(1-p)` expected repair copies;
+//! * NACK multicast → [`link::expected_shared_transmissions`] payload
+//!   rounds plus `n·p/(1-p)` expected NACK frames
+//!   ([`link::expected_multicast_airtime`]);
+//! * receiver pull → [`link::expected_pull_airtime`]: `n` requests, one
+//!   shared response, `n·p/(1-p)` expected re-request repairs.
+//!
+//! # Accuracy contract
+//!
+//! * **`loss = 0` is exact**: no expectation has any variance, byte and
+//!   transfer counters are *identical* to the per-receiver path (the
+//!   integration suite asserts this on all three topologies), and the
+//!   loss RNG is never consulted, so mixed exact/aggregate fleets stay
+//!   seed-reproducible.
+//! * **Under loss**, delivered-class bytes are still identical (they are
+//!   loss-invariant by design); repair/control bytes and airtime carry
+//!   the *expectation* instead of one seeded realization. The relative
+//!   error of the realization around the expectation shrinks as
+//!   `O(1/sqrt(n))` — aggregate mode is selected for large `n`, exactly
+//!   where the expectation is tight. Byte counters round the expectation
+//!   to the nearest integer.
+//! * **Event log**: the per-receiver `Delivered`/`Lost`/`Nack`/`Repair`
+//!   markers collapse into one macro `Delivered` (with
+//!   `edge = usize::MAX`) per cell round; reliability counters carry the
+//!   rounded expectations.
+//! * **Caching**: an aggregate round materializes a remote blob once and
+//!   serves the whole cohort from it; the deliberate cache-disabled
+//!   unicast semantics (re-fetch per receiver) are priced as one fetch.
+//!
+//! The knob is [`CellSimMode`], threaded through
+//! [`super::scenario::FleetConfig`] and the `fleet` / `sim --fogs` CLIs
+//! as `--cell-mode exact|aggregate|auto[:threshold]`. `auto` keeps small
+//! cells on the exact path (the validation oracle) and switches to the
+//! expectation at [`DEFAULT_AGGREGATE_THRESHOLD`] receivers.
+
+use super::channel::TxClass;
+use super::link::{self, Link, CONTROL_BYTES};
+use super::policy::{CellMode, PULL_REQUEST_BYTES};
+
+/// Cohort size at which `--cell-mode auto` switches a cell leg from the
+/// exact per-receiver path to the aggregate expectation. Below this the
+/// exact path is cheap and keeps full per-receiver timelines; above it
+/// the expectation error is `O(1/sqrt(n)) < 2%`.
+pub const DEFAULT_AGGREGATE_THRESHOLD: usize = 4096;
+
+/// Engine-level cell simulation mode (`--cell-mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellSimMode {
+    /// Always simulate every receiver individually (the validation
+    /// oracle; the only mode before aggregate cells existed).
+    Exact,
+    /// Always collapse cell legs into the closed-form expectation.
+    Aggregate,
+    /// Exact below `threshold` active receivers in the cell, aggregate
+    /// at or above it.
+    Auto { threshold: usize },
+}
+
+impl Default for CellSimMode {
+    fn default() -> CellSimMode {
+        CellSimMode::Auto { threshold: DEFAULT_AGGREGATE_THRESHOLD }
+    }
+}
+
+impl CellSimMode {
+    /// Parse `exact` / `aggregate` / `auto` / `auto:<threshold>`.
+    pub fn from_name(s: &str) -> Result<CellSimMode, String> {
+        match s {
+            "exact" => Ok(CellSimMode::Exact),
+            "aggregate" | "agg" => Ok(CellSimMode::Aggregate),
+            "auto" => Ok(CellSimMode::Auto { threshold: DEFAULT_AGGREGATE_THRESHOLD }),
+            _ => match s.strip_prefix("auto:") {
+                Some(t) => match t.parse::<usize>() {
+                    Ok(threshold) if threshold > 0 => Ok(CellSimMode::Auto { threshold }),
+                    _ => Err(format!("bad auto threshold {t:?} (want a positive integer)")),
+                },
+                None => Err(format!(
+                    "unknown cell mode {s:?} (want exact | aggregate | auto[:threshold])"
+                )),
+            },
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            CellSimMode::Exact => "exact".to_string(),
+            CellSimMode::Aggregate => "aggregate".to_string(),
+            CellSimMode::Auto { threshold } => format!("auto:{threshold}"),
+        }
+    }
+
+    /// Does a cell leg over `n` active receivers take the aggregate path?
+    pub fn aggregates(&self, n: usize) -> bool {
+        match *self {
+            CellSimMode::Exact => false,
+            CellSimMode::Aggregate => n > 0,
+            CellSimMode::Auto { threshold } => n >= threshold,
+        }
+    }
+}
+
+/// Outcome of one aggregate cell leg: the macro counterpart of
+/// [`link::LegOutcome`], with the virtual time the whole cohort holds
+/// the payload. Reliability counters are rounded expectations.
+#[derive(Debug, Clone, Copy)]
+pub struct AggOutcome {
+    /// Time the last charged transmission finishes (the macro-delivery
+    /// timestamp for the whole cohort).
+    pub finish: f64,
+    /// Expected cell airtime of the leg (payload + repair + control).
+    pub actual_airtime: f64,
+    /// Expected payload receptions lost, rounded.
+    pub losses: u64,
+    /// Expected control frames (NACKs / pull retries), rounded.
+    pub nacks: u64,
+    /// Expected payload repair transmissions, rounded.
+    pub retransmissions: u64,
+}
+
+/// Run one cell leg as its closed-form expectation: charge the link's
+/// channel the expected delivered / control / repair traffic of the
+/// discipline `mode` selects for `n` receivers, without per-receiver
+/// loss draws (the link RNG is untouched). Delivered-class counters are
+/// *identical* to the exact path at any loss rate; repair/control
+/// counters and airtime carry rounded expectations, which at `loss = 0`
+/// are exactly zero — the byte-parity anchor.
+pub fn expected_cell_leg(
+    link: &mut Link,
+    now: f64,
+    n: usize,
+    bytes: u64,
+    tag: &'static str,
+    mode: CellMode,
+) -> AggOutcome {
+    assert!(n > 0, "aggregate leg over an empty cohort");
+    let p = link.loss_rate();
+    let ch = link.channel();
+    let (bw, lat) = (ch.bandwidth, ch.latency);
+    let a = link.airtime(bytes);
+    let nf = n as f64;
+    // Expected payload receptions lost per receiver under any of the
+    // disciplines' repair loops: Geometric(1-p) retries, p/(1-p) each.
+    let misses = nf * p / (1.0 - p);
+    let round = |x: f64| x.round() as u64;
+    match mode {
+        CellMode::PerReceiver => {
+            let air_total = link::expected_unicast_airtime(n, bytes, p, bw, lat);
+            let air_repair = air_total - nf * a;
+            link.transmit_agg(now, n as u64, n as u64 * bytes, tag, TxClass::Delivered, nf * a);
+            let finish = link.transmit_agg(
+                now,
+                round(misses),
+                round(misses * bytes as f64),
+                "arq-repair",
+                TxClass::Repair,
+                air_repair,
+            );
+            AggOutcome {
+                finish,
+                actual_airtime: air_total,
+                losses: round(misses),
+                nacks: 0,
+                retransmissions: round(misses),
+            }
+        }
+        CellMode::SharedNack => {
+            let shared = link::expected_shared_transmissions(n, p);
+            let a_ctl = link.airtime(CONTROL_BYTES);
+            let air_total = link::expected_multicast_airtime(n, bytes, p, bw, lat);
+            link.transmit_agg(now, 1, bytes, tag, TxClass::Delivered, a);
+            link.transmit_agg(
+                now,
+                round(misses),
+                round(misses * CONTROL_BYTES as f64),
+                "nack",
+                TxClass::Control,
+                misses * a_ctl,
+            );
+            let finish = link.transmit_agg(
+                now,
+                round(shared - 1.0),
+                round((shared - 1.0) * bytes as f64),
+                "mcast-repair",
+                TxClass::Repair,
+                (shared - 1.0) * a,
+            );
+            AggOutcome {
+                finish,
+                actual_airtime: air_total,
+                losses: round(misses),
+                nacks: round(misses),
+                retransmissions: round(shared - 1.0),
+            }
+        }
+        CellMode::SharedPull => {
+            let a_req = link.airtime(PULL_REQUEST_BYTES);
+            let a_ctl = link.airtime(CONTROL_BYTES);
+            let air_total = link::expected_pull_airtime(n, bytes, PULL_REQUEST_BYTES, p, bw, lat);
+            link.transmit_agg(
+                now,
+                n as u64,
+                n as u64 * PULL_REQUEST_BYTES,
+                "pull-request",
+                TxClass::Delivered,
+                nf * a_req,
+            );
+            link.transmit_agg(now, 1, bytes, tag, TxClass::Delivered, a);
+            link.transmit_agg(
+                now,
+                round(misses),
+                round(misses * CONTROL_BYTES as f64),
+                "pull-retry",
+                TxClass::Control,
+                misses * a_ctl,
+            );
+            let finish = link.transmit_agg(
+                now,
+                round(misses),
+                round(misses * bytes as f64),
+                "arq-repair",
+                TxClass::Repair,
+                misses * a,
+            );
+            AggOutcome {
+                finish,
+                actual_airtime: air_total,
+                losses: round(misses),
+                nacks: round(misses),
+                retransmissions: round(misses),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::events::EventQueue;
+
+    fn lossless_link(stream: u64) -> Link {
+        Link::new(1e6, 1e-3, 0.0, 7, stream)
+    }
+
+    #[test]
+    fn parses_all_knob_spellings() {
+        assert_eq!(CellSimMode::from_name("exact").unwrap(), CellSimMode::Exact);
+        assert_eq!(CellSimMode::from_name("aggregate").unwrap(), CellSimMode::Aggregate);
+        assert_eq!(CellSimMode::from_name("agg").unwrap(), CellSimMode::Aggregate);
+        assert_eq!(
+            CellSimMode::from_name("auto").unwrap(),
+            CellSimMode::Auto { threshold: DEFAULT_AGGREGATE_THRESHOLD }
+        );
+        assert_eq!(
+            CellSimMode::from_name("auto:100").unwrap(),
+            CellSimMode::Auto { threshold: 100 }
+        );
+        assert!(CellSimMode::from_name("auto:0").is_err());
+        assert!(CellSimMode::from_name("auto:x").is_err());
+        assert!(CellSimMode::from_name("approximate").is_err());
+        assert_eq!(CellSimMode::from_name("auto:100").unwrap().name(), "auto:100");
+    }
+
+    #[test]
+    fn auto_threshold_selects_the_path() {
+        let m = CellSimMode::Auto { threshold: 100 };
+        assert!(!m.aggregates(99));
+        assert!(m.aggregates(100));
+        assert!(!CellSimMode::Exact.aggregates(1_000_000));
+        assert!(CellSimMode::Aggregate.aggregates(1));
+        assert!(!CellSimMode::Aggregate.aggregates(0));
+    }
+
+    /// The byte-parity anchor: at `loss = 0` every discipline's aggregate
+    /// leg leaves byte, transfer, tag and airtime counters identical to
+    /// the exact per-receiver realization.
+    #[test]
+    fn loss_zero_matches_exact_legs_counter_for_counter() {
+        let n = 37;
+        let rxs: Vec<usize> = (0..n).collect();
+        let bytes = 50_000;
+        for mode in [CellMode::PerReceiver, CellMode::SharedNack, CellMode::SharedPull] {
+            let mut q = EventQueue::new();
+            let mut exact = lossless_link(0);
+            let out = match mode {
+                CellMode::PerReceiver => {
+                    exact.per_receiver_leg(&mut q, 0.0, bytes, "inr-broadcast", 0, 0, 0, &rxs)
+                }
+                CellMode::SharedNack => {
+                    exact.shared_nack_leg(&mut q, 0.0, bytes, "inr-broadcast", 0, 0, 0, &rxs)
+                }
+                CellMode::SharedPull => exact.shared_pull_leg(
+                    &mut q,
+                    0.0,
+                    bytes,
+                    "inr-broadcast",
+                    PULL_REQUEST_BYTES,
+                    0,
+                    0,
+                    0,
+                    &rxs,
+                ),
+            };
+            let mut agg = lossless_link(0);
+            let macro_out = expected_cell_leg(&mut agg, 0.0, n, bytes, "inr-broadcast", mode);
+            let (ce, ca) = (exact.channel(), agg.channel());
+            assert_eq!(ce.bytes_total(), ca.bytes_total(), "{mode:?} raw bytes");
+            assert_eq!(ce.delivered_bytes(), ca.delivered_bytes(), "{mode:?} delivered");
+            assert_eq!(ce.repair_bytes(), ca.repair_bytes(), "{mode:?} repair");
+            assert_eq!(ce.control_bytes(), ca.control_bytes(), "{mode:?} control");
+            assert_eq!(ce.transfers(), ca.transfers(), "{mode:?} transfers");
+            assert_eq!(
+                ce.bytes_tagged("inr-broadcast"),
+                ca.bytes_tagged("inr-broadcast"),
+                "{mode:?} tag"
+            );
+            assert_eq!(
+                ce.bytes_tagged("pull-request"),
+                ca.bytes_tagged("pull-request"),
+                "{mode:?} pulls"
+            );
+            assert!(
+                (ce.airtime_total() - ca.airtime_total()).abs() < 1e-9,
+                "{mode:?} airtime {} vs {}",
+                ce.airtime_total(),
+                ca.airtime_total()
+            );
+            assert!((out.actual_airtime - macro_out.actual_airtime).abs() < 1e-9);
+            assert_eq!(macro_out.losses, 0);
+            assert_eq!(macro_out.nacks, 0);
+            assert_eq!(macro_out.retransmissions, 0);
+            // The macro delivery lands when the exact leg's last copy
+            // would: both advance busy_until by the same airtime.
+            assert!((ce.busy_until() - ca.busy_until()).abs() < 1e-9);
+            assert!((macro_out.finish - ca.busy_until()).abs() < 1e-9);
+        }
+    }
+
+    /// Under loss the aggregate leg charges the closed-form expectations
+    /// and never consults the RNG.
+    #[test]
+    fn lossy_leg_charges_the_expectation() {
+        let n = 1000usize;
+        let (p, bytes) = (0.2, 10_000u64);
+        let mut link = Link::new(1e6, 0.0, p, 7, 0);
+        let out = expected_cell_leg(&mut link, 0.0, n, bytes, "inr-broadcast", CellMode::PerReceiver);
+        let misses = n as f64 * p / (1.0 - p); // 250 expected retries
+        assert_eq!(out.retransmissions, misses.round() as u64);
+        let ch = link.channel();
+        assert_eq!(ch.delivered_bytes(), n as u64 * bytes);
+        assert_eq!(ch.repair_bytes(), (misses * bytes as f64).round() as u64);
+        let want_air = link::expected_unicast_airtime(n, bytes, p, 1e6, 0.0);
+        assert!((out.actual_airtime - want_air).abs() < 1e-9);
+        assert!((ch.airtime_total() - want_air).abs() < 1e-9);
+        // NACK multicast: shared repair rounds + per-miss control frames.
+        let mut link = Link::new(1e6, 0.0, p, 7, 0);
+        let out = expected_cell_leg(&mut link, 0.0, n, bytes, "inr-broadcast", CellMode::SharedNack);
+        let shared = link::expected_shared_transmissions(n, p);
+        assert_eq!(out.retransmissions, (shared - 1.0).round() as u64);
+        assert_eq!(out.nacks, misses.round() as u64);
+        let ch = link.channel();
+        assert_eq!(ch.delivered_bytes(), bytes);
+        assert_eq!(ch.control_bytes(), (misses * CONTROL_BYTES as f64).round() as u64);
+        let want_air = link::expected_multicast_airtime(n, bytes, p, 1e6, 0.0);
+        assert!((ch.airtime_total() - want_air).abs() < 1e-6);
+    }
+}

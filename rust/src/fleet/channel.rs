@@ -112,6 +112,47 @@ impl Channel {
         finish
     }
 
+    /// Submit an *aggregate* transfer: `transfers` logical copies
+    /// totalling `total_bytes`, occupying the medium for an explicit
+    /// `airtime` (a closed-form expectation computed by
+    /// [`crate::fleet::aggregate`]) instead of `transfers` queue
+    /// round-trips. Counter semantics match submitting the copies one by
+    /// one — `n` transfers of `b` bytes each advance `bytes_total` by
+    /// `n·b` and `airtime_total` by `n·(latency + b/bandwidth)` — so at
+    /// `loss = 0` an aggregate round leaves byte/transfer counters
+    /// identical to the exact per-receiver path.
+    pub fn transmit_agg(
+        &mut self,
+        now: f64,
+        transfers: u64,
+        total_bytes: u64,
+        tag: &'static str,
+        class: TxClass,
+        airtime: f64,
+    ) -> f64 {
+        assert!(airtime >= 0.0 && airtime.is_finite(), "bad aggregate airtime {airtime}");
+        let start = if self.busy_until > now { self.busy_until } else { now };
+        let finish = start + airtime;
+        self.busy_until = finish;
+        self.bytes_total += total_bytes;
+        self.airtime_total += airtime;
+        self.transfers += transfers;
+        match class {
+            TxClass::Delivered => {
+                *self.by_tag.entry(tag).or_insert(0) += total_bytes;
+            }
+            TxClass::Repair => {
+                self.repair_bytes += total_bytes;
+                self.repair_transfers += transfers;
+            }
+            TxClass::Control => {
+                self.control_bytes += total_bytes;
+                self.control_transfers += transfers;
+            }
+        }
+        finish
+    }
+
     /// Time at which the medium next becomes idle.
     pub fn busy_until(&self) -> f64 {
         self.busy_until
@@ -278,6 +319,42 @@ mod tests {
         assert_eq!(c.goodput(0.0), 0.0);
         // Repair occupies real airtime: contention is raw, not goodput.
         assert!((c.utilization(1.5) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregate_transfer_counters_match_per_copy_submission() {
+        // n copies submitted one-by-one vs one aggregate call: identical
+        // byte/transfer/airtime/tag counters and the same finish time.
+        let (n, bytes) = (5u64, 1000u64);
+        let mut exact = Channel::new(1e6, 1e-3);
+        let mut finish_exact = 0.0;
+        for _ in 0..n {
+            finish_exact = exact.transmit(0.0, bytes, "inr-broadcast");
+        }
+        let mut agg = Channel::new(1e6, 1e-3);
+        let airtime = n as f64 * agg.airtime(bytes);
+        let finish_agg =
+            agg.transmit_agg(0.0, n, n * bytes, "inr-broadcast", TxClass::Delivered, airtime);
+        assert_eq!(exact.bytes_total(), agg.bytes_total());
+        assert_eq!(exact.delivered_bytes(), agg.delivered_bytes());
+        assert_eq!(exact.transfers(), agg.transfers());
+        assert_eq!(exact.bytes_tagged("inr-broadcast"), agg.bytes_tagged("inr-broadcast"));
+        assert!((exact.airtime_total() - agg.airtime_total()).abs() < 1e-12);
+        assert!((finish_exact - finish_agg).abs() < 1e-12);
+        assert_eq!(exact.busy_until().to_bits(), agg.busy_until().to_bits());
+    }
+
+    #[test]
+    fn aggregate_repair_and_control_route_to_their_classes() {
+        let mut c = Channel::new(1e6, 0.0);
+        c.transmit_agg(0.0, 3, 3000, "x", TxClass::Repair, 3e-3);
+        c.transmit_agg(0.0, 2, 128, "x", TxClass::Control, 2e-4);
+        assert_eq!(c.repair_bytes(), 3000);
+        assert_eq!(c.repair_transfers(), 3);
+        assert_eq!(c.control_bytes(), 128);
+        assert_eq!(c.control_transfers(), 2);
+        assert_eq!(c.delivered_bytes(), 0);
+        assert_eq!(c.bytes_tagged("x"), 0, "non-delivered classes stay untagged");
     }
 
     #[test]

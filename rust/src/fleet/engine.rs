@@ -38,6 +38,7 @@
 //! later delivery live.
 
 use std::collections::HashMap;
+use std::thread;
 
 use anyhow::Result;
 
@@ -45,6 +46,7 @@ use crate::config::ArchConfig;
 use crate::coordinator::Method;
 use crate::data::generate_dataset;
 
+use super::aggregate;
 use super::cache::WeightCache;
 use super::events::{Event, EventQueue};
 use super::link::{self, Link, NO_EDGE};
@@ -128,6 +130,76 @@ struct CatalogEntry {
     cacheable: bool,
 }
 
+/// Immutable per-run facts every delivery leg needs: whether blobs are
+/// fleet-scoped, and the fleet-wide blob/frame totals that define when a
+/// receiver has "everything" and how long it fine-tunes. Threaded by
+/// reference so the aggregate cell path can do its cohort bookkeeping
+/// eagerly (without one `Delivered` event per receiver).
+#[derive(Debug, Clone, Copy)]
+struct SimCtx {
+    scope_all: bool,
+    n_fogs: usize,
+    total_blobs: usize,
+    total_frames: usize,
+}
+
+impl SimCtx {
+    /// Deliveries a receiver on `rt` must observe before fine-tuning.
+    fn expected_deliveries(&self, rt: &FogRt) -> usize {
+        if self.scope_all {
+            self.total_blobs + self.n_fogs
+        } else {
+            rt.traffic.blobs.len() + 1
+        }
+    }
+
+    /// Frames the receiver fine-tunes over once everything has landed.
+    fn train_frames(&self, rt: &FogRt) -> usize {
+        if self.scope_all {
+            self.total_frames
+        } else {
+            rt.traffic.n_frames
+        }
+    }
+}
+
+/// A cross-fog delivery deferred to the window barrier (windowed
+/// executor): the origin fog finished encoding at `t_send`; the remote
+/// legs are applied sequentially between windows.
+#[derive(Debug, Clone, Copy)]
+struct Outgoing {
+    t_send: f64,
+    entry: CatalogEntry,
+}
+
+/// Where delivery legs push their events. The sequential engine runs one
+/// global queue; the windowed executor keeps one queue per fog (cell-leg
+/// events must land in the owning fog's timeline) plus an `aux` sink for
+/// backhaul loss/repair markers, whose clock never advances so barrier-
+/// time pushes can never violate a fog queue's `time >= now` contract.
+enum QRouter<'a> {
+    Single(&'a mut EventQueue),
+    Split { cells: &'a mut [EventQueue], backhaul: &'a mut EventQueue },
+}
+
+impl<'a> QRouter<'a> {
+    /// Queue that owns fog `g`'s cell-leg events.
+    fn cell(&mut self, g: usize) -> &mut EventQueue {
+        match self {
+            QRouter::Single(q) => q,
+            QRouter::Split { cells, .. } => &mut cells[g],
+        }
+    }
+
+    /// Queue that absorbs backhaul transfer markers.
+    fn backhaul(&mut self) -> &mut EventQueue {
+        match self {
+            QRouter::Single(q) => q,
+            QRouter::Split { backhaul, .. } => backhaul,
+        }
+    }
+}
+
 /// Model the shard streams `fc` describes, one per fog: the same
 /// generator, split-half, frame cap, and `IDS_PER_SHARD`-spaced id
 /// bases `run` simulates (distinct bases keep blobs content-distinct
@@ -165,15 +237,38 @@ pub fn run(cfg: &ArchConfig, fc: &FleetConfig) -> Result<FleetReport> {
 /// are indexed by fog and would otherwise fail deep in the timeline
 /// with an opaque out-of-bounds instead of the validation message.
 /// Fallible callers should use [`run`].
+///
+/// With `fc.threads == 0` (the default) the run is the legacy
+/// sequential event loop. With `threads >= 1` and a windowable config
+/// (multi-fog scope, `latency > 0`, no churn) the run uses the
+/// conservative windowed parallel executor — bit-identical for every
+/// thread count `>= 1` (see [`simulate_windowed`]); non-windowable
+/// configs deterministically fall back to the sequential loop for every
+/// thread count.
 pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
     if let Err(e) = fc.validate() {
         panic!("invalid FleetConfig for simulate: {e}");
     }
     assert_eq!(shards.len(), fc.n_fogs, "one shard per fog");
     let scope_all = fc.topology != Topology::SingleFog && fc.n_fogs > 1;
-    let n_fogs = fc.n_fogs;
+    // The window width is the backhaul latency: every cross-fog payload
+    // crosses at least one backhaul transmission, so its earliest remote
+    // effect is `latency` after its send time. Churn (joiner catch-up
+    // touches remote links at pop time) and single-fog scope (nothing to
+    // parallelize) fall back; the predicate is thread-count-independent,
+    // so determinism across 1..N threads holds on the fallback too.
+    let windowable = scope_all && fc.latency > 0.0 && fc.joins.is_empty();
+    if fc.threads > 0 && windowable {
+        simulate_windowed(fc, shards, scope_all)
+    } else {
+        simulate_sequential(fc, shards, scope_all)
+    }
+}
 
-    let mut fogs: Vec<FogRt> = shards
+/// Instantiate the per-fog runtime state (links, pools, caches, per-
+/// receiver tables) for one run.
+fn build_fogs(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> Vec<FogRt> {
+    shards
         .into_iter()
         .enumerate()
         .map(|(f, t)| {
@@ -216,10 +311,49 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
                 retransmissions: 0,
             }
         })
-        .collect();
+        .collect()
+}
 
-    let total_blobs: usize = fogs.iter().map(|f| f.traffic.blobs.len()).sum();
-    let total_frames: usize = fogs.iter().map(|f| f.traffic.n_frames).sum();
+/// Push one fog's upload legs and encode-readiness events into `q`
+/// (shared by the sequential and windowed executors; event seq order is
+/// identical to the pre-refactor inline seeding).
+fn seed_shard(f: usize, rt: &mut FogRt, q: &mut EventQueue) {
+    if matches!(rt.traffic.method, Method::Jpeg { .. }) {
+        // Serverless: no upload leg; the source compresses locally.
+        for b in 0..rt.traffic.blobs.len() {
+            q.push(0.0, Event::EncodeReady { fog: f, blob: b });
+        }
+        return;
+    }
+    let uploads = rt.traffic.uploads.clone();
+    let mut finishes = Vec::with_capacity(uploads.len());
+    for (i, u) in uploads.into_iter().enumerate() {
+        // Source → fog is a point-to-point leg: stop-and-wait
+        // ARQ on the cell (one plain transmit at loss 0).
+        let tx = rt.cell.reliable(q, 0.0, u, "jpeg-upload", f, NO_EDGE, f, i);
+        rt.absorb_tx(&tx);
+        finishes.push(tx.finish);
+    }
+    let ready: Vec<(usize, usize)> =
+        rt.traffic.blobs.iter().map(|b| (b.id, b.ready_after_frame)).collect();
+    for (id, raf) in ready {
+        let t = if finishes.is_empty() { 0.0 } else { finishes[raf.min(finishes.len() - 1)] };
+        q.push(t, Event::EncodeReady { fog: f, blob: id });
+    }
+}
+
+/// The legacy single-queue event loop (`fc.threads == 0`, or any config
+/// the windowed executor cannot cover).
+fn simulate_sequential(fc: &FleetConfig, shards: Vec<ShardTraffic>, scope_all: bool) -> FleetReport {
+    let n_fogs = fc.n_fogs;
+    let mut fogs = build_fogs(fc, shards);
+
+    let ctx = SimCtx {
+        scope_all,
+        n_fogs,
+        total_blobs: fogs.iter().map(|f| f.traffic.blobs.len()).sum(),
+        total_frames: fogs.iter().map(|f| f.traffic.n_frames).sum(),
+    };
 
     let mut q = EventQueue::new();
     let mut cloud_up: HashMap<(usize, usize), f64> = HashMap::new();
@@ -234,42 +368,13 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
         }
     }
     for f in 0..n_fogs {
-        if matches!(fogs[f].traffic.method, Method::Jpeg { .. }) {
-            // Serverless: no upload leg; the source compresses locally.
-            for b in 0..fogs[f].traffic.blobs.len() {
-                q.push(0.0, Event::EncodeReady { fog: f, blob: b });
-            }
-        } else {
-            let uploads = fogs[f].traffic.uploads.clone();
-            let mut finishes = Vec::with_capacity(uploads.len());
-            for (i, u) in uploads.into_iter().enumerate() {
-                // Source → fog is a point-to-point leg: stop-and-wait
-                // ARQ on the cell (one plain transmit at loss 0).
-                let tx = fogs[f].cell.reliable(&mut q, 0.0, u, "jpeg-upload", f, NO_EDGE, f, i);
-                fogs[f].absorb_tx(&tx);
-                finishes.push(tx.finish);
-            }
-            let ready: Vec<(usize, usize)> = fogs[f]
-                .traffic
-                .blobs
-                .iter()
-                .map(|b| (b.id, b.ready_after_frame))
-                .collect();
-            for (id, raf) in ready {
-                let t = if finishes.is_empty() {
-                    0.0
-                } else {
-                    finishes[raf.min(finishes.len() - 1)]
-                };
-                q.push(t, Event::EncodeReady { fog: f, blob: id });
-            }
-        }
+        seed_shard(f, &mut fogs[f], &mut q);
         if fogs[f].traffic.blobs.is_empty() {
             // Empty shard: nothing encodes, but labels still ship.
             let lb = fogs[f].traffic.label_bytes();
             let label_id = fogs[f].traffic.blobs.len();
-            deliver(fc, &mut fogs, &mut q, &mut cloud_up, &mut catalog, scope_all, 0.0, f,
-                label_id, lb, 0, "labels", false);
+            deliver(fc, &mut fogs, &mut QRouter::Single(&mut q), &mut cloud_up, &mut catalog,
+                &ctx, 0.0, f, label_id, lb, 0, "labels", false);
         }
     }
 
@@ -277,14 +382,7 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
     while let Some((now, ev)) = q.pop() {
         match ev {
             Event::EncodeReady { fog, blob } => {
-                let steps = fogs[fog].traffic.blobs[blob].encode_steps;
-                let cost = if steps == 0 {
-                    fc.costs.jpeg_encode_seconds
-                } else {
-                    steps as f64 * fc.costs.seconds_per_step
-                };
-                let (_start, finish) = fogs[fog].pool.schedule(now, cost);
-                q.push(finish, Event::EncodeDone { fog, blob });
+                on_encode_ready(fc, &mut fogs[fog], &mut q, now, fog, blob);
             }
             Event::EncodeDone { fog, blob } => {
                 fogs[fog].remaining -= 1;
@@ -292,38 +390,24 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
                     let b = &fogs[fog].traffic.blobs[blob];
                     (b.bytes, b.hash, b.tag)
                 };
-                deliver(fc, &mut fogs, &mut q, &mut cloud_up, &mut catalog, scope_all, now, fog,
-                    blob, bytes, hash, tag, true);
+                deliver(fc, &mut fogs, &mut QRouter::Single(&mut q), &mut cloud_up, &mut catalog,
+                    &ctx, now, fog, blob, bytes, hash, tag, true);
                 if fogs[fog].remaining == 0 {
                     let lb = fogs[fog].traffic.label_bytes();
                     let label_id = fogs[fog].traffic.blobs.len();
-                    deliver(fc, &mut fogs, &mut q, &mut cloud_up, &mut catalog, scope_all, now,
-                        fog, label_id, lb, 0, "labels", false);
+                    deliver(fc, &mut fogs, &mut QRouter::Single(&mut q), &mut cloud_up,
+                        &mut catalog, &ctx, now, fog, label_id, lb, 0, "labels", false);
                 }
             }
             Event::Delivered { fog, edge, .. } => {
-                fogs[fog].received[edge] += 1;
-                if now > fogs[fog].last_rx[edge] {
-                    fogs[fog].last_rx[edge] = now;
-                }
-                let expected = if scope_all {
-                    total_blobs + n_fogs
-                } else {
-                    fogs[fog].traffic.blobs.len() + 1
-                };
-                if fogs[fog].received[edge] == expected {
-                    let frames = if scope_all {
-                        total_frames
-                    } else {
-                        fogs[fog].traffic.n_frames
-                    };
-                    let t = now
-                        + fc.epochs as f64 * frames as f64 * fc.costs.train_seconds_per_frame;
-                    q.push(t, Event::TrainDone { fog, edge });
-                }
+                on_delivered(fc, &ctx, &mut fogs[fog], &mut q, now, fog, edge);
             }
             Event::TrainDone { fog, edge } => {
-                fogs[fog].trained_at[edge] = now;
+                // Aggregate macro markers (`edge == NO_EDGE`) already set
+                // `trained_at` eagerly; they only advance the clock.
+                if edge != NO_EDGE {
+                    fogs[fog].trained_at[edge] = now;
+                }
             }
             Event::ReceiverJoin { fog, edge } => {
                 join_receiver(fc, &mut fogs, &mut q, &mut cloud_up, &catalog, now, fog, edge);
@@ -334,12 +418,67 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
         }
     }
     let makespan = q.now();
+    build_report(fc, &fogs, makespan, q.processed())
+}
 
-    // --- Aggregate the report -------------------------------------------
+/// Queue the encode job a ready blob needs on the fog's worker pool.
+fn on_encode_ready(
+    fc: &FleetConfig,
+    rt: &mut FogRt,
+    q: &mut EventQueue,
+    now: f64,
+    fog: usize,
+    blob: usize,
+) {
+    let steps = rt.traffic.blobs[blob].encode_steps;
+    let cost = if steps == 0 {
+        fc.costs.jpeg_encode_seconds
+    } else {
+        steps as f64 * fc.costs.seconds_per_step
+    };
+    let (_start, finish) = rt.pool.schedule(now, cost);
+    q.push(finish, Event::EncodeDone { fog, blob });
+}
+
+/// Per-receiver delivery bookkeeping (exact path): count the delivery,
+/// and once the receiver holds everything, schedule its fine-tune
+/// completion. Aggregate macro markers (`edge == NO_EDGE`) are no-ops —
+/// their cohort's bookkeeping was applied eagerly at leg time.
+fn on_delivered(
+    fc: &FleetConfig,
+    ctx: &SimCtx,
+    rt: &mut FogRt,
+    q: &mut EventQueue,
+    now: f64,
+    fog: usize,
+    edge: usize,
+) {
+    if edge == NO_EDGE {
+        return;
+    }
+    rt.received[edge] += 1;
+    if now > rt.last_rx[edge] {
+        rt.last_rx[edge] = now;
+    }
+    if rt.received[edge] == ctx.expected_deliveries(rt) {
+        let frames = ctx.train_frames(rt);
+        let t = now + fc.epochs as f64 * frames as f64 * fc.costs.train_seconds_per_frame;
+        q.push(t, Event::TrainDone { fog, edge });
+    }
+}
+
+/// Assemble the fleet-wide report from the drained per-fog state.
+fn build_report(fc: &FleetConfig, fogs: &[FogRt], makespan: f64, events: u64) -> FleetReport {
+    let n_fogs = fc.n_fogs;
+    let total_blobs: usize = fogs.iter().map(|f| f.traffic.blobs.len()).sum();
+    let total_frames: usize = fogs.iter().map(|f| f.traffic.n_frames).sum();
+
     let mut report = FleetReport {
         scenario: fc.scenario.clone(),
         topology: fc.topology.name(),
         policy: fc.policy.name(),
+        cell_mode: fc.cell_sim.name(),
+        threads: fc.threads,
         method: fc.method.name().to_string(),
         n_fogs,
         n_edges: fc.n_edges,
@@ -368,7 +507,7 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
         max_queue_depth: 0,
         cache: Default::default(),
         relay: Default::default(),
-        events: q.processed(),
+        events,
         fogs: Vec::with_capacity(n_fogs),
     };
     for (f, rt) in fogs.iter().enumerate() {
@@ -429,6 +568,168 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
     report
 }
 
+/// The conservative windowed parallel executor (`fc.threads >= 1`).
+///
+/// Every fog owns a private event queue and processes its local events
+/// (encode scheduling, cell legs, delivery bookkeeping) on a worker
+/// thread inside a lookahead window `[T, T + latency)`, where `T` is
+/// the earliest pending event fleet-wide. Cross-fog work — the remote
+/// half of a delivery — is deferred to a per-thread outbox and applied
+/// *sequentially* at the window barrier in a canonical order (send
+/// time, then origin-fog order). This is safe because every cross-fog
+/// payload crosses at least one backhaul transmission, so its earliest
+/// effect on a remote fog's timeline is `t_send + latency >= T +
+/// latency` — beyond the window any fog has advanced into. Backhaul
+/// loss/repair markers land in a dedicated sink queue whose clock never
+/// advances (they are counted, not replayed), because their timestamps
+/// may precede a fog queue's local clock at barrier time.
+///
+/// Guarantees: bit-identical reports for every `threads >= 1` (the
+/// window schedule, the barrier order, and all RNG draw orders are
+/// thread-count-independent — threads only split the fog iteration),
+/// and delivered-class byte totals identical to the sequential engine
+/// (channel *submission order* at window boundaries differs from the
+/// global-queue interleaving, so makespans may differ in the queueing
+/// tail; bytes, transfers and cache behavior do not).
+fn simulate_windowed(fc: &FleetConfig, shards: Vec<ShardTraffic>, scope_all: bool) -> FleetReport {
+    let n_fogs = fc.n_fogs;
+    let mut fogs = build_fogs(fc, shards);
+    let ctx = SimCtx {
+        scope_all,
+        n_fogs,
+        total_blobs: fogs.iter().map(|f| f.traffic.blobs.len()).sum(),
+        total_frames: fogs.iter().map(|f| f.traffic.n_frames).sum(),
+    };
+
+    let mut qs: Vec<EventQueue> = (0..n_fogs).map(|_| EventQueue::new()).collect();
+    let mut aux = EventQueue::new();
+    let mut cloud_up: HashMap<(usize, usize), f64> = HashMap::new();
+    let mut outbox: Vec<Outgoing> = Vec::new();
+
+    // Seed each fog's private timeline (no churn here by construction).
+    for f in 0..n_fogs {
+        seed_shard(f, &mut fogs[f], &mut qs[f]);
+        if fogs[f].traffic.blobs.is_empty() {
+            let lb = fogs[f].traffic.label_bytes();
+            let label_id = fogs[f].traffic.blobs.len();
+            let entry = CatalogEntry {
+                origin: f,
+                blob: label_id,
+                bytes: lb,
+                hash: 0,
+                tag: "labels",
+                cacheable: false,
+            };
+            cell_leg(fc, &ctx, &mut fogs[f], &mut qs[f], 0.0, f, f, label_id, lb, "labels");
+            outbox.push(Outgoing { t_send: 0.0, entry });
+        }
+    }
+
+    let window = fc.latency;
+    let n_threads = fc.threads.min(n_fogs.max(1));
+    loop {
+        // Barrier: apply deferred cross-fog deliveries in canonical
+        // order. A stable sort on the send time keeps equal-time entries
+        // in fog-major emission order, independent of the thread count.
+        if !outbox.is_empty() {
+            outbox.sort_by(|a, b| a.t_send.total_cmp(&b.t_send));
+            let mut router = QRouter::Split { cells: &mut qs, backhaul: &mut aux };
+            for o in outbox.drain(..) {
+                deliver_remote(fc, &mut fogs, &mut router, &mut cloud_up, &ctx, o.t_send, &o.entry);
+            }
+        }
+        let t_min = qs
+            .iter()
+            .filter_map(|q| q.peek_time())
+            .min_by(|a, b| a.total_cmp(b));
+        let Some(t) = t_min else { break };
+        let end = t + window;
+        // Parallel phase: fogs advance independently through [t, end).
+        let chunk = n_fogs.div_ceil(n_threads);
+        thread::scope(|s| {
+            let mut handles = Vec::with_capacity(n_threads);
+            for (fog_chunk, q_chunk) in fogs.chunks_mut(chunk).zip(qs.chunks_mut(chunk)) {
+                let ctx = &ctx;
+                handles.push(s.spawn(move || {
+                    let mut out = Vec::new();
+                    for (rt, q) in fog_chunk.iter_mut().zip(q_chunk.iter_mut()) {
+                        run_window(fc, ctx, rt, q, end, &mut out);
+                    }
+                    out
+                }));
+            }
+            for h in handles {
+                outbox.extend(h.join().expect("window worker panicked"));
+            }
+        });
+        if outbox.is_empty() && qs.iter().all(|q| q.is_empty()) {
+            break;
+        }
+    }
+
+    // Drain the marker sink so its events join the processed tally.
+    while aux.pop().is_some() {}
+    let makespan = qs.iter().map(|q| q.now()).fold(aux.now(), f64::max);
+    let events = qs.iter().map(|q| q.processed()).sum::<u64>() + aux.processed();
+    build_report(fc, &fogs, makespan, events)
+}
+
+/// Advance one fog through its local events with `time < end`,
+/// deferring the cross-fog half of each delivery to `outbox`.
+fn run_window(
+    fc: &FleetConfig,
+    ctx: &SimCtx,
+    rt: &mut FogRt,
+    q: &mut EventQueue,
+    end: f64,
+    outbox: &mut Vec<Outgoing>,
+) {
+    while q.peek_time().is_some_and(|t| t < end) {
+        let (now, ev) = q.pop().expect("peeked event exists");
+        match ev {
+            Event::EncodeReady { fog, blob } => {
+                on_encode_ready(fc, rt, q, now, fog, blob);
+            }
+            Event::EncodeDone { fog, blob } => {
+                rt.remaining -= 1;
+                let (bytes, hash, tag) = {
+                    let b = &rt.traffic.blobs[blob];
+                    (b.bytes, b.hash, b.tag)
+                };
+                cell_leg(fc, ctx, rt, q, now, fog, fog, blob, bytes, tag);
+                let entry = CatalogEntry { origin: fog, blob, bytes, hash, tag, cacheable: true };
+                outbox.push(Outgoing { t_send: now, entry });
+                if rt.remaining == 0 {
+                    let lb = rt.traffic.label_bytes();
+                    let label_id = rt.traffic.blobs.len();
+                    cell_leg(fc, ctx, rt, q, now, fog, fog, label_id, lb, "labels");
+                    let entry = CatalogEntry {
+                        origin: fog,
+                        blob: label_id,
+                        bytes: lb,
+                        hash: 0,
+                        tag: "labels",
+                        cacheable: false,
+                    };
+                    outbox.push(Outgoing { t_send: now, entry });
+                }
+            }
+            Event::Delivered { fog, edge, .. } => {
+                on_delivered(fc, ctx, rt, q, now, fog, edge);
+            }
+            Event::TrainDone { fog: _, edge } => {
+                if edge != NO_EDGE {
+                    rt.trained_at[edge] = now;
+                }
+            }
+            Event::ReceiverJoin { .. } => {
+                unreachable!("windowed mode excludes churn (simulate() fallback)")
+            }
+            Event::Lost { .. } | Event::Nack { .. } | Event::Repair { .. } => {}
+        }
+    }
+}
+
 /// Ship one blob (or the label pseudo-blob) to every receiver in scope
 /// under the configured [`RebroadcastPolicy`]. Local receivers get the
 /// policy's cell leg; remote cells first materialize the blob at their
@@ -451,10 +752,10 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
 fn deliver(
     fc: &FleetConfig,
     fogs: &mut [FogRt],
-    q: &mut EventQueue,
+    router: &mut QRouter,
     cloud_up: &mut HashMap<(usize, usize), f64>,
     catalog: &mut Vec<CatalogEntry>,
-    scope_all: bool,
+    ctx: &SimCtx,
     now: f64,
     origin: usize,
     blob: usize,
@@ -465,15 +766,32 @@ fn deliver(
 ) {
     let entry = CatalogEntry { origin, blob, bytes, hash, tag, cacheable };
     catalog.push(entry);
-    cell_leg(fc, &mut fogs[origin], q, now, origin, origin, blob, bytes, tag);
-    if !scope_all {
+    cell_leg(fc, ctx, &mut fogs[origin], router.cell(origin), now, origin, origin, blob, bytes, tag);
+    if !ctx.scope_all {
         return;
     }
+    deliver_remote(fc, fogs, router, cloud_up, ctx, now, &entry);
+}
+
+/// The cross-fog half of a delivery: the eager-vs-lazy backhaul decision
+/// plus every remote cell leg. Split from [`deliver`] so the windowed
+/// executor can defer exactly this part to its barrier (the local leg
+/// runs inside the origin fog's window).
+fn deliver_remote(
+    fc: &FleetConfig,
+    fogs: &mut [FogRt],
+    router: &mut QRouter,
+    cloud_up: &mut HashMap<(usize, usize), f64>,
+    ctx: &SimCtx,
+    now: f64,
+    entry: &CatalogEntry,
+) {
+    let CatalogEntry { origin, blob, bytes, hash, tag, cacheable } = *entry;
     // Stats class: INR weight payloads feed the paper's cache metrics,
     // everything else (the JPEG baseline) feeds the relay counters.
     let weights = tag == "inr-broadcast";
-    if fc.policy.pushes_backhaul_tree() && cacheable {
-        tree_push(fc, fogs, q, cloud_up, now, origin, blob, bytes, hash, weights);
+    if cacheable && backhaul_pushes_eagerly(fc, fogs, origin, bytes) {
+        tree_push(fc, fogs, router.backhaul(), cloud_up, now, origin, blob, bytes, hash, weights);
     }
     if fc.policy.shares_cell_airtime() {
         // One materialization per remote fog (tree-pushed, cached, or a
@@ -483,15 +801,26 @@ fn deliver(
             if fogs[g].n_active == 0 {
                 continue;
             }
-            let avail = materialize(fc, fogs, q, cloud_up, now, g, &entry);
+            let avail = materialize(fc, fogs, router.backhaul(), cloud_up, now, g, entry);
             let start = if avail > now { avail } else { now };
-            cell_leg(fc, &mut fogs[g], q, start, g, origin, blob, bytes, tag);
+            cell_leg(fc, ctx, &mut fogs[g], router.cell(g), start, g, origin, blob, bytes, tag);
         }
         return;
     }
     // Unicast: the legacy per-receiver flow, record-for-record.
     let key = (origin, blob);
     for g in (0..fogs.len()).filter(|&g| g != origin) {
+        if fc.cell_sim.aggregates(fogs[g].n_active) {
+            // Aggregate cohorts materialize once and run one macro
+            // per-receiver-ARQ leg. Deliberate divergence from the exact
+            // cache-disabled unicast semantics (re-fetch per receiver):
+            // the refetch storm is priced as one fetch — see the
+            // [`super::aggregate`] accuracy contract.
+            let avail = materialize(fc, fogs, router.backhaul(), cloud_up, now, g, entry);
+            let start = if avail > now { avail } else { now };
+            cell_leg(fc, ctx, &mut fogs[g], router.cell(g), start, g, origin, blob, bytes, tag);
+            continue;
+        }
         for r in 0..fogs[g].rx_active.len() {
             if !fogs[g].rx_active[r] {
                 continue;
@@ -501,7 +830,7 @@ fn deliver(
             } else if !cacheable && fogs[g].avail_remote.contains_key(&key) {
                 fogs[g].avail_remote[&key]
             } else {
-                let a = fetch(fc, fogs, q, cloud_up, origin, g, now, blob, bytes);
+                let a = fetch(fc, fogs, router.backhaul(), cloud_up, origin, g, now, blob, bytes);
                 if cacheable {
                     fogs[g].cache.insert(hash, bytes, weights);
                 }
@@ -511,10 +840,91 @@ fn deliver(
             let start = if avail > now { avail } else { now };
             let p = fogs[g].cell.loss_rate();
             let baseline = fogs[g].cell.airtime(bytes) / (1.0 - p);
+            let q = router.cell(g);
             let tx = fogs[g].cell.reliable(q, start, bytes, tag, g, r, origin, blob);
             fogs[g].absorb_tx(&tx);
             fogs[g].airtime_saved += baseline - tx.airtime;
             q.push(tx.finish, Event::Delivered { fog: g, edge: r, origin, blob });
+        }
+    }
+}
+
+/// Should this blob ride the eager backhaul spanning tree instead of
+/// lazy per-demand fetches? `multicast-tree` always pushes; `auto`
+/// extends its expected-airtime algebra to the backhaul leg, pushing
+/// iff the tree's expected airtime strictly beats the lazy fetch
+/// expectation. Both costs are sums of per-transfer
+/// [`link::expected_unicast_airtime`] terms so a uniform-bandwidth
+/// fleet (where the ring relay and the origin's fan-out cost the same)
+/// ties bit-exactly and stays lazy — preserving `auto`'s legacy
+/// behavior there. Everything else never pushes.
+fn backhaul_pushes_eagerly(fc: &FleetConfig, fogs: &[FogRt], origin: usize, bytes: u64) -> bool {
+    if fc.policy.pushes_backhaul_tree() {
+        return true;
+    }
+    if fc.policy != RebroadcastPolicy::Auto {
+        return false;
+    }
+    let (tree, lazy) = expected_backhaul_airtimes(fc, fogs, origin, bytes);
+    fc.policy.backhaul_eager(tree, lazy)
+}
+
+/// Expected backhaul airtime of the eager spanning tree vs the lazy
+/// once-per-cell fetches for one blob, over the currently-active remote
+/// fogs. Mesh trees price each planned hop on its parent's uplink; the
+/// cloud relay prices one uplink plus per-fog downlinks, which is the
+/// same set of transfers the lazy path pays (an exact tie, so
+/// hierarchical `auto` stays lazy).
+fn expected_backhaul_airtimes(
+    fc: &FleetConfig,
+    fogs: &[FogRt],
+    origin: usize,
+    bytes: u64,
+) -> (f64, f64) {
+    let n = fogs.len();
+    let (p, lat) = (fc.loss_backhaul, fc.latency);
+    let targets: Vec<usize> = (1..n)
+        .map(|step| (origin + step) % n)
+        .filter(|&g| fogs[g].n_active > 0)
+        .collect();
+    if targets.is_empty() {
+        return (0.0, 0.0);
+    }
+    match fc.topology {
+        Topology::SingleFog => (0.0, 0.0),
+        Topology::Sharded => {
+            let bw: Vec<f64> = (0..n).map(|f| fogs[f].uplink.channel().bandwidth).collect();
+            let tree: f64 = link::relay_plan(origin, n, &targets, &[], &bw)
+                .iter()
+                .map(|hop| link::expected_unicast_airtime(1, bytes, p, bw[hop.parent], lat))
+                .sum();
+            let lazy: f64 = targets
+                .iter()
+                .map(|_| link::expected_unicast_airtime(1, bytes, p, bw[origin], lat))
+                .sum();
+            (tree, lazy)
+        }
+        Topology::Hierarchical => {
+            let up = link::expected_unicast_airtime(
+                1,
+                bytes,
+                p,
+                fogs[origin].uplink.channel().bandwidth,
+                lat,
+            );
+            let down: f64 = targets
+                .iter()
+                .map(|&g| {
+                    link::expected_unicast_airtime(
+                        1,
+                        bytes,
+                        p,
+                        fogs[g].downlink.channel().bandwidth,
+                        lat,
+                    )
+                })
+                .sum();
+            (up + down, up + down)
         }
     }
 }
@@ -558,6 +968,7 @@ fn materialize(
 #[allow(clippy::too_many_arguments)]
 fn cell_leg(
     fc: &FleetConfig,
+    ctx: &SimCtx,
     rt: &mut FogRt,
     q: &mut EventQueue,
     now: f64,
@@ -568,6 +979,10 @@ fn cell_leg(
     tag: &'static str,
 ) {
     if rt.n_active == 0 {
+        return;
+    }
+    if fc.cell_sim.aggregates(rt.n_active) {
+        aggregate_cell_leg(fc, ctx, rt, q, now, fog, origin, blob, bytes, tag);
         return;
     }
     // Borrow the prebuilt index list when every receiver is active (the
@@ -612,6 +1027,72 @@ fn cell_leg(
     };
     rt.airtime_saved += baseline - out.actual_airtime;
     rt.absorb_leg(&out);
+}
+
+/// The aggregate-cell fast path: one [`aggregate::expected_cell_leg`]
+/// macro transaction for the whole active cohort, then *eager*
+/// per-receiver bookkeeping (delivery counts, last-delivery times, and
+/// training completion) instead of one `Delivered` event per receiver.
+/// One macro `Delivered` marker (`edge == NO_EDGE`) advances the
+/// timeline to the cohort delivery instant, and one macro `TrainDone`
+/// marker advances it to the cohort's fine-tune completion — so the
+/// makespan is identical in structure to the exact path while the event
+/// count per cell leg drops from `O(n)` to `O(1)`.
+///
+/// With churn, eager counting can run one in-flight delivery ahead of
+/// the exact path's event-time counting for receivers that join between
+/// a leg's submission and its finish; aggregate cohorts are selected at
+/// scale, where per-receiver timing skew is already averaged out.
+#[allow(clippy::too_many_arguments)]
+fn aggregate_cell_leg(
+    fc: &FleetConfig,
+    ctx: &SimCtx,
+    rt: &mut FogRt,
+    q: &mut EventQueue,
+    now: f64,
+    fog: usize,
+    origin: usize,
+    blob: usize,
+    bytes: u64,
+    tag: &'static str,
+) {
+    let n = rt.n_active;
+    let p = rt.cell.loss_rate();
+    let (bw, lat) = {
+        let ch = rt.cell.channel();
+        (ch.bandwidth, ch.latency)
+    };
+    let mode = fc.policy.cell_mode(n, bytes, p, bw, lat);
+    // Same expected-unicast baseline as the exact path; `n·a` is the
+    // closed form of its per-receiver accumulation, so a `loss = 0`
+    // per-receiver leg still nets exactly 0.0 saved.
+    let per_rx = rt.cell.airtime(bytes) / (1.0 - p);
+    let out = aggregate::expected_cell_leg(&mut rt.cell, now, n, bytes, tag, mode);
+    rt.airtime_saved += n as f64 * per_rx - out.actual_airtime;
+    rt.losses += out.losses;
+    rt.nacks += out.nacks;
+    rt.retransmissions += out.retransmissions;
+    let expected = ctx.expected_deliveries(rt);
+    let frames = ctx.train_frames(rt);
+    let t_train = out.finish + fc.epochs as f64 * frames as f64 * fc.costs.train_seconds_per_frame;
+    let mut trained = false;
+    for r in 0..rt.rx_active.len() {
+        if !rt.rx_active[r] {
+            continue;
+        }
+        rt.received[r] += 1;
+        if out.finish > rt.last_rx[r] {
+            rt.last_rx[r] = out.finish;
+        }
+        if rt.received[r] == expected {
+            rt.trained_at[r] = t_train;
+            trained = true;
+        }
+    }
+    q.push(out.finish, Event::Delivered { fog, edge: NO_EDGE, origin, blob });
+    if trained {
+        q.push(t_train, Event::TrainDone { fog, edge: NO_EDGE });
+    }
 }
 
 /// Activate a mid-run joiner and replay everything already delivered:
@@ -1233,6 +1714,199 @@ mod tests {
         let r_uni = simulate(&base_fc(m, 2), vec![shard]);
         assert_eq!(ra1.total_bytes, r_uni.total_bytes);
         assert_eq!(ra1.airtime_saved_seconds, 0.0, "n = 1: no airtime to save");
+    }
+
+    // --- Aggregate cells, backhaul auto, windowed executor -------------
+
+    use crate::fleet::aggregate::CellSimMode;
+
+    #[test]
+    fn aggregate_mode_matches_exact_bytes_at_loss_zero_with_o1_events() {
+        let m = Method::RapidSingle;
+        let shard = || tiny_shard(m, vec![1000, 2000], &[300, 500]);
+        let exact = simulate(&base_fc(m, 4), vec![shard()]);
+        let mut fc = base_fc(m, 4);
+        fc.cell_sim = CellSimMode::Aggregate;
+        let agg = simulate(&fc, vec![shard()]);
+        // Byte-for-byte at loss 0 — the aggregate accuracy contract.
+        assert_eq!(agg.upload_bytes, exact.upload_bytes);
+        assert_eq!(agg.broadcast_bytes, exact.broadcast_bytes);
+        assert_eq!(agg.label_bytes, exact.label_bytes);
+        assert_eq!(agg.total_bytes, exact.total_bytes);
+        assert_eq!(agg.repair_bytes, 0);
+        assert_eq!(agg.airtime_saved_seconds, 0.0, "unicast baseline nets 0 exactly");
+        // O(n) → O(1) events per cell leg: 2 ready + 2 done + 3 macro
+        // delivered markers + 1 macro train marker, vs the exact run's
+        // per-receiver 9 delivered + 3 train-done.
+        assert_eq!(exact.events, 2 + 2 + 9 + 3);
+        assert_eq!(agg.events, 2 + 2 + 3 + 1);
+        assert_eq!(agg.cell_mode, "aggregate");
+        // The cohort still trains, at the same completion time (up to
+        // float association: the exact path accumulates per-receiver
+        // finishes term by term, the macro leg prices `n·airtime` in one
+        // multiplication).
+        assert!(agg.fogs[0].trained_at > 0.0);
+        assert!((agg.fogs[0].trained_at - exact.fogs[0].trained_at).abs() < 1e-9);
+        assert!((agg.makespan_seconds - exact.makespan_seconds).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auto_threshold_keeps_small_cells_exact_and_aggregates_large_ones() {
+        let m = Method::RapidSingle;
+        let shard = || tiny_shard(m, vec![1000], &[400]);
+        // Default auto threshold (4096) leaves a 3-receiver cell exact.
+        let small = simulate(&base_fc(m, 4), vec![shard()]);
+        assert_eq!(small.cell_mode, "auto:4096");
+        assert_eq!(small.events, 1 + 1 + 2 * 3 + 3, "per-receiver events: exact path");
+        // Dropping the threshold to the cell size flips it to aggregate.
+        let mut fc = base_fc(m, 4);
+        fc.cell_sim = CellSimMode::Auto { threshold: 3 };
+        let agg = simulate(&fc, vec![shard()]);
+        assert_eq!(agg.total_bytes, small.total_bytes);
+        assert_eq!(agg.events, 1 + 1 + 2 + 1);
+    }
+
+    #[test]
+    fn aggregate_charges_bounded_expected_repair_under_loss() {
+        let m = Method::RapidSingle;
+        let p = 0.2;
+        let mk = |mode: CellSimMode| {
+            let mut fc = base_fc(m, 51); // 50 receivers: the law of large n
+            fc.cell_sim = mode;
+            fc.loss_cell = p;
+            fc
+        };
+        let shard = || tiny_shard(m, vec![1000], &[4000]);
+        let exact = simulate(&mk(CellSimMode::Exact), vec![shard()]);
+        let agg = simulate(&mk(CellSimMode::Aggregate), vec![shard()]);
+        // Delivered classes are loss-invariant in both modes.
+        assert_eq!(agg.broadcast_bytes, exact.broadcast_bytes);
+        assert_eq!(agg.total_bytes, exact.total_bytes);
+        // Repair is the expectation vs one seeded draw: within 15% over
+        // 100+ Bernoulli(0.2) receptions (documented accuracy contract).
+        assert!(agg.repair_bytes > 0);
+        let rel = (agg.repair_bytes as f64 - exact.repair_bytes as f64).abs()
+            / exact.repair_bytes as f64;
+        assert!(rel < 0.15, "relative repair error {rel} (agg {} vs exact {})",
+            agg.repair_bytes, exact.repair_bytes);
+    }
+
+    #[test]
+    fn auto_backhaul_stays_lazy_on_uniform_mesh() {
+        let m = Method::RapidSingle;
+        let mut fc = base_fc(m, 9); // 3 fogs × (1 source + 2 receivers)
+        fc.topology = Topology::Sharded;
+        fc.n_fogs = 3;
+        fc.policy = RebroadcastPolicy::Auto;
+        let shards = vec![
+            tiny_shard(m, vec![500], &[400]),
+            tiny_shard(m, vec![500], &[0; 0]),
+            tiny_shard(m, vec![500], &[0; 0]),
+        ];
+        let r = simulate(&fc, shards);
+        // Uniform bandwidths: the ring relay and the origin fan-out cost
+        // the same expectation, the tie keeps the lazy leg, and every
+        // backhaul byte leaves the origin's uplink — exactly the legacy
+        // auto behavior (2 lazy blob fetches + 2 label fetches).
+        assert_eq!(r.fogs[0].backhaul_bytes, 2 * 400 + 2 * 8);
+        assert_eq!(r.fogs[1].backhaul_bytes, 0);
+        assert_eq!(r.fogs[2].backhaul_bytes, 0);
+    }
+
+    #[test]
+    fn auto_backhaul_pushes_the_tree_on_heterogeneous_mesh() {
+        let m = Method::RapidSingle;
+        let shards = || {
+            vec![
+                tiny_shard(m, vec![500], &[400]),
+                tiny_shard(m, vec![500], &[0; 0]),
+                tiny_shard(m, vec![500], &[0; 0]),
+            ]
+        };
+        let mk = |policy: RebroadcastPolicy| {
+            let mut fc = base_fc(m, 9);
+            fc.topology = Topology::Sharded;
+            fc.n_fogs = 3;
+            fc.policy = policy;
+            fc.backhaul_bandwidth = 1e5; // slow mesh: the relay choice matters
+            fc.backhaul_bandwidths = Some(vec![1e5, 1e6, 1e5]);
+            fc
+        };
+        let auto = simulate(&mk(RebroadcastPolicy::Auto), shards());
+        // Fog 1's 10× uplink makes the weighted tree (0→1 on the slow
+        // origin, then 1→2 on the fast relay) strictly cheaper than two
+        // origin fan-out copies, so auto pushes eagerly: fog 1 relays.
+        assert!(auto.fogs[1].backhaul_bytes > 0, "the fast fog must relay");
+        // Labels are not cacheable → they still fetch lazily from fog 0.
+        assert_eq!(auto.fogs[0].backhaul_bytes, 400 + 2 * 8);
+        assert_eq!(auto.fogs[1].backhaul_bytes, 400);
+        // And the eager push lands the tail strictly earlier than the
+        // same fleet forced lazy (cell-multicast backhaul semantics).
+        let lazy = simulate(&mk(RebroadcastPolicy::CellMulticast), shards());
+        assert!(
+            auto.makespan_seconds < lazy.makespan_seconds,
+            "auto {} vs lazy {}",
+            auto.makespan_seconds,
+            lazy.makespan_seconds
+        );
+    }
+
+    #[test]
+    fn windowed_executor_is_deterministic_across_thread_counts() {
+        let m = Method::RapidSingle;
+        let mk = |threads: usize| {
+            let mut fc = base_fc(m, 12); // 2 fogs × (1 source + 5 receivers)
+            fc.topology = Topology::Sharded;
+            fc.n_fogs = 2;
+            fc.latency = 1e-4; // windowable: the lookahead needs a real latency
+            fc.threads = threads;
+            fc
+        };
+        let shards = || {
+            vec![
+                tiny_shard(m, vec![1000, 2000], &[300, 500]),
+                tiny_shard(m, vec![1000], &[600]),
+            ]
+        };
+        let r1 = simulate(&mk(1), shards());
+        let r2 = simulate(&mk(2), shards());
+        let r3 = simulate(&mk(3), shards());
+        for r in [&r2, &r3] {
+            assert_eq!(r.total_bytes, r1.total_bytes);
+            assert_eq!(r.backhaul_bytes, r1.backhaul_bytes);
+            assert_eq!(r.events, r1.events);
+            assert_eq!(r.makespan_seconds.to_bits(), r1.makespan_seconds.to_bits());
+            assert_eq!(r.airtime_saved_seconds.to_bits(), r1.airtime_saved_seconds.to_bits());
+        }
+        // And the parallel run moves the same delivered bytes as the
+        // sequential oracle (timeline interleaving differs; bytes don't).
+        let seq = simulate(&mk(0), shards());
+        assert_eq!(seq.threads, 0);
+        assert_eq!(r1.threads, 1);
+        assert_eq!(r1.total_bytes, seq.total_bytes);
+        assert_eq!(r1.upload_bytes, seq.upload_bytes);
+        assert_eq!(r1.broadcast_bytes, seq.broadcast_bytes);
+        assert_eq!(r1.label_bytes, seq.label_bytes);
+        assert_eq!(r1.backhaul_bytes, seq.backhaul_bytes);
+        assert_eq!(r1.events, seq.events);
+    }
+
+    #[test]
+    fn non_windowable_configs_fall_back_to_the_sequential_loop() {
+        let m = Method::RapidSingle;
+        // Churn excludes the windowed executor: threads must not change
+        // anything, bit for bit.
+        let mk = |threads: usize| {
+            let mut fc = base_fc(m, 3);
+            fc.joins = vec![JoinSpec { fog: 0, at: 1.0 }];
+            fc.threads = threads;
+            fc
+        };
+        let seq = simulate(&mk(0), vec![tiny_shard(m, vec![1000], &[400])]);
+        let par = simulate(&mk(4), vec![tiny_shard(m, vec![1000], &[400])]);
+        assert_eq!(par.total_bytes, seq.total_bytes);
+        assert_eq!(par.events, seq.events);
+        assert_eq!(par.makespan_seconds.to_bits(), seq.makespan_seconds.to_bits());
     }
 
     #[test]

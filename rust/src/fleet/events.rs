@@ -6,9 +6,31 @@
 //! virtual timestamp. Events at equal timestamps pop in FIFO insertion
 //! order (a strictly increasing sequence number breaks ties), so runs are
 //! bit-for-bit deterministic regardless of float coincidences.
+//!
+//! # Queue backends
+//!
+//! Two interchangeable backends implement the same `(time, seq)` total
+//! order, selectable via [`QueueKind`]:
+//!
+//! * [`QueueKind::Heap`] — the original `BinaryHeap` min-heap. Every
+//!   push/pop is `O(log n)` regardless of how the timestamps are
+//!   distributed. Kept as the reference implementation the property
+//!   tests diff against.
+//! * [`QueueKind::Calendar`] — a bucketed calendar queue (Brown, CACM
+//!   1988): events hash into `year`-striped time buckets of width `w`,
+//!   each bucket an insertion-sorted FIFO. For the dense same-horizon
+//!   traffic an aggregate-cell fleet produces (thousands of events within
+//!   a narrow time band), pushes are amortized `O(1)` appends and pops
+//!   scan at most one bucket year before falling back to a direct
+//!   minimum search. The bucket count doubles/halves with occupancy and
+//!   the width is re-estimated from the queued time span at each resize,
+//!   so sparse and bursty workloads both stay near `O(1)`.
+//!
+//! Both backends preserve the exact `time >= now` push boundary and FIFO
+//! tie-breaking; [`EventQueue::new`] defaults to the calendar.
 
 use std::cmp::{Ordering, Reverse};
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// One typed simulation event. `fog`/`edge` are indices into the engine's
 /// fog table and the fog's local receiver table; `blob` indexes the origin
@@ -27,9 +49,12 @@ pub enum Event {
     EncodeReady { fog: usize, blob: usize },
     /// A worker finished encoding the blob.
     EncodeDone { fog: usize, blob: usize },
-    /// The blob finished its over-the-air transmission to one receiver.
+    /// The blob finished its over-the-air transmission to one receiver
+    /// (or, in aggregate cell mode, to a whole cell cohort at once —
+    /// `edge = usize::MAX` marks the collapsed macro-delivery).
     Delivered { fog: usize, edge: usize, origin: usize, blob: usize },
-    /// A receiver finished fine-tuning on everything it received.
+    /// A receiver finished fine-tuning on everything it received
+    /// (`edge = usize::MAX` marks an aggregate cohort completion).
     TrainDone { fog: usize, edge: usize },
     /// A receiver (or backhaul peer, `edge = usize::MAX`) failed to
     /// decode a payload transmission — the Bernoulli loss draw came up.
@@ -73,18 +98,202 @@ impl Ord for Scheduled {
     }
 }
 
-/// Min-heap event queue with a monotone virtual clock.
-#[derive(Debug, Default)]
+/// Which backing store an [`EventQueue`] uses. Both implement the same
+/// `(time, seq)` total order; the property tests in this module diff
+/// them event-for-event on random workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueKind {
+    /// `BinaryHeap` min-heap: `O(log n)` per op, distribution-agnostic.
+    Heap,
+    /// Bucketed calendar queue: amortized `O(1)` on dense horizons.
+    Calendar,
+}
+
+/// Minimum (and initial) bucket count for the calendar backend.
+const MIN_BUCKETS: usize = 16;
+
+/// Bucketed calendar queue core. Buckets stripe virtual time in units of
+/// `width`; bucket `b` holds every event whose `floor(time / width) % n`
+/// is `b`, insertion-sorted by `(time, seq)` so the front of a bucket is
+/// its minimum and equal-time events stay FIFO. `cursor` is the virtual
+/// bucket index (`floor(now / width)`) the pop scan resumes from.
+#[derive(Debug)]
+struct Calendar {
+    buckets: Vec<VecDeque<Scheduled>>,
+    width: f64,
+    cursor: u64,
+    len: usize,
+}
+
+impl Calendar {
+    fn new() -> Calendar {
+        Calendar {
+            buckets: (0..MIN_BUCKETS).map(|_| VecDeque::new()).collect(),
+            width: 1.0,
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    /// Virtual bucket index of a timestamp (times are never negative:
+    /// the clock starts at 0 and pushes are bounded below by `now`).
+    fn vindex(&self, time: f64) -> u64 {
+        // Clamp against f64 -> u64 saturation for pathological widths.
+        (time / self.width).min(9.0e18) as u64
+    }
+
+    fn push(&mut self, s: Scheduled) {
+        if self.len >= self.buckets.len() * 2 {
+            self.resize(self.buckets.len() * 2);
+        }
+        let n = self.buckets.len() as u64;
+        let b = (self.vindex(s.time) % n) as usize;
+        let q = &mut self.buckets[b];
+        // Sorted insert by (time, seq). The engine pushes mostly in
+        // nondecreasing time, so this is an O(1) append in the common
+        // case; partition_point keeps FIFO order for equal timestamps
+        // (earlier seq sorts first).
+        let pos = q.partition_point(|e| e.cmp(&s) == Ordering::Less);
+        q.insert(pos, s);
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<Scheduled> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.buckets.len() as u64;
+        // Scan at most one bucket year from the cursor.
+        for _ in 0..n {
+            let b = (self.cursor % n) as usize;
+            if let Some(front) = self.buckets[b].front() {
+                if self.vindex(front.time) == self.cursor {
+                    let s = self.buckets[b].pop_front().expect("front exists");
+                    self.len -= 1;
+                    self.maybe_shrink();
+                    return Some(s);
+                }
+            }
+            self.cursor += 1;
+        }
+        // Sparse region: jump the cursor straight to the global minimum.
+        // Buckets are sorted, so the minimum is one of the fronts, and
+        // equal-time events always share a bucket (same virtual index),
+        // so the (time, seq) minimum is unique and FIFO is preserved.
+        let min = *self
+            .buckets
+            .iter()
+            .filter_map(|q| q.front())
+            .min()
+            .expect("len > 0 implies a nonempty bucket");
+        self.cursor = self.vindex(min.time);
+        let b = (self.cursor % n) as usize;
+        let s = self.buckets[b].pop_front().expect("min bucket nonempty");
+        debug_assert_eq!(s, min);
+        self.len -= 1;
+        self.maybe_shrink();
+        Some(s)
+    }
+
+    /// Earliest queued entry without removing it. Uses a *local* cursor
+    /// copy: committing a cursor advance here would be unsound, because
+    /// a later push at a time in `[now, min)` (legal — `now` trails the
+    /// last *pop*) would land behind the advanced cursor and be skipped
+    /// by the year scan. Peek therefore never mutates the calendar.
+    fn peek(&self) -> Option<&Scheduled> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.buckets.len() as u64;
+        let mut cursor = self.cursor;
+        for _ in 0..n {
+            let b = (cursor % n) as usize;
+            if let Some(front) = self.buckets[b].front() {
+                if self.vindex(front.time) == cursor {
+                    return Some(front);
+                }
+            }
+            cursor += 1;
+        }
+        self.buckets.iter().filter_map(|q| q.front()).min()
+    }
+
+    fn maybe_shrink(&mut self) {
+        if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 2 {
+            self.resize((self.buckets.len() / 2).max(MIN_BUCKETS));
+        }
+    }
+
+    /// Rebuild with `n_new` buckets, re-estimating the bucket width from
+    /// the queued time span (3x the mean inter-event gap, the classic
+    /// calendar-queue heuristic). Width only affects performance, never
+    /// ordering, so the estimate is deliberately cheap.
+    fn resize(&mut self, n_new: usize) {
+        let drained: Vec<Scheduled> = self.buckets.iter_mut().flat_map(|q| q.drain(..)).collect();
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for s in &drained {
+            lo = lo.min(s.time);
+            hi = hi.max(s.time);
+        }
+        if drained.len() >= 2 && hi > lo {
+            self.width = ((hi - lo) / drained.len() as f64 * 3.0).max(1e-9);
+        }
+        self.buckets = (0..n_new).map(|_| VecDeque::new()).collect();
+        self.len = 0;
+        self.cursor = if drained.is_empty() { self.cursor } else { self.vindex(lo) };
+        for s in drained {
+            // Re-insert without triggering a nested resize: capacity was
+            // just chosen for this population.
+            let n = self.buckets.len() as u64;
+            let b = (self.vindex(s.time) % n) as usize;
+            let q = &mut self.buckets[b];
+            let pos = q.partition_point(|e| e.cmp(&s) == Ordering::Less);
+            q.insert(pos, s);
+            self.len += 1;
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Core {
+    Heap(BinaryHeap<Reverse<Scheduled>>),
+    Calendar(Calendar),
+}
+
+/// Event queue with a monotone virtual clock over a pluggable backend.
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Reverse<Scheduled>>,
+    core: Core,
     next_seq: u64,
     now: f64,
     popped: u64,
 }
 
+impl Default for EventQueue {
+    fn default() -> EventQueue {
+        EventQueue::new()
+    }
+}
+
 impl EventQueue {
+    /// Default queue: the calendar backend.
     pub fn new() -> EventQueue {
-        EventQueue::default()
+        EventQueue::with_kind(QueueKind::Calendar)
+    }
+
+    pub fn with_kind(kind: QueueKind) -> EventQueue {
+        let core = match kind {
+            QueueKind::Heap => Core::Heap(BinaryHeap::new()),
+            QueueKind::Calendar => Core::Calendar(Calendar::new()),
+        };
+        EventQueue { core, next_seq: 0, now: 0.0, popped: 0 }
+    }
+
+    pub fn kind(&self) -> QueueKind {
+        match self.core {
+            Core::Heap(_) => QueueKind::Heap,
+            Core::Calendar(_) => QueueKind::Calendar,
+        }
     }
 
     /// Current virtual time (time of the last popped event).
@@ -112,102 +321,164 @@ impl EventQueue {
         assert!(time >= self.now, "event scheduled in the past: {time} < {}", self.now);
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Reverse(Scheduled { time, seq, event }));
+        let s = Scheduled { time, seq, event };
+        match &mut self.core {
+            Core::Heap(h) => h.push(Reverse(s)),
+            Core::Calendar(c) => c.push(s),
+        }
+    }
+
+    /// Time of the earliest queued event without popping it (the
+    /// windowed executor's lookahead probe). Does not advance the clock.
+    pub fn peek_time(&self) -> Option<f64> {
+        match &self.core {
+            Core::Heap(h) => h.peek().map(|r| r.0.time),
+            Core::Calendar(c) => c.peek().map(|s| s.time),
+        }
     }
 
     /// Pop the earliest event (FIFO among equal timestamps) and advance
     /// the clock to it.
     pub fn pop(&mut self) -> Option<(f64, Event)> {
-        let Reverse(s) = self.heap.pop()?;
+        let s = match &mut self.core {
+            Core::Heap(h) => h.pop()?.0,
+            Core::Calendar(c) => c.pop()?,
+        };
         self.now = s.time;
         self.popped += 1;
         Some((s.time, s.event))
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.core {
+            Core::Heap(h) => h.len(),
+            Core::Calendar(c) => c.len,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::propcheck;
 
     fn ev(fog: usize) -> Event {
         Event::EncodeReady { fog, blob: 0 }
     }
 
+    fn both() -> [EventQueue; 2] {
+        [EventQueue::with_kind(QueueKind::Heap), EventQueue::with_kind(QueueKind::Calendar)]
+    }
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.push(3.0, ev(3));
-        q.push(1.0, ev(1));
-        q.push(2.0, ev(2));
-        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|(_, e)| match e {
-            Event::EncodeReady { fog, .. } => fog,
-            _ => unreachable!(),
-        })
-        .collect();
-        assert_eq!(order, vec![1, 2, 3]);
+        for mut q in both() {
+            q.push(3.0, ev(3));
+            q.push(1.0, ev(1));
+            q.push(2.0, ev(2));
+            let order: Vec<usize> = std::iter::from_fn(|| q.pop())
+                .map(|(_, e)| match e {
+                    Event::EncodeReady { fog, .. } => fog,
+                    _ => unreachable!(),
+                })
+                .collect();
+            assert_eq!(order, vec![1, 2, 3]);
+        }
     }
 
     #[test]
     fn equal_timestamps_pop_fifo() {
         // The satellite requirement: ties resolve in insertion order, so
         // the engine's per-receiver delivery loops stay deterministic.
-        let mut q = EventQueue::new();
-        for i in 0..100 {
-            q.push(5.0, ev(i));
+        for mut q in both() {
+            for i in 0..100 {
+                q.push(5.0, ev(i));
+            }
+            for expect in 0..100 {
+                let (t, e) = q.pop().unwrap();
+                assert_eq!(t, 5.0);
+                assert_eq!(e, ev(expect));
+            }
+            assert!(q.is_empty());
         }
-        for expect in 0..100 {
-            let (t, e) = q.pop().unwrap();
-            assert_eq!(t, 5.0);
-            assert_eq!(e, ev(expect));
-        }
-        assert!(q.is_empty());
     }
 
     #[test]
     fn interleaved_ties_keep_insertion_order() {
-        let mut q = EventQueue::new();
-        q.push(1.0, ev(0));
-        q.push(2.0, ev(10));
-        q.push(2.0, ev(11));
-        q.push(1.0, ev(1));
-        q.push(2.0, ev(12));
-        let got: Vec<(f64, Event)> = std::iter::from_fn(|| q.pop()).collect();
-        let fogs: Vec<usize> = got
-            .iter()
-            .map(|(_, e)| match e {
-                Event::EncodeReady { fog, .. } => *fog,
-                _ => unreachable!(),
-            })
-            .collect();
-        assert_eq!(fogs, vec![0, 1, 10, 11, 12]);
+        for mut q in both() {
+            q.push(1.0, ev(0));
+            q.push(2.0, ev(10));
+            q.push(2.0, ev(11));
+            q.push(1.0, ev(1));
+            q.push(2.0, ev(12));
+            let got: Vec<(f64, Event)> = std::iter::from_fn(|| q.pop()).collect();
+            let fogs: Vec<usize> = got
+                .iter()
+                .map(|(_, e)| match e {
+                    Event::EncodeReady { fog, .. } => *fog,
+                    _ => unreachable!(),
+                })
+                .collect();
+            assert_eq!(fogs, vec![0, 1, 10, 11, 12]);
+        }
+    }
+
+    #[test]
+    fn peek_time_is_nondestructive_and_pushes_below_peek_stay_visible() {
+        for mut q in both() {
+            assert_eq!(q.peek_time(), None);
+            q.push(7.0, ev(0));
+            q.push(3.0, ev(1));
+            assert_eq!(q.peek_time(), Some(3.0));
+            assert_eq!(q.peek_time(), Some(3.0), "peek must not consume");
+            assert_eq!(q.len(), 2);
+            let (t, _) = q.pop().unwrap();
+            assert_eq!(t, 3.0);
+            // The hazard peek must not create: after peeking a sparse
+            // minimum (7.0), a push at a legal earlier time (>= now)
+            // must still surface first. A committed cursor advance in
+            // the calendar would skip it.
+            assert_eq!(q.peek_time(), Some(7.0));
+            q.push(4.0, ev(2));
+            assert_eq!(q.peek_time(), Some(4.0));
+            assert_eq!(q.pop().unwrap().0, 4.0);
+            assert_eq!(q.pop().unwrap().0, 7.0);
+            assert_eq!(q.peek_time(), None);
+        }
     }
 
     #[test]
     fn clock_advances_monotonically() {
-        let mut q = EventQueue::new();
-        q.push(4.0, ev(0));
-        q.push(1.5, ev(1));
-        let (t1, _) = q.pop().unwrap();
-        assert_eq!(q.now(), t1);
-        // New events may be scheduled at or after the clock.
-        q.push(q.now(), ev(2));
-        let (t2, _) = q.pop().unwrap();
-        assert!(t2 >= t1);
-        assert_eq!(q.processed(), 2);
+        for mut q in both() {
+            q.push(4.0, ev(0));
+            q.push(1.5, ev(1));
+            let (t1, _) = q.pop().unwrap();
+            assert_eq!(q.now(), t1);
+            // New events may be scheduled at or after the clock.
+            q.push(q.now(), ev(2));
+            let (t2, _) = q.pop().unwrap();
+            assert!(t2 >= t1);
+            assert_eq!(q.processed(), 2);
+        }
     }
 
     #[test]
     #[should_panic(expected = "scheduled in the past")]
     fn rejects_past_events() {
         let mut q = EventQueue::new();
+        q.push(10.0, ev(0));
+        q.pop();
+        q.push(1.0, ev(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduled in the past")]
+    fn heap_rejects_past_events() {
+        let mut q = EventQueue::with_kind(QueueKind::Heap);
         q.push(10.0, ev(0));
         q.pop();
         q.push(1.0, ev(1));
@@ -226,17 +497,123 @@ mod tests {
     }
 
     #[test]
-    fn boundary_event_at_now_keeps_fifo_order_unclamped() {
-        let mut q = EventQueue::new();
-        q.push(5.0, ev(0));
+    #[should_panic(expected = "scheduled in the past")]
+    fn calendar_rejects_the_formerly_tolerated_past_band() {
+        let mut q = EventQueue::with_kind(QueueKind::Calendar);
+        q.push(10.0, ev(0));
         q.pop();
-        // time == now is the earliest legal slot; it must neither panic
-        // nor be displaced behind later-pushed equal-time events.
-        q.push(5.0, ev(1));
-        q.push(5.0, ev(2));
-        let (t1, e1) = q.pop().unwrap();
-        assert_eq!((t1, e1), (5.0, ev(1)));
-        let (t2, e2) = q.pop().unwrap();
-        assert_eq!((t2, e2), (5.0, ev(2)));
+        q.push(10.0 - 1e-9, ev(1));
+    }
+
+    #[test]
+    fn boundary_event_at_now_keeps_fifo_order_unclamped() {
+        for mut q in both() {
+            q.push(5.0, ev(0));
+            q.pop();
+            // time == now is the earliest legal slot; it must neither panic
+            // nor be displaced behind later-pushed equal-time events.
+            q.push(5.0, ev(1));
+            q.push(5.0, ev(2));
+            let (t1, e1) = q.pop().unwrap();
+            assert_eq!((t1, e1), (5.0, ev(1)));
+            let (t2, e2) = q.pop().unwrap();
+            assert_eq!((t2, e2), (5.0, ev(2)));
+        }
+    }
+
+    #[test]
+    fn calendar_survives_resize_and_sparse_jumps() {
+        let mut q = EventQueue::with_kind(QueueKind::Calendar);
+        // Dense burst (forces growth), then a sparse far-future tail
+        // (forces the direct-minimum fallback after a full-year scan).
+        for i in 0..200 {
+            q.push(1.0 + (i % 7) as f64 * 1e-6, ev(i));
+        }
+        q.push(1e6, ev(900));
+        q.push(2e6, ev(901));
+        let mut last = (0.0, 0);
+        let mut n = 0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t.total_cmp(&last.0) != Ordering::Less, "time went backwards");
+            last = (t, n);
+            n += 1;
+        }
+        assert_eq!(n, 202);
+        assert_eq!(q.processed(), 202);
+    }
+
+    /// Property: on a random interleaved workload of pushes and pops,
+    /// the calendar queue and the legacy heap pop the exact same
+    /// `(time, event)` sequence — same order, same ties, same clock.
+    #[test]
+    fn prop_calendar_matches_heap_on_random_workloads() {
+        propcheck::check("calendar-equals-heap", |rng| {
+            let mut heap = EventQueue::with_kind(QueueKind::Heap);
+            let mut cal = EventQueue::with_kind(QueueKind::Calendar);
+            let mut traced: Vec<(f64, Event)> = Vec::new();
+            for step in 0..300 {
+                let do_pop = !heap.is_empty() && rng.chance(0.4);
+                if do_pop {
+                    let a = heap.pop();
+                    let b = cal.pop();
+                    assert_eq!(a, b, "pop diverged at step {step}");
+                    traced.push(a.unwrap());
+                    assert_eq!(heap.now().to_bits(), cal.now().to_bits());
+                } else {
+                    // Times cluster around a few horizons so equal
+                    // timestamps (FIFO ties) are common, plus occasional
+                    // far-future outliers to exercise sparse scans.
+                    let base = heap.now();
+                    let t = if rng.chance(0.1) {
+                        base + rng.range_f32(100.0, 10_000.0) as f64
+                    } else {
+                        base + (rng.below(4) as f64) * 0.5
+                    };
+                    let e = ev(step);
+                    heap.push(t, e);
+                    cal.push(t, e);
+                }
+                assert_eq!(heap.len(), cal.len());
+            }
+            // Drain: remaining events must agree to the last tie.
+            loop {
+                let a = heap.pop();
+                let b = cal.pop();
+                assert_eq!(a, b);
+                if a.is_none() {
+                    break;
+                }
+                traced.push(a.unwrap());
+            }
+            for w in traced.windows(2) {
+                assert!(w[0].0 <= w[1].0, "popped times must be nondecreasing");
+            }
+        });
+    }
+
+    /// Property: both backends enforce the exact `time >= now` boundary —
+    /// any push even one ULP into the past panics on each.
+    #[test]
+    fn prop_past_rejection_is_exact_on_both_backends() {
+        // Silence the default panic-hook spam from the expected panics.
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        propcheck::check("past-boundary-exact", |rng| {
+            for kind in [QueueKind::Heap, QueueKind::Calendar] {
+                let mut q = EventQueue::with_kind(kind);
+                let t = 1.0 + rng.range_f32(0.0, 100.0) as f64;
+                q.push(t, ev(0));
+                q.pop();
+                // The boundary slot itself is legal...
+                q.push(t, ev(1));
+                // ...but the largest representable time below it is not.
+                let past = f64::from_bits(t.to_bits() - 1);
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    q.push(past, ev(2));
+                }));
+                assert!(r.is_err(), "past push must panic on {kind:?}");
+            }
+        });
+        std::panic::set_hook(hook);
     }
 }

@@ -152,6 +152,25 @@ impl Link {
         self.ch.transmit(now, bytes, tag)
     }
 
+    /// Aggregate (expectation-valued) transmit: charge the channel
+    /// `transfers` logical copies totalling `total_bytes` over a
+    /// closed-form `airtime`, without consulting the loss RNG. This is
+    /// the [`crate::fleet::aggregate`] primitive — the per-receiver
+    /// Bernoulli draws are replaced by their expectation, so the link's
+    /// RNG stream is left untouched and small-cell exact runs sharing
+    /// the seed stay reproducible.
+    pub fn transmit_agg(
+        &mut self,
+        now: f64,
+        transfers: u64,
+        total_bytes: u64,
+        tag: &'static str,
+        class: TxClass,
+        airtime: f64,
+    ) -> f64 {
+        self.ch.transmit_agg(now, transfers, total_bytes, tag, class, airtime)
+    }
+
     /// Point-to-point stop-and-wait ARQ: transmit, and on each loss
     /// retransmit (repair-class) until the receiver holds the payload.
     /// The first copy is delivered-class under `tag`; `fog`/`edge`/
@@ -398,6 +417,26 @@ pub fn expected_multicast_airtime(
     let a = latency + bytes as f64 / bandwidth;
     let a_ctl = latency + CONTROL_BYTES as f64 / bandwidth;
     expected_shared_transmissions(n, p) * a + n as f64 * p / (1.0 - p) * a_ctl
+}
+
+/// Expected cell airtime for the receiver-pull discipline: `n` pull
+/// requests plus one shared response, then per-receiver re-request
+/// repair — each receiver misses `p/(1-p)` times in expectation, and
+/// every miss costs one control frame plus one dedicated payload
+/// retransmission (pull forgoes coordinated shared repair).
+pub fn expected_pull_airtime(
+    n: usize,
+    bytes: u64,
+    request_bytes: u64,
+    p: f64,
+    bandwidth: f64,
+    latency: f64,
+) -> f64 {
+    let a = latency + bytes as f64 / bandwidth;
+    let a_req = latency + request_bytes as f64 / bandwidth;
+    let a_ctl = latency + CONTROL_BYTES as f64 / bandwidth;
+    let misses = n as f64 * p / (1.0 - p);
+    n as f64 * a_req + a + misses * (a_ctl + a)
 }
 
 /// The `auto` policy's per-blob decision: share the cell airtime iff

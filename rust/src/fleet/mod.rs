@@ -6,7 +6,16 @@
 //! subsystem scales the communication story to many fog cells and
 //! hundreds–thousands of edge devices with a proper simulation engine:
 //!
-//! * [`events`] — virtual-time event queue (typed events, FIFO ties);
+//! * [`events`] — virtual-time event queue (typed events, FIFO ties)
+//!   over a pluggable backend: a Brown calendar queue (O(1) amortized
+//!   hold operations, the scale default) or the legacy binary heap,
+//!   property-tested against each other for identical pop order;
+//! * [`aggregate`] — aggregate cell mode: above a receiver-count
+//!   threshold (`--cell-mode auto:<n>`, default
+//!   [`DEFAULT_AGGREGATE_THRESHOLD`]) a whole (blob, cell) multicast
+//!   round collapses into one macro transaction priced by the
+//!   closed-form expectations in [`link`], turning O(receivers) events
+//!   into O(1) while keeping byte totals identical at `loss = 0`;
 //! * [`channel`] — contention-aware FIFO channels (one per wireless
 //!   cell, plus per-fog backhaul links), so cells overlap in time, with
 //!   delivered vs repair vs control byte classes and goodput-vs-raw
@@ -42,7 +51,12 @@
 //!   and per-fog backhaul bandwidth overrides; virtual-time prices come
 //!   from a [`crate::costmodel::CostBook`] (calibrated against live
 //!   PJRT timing, or analytical), never from hard-coded constants;
-//! * [`engine`] — the event loop tying it together;
+//! * [`engine`] — the event loop tying it together, with two
+//!   executors: the sequential global-queue loop (exact oracle, churn,
+//!   single-fog) and a conservative windowed parallel executor
+//!   (`--threads N`) that advances per-fog queues on worker threads
+//!   inside a backhaul-latency lookahead window, deterministically for
+//!   every thread count;
 //! * [`report`] — per-fog and fleet-wide reports (including which cost
 //!   model priced the run).
 //!
@@ -51,6 +65,7 @@
 //! [`crate::commmodel`] predictions); multi-fog runs add what the legacy
 //! path cannot express: timeline overlap, queueing, and cache dedup.
 
+pub mod aggregate;
 pub mod cache;
 pub mod channel;
 pub mod engine;
@@ -62,10 +77,11 @@ pub mod scenario;
 pub mod traffic;
 pub mod workers;
 
+pub use aggregate::{CellSimMode, DEFAULT_AGGREGATE_THRESHOLD};
 pub use cache::{blob_hash, CacheStats, WeightCache};
 pub use channel::{Channel, TxClass};
 pub use engine::{model_fleet_shards, run, simulate};
-pub use events::{Event, EventQueue};
+pub use events::{Event, EventQueue, QueueKind};
 pub use link::Link;
 pub use policy::{CellMode, RebroadcastPolicy};
 pub use report::{FleetReport, FogReport};

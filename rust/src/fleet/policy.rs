@@ -137,6 +137,23 @@ impl RebroadcastPolicy {
         matches!(self, RebroadcastPolicy::ReceiverPull)
     }
 
+    /// The per-blob backhaul-leg decision: push eagerly along the
+    /// spanning tree, or let remote fogs fetch lazily on first demand?
+    /// [`MulticastTree`](Self::MulticastTree) always pushes;
+    /// [`Auto`](Self::Auto) pushes iff the tree's expected backhaul
+    /// airtime (computed by the engine from [`super::link::relay_plan`]
+    /// and the per-fog bandwidths, same `expected_*` algebra as the cell
+    /// decision) strictly beats the lazy fetch expectation — a tie keeps
+    /// the lazy leg, so uniform-backhaul fleets are unchanged. Everything
+    /// else always fetches lazily.
+    pub fn backhaul_eager(&self, tree_airtime: f64, lazy_airtime: f64) -> bool {
+        match self {
+            RebroadcastPolicy::MulticastTree => true,
+            RebroadcastPolicy::Auto => tree_airtime < lazy_airtime,
+            _ => false,
+        }
+    }
+
     /// The link transaction one cell leg runs under this policy, for a
     /// cell with `n_active` receivers, a `bytes`-sized blob, and the
     /// cell's loss/bandwidth/latency. Static for every policy except
@@ -194,6 +211,20 @@ mod tests {
         assert!(Auto.shares_cell_airtime(), "auto materializes once per cell");
         assert!(!Auto.pushes_backhaul_tree());
         assert!(!Auto.pulls());
+    }
+
+    #[test]
+    fn backhaul_leg_decision_per_policy() {
+        use RebroadcastPolicy::*;
+        // Tree always pushes, unicast/multicast/pull never do, and auto
+        // compares expectations with a tie going to the lazy fetch.
+        assert!(MulticastTree.backhaul_eager(5.0, 1.0));
+        assert!(!Unicast.backhaul_eager(1.0, 5.0));
+        assert!(!CellMulticast.backhaul_eager(1.0, 5.0));
+        assert!(!ReceiverPull.backhaul_eager(1.0, 5.0));
+        assert!(Auto.backhaul_eager(1.0, 5.0));
+        assert!(!Auto.backhaul_eager(5.0, 1.0));
+        assert!(!Auto.backhaul_eager(3.0, 3.0), "tie keeps the lazy leg");
     }
 
     #[test]

@@ -56,6 +56,12 @@ pub struct FleetReport {
     pub topology: &'static str,
     /// Re-broadcast policy the run was delivered under.
     pub policy: &'static str,
+    /// Cell simulation mode the run executed under (`exact`,
+    /// `aggregate`, or `auto:<threshold>`); see
+    /// [`super::CellSimMode`].
+    pub cell_mode: String,
+    /// Worker threads the engine ran with (0 = sequential executor).
+    pub threads: usize,
     pub method: String,
     pub n_fogs: usize,
     pub n_edges: usize,
@@ -163,10 +169,13 @@ impl FleetReport {
 
     pub fn print(&self) {
         println!(
-            "# fleet scenario={} topology={} policy={} method={} fogs={} edges={} receivers={}",
-            self.scenario, self.topology, self.policy, self.method, self.n_fogs, self.n_edges,
-            self.n_receivers
+            "# fleet scenario={} topology={} policy={} cell-mode={} method={} fogs={} edges={} receivers={}",
+            self.scenario, self.topology, self.policy, self.cell_mode, self.method, self.n_fogs,
+            self.n_edges, self.n_receivers
         );
+        if self.threads > 0 {
+            println!("engine threads           : {}", self.threads);
+        }
         if self.loss_cell > 0.0 || self.loss_backhaul > 0.0 {
             println!(
                 "link loss (cell/backhaul): {:.1}% / {:.1}%",

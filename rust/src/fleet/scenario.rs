@@ -25,6 +25,7 @@ use crate::coordinator::{EncoderConfig, Method};
 use crate::costmodel::CostBook;
 use crate::data::Profile;
 
+use super::aggregate::CellSimMode;
 use super::policy::RebroadcastPolicy;
 
 /// How fog cells share encoded blobs.
@@ -151,6 +152,16 @@ pub struct FleetConfig {
     /// chain; heterogeneous ones switch it to the bandwidth-weighted
     /// tree ([`crate::fleet::link::relay_plan`]).
     pub backhaul_bandwidths: Option<Vec<f64>>,
+    /// Cell simulation mode (`--cell-mode`): exact per-receiver events,
+    /// closed-form aggregate cell rounds, or a population-threshold
+    /// auto switch ([`CellSimMode::default`]). Small cells stay exact
+    /// under the default, so legacy configs are unchanged.
+    pub cell_sim: CellSimMode,
+    /// Worker threads for the windowed parallel executor (`--threads`).
+    /// `0` (the default) runs the legacy sequential global event loop;
+    /// `N >= 1` runs per-fog event loops under conservative-lookahead
+    /// windows — results are bit-identical for every `N >= 1`.
+    pub threads: usize,
 }
 
 impl FleetConfig {
@@ -185,6 +196,8 @@ impl FleetConfig {
             loss_backhaul: 0.0,
             joins: Vec::new(),
             backhaul_bandwidths: None,
+            cell_sim: CellSimMode::default(),
+            threads: 0,
         }
     }
 
@@ -441,6 +454,10 @@ mod tests {
         assert!(fc.joins.is_empty());
         assert!(fc.backhaul_bandwidths.is_none());
         assert_eq!(fc.backhaul_bandwidth_of(0), fc.backhaul_bandwidth);
+        // Small cells stay on the exact path under the default cell-sim
+        // mode, and the legacy sequential executor is the default.
+        assert!(!fc.cell_sim.aggregates(fc.n_edges));
+        assert_eq!(fc.threads, 0);
     }
 
     #[test]

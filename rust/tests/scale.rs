@@ -1,0 +1,195 @@
+//! Aggregate-cell engine integration: the scale-mode accuracy contract.
+//!
+//! `--cell-mode aggregate` collapses every (blob, cell) round into one
+//! closed-form macro transaction. Its contract, asserted here over the
+//! *real* modeled shard streams on all three topologies:
+//!
+//! * at `loss = 0`, every delivered-class byte total is identical to
+//!   the exact per-receiver oracle;
+//! * under loss, repair/control traffic is the closed-form expectation,
+//!   within a documented relative error of one seeded exact draw;
+//! * event counts stop scaling with the receiver population, which is
+//!   what makes 10^5–10^6-edge fleets simulable at all;
+//! * the windowed parallel executor (`--threads N`) returns
+//!   bit-identical reports for every `N >= 1`.
+//!
+//! Everything is session-free (zero-weight packed records).
+
+use residual_inr::config::ArchConfig;
+use residual_inr::coordinator::{EncoderConfig, Method};
+use residual_inr::costmodel::{Analytical, CostBook, CostModel};
+use residual_inr::data::Profile;
+use residual_inr::fleet::{self, CellSimMode, FleetConfig, FleetReport};
+
+fn cfg() -> ArchConfig {
+    ArchConfig::load_default().unwrap()
+}
+
+fn costs(m: Method) -> CostBook {
+    Analytical::new(&cfg(), Profile::DacSdc, m, &EncoderConfig::fast()).book()
+}
+
+/// Run one scenario under a given cell-sim mode over its real modeled
+/// shard stream.
+fn run_mode(scenario: &str, mode: CellSimMode, loss: f64) -> FleetReport {
+    let cfg = cfg();
+    let m = Method::ResRapid { direct: false };
+    let mut fc = FleetConfig::from_scenario(scenario, m, costs(m)).unwrap();
+    fc.max_frames = Some(8); // keep the exact oracle cheap
+    fc.cell_sim = mode;
+    fc.loss_cell = loss;
+    fc.loss_backhaul = loss;
+    fleet::run(&cfg, &fc).unwrap()
+}
+
+/// The tentpole acceptance: byte-for-byte parity at `loss = 0` between
+/// the exact oracle and the aggregate expectation, on every topology.
+#[test]
+fn aggregate_matches_exact_byte_totals_at_loss_zero_on_all_topologies() {
+    for scenario in ["paper-10", "sharded", "hierarchical"] {
+        let exact = run_mode(scenario, CellSimMode::Exact, 0.0);
+        let agg = run_mode(scenario, CellSimMode::Aggregate, 0.0);
+        assert_eq!(agg.upload_bytes, exact.upload_bytes, "{scenario}: uploads");
+        assert_eq!(agg.broadcast_bytes, exact.broadcast_bytes, "{scenario}: broadcast");
+        assert_eq!(agg.label_bytes, exact.label_bytes, "{scenario}: labels");
+        assert_eq!(agg.backhaul_bytes, exact.backhaul_bytes, "{scenario}: backhaul");
+        assert_eq!(agg.total_bytes, exact.total_bytes, "{scenario}: total");
+        // Clean runs leave no reliability-layer residue in either mode.
+        assert_eq!(agg.repair_bytes, 0, "{scenario}");
+        assert_eq!(agg.control_bytes, 0, "{scenario}");
+        assert_eq!(agg.lost_frames, 0, "{scenario}");
+        // The whole point: macro events replace per-receiver events.
+        assert!(
+            agg.events < exact.events,
+            "{scenario}: aggregate {} events vs exact {}",
+            agg.events,
+            exact.events
+        );
+        // Every cohort still finishes fine-tuning.
+        for f in &agg.fogs {
+            if f.receivers > 0 {
+                assert!(f.trained_at > 0.0, "{scenario}: fog {} untrained", f.fog);
+            }
+        }
+    }
+}
+
+/// Under loss the aggregate run charges the closed-form expectation;
+/// one seeded exact draw must land within the documented error band.
+#[test]
+fn aggregate_repair_expectation_tracks_the_exact_draw_under_loss() {
+    let p = 0.15;
+    let cfg = cfg();
+    let m = Method::ResRapid { direct: false };
+    let run_lossy = |mode: CellSimMode| {
+        let mut fc = FleetConfig::from_scenario("sharded", m, costs(m)).unwrap();
+        fc.max_frames = Some(8);
+        // Multicast legs: the airtime-saved expectation is a large
+        // positive quantity in both modes, so relative error is
+        // meaningful (under unicast both net ~0 and the ratio is noise).
+        fc.policy = residual_inr::fleet::RebroadcastPolicy::CellMulticast;
+        fc.cell_sim = mode;
+        fc.loss_cell = p;
+        fc.loss_backhaul = p;
+        fleet::run(&cfg, &fc).unwrap()
+    };
+    let exact = run_lossy(CellSimMode::Exact);
+    let agg = run_lossy(CellSimMode::Aggregate);
+    // Delivered-class totals stay loss-invariant in both modes, so they
+    // still agree exactly.
+    assert_eq!(agg.total_bytes, exact.total_bytes);
+    assert_eq!(agg.broadcast_bytes, exact.broadcast_bytes);
+    // Repair traffic: expectation vs draw. The sharded scenario airs
+    // thousands of Bernoulli(0.15) receptions, so the draw concentrates
+    // within 20% of the expectation (documented contract; the engine
+    // test covers the per-leg arithmetic at tighter tolerance).
+    assert!(exact.repair_bytes > 0 && agg.repair_bytes > 0);
+    let rel = (agg.repair_bytes as f64 - exact.repair_bytes as f64).abs()
+        / exact.repair_bytes as f64;
+    assert!(
+        rel < 0.20,
+        "relative repair error {rel:.3} (aggregate {} vs exact {})",
+        agg.repair_bytes,
+        exact.repair_bytes
+    );
+    // Airtime-saved is an expectation too: same sign and magnitude band.
+    let denom = exact.airtime_saved_seconds.abs().max(1e-9);
+    let rel_air = (agg.airtime_saved_seconds - exact.airtime_saved_seconds).abs() / denom;
+    assert!(
+        rel_air < 0.20,
+        "relative airtime-saved error {rel_air:.3} (aggregate {} vs exact {})",
+        agg.airtime_saved_seconds,
+        exact.airtime_saved_seconds
+    );
+}
+
+/// The scaling smoke: a 100 000-edge fleet in aggregate mode completes
+/// with an event count that scales with blobs, not receivers.
+#[test]
+fn hundred_thousand_edges_simulate_in_aggregate_mode() {
+    let cfg = cfg();
+    let m = Method::ResRapid { direct: false };
+    let mut fc = FleetConfig::from_scenario("sharded", m, costs(m)).unwrap();
+    fc.n_edges = 100_000;
+    fc.max_frames = Some(8);
+    fc.cell_sim = CellSimMode::Aggregate;
+    let r = fleet::run(&cfg, &fc).unwrap();
+    assert_eq!(r.n_edges, 100_000);
+    assert!(r.makespan_seconds > 0.0);
+    assert!(r.total_bytes > 0);
+    // 99 996 receivers, yet the timeline holds only macro events: well
+    // under one event per hundred receivers.
+    assert!(
+        r.events < 1_000,
+        "aggregate event count must not scale with receivers: {}",
+        r.events
+    );
+    for f in &r.fogs {
+        assert!(f.trained_at > 0.0, "fog {} cohort untrained", f.fog);
+    }
+}
+
+/// Auto mode is the oracle-or-expectation switch: per-cell population
+/// decides, and the default threshold keeps the paper's 10-edge cell on
+/// the exact path.
+#[test]
+fn auto_mode_switches_on_the_population_threshold() {
+    let small = run_mode("paper-10", CellSimMode::default(), 0.0);
+    let exact = run_mode("paper-10", CellSimMode::Exact, 0.0);
+    assert_eq!(small.events, exact.events, "10 edges stay exact under auto");
+    assert_eq!(small.total_bytes, exact.total_bytes);
+
+    let flipped = run_mode("paper-10", CellSimMode::Auto { threshold: 2 }, 0.0);
+    let agg = run_mode("paper-10", CellSimMode::Aggregate, 0.0);
+    assert_eq!(flipped.events, agg.events, "threshold 2 aggregates a 9-receiver cell");
+    assert_eq!(flipped.total_bytes, exact.total_bytes);
+}
+
+/// The windowed parallel executor: same report, bit for bit, for every
+/// worker count, and the same delivered bytes as the sequential oracle.
+#[test]
+fn windowed_executor_reports_are_bit_identical_across_thread_counts() {
+    let cfg = cfg();
+    let m = Method::ResRapid { direct: false };
+    let run = |threads: usize| {
+        let mut fc = FleetConfig::from_scenario("sharded", m, costs(m)).unwrap();
+        fc.max_frames = Some(8);
+        fc.threads = threads;
+        fleet::run(&cfg, &fc).unwrap()
+    };
+    let seq = run(0);
+    let r1 = run(1);
+    let r4 = run(4);
+    assert_eq!(r1.total_bytes, seq.total_bytes);
+    assert_eq!(r1.backhaul_bytes, seq.backhaul_bytes);
+    assert_eq!(r1.events, seq.events);
+    assert_eq!(r4.total_bytes, r1.total_bytes);
+    assert_eq!(r4.events, r1.events);
+    assert_eq!(r4.makespan_seconds.to_bits(), r1.makespan_seconds.to_bits());
+    assert_eq!(r4.airtime_saved_seconds.to_bits(), r1.airtime_saved_seconds.to_bits());
+    for (a, b) in r4.fogs.iter().zip(r1.fogs.iter()) {
+        assert_eq!(a.cell_bytes, b.cell_bytes);
+        assert_eq!(a.backhaul_bytes, b.backhaul_bytes);
+        assert_eq!(a.trained_at.to_bits(), b.trained_at.to_bits());
+    }
+}
