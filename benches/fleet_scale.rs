@@ -10,7 +10,10 @@
 //! policy's repair/control overhead and goodput under its own repair
 //! discipline (ARQ vs NACK rounds vs re-request), and a scaling curve
 //! (10^3–10^6 edges, exact oracle vs `--cell-mode aggregate`) recording
-//! engine wall-clock, event throughput and the aggregate speedup.
+//! engine wall-clock, event throughput and the aggregate speedup, and a
+//! streaming section (Poisson arrivals over a finite horizon with one
+//! handover and one fog failure) recording staleness percentiles,
+//! deadline-miss/drop rates and goodput.
 //!
 //! This extends Fig 8 from analytical totals to a simulated timeline:
 //! the byte curves reproduce the §4 model (fog+INR grows with slope
@@ -31,7 +34,10 @@ use residual_inr::config::ArchConfig;
 use residual_inr::coordinator::{EncoderConfig, Method};
 use residual_inr::costmodel;
 use residual_inr::data::Profile;
-use residual_inr::fleet::{self, CellSimMode, FleetConfig, FleetReport, RebroadcastPolicy};
+use residual_inr::fleet::{
+    self, ArrivalSpec, CellSimMode, FailSpec, FleetConfig, FleetReport, HandoverSpec,
+    RebroadcastPolicy, StreamConfig,
+};
 use residual_inr::util::fmt_bytes;
 use residual_inr::util::json::Json;
 
@@ -326,6 +332,64 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
+    // Streaming workloads: the same sharded fleet run as a steady-state
+    // stream (Poisson arrivals over a finite horizon) instead of a batch
+    // replay, with one mid-run handover and one fog failure. The rows
+    // track the freshness metrics batch mode cannot express: staleness
+    // percentiles, deadline-miss and drop rates, and goodput over the
+    // horizon — at the paper scale on the exact oracle and at 10^5 edges
+    // on aggregate cells.
+    println!("\n== streaming: poisson:2 over 20 s, handover + fog failure, 0.5 s deadline ==");
+    let mut t = Table::new(&[
+        "edges", "mode", "offered", "delivered", "p50 stale (s)", "p99 stale (s)", "miss%",
+        "drop%", "goodput (B/s)",
+    ]);
+    let mut stream_rows = Vec::new();
+    for (edges, mode) in [(200usize, CellSimMode::Exact), (100_000, CellSimMode::Aggregate)] {
+        let mut fc = FleetConfig::from_scenario("sharded", method, costs)?;
+        fc.max_frames = Some(frames);
+        fc.encode_workers = workers;
+        fc.n_edges = edges;
+        fc.cell_sim = mode;
+        fc.stream = Some(StreamConfig {
+            arrivals: ArrivalSpec::Poisson { rate: 2.0 },
+            horizon: 20.0,
+            deadline: Some(0.5),
+        });
+        fc.handovers = vec![HandoverSpec { from: 0, to: 2, at: 5.0 }];
+        fc.fail = Some(FailSpec { fog: 1, at: 10.0 });
+        let t0 = std::time::Instant::now();
+        let r = fleet::simulate(&fc, sweep_shards.clone());
+        let wall = t0.elapsed().as_secs_f64();
+        t.row(&[
+            edges.to_string(),
+            r.cell_mode.clone(),
+            r.frames_offered.to_string(),
+            r.stream_deliveries.to_string(),
+            format!("{:.3}", r.staleness_p50_seconds),
+            format!("{:.3}", r.staleness_p99_seconds),
+            format!("{:.1}%", 100.0 * r.deadline_miss_rate()),
+            format!("{:.1}%", 100.0 * r.drop_rate()),
+            format!("{:.0}", r.stream_goodput_bytes_per_second()),
+        ]);
+        stream_rows.push(Json::obj(vec![
+            ("edges", Json::Num(edges as f64)),
+            ("cell_mode", Json::Str(r.cell_mode.clone())),
+            ("arrivals", Json::Str(r.arrivals.clone())),
+            ("horizon_seconds", Json::Num(r.horizon_seconds)),
+            ("frames_offered", Json::Num(r.frames_offered as f64)),
+            ("stream_deliveries", Json::Num(r.stream_deliveries as f64)),
+            ("frames_dropped", Json::Num(r.frames_dropped as f64)),
+            ("staleness_p50_seconds", Json::Num(r.staleness_p50_seconds)),
+            ("staleness_p99_seconds", Json::Num(r.staleness_p99_seconds)),
+            ("deadline_miss_rate", Json::Num(r.deadline_miss_rate())),
+            ("drop_rate", Json::Num(r.drop_rate())),
+            ("goodput_bytes_per_second", Json::Num(r.stream_goodput_bytes_per_second())),
+            ("engine_wall_seconds", Json::Num(wall)),
+        ]));
+    }
+    t.print();
+
     println!("\n== reduction vs serverless JPEG (paper Fig 8 regime) ==");
     let mut t = Table::new(&["devices", "rapid", "res-rapid"]);
     let mut reductions = Vec::new();
@@ -364,6 +428,7 @@ fn main() -> anyhow::Result<()> {
         ("policy_sweep", Json::Arr(policy_rows)),
         ("loss_sweep", Json::Arr(loss_rows)),
         ("scaling_curve", Json::Arr(scaling_rows)),
+        ("streaming", Json::Arr(stream_rows)),
         ("reduction_vs_jpeg", Json::Arr(reductions)),
     ]);
     let out = residual_inr::config::find_repo_file("Cargo.toml")

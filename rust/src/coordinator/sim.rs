@@ -615,7 +615,12 @@ pub struct MultiFogConfig {
     /// keeps measured-pipeline cells exact.
     pub cell_sim: CellSimMode,
     /// Worker threads for the fleet adaptation's windowed parallel
-    /// executor (`--threads`; `0` = sequential).
+    /// executor (`--threads`; `0` = sequential). Since the join-aware
+    /// lookahead landed, churn no longer forces the sequential
+    /// fallback: scheduled fleet mutations pin the window and apply at
+    /// barriers. Streaming workloads (`fleet --arrivals`) are synthetic
+    /// fleet-only runs, so the measured pipeline carries no stream
+    /// knobs here.
     pub threads: usize,
 }
 

@@ -111,6 +111,29 @@ impl CellSimMode {
     }
 }
 
+/// Per-cohort delivery bookkeeping for a statically aggregated cell.
+///
+/// The exact engine tracks `received[]` / `last_rx[]` / `trained_at[]`
+/// per receiver. In an aggregated cell every active receiver advances
+/// in lockstep — each macro leg delivers to the whole cohort at one
+/// finish time — so the engine walked `n` identical array slots per
+/// macro leg and, worse, kept three `O(n)` arrays alive per fog: at
+/// 10^7 edges that is the memory scaling aggregate mode exists to
+/// remove. A fog whose cohort is provably homogeneous for the whole
+/// run (aggregate mode from the first leg, no churn, no handover, no
+/// failure — see the engine's eligibility test) carries one of these
+/// instead of the arrays: `O(1)` state, `O(1)` work per macro leg, and
+/// bit-identical results to the per-receiver walk it replaces.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CohortCounters {
+    /// Blobs every cohort member has received so far.
+    pub received: usize,
+    /// Finish time of the cohort's latest macro delivery.
+    pub last_rx: f64,
+    /// Virtual time the cohort finished fine-tuning (0 until trained).
+    pub trained_at: f64,
+}
+
 /// Outcome of one aggregate cell leg: the macro counterpart of
 /// [`link::LegOutcome`], with the virtual time the whole cohort holds
 /// the payload. Reliability counters are rounded expectations.

@@ -68,6 +68,20 @@ pub enum Event {
     /// A receiver joined its cell mid-run (churn); the engine replays
     /// everything already delivered from the fog's cache.
     ReceiverJoin { fog: usize, edge: usize },
+    /// A streaming frame arrived at `fog`'s source (`fleet::stream`):
+    /// `frame` is the fog-local arrival index, which doubles as the
+    /// streamed blob id (its content template cycles the shard's blob
+    /// list). Only emitted when `FleetConfig::stream` is set.
+    FrameArrival { fog: usize, frame: usize },
+    /// Device mobility: the most recently attached active receiver of
+    /// `from` departs its cell and joins `to`, catching up from `to`'s
+    /// cache (streaming runs only).
+    Handover { from: usize, to: usize },
+    /// Fog failure: `fog` stops encoding and forwarding; its pending
+    /// frames drop and its receivers orphan, then re-attach to the
+    /// surviving fog with the lowest expected backhaul airtime
+    /// (streaming runs only).
+    FogFail { fog: usize },
 }
 
 /// An event scheduled at a virtual time with a FIFO tie-break sequence.

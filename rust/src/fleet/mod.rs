@@ -51,12 +51,21 @@
 //!   and per-fog backhaul bandwidth overrides; virtual-time prices come
 //!   from a [`crate::costmodel::CostBook`] (calibrated against live
 //!   PJRT timing, or analytical), never from hard-coded constants;
+//! * [`stream`] — steady-state streaming workloads (`--arrivals`,
+//!   `--horizon`): seeded Poisson / diurnal frame arrival processes per
+//!   fog, device mobility (`--handover`), fog failure with re-election
+//!   (`--fail fog:t`), freshness deadlines (`--deadline`), and the
+//!   constant-memory staleness quantile sketch behind the p50/p99
+//!   report lines. With streaming off, the batch path is byte-identical
+//!   to every pre-streaming anchor;
 //! * [`engine`] — the event loop tying it together, with two
-//!   executors: the sequential global-queue loop (exact oracle, churn,
+//!   executors: the sequential global-queue loop (exact oracle,
 //!   single-fog) and a conservative windowed parallel executor
 //!   (`--threads N`) that advances per-fog queues on worker threads
 //!   inside a backhaul-latency lookahead window, deterministically for
-//!   every thread count;
+//!   every thread count. Fleet mutations (churn joins, handovers, fog
+//!   failure) are global events that pin the lookahead window and apply
+//!   at barriers, so churn and streaming parallelize too;
 //! * [`report`] — per-fog and fleet-wide reports (including which cost
 //!   model priced the run).
 //!
@@ -74,6 +83,7 @@ pub mod link;
 pub mod policy;
 pub mod report;
 pub mod scenario;
+pub mod stream;
 pub mod traffic;
 pub mod workers;
 
@@ -86,5 +96,6 @@ pub use link::Link;
 pub use policy::{CellMode, RebroadcastPolicy};
 pub use report::{FleetReport, FogReport};
 pub use scenario::{FleetConfig, JoinSpec, Topology};
+pub use stream::{ArrivalSpec, FailSpec, HandoverSpec, QuantileSketch, StreamConfig};
 pub use traffic::{model_shard, Blob, ShardTraffic};
 pub use workers::WorkerPool;

@@ -39,6 +39,12 @@
 //! The engine additionally tracks the airtime a policy saves relative
 //! to the *expected* per-receiver-ARQ baseline.
 //!
+//! Streaming runs ([`super::stream`], `--arrivals`) deliver each
+//! streamed frame through the same policy legs; the policies need no
+//! streaming-specific code because they shape *how* a blob crosses a
+//! cell, while streaming only changes *when* blobs exist and what the
+//! report measures about their delivery (staleness, not makespan).
+//!
 //! [`Unicast`]: RebroadcastPolicy::Unicast
 //! [`CellMulticast`]: RebroadcastPolicy::CellMulticast
 //! [`MulticastTree`]: RebroadcastPolicy::MulticastTree

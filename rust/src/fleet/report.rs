@@ -47,6 +47,14 @@ pub struct FogReport {
     pub last_delivery: f64,
     /// Last receiver in this cell to finish fine-tuning.
     pub trained_at: f64,
+    /// Receivers that left this cell mid-run (handover departures plus
+    /// fog-failure orphans).
+    pub departed: usize,
+    /// Streaming: frames the arrival process offered this fog's source.
+    pub offered: u64,
+    /// Streaming: delivery opportunities voided (failed-fog frames,
+    /// in-flight copies to departed receivers, unsalvageable catch-up).
+    pub dropped: u64,
 }
 
 /// Fleet-wide results (the `residual-inr fleet` output).
@@ -124,6 +132,29 @@ pub struct FleetReport {
     /// method-fair.
     pub relay: CacheStats,
     pub events: u64,
+    // Streaming workloads (`--arrivals`/`--horizon`; all zero/empty on
+    // batch runs).
+    /// Stream horizon in simulated seconds (0 = batch run).
+    pub horizon_seconds: f64,
+    /// Arrival process name (`poisson` / `diurnal`; empty on batch).
+    pub arrivals: String,
+    /// Freshness deadline (0 = none configured).
+    pub deadline_seconds: f64,
+    /// Frames the arrival processes offered across all fog sources.
+    pub frames_offered: u64,
+    /// Per-receiver streamed frame deliveries (cohort-weighted).
+    pub stream_deliveries: u64,
+    /// Delivery opportunities voided: frames at failed fogs, in-flight
+    /// copies to departed receivers, unsalvageable catch-up entries.
+    pub frames_dropped: u64,
+    /// Deliveries that arrived more than `deadline_seconds` after their
+    /// frame's arrival stamp.
+    pub deadline_misses: u64,
+    /// Delivery staleness percentiles (delivery time − frame arrival),
+    /// from a constant-memory log-histogram sketch (≈5.5% relative
+    /// resolution).
+    pub staleness_p50_seconds: f64,
+    pub staleness_p99_seconds: f64,
     pub fogs: Vec<FogReport>,
 }
 
@@ -165,6 +196,32 @@ impl FleetReport {
         } else {
             self.total_bytes as f64 / raw as f64
         }
+    }
+
+    /// Whether this run modeled a streaming workload.
+    pub fn streaming(&self) -> bool {
+        self.horizon_seconds > 0.0
+    }
+
+    /// Fraction of streamed deliveries that missed the freshness
+    /// deadline (0 when no deadline was configured).
+    pub fn deadline_miss_rate(&self) -> f64 {
+        self.deadline_misses as f64 / self.stream_deliveries.max(1) as f64
+    }
+
+    /// Fraction of delivery opportunities that were voided (failed
+    /// fogs, departed receivers, unsalvageable catch-up).
+    pub fn drop_rate(&self) -> f64 {
+        self.frames_dropped as f64 / (self.stream_deliveries + self.frames_dropped).max(1) as f64
+    }
+
+    /// Streamed payload bytes per simulated second over the horizon
+    /// (broadcast + catch-up; 0 on batch runs).
+    pub fn stream_goodput_bytes_per_second(&self) -> f64 {
+        if self.horizon_seconds <= 0.0 {
+            return 0.0;
+        }
+        (self.broadcast_bytes + self.catchup_bytes) as f64 / self.horizon_seconds
     }
 
     pub fn print(&self) {
@@ -225,6 +282,35 @@ impl FleetReport {
             // exceeds the shared-payload saving on near-empty cells),
             // and that must be visible, not hidden.
             println!("airtime saved vs unicast : {:+.2} s", self.airtime_saved_seconds);
+        }
+        if self.streaming() {
+            println!(
+                "stream horizon / process : {:.1} s / {}",
+                self.horizon_seconds, self.arrivals
+            );
+            println!(
+                "frames offered/dropped   : {} / {} ({:.2}% drop rate)",
+                self.frames_offered,
+                self.frames_dropped,
+                100.0 * self.drop_rate()
+            );
+            println!("stream deliveries        : {}", self.stream_deliveries);
+            println!(
+                "delivery staleness       : p50 {:.3} s, p99 {:.3} s",
+                self.staleness_p50_seconds, self.staleness_p99_seconds
+            );
+            if self.deadline_seconds > 0.0 {
+                println!(
+                    "deadline ({:.2} s) misses : {} ({:.2}% of deliveries)",
+                    self.deadline_seconds,
+                    self.deadline_misses,
+                    100.0 * self.deadline_miss_rate()
+                );
+            }
+            println!(
+                "stream goodput           : {}/s",
+                fmt_bytes(self.stream_goodput_bytes_per_second() as u64)
+            );
         }
         println!("makespan                 : {:.2} s", self.makespan_seconds);
         println!("fog encode work          : {:.2} worker-s", self.encode_busy_seconds);

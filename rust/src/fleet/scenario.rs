@@ -27,6 +27,13 @@ use crate::data::Profile;
 
 use super::aggregate::CellSimMode;
 use super::policy::RebroadcastPolicy;
+use super::stream::{ArrivalSpec, FailSpec, HandoverSpec, StreamConfig};
+
+/// Upper bound on total sampled frame arrivals across the fleet
+/// (`mean_rate · horizon · n_fogs`). The streamed catalog and the
+/// backhaul dedup memo scale with arrivals, so a runaway `--arrivals`
+/// spec is rejected up front instead of exhausting memory mid-run.
+pub const MAX_STREAM_ARRIVALS: f64 = 4e6;
 
 /// How fog cells share encoded blobs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -162,6 +169,16 @@ pub struct FleetConfig {
     /// `N >= 1` runs per-fog event loops under conservative-lookahead
     /// windows — results are bit-identical for every `N >= 1`.
     pub threads: usize,
+    /// Streaming mode ([`crate::fleet::stream`]): continuous per-fog
+    /// frame arrivals up to a horizon, with optional freshness
+    /// deadlines. `None` (the default) runs the legacy finite batch —
+    /// byte- and draw-identical to the pre-streaming engine.
+    pub stream: Option<StreamConfig>,
+    /// Scheduled cell-to-cell receiver handovers (`--handover`,
+    /// streaming runs only). Empty = no mobility.
+    pub handovers: Vec<HandoverSpec>,
+    /// Scheduled fog failure (`--fail`, streaming runs only).
+    pub fail: Option<FailSpec>,
 }
 
 impl FleetConfig {
@@ -198,6 +215,9 @@ impl FleetConfig {
             backhaul_bandwidths: None,
             cell_sim: CellSimMode::default(),
             threads: 0,
+            stream: None,
+            handovers: Vec::new(),
+            fail: None,
         }
     }
 
@@ -320,6 +340,65 @@ impl FleetConfig {
                     "churn join targets fog {} which has no initial receivers",
                     j.fog
                 ));
+            }
+        }
+        if let Some(sc) = &self.stream {
+            if !(sc.horizon.is_finite() && sc.horizon > 0.0) {
+                return Err(anyhow!("stream horizon must be finite and > 0, got {}", sc.horizon));
+            }
+            let rate = sc.arrivals.mean_rate();
+            if !(rate.is_finite() && rate > 0.0) {
+                return Err(anyhow!("arrival rate must be finite and > 0, got {rate}"));
+            }
+            if let ArrivalSpec::Diurnal { period, .. } = sc.arrivals {
+                if !(period.is_finite() && period > 0.0) {
+                    return Err(anyhow!("diurnal period must be finite and > 0, got {period}"));
+                }
+            }
+            let expected = rate * sc.horizon * self.n_fogs as f64;
+            if expected > MAX_STREAM_ARRIVALS {
+                return Err(anyhow!(
+                    "arrival spec implies ~{expected:.0} frames fleet-wide \
+                     (max {MAX_STREAM_ARRIVALS:.0}); lower the rate or horizon"
+                ));
+            }
+            if let Some(d) = sc.deadline {
+                if !(d.is_finite() && d > 0.0) {
+                    return Err(anyhow!("deadline must be finite and > 0, got {d}"));
+                }
+            }
+        }
+        if self.stream.is_none() && (!self.handovers.is_empty() || self.fail.is_some()) {
+            return Err(anyhow!(
+                "--handover and --fail model a long-horizon environment and \
+                 require streaming mode (--arrivals/--horizon)"
+            ));
+        }
+        for h in &self.handovers {
+            if h.from >= self.n_fogs || h.to >= self.n_fogs {
+                return Err(anyhow!(
+                    "handover {}>{} targets a fog outside 0..{}",
+                    h.from,
+                    h.to,
+                    self.n_fogs
+                ));
+            }
+            if h.from == h.to {
+                return Err(anyhow!("handover {}>{} moves nowhere", h.from, h.to));
+            }
+            if !h.at.is_finite() || h.at < 0.0 {
+                return Err(anyhow!("handover time must be finite and >= 0, got {}", h.at));
+            }
+        }
+        if let Some(fl) = &self.fail {
+            if self.n_fogs < 2 {
+                return Err(anyhow!("--fail needs a multi-fog fleet to re-elect into"));
+            }
+            if fl.fog >= self.n_fogs {
+                return Err(anyhow!("fail targets fog {} of {}", fl.fog, self.n_fogs));
+            }
+            if !fl.at.is_finite() || fl.at < 0.0 {
+                return Err(anyhow!("fail time must be finite and >= 0, got {}", fl.at));
             }
         }
         if let Some(bws) = &self.backhaul_bandwidths {
@@ -495,6 +574,53 @@ mod tests {
         assert_eq!(fc.backhaul_bandwidth_of(2), 3e6);
         fc.backhaul_bandwidths = Some(vec![1e6, 0.0, 3e6, 4e6]);
         assert!(fc.validate().is_err());
+    }
+
+    #[test]
+    fn validation_bounds_the_streaming_knobs() {
+        let m = Method::RapidSingle;
+        let mk = || FleetConfig::from_scenario("sharded", m, book(m)).unwrap();
+        let stream = |rate: f64, horizon: f64| StreamConfig {
+            arrivals: ArrivalSpec::Poisson { rate },
+            horizon,
+            deadline: None,
+        };
+        let mut fc = mk();
+        fc.stream = Some(stream(10.0, 5.0));
+        assert!(fc.validate().is_ok());
+        fc.stream = Some(stream(10.0, 0.0));
+        assert!(fc.validate().is_err(), "zero horizon");
+        fc.stream = Some(stream(0.0, 5.0));
+        assert!(fc.validate().is_err(), "zero rate");
+        fc.stream = Some(stream(1e9, 1e9));
+        assert!(fc.validate().is_err(), "arrival cap");
+        fc.stream = Some(StreamConfig { deadline: Some(0.0), ..stream(10.0, 5.0) });
+        assert!(fc.validate().is_err(), "zero deadline");
+        fc.stream = Some(StreamConfig { deadline: Some(0.5), ..stream(10.0, 5.0) });
+        assert!(fc.validate().is_ok());
+        // Mobility and failure require the streaming environment...
+        let mut fc = mk();
+        fc.handovers = vec![HandoverSpec { from: 0, to: 1, at: 2.0 }];
+        assert!(fc.validate().is_err());
+        fc.stream = Some(stream(10.0, 5.0));
+        assert!(fc.validate().is_ok());
+        // ...and in-range fogs.
+        fc.handovers = vec![HandoverSpec { from: 0, to: 4, at: 2.0 }];
+        assert!(fc.validate().is_err());
+        fc.handovers = vec![HandoverSpec { from: 1, to: 1, at: 2.0 }];
+        assert!(fc.validate().is_err());
+        fc.handovers = vec![HandoverSpec { from: 0, to: 1, at: -2.0 }];
+        assert!(fc.validate().is_err());
+        let mut fc = mk();
+        fc.stream = Some(stream(10.0, 5.0));
+        fc.fail = Some(FailSpec { fog: 4, at: 1.0 });
+        assert!(fc.validate().is_err());
+        fc.fail = Some(FailSpec { fog: 1, at: 1.0 });
+        assert!(fc.validate().is_ok());
+        fc.n_fogs = 1;
+        fc.n_edges = 10;
+        fc.topology = Topology::SingleFog;
+        assert!(fc.validate().is_err(), "failure needs a surviving fog");
     }
 
     #[test]

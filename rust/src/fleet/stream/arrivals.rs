@@ -1,0 +1,171 @@
+//! Seeded frame-arrival processes for streaming runs.
+//!
+//! Arrival times are pre-sampled per fog before the event loop starts,
+//! from an RNG stream derived from the fleet seed and the fog index but
+//! salted apart from every link-layer stream. Two consequences the
+//! engine relies on:
+//!
+//! * a streaming run is reproducible from `(seed, spec, horizon)` alone,
+//!   independent of executor (sequential vs windowed) and thread count —
+//!   the schedule is data, not a side effect of event interleaving;
+//! * turning streaming on cannot perturb the loss draws of the link
+//!   layer (separate generators), so loss-invariance anchors keep
+//!   holding under streaming.
+
+use crate::util::rng::Pcg32;
+
+/// Seed salt separating the arrival streams from the `link` channel
+/// streams (which use `seed ^ 0x4c49_4e4b` and per-channel stream ids).
+const ARRIVAL_SALT: u64 = 0x5354_5245_414d; // "STREAM"
+
+/// A per-fog frame arrival process (`--arrivals`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalSpec {
+    /// Homogeneous Poisson process with `rate` frames/second
+    /// (`poisson:λ`): i.i.d. exponential inter-arrival gaps.
+    Poisson { rate: f64 },
+    /// Non-homogeneous day/night process (`diurnal:λ,period`): mean rate
+    /// `rate`, instantaneous rate `λ(t) = rate · (1 − cos(2πt/period))`
+    /// — zero at the start of each period, peaking at `2·rate` half a
+    /// period in. Sampled by thinning a `2·rate` Poisson process.
+    Diurnal { rate: f64, period: f64 },
+}
+
+impl ArrivalSpec {
+    /// Parse `poisson:λ` or `diurnal:λ,period`.
+    pub fn from_name(s: &str) -> Result<ArrivalSpec, String> {
+        let err = || {
+            format!("bad arrivals spec {s:?} (want poisson:RATE or diurnal:RATE,PERIOD)")
+        };
+        let (kind, params) = s.split_once(':').ok_or_else(err)?;
+        match kind.trim() {
+            "poisson" => {
+                let rate = params.trim().parse::<f64>().map_err(|_| err())?;
+                Ok(ArrivalSpec::Poisson { rate })
+            }
+            "diurnal" => {
+                let (rate, period) = params.split_once(',').ok_or_else(err)?;
+                let rate = rate.trim().parse::<f64>().map_err(|_| err())?;
+                let period = period.trim().parse::<f64>().map_err(|_| err())?;
+                Ok(ArrivalSpec::Diurnal { rate, period })
+            }
+            _ => Err(err()),
+        }
+    }
+
+    /// Canonical spec string (round-trips through [`Self::from_name`]).
+    pub fn name(&self) -> String {
+        match self {
+            ArrivalSpec::Poisson { rate } => format!("poisson:{rate}"),
+            ArrivalSpec::Diurnal { rate, period } => format!("diurnal:{rate},{period}"),
+        }
+    }
+
+    /// Mean arrival rate in frames/second.
+    pub fn mean_rate(&self) -> f64 {
+        match self {
+            ArrivalSpec::Poisson { rate } => *rate,
+            ArrivalSpec::Diurnal { rate, .. } => *rate,
+        }
+    }
+}
+
+/// Sample the full arrival schedule for one fog: strictly increasing
+/// times in `[0, horizon)`. Deterministic in `(spec, seed, fog)`.
+pub fn arrival_times(spec: &ArrivalSpec, seed: u64, fog: u64, horizon: f64) -> Vec<f64> {
+    let mut rng = Pcg32::new(seed ^ ARRIVAL_SALT, fog);
+    let mut times = Vec::new();
+    match *spec {
+        ArrivalSpec::Poisson { rate } => {
+            let mut t = exp_gap(&mut rng, rate);
+            while t < horizon {
+                times.push(t);
+                t += exp_gap(&mut rng, rate);
+            }
+        }
+        ArrivalSpec::Diurnal { rate, period } => {
+            // Thinning (Lewis & Shedler): candidates at the peak rate
+            // λ_max = 2·rate, accepted with probability λ(t)/λ_max.
+            let lmax = 2.0 * rate;
+            let mut t = exp_gap(&mut rng, lmax);
+            while t < horizon {
+                let lt = rate * (1.0 - (2.0 * std::f64::consts::PI * t / period).cos());
+                if rng.f64() < lt / lmax {
+                    times.push(t);
+                }
+                t += exp_gap(&mut rng, lmax);
+            }
+        }
+    }
+    times
+}
+
+/// Exponential inter-arrival gap with the given rate.
+fn exp_gap(rng: &mut Pcg32, rate: f64) -> f64 {
+    // 1 - f64() is in (0, 1], so ln() is finite and the gap positive.
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_round_trips_specs() {
+        let p = ArrivalSpec::from_name("poisson:2.5").unwrap();
+        assert_eq!(p, ArrivalSpec::Poisson { rate: 2.5 });
+        assert_eq!(ArrivalSpec::from_name(&p.name()).unwrap(), p);
+        let d = ArrivalSpec::from_name("diurnal:4,86400").unwrap();
+        assert_eq!(d, ArrivalSpec::Diurnal { rate: 4.0, period: 86400.0 });
+        assert_eq!(ArrivalSpec::from_name(&d.name()).unwrap(), d);
+        assert!(ArrivalSpec::from_name("poisson").is_err());
+        assert!(ArrivalSpec::from_name("poisson:x").is_err());
+        assert!(ArrivalSpec::from_name("diurnal:4").is_err());
+        assert!(ArrivalSpec::from_name("burst:1,2").is_err());
+    }
+
+    #[test]
+    fn schedules_are_deterministic_and_ordered() {
+        for spec in [
+            ArrivalSpec::Poisson { rate: 50.0 },
+            ArrivalSpec::Diurnal { rate: 50.0, period: 7.0 },
+        ] {
+            let a = arrival_times(&spec, 7, 0, 10.0);
+            let b = arrival_times(&spec, 7, 0, 10.0);
+            assert_eq!(a, b, "same seed must give the same schedule");
+            assert!(!a.is_empty());
+            assert!(a.windows(2).all(|w| w[0] < w[1]), "strictly increasing");
+            assert!(a.iter().all(|&t| (0.0..10.0).contains(&t)));
+            let other = arrival_times(&spec, 8, 0, 10.0);
+            assert_ne!(a, other, "different seeds must differ");
+            let other_fog = arrival_times(&spec, 7, 1, 10.0);
+            assert_ne!(a, other_fog, "fogs draw independent streams");
+        }
+    }
+
+    #[test]
+    fn poisson_count_tracks_rate_times_horizon() {
+        let n = arrival_times(&ArrivalSpec::Poisson { rate: 100.0 }, 7, 0, 50.0).len();
+        // Mean 5000, sd ~71: a 10% band is ~7 sigma.
+        assert!((4500..5500).contains(&n), "n={n}");
+    }
+
+    #[test]
+    fn diurnal_mean_matches_but_concentrates_mid_period() {
+        let period = 10.0;
+        let times =
+            arrival_times(&ArrivalSpec::Diurnal { rate: 100.0, period }, 7, 0, 100.0);
+        let n = times.len();
+        assert!((9000..11000).contains(&n), "mean rate preserved, n={n}");
+        // λ(t) vanishes at phase 0 and peaks at phase 0.5: the middle
+        // half of each period must hold well over half the arrivals.
+        let mid: usize = times
+            .iter()
+            .filter(|&&t| {
+                let phase = (t / period).fract();
+                (0.25..0.75).contains(&phase)
+            })
+            .count();
+        assert!(mid * 10 > n * 7, "mid={mid} n={n}");
+    }
+}

@@ -1,0 +1,136 @@
+//! Steady-state streaming workloads: continuous frame arrivals, device
+//! mobility, fog failure, and per-frame freshness deadlines.
+//!
+//! Everything the fleet engine ran before this module was one finite
+//! batch with a makespan: every shard's frames existed at `t = 0`, every
+//! receiver eventually held everything, and the report's headline was
+//! how long that took. The paper's setting is the opposite — continuous
+//! on-device learning over a changing edge environment — so this module
+//! opens the long-horizon axis:
+//!
+//! * **Arrival processes** ([`ArrivalSpec`], `--arrivals`): each fog's
+//!   source captures frames continuously, as a homogeneous Poisson
+//!   process (`poisson:λ`) or a diurnal non-homogeneous one
+//!   (`diurnal:λ,period`, mean rate `λ` modulated by a day/night cosine
+//!   of the given period). Arrivals are pre-sampled per fog from a
+//!   dedicated seeded RNG stream ([`arrivals::arrival_times`]) so a
+//!   streaming run is deterministic across repeats and thread counts,
+//!   and so enabling streaming never perturbs the link-layer loss
+//!   draws. The process stops at the `--horizon` wall; in-flight work
+//!   drains past it (the makespan may exceed the horizon).
+//! * **Mobility and failure** ([`HandoverSpec`], [`FailSpec`]):
+//!   `--handover from>to:t` moves a receiver between cells mid-run,
+//!   reusing the churn machinery in both directions — a departure on
+//!   one cell, a cache-warm catch-up join on the other — with voided
+//!   in-flight deliveries accounted as drops. `--fail fog:t` kills a
+//!   fog: its pending frames drop, its receivers orphan and re-attach
+//!   to the surviving fog with the lowest expected backhaul airtime,
+//!   and the weight cache warm-starts their catch-up (content whose
+//!   only copy died with the fog is dropped and counted).
+//! * **Freshness** ([`StreamConfig::deadline`], `--deadline`): each
+//!   delivery's *staleness* (delivery time minus the frame's arrival
+//!   time) feeds a constant-memory [`QuantileSketch`], so
+//!   `FleetReport` gains p50/p99 staleness, deadline-miss and drop
+//!   rates, and steady-state goodput without storing per-frame arrays
+//!   — the whole point at 10^6 edges.
+//!
+//! With `FleetConfig::stream == None` none of this machinery runs and
+//! the batch path is byte- and draw-identical to the pre-streaming
+//! engine — the module's parity anchor.
+
+pub mod arrivals;
+pub mod quantile;
+
+pub use arrivals::{arrival_times, ArrivalSpec};
+pub use quantile::QuantileSketch;
+
+/// Streaming-mode knobs (`--arrivals` / `--horizon` / `--deadline`).
+/// `None` on [`crate::fleet::FleetConfig::stream`] means the legacy
+/// finite-batch run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamConfig {
+    /// Per-fog frame arrival process.
+    pub arrivals: ArrivalSpec,
+    /// Arrival wall: no frame arrives at or after this virtual time.
+    pub horizon: f64,
+    /// Per-frame freshness deadline in seconds: a delivery whose
+    /// staleness exceeds it counts as a deadline miss. `None` disables
+    /// miss accounting (staleness percentiles are always reported).
+    pub deadline: Option<f64>,
+}
+
+/// A scheduled fog failure (`--fail fog:t`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailSpec {
+    pub fog: usize,
+    pub at: f64,
+}
+
+/// A scheduled cell-to-cell receiver handover (`--handover from>to:t`).
+/// At `at`, the most recently attached active receiver of `from`
+/// departs and joins `to`, catching up from `to`'s cache.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HandoverSpec {
+    pub from: usize,
+    pub to: usize,
+    pub at: f64,
+}
+
+/// Parse `--fail fog:t` (e.g. `1:30` = fog 1 fails at t = 30 s).
+pub fn parse_fail(s: &str) -> Result<FailSpec, String> {
+    let (fog, at) = s
+        .split_once(':')
+        .ok_or_else(|| format!("bad fail spec {s:?} (want fog:t, e.g. 1:30)"))?;
+    let fog = fog
+        .trim()
+        .parse::<usize>()
+        .map_err(|_| format!("bad fog index in fail spec {s:?}"))?;
+    let at = at
+        .trim()
+        .parse::<f64>()
+        .map_err(|_| format!("bad time in fail spec {s:?}"))?;
+    Ok(FailSpec { fog, at })
+}
+
+/// Parse `--handover from>to:t[,from>to:t...]`.
+pub fn parse_handovers(s: &str) -> Result<Vec<HandoverSpec>, String> {
+    s.split(',')
+        .filter(|part| !part.trim().is_empty())
+        .map(|part| {
+            let part = part.trim();
+            let err = || format!("bad handover spec {part:?} (want from>to:t, e.g. 0>1:20)");
+            let (route, at) = part.split_once(':').ok_or_else(err)?;
+            let (from, to) = route.split_once('>').ok_or_else(err)?;
+            let from = from.trim().parse::<usize>().map_err(|_| err())?;
+            let to = to.trim().parse::<usize>().map_err(|_| err())?;
+            let at = at.trim().parse::<f64>().map_err(|_| err())?;
+            Ok(HandoverSpec { from, to, at })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_fail_and_handover_specs() {
+        assert_eq!(parse_fail("1:30").unwrap(), FailSpec { fog: 1, at: 30.0 });
+        assert_eq!(parse_fail(" 2 : 0.5 ").unwrap(), FailSpec { fog: 2, at: 0.5 });
+        assert!(parse_fail("30").is_err());
+        assert!(parse_fail("x:30").is_err());
+        assert!(parse_fail("1:x").is_err());
+
+        assert_eq!(
+            parse_handovers("0>1:20,1>0:45.5").unwrap(),
+            vec![
+                HandoverSpec { from: 0, to: 1, at: 20.0 },
+                HandoverSpec { from: 1, to: 0, at: 45.5 },
+            ]
+        );
+        assert_eq!(parse_handovers("").unwrap(), vec![]);
+        assert!(parse_handovers("0-1:20").is_err());
+        assert!(parse_handovers("0>1").is_err());
+        assert!(parse_handovers("0>x:2").is_err());
+    }
+}

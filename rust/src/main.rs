@@ -108,6 +108,8 @@ fn main() -> Result<()> {
                  \u{20}          --policy <unicast|cell-multicast|multicast-tree|receiver-pull|auto>\n\
                  \u{20}          --loss P --backhaul-loss P --churn T1,T2,..\n\
                  \u{20}          --cell-mode <exact|aggregate|auto[:threshold]> --threads N\n\
+                 \u{20}          --arrivals <poisson:RATE|diurnal:RATE,PERIOD> --horizon S\n\
+                 \u{20}          --deadline S --handover F>G:T,.. --fail F:T\n\
                  \u{20}          (paper-10 = 1 fog, 10 edge devices; sharded = per-fog shards\n\
                  \u{20}          over mesh backhaul; hierarchical = cloud→fog→edge relay;\n\
                  \u{20}          unicast = legacy byte-parity default, the others share one\n\
@@ -126,7 +128,14 @@ fn main() -> Result<()> {
                  \u{20}          0, O(1) events per cell — enabling 10^6-edge fleets; auto\n\
                  \u{20}          switches at a population threshold (default 4096).\n\
                  \u{20}          --threads N runs per-fog event loops on N workers under a\n\
-                 \u{20}          conservative lookahead window, bit-identical for any N)\n\
+                 \u{20}          conservative lookahead window, bit-identical for any N.\n\
+                 \u{20}          --arrivals + --horizon stream frames continuously per fog\n\
+                 \u{20}          (seeded Poisson or day/night diurnal process) instead of\n\
+                 \u{20}          one t=0 batch; the report adds p50/p99 delivery staleness,\n\
+                 \u{20}          drop rate and stream goodput. --deadline S counts\n\
+                 \u{20}          deliveries staler than S as misses. --handover F>G:T moves\n\
+                 \u{20}          a receiver between cells mid-run; --fail F:T kills fog F at\n\
+                 \u{20}          T and re-attaches its receivers to the cheapest survivor)\n\
                  compress   --method M --profile P --max-frames N [--quality Q]\n\
                  commmodel  --devices K --alpha A [--receivers N]\n\
                  info\n\
@@ -165,6 +174,14 @@ fn simulate(args: &Args) -> Result<()> {
         if fogs <= 1 && args.get(flag).is_some() {
             return Err(anyhow!(
                 "--{flag} requires --fogs > 1 (use `fleet --{flag}` for synthetic runs)"
+            ));
+        }
+    }
+    for flag in ["arrivals", "horizon", "deadline", "handover", "fail"] {
+        if args.get(flag).is_some() {
+            return Err(anyhow!(
+                "sim runs the live encoder over a finite batch; streaming workloads are \
+                 fleet-only (use `fleet --{flag}`)"
             ));
         }
     }
@@ -315,6 +332,40 @@ fn fleet(args: &Args) -> Result<()> {
     let (cell_sim, threads) = parse_engine_args(args)?;
     fc.cell_sim = cell_sim;
     fc.threads = threads;
+    // Streaming knobs: --arrivals + --horizon switch the run from one
+    // finite batch to a steady-state stream; --deadline, --handover and
+    // --fail ride on top (validate() enforces the dependencies).
+    match (args.get("arrivals"), args.get("horizon")) {
+        (Some(spec), Some(_)) => {
+            fc.stream = Some(residual_inr::fleet::StreamConfig {
+                arrivals: residual_inr::fleet::ArrivalSpec::from_name(spec)
+                    .map_err(|e| anyhow!(e))?,
+                horizon: args.get_f64("horizon", 0.0).map_err(|e| anyhow!(e))?,
+                deadline: match args.get("deadline") {
+                    Some(_) => Some(args.get_f64("deadline", 0.0).map_err(|e| anyhow!(e))?),
+                    None => None,
+                },
+            });
+        }
+        (Some(_), None) => {
+            return Err(anyhow!("--arrivals requires --horizon SECONDS (the arrival wall)"));
+        }
+        (None, Some(_)) => {
+            return Err(anyhow!("--horizon requires --arrivals (poisson:RATE|diurnal:RATE,PERIOD)"));
+        }
+        (None, None) => {
+            if args.get("deadline").is_some() {
+                return Err(anyhow!("--deadline requires a streaming run (--arrivals/--horizon)"));
+            }
+        }
+    }
+    if let Some(spec) = args.get("handover") {
+        fc.handovers =
+            residual_inr::fleet::stream::parse_handovers(spec).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(spec) = args.get("fail") {
+        fc.fail = Some(residual_inr::fleet::stream::parse_fail(spec).map_err(|e| anyhow!(e))?);
+    }
     let report = residual_inr::fleet::run(&cfg, &fc)?;
     report.print();
     Ok(())

@@ -193,3 +193,135 @@ fn windowed_executor_reports_are_bit_identical_across_thread_counts() {
         assert_eq!(a.trained_at.to_bits(), b.trained_at.to_bits());
     }
 }
+
+/// Churn is windowable since the join-aware lookahead: scheduled joins
+/// pin the window and apply at barriers, so a churned fleet no longer
+/// forces the sequential fallback — and stays bit-identical for every
+/// worker count.
+#[test]
+fn churned_windowed_runs_are_bit_identical_across_thread_counts() {
+    let cfg = cfg();
+    let m = Method::ResRapid { direct: false };
+    let run = |threads: usize| {
+        let mut fc = FleetConfig::from_scenario("sharded", m, costs(m)).unwrap();
+        fc.max_frames = Some(8);
+        fc.joins = vec![
+            residual_inr::fleet::JoinSpec { fog: 0, at: 0.5 },
+            residual_inr::fleet::JoinSpec { fog: 1, at: 1.5 },
+        ];
+        fc.threads = threads;
+        fleet::run(&cfg, &fc).unwrap()
+    };
+    let r1 = run(1);
+    for threads in 2..=4 {
+        let r = run(threads);
+        assert_eq!(r.total_bytes, r1.total_bytes, "threads={threads}");
+        assert_eq!(r.catchup_bytes, r1.catchup_bytes, "threads={threads}");
+        assert_eq!(r.events, r1.events, "threads={threads}");
+        assert_eq!(
+            r.makespan_seconds.to_bits(),
+            r1.makespan_seconds.to_bits(),
+            "threads={threads}"
+        );
+        assert_eq!(
+            r.airtime_saved_seconds.to_bits(),
+            r1.airtime_saved_seconds.to_bits(),
+            "threads={threads}"
+        );
+    }
+    assert!(r1.catchup_bytes > 0, "the joiners must replay the catalog");
+}
+
+/// Streaming workloads parallelize too: the arrival schedule is
+/// pre-sampled data, so a streamed, deadline-checked run is
+/// bit-identical for every worker count.
+#[test]
+fn streamed_windowed_runs_are_bit_identical_across_thread_counts() {
+    let cfg = cfg();
+    let m = Method::ResRapid { direct: false };
+    let run = |threads: usize| {
+        let mut fc = FleetConfig::from_scenario("sharded", m, costs(m)).unwrap();
+        fc.max_frames = Some(8);
+        fc.stream = Some(residual_inr::fleet::StreamConfig {
+            arrivals: residual_inr::fleet::ArrivalSpec::Poisson { rate: 2.0 },
+            horizon: 5.0,
+            deadline: Some(0.5),
+        });
+        fc.threads = threads;
+        fleet::run(&cfg, &fc).unwrap()
+    };
+    let r1 = run(1);
+    assert!(r1.streaming());
+    assert!(r1.frames_offered > 0);
+    assert!(r1.stream_deliveries > 0);
+    for threads in 2..=4 {
+        let r = run(threads);
+        assert_eq!(r.frames_offered, r1.frames_offered, "threads={threads}");
+        assert_eq!(r.stream_deliveries, r1.stream_deliveries, "threads={threads}");
+        assert_eq!(r.deadline_misses, r1.deadline_misses, "threads={threads}");
+        assert_eq!(r.total_bytes, r1.total_bytes, "threads={threads}");
+        assert_eq!(r.events, r1.events, "threads={threads}");
+        assert_eq!(
+            r.staleness_p50_seconds.to_bits(),
+            r1.staleness_p50_seconds.to_bits(),
+            "threads={threads}"
+        );
+        assert_eq!(
+            r.staleness_p99_seconds.to_bits(),
+            r1.staleness_p99_seconds.to_bits(),
+            "threads={threads}"
+        );
+        assert_eq!(
+            r.makespan_seconds.to_bits(),
+            r1.makespan_seconds.to_bits(),
+            "threads={threads}"
+        );
+    }
+}
+
+/// The aggregate receiver-pull macro leg prices request+repair traffic
+/// by expectation; one seeded exact draw must land within the same 20%
+/// band the NACK-multicast contract documents, with delivered-class
+/// pull bytes agreeing exactly.
+#[test]
+fn aggregate_receiver_pull_expectation_tracks_the_exact_draw_under_loss() {
+    let p = 0.15;
+    let cfg = cfg();
+    let m = Method::ResRapid { direct: false };
+    let run_pull = |mode: CellSimMode| {
+        let mut fc = FleetConfig::from_scenario("sharded", m, costs(m)).unwrap();
+        fc.max_frames = Some(8);
+        fc.policy = residual_inr::fleet::RebroadcastPolicy::ReceiverPull;
+        fc.cell_sim = mode;
+        fc.loss_cell = p;
+        fc.loss_backhaul = p;
+        fleet::run(&cfg, &fc).unwrap()
+    };
+    let exact = run_pull(CellSimMode::Exact);
+    let agg = run_pull(CellSimMode::Aggregate);
+    // Delivered classes (including the pull-request bytes) are
+    // loss-invariant in both modes: exact agreement.
+    assert_eq!(agg.total_bytes, exact.total_bytes);
+    assert_eq!(agg.pull_bytes, exact.pull_bytes);
+    assert!(agg.pull_bytes > 0, "receiver-pull must post requests");
+    // Control traffic (pull retries) and repair re-airs: expectation vs
+    // one seeded draw, within the documented band.
+    assert!(exact.control_bytes > 0 && agg.control_bytes > 0);
+    let rel_ctl = (agg.control_bytes as f64 - exact.control_bytes as f64).abs()
+        / exact.control_bytes as f64;
+    assert!(
+        rel_ctl < 0.20,
+        "relative control-byte error {rel_ctl:.3} (aggregate {} vs exact {})",
+        agg.control_bytes,
+        exact.control_bytes
+    );
+    assert!(exact.repair_bytes > 0 && agg.repair_bytes > 0);
+    let rel = (agg.repair_bytes as f64 - exact.repair_bytes as f64).abs()
+        / exact.repair_bytes as f64;
+    assert!(
+        rel < 0.20,
+        "relative repair error {rel:.3} (aggregate {} vs exact {})",
+        agg.repair_bytes,
+        exact.repair_bytes
+    );
+}

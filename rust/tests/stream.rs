@@ -1,0 +1,215 @@
+//! Streaming-workload integration: the `fleet::stream` acceptance
+//! contract over *real* modeled shard streams.
+//!
+//! `--arrivals/--horizon` turn the batch replay into a steady-state
+//! streaming run: frames arrive continuously per source edge, devices
+//! hand over between cells, a fog can fail mid-run (`--fail`), and the
+//! report grows freshness metrics (staleness percentiles, deadline
+//! misses, goodput). Asserted here:
+//!
+//! * a run combining arrivals + handover + fog failure + deadline
+//!   completes with consistent accounting and every surviving receiver
+//!   re-attached to a live fog;
+//! * seeded streaming runs are deterministic across repeats and
+//!   bit-identical across worker counts (the mutation schedule is
+//!   applied at window barriers);
+//! * deadline misses are monotone in the deadline;
+//! * aggregate cell mode streams large fleets with macro events only.
+
+use residual_inr::config::ArchConfig;
+use residual_inr::coordinator::{EncoderConfig, Method};
+use residual_inr::costmodel::{Analytical, CostBook, CostModel};
+use residual_inr::data::Profile;
+use residual_inr::fleet::{
+    self, ArrivalSpec, CellSimMode, FailSpec, FleetConfig, FleetReport, HandoverSpec,
+    StreamConfig,
+};
+
+fn cfg() -> ArchConfig {
+    ArchConfig::load_default().unwrap()
+}
+
+fn costs(m: Method) -> CostBook {
+    Analytical::new(&cfg(), Profile::DacSdc, m, &EncoderConfig::fast()).book()
+}
+
+/// A sharded fleet (4 fogs, 49 receivers each) streaming Poisson
+/// arrivals over a finite horizon, with one handover and one fog
+/// failure mid-run.
+fn streaming_fc(threads: usize) -> FleetConfig {
+    let m = Method::ResRapid { direct: false };
+    let mut fc = FleetConfig::from_scenario("sharded", m, costs(m)).unwrap();
+    fc.max_frames = Some(8); // blob templates; arrivals set the volume
+    fc.stream = Some(StreamConfig {
+        arrivals: ArrivalSpec::Poisson { rate: 2.0 },
+        horizon: 5.0,
+        deadline: Some(0.25),
+    });
+    fc.handovers = vec![HandoverSpec { from: 0, to: 2, at: 1.0 }];
+    fc.fail = Some(FailSpec { fog: 1, at: 2.0 });
+    fc.threads = threads;
+    fc
+}
+
+fn run(fc: &FleetConfig) -> FleetReport {
+    fleet::run(&cfg(), fc).unwrap()
+}
+
+/// The acceptance run: mobility + failure + deadlines in one timeline,
+/// with the books balancing afterwards.
+#[test]
+fn streaming_run_with_failure_and_handover_keeps_consistent_accounts() {
+    let r = run(&streaming_fc(0));
+    assert!(r.streaming());
+    assert_eq!(r.arrivals, "poisson:2");
+    assert!(r.frames_offered > 0, "the horizon must admit frames");
+    assert!(r.stream_deliveries > 0, "live cohorts must hear frames");
+
+    // The failed fog orphans every receiver it hosted; with uniform
+    // backhauls the election re-attaches all of them to the surviving
+    // fog with the lowest index (fog 0). The handover moved one
+    // receiver 0 -> 2 beforehand. Receiver conservation: every slot
+    // that departed a cell joined another (no scheduled joins here).
+    assert_eq!(r.fogs[1].departed, r.fogs[1].receivers, "all orphans depart the failed fog");
+    assert!(r.fogs[0].departed >= 1, "the handover leaves fog 0");
+    let joined: usize = r.fogs.iter().map(|f| f.joined).sum();
+    let departed: usize = r.fogs.iter().map(|f| f.departed).sum();
+    assert_eq!(joined, departed, "every surviving receiver re-attached somewhere");
+    assert_eq!(
+        r.fogs[0].joined,
+        r.fogs[1].receivers,
+        "uniform backhaul cost elects the lowest-index survivor"
+    );
+    assert_eq!(r.fogs[2].joined, 1, "the handover target hosts the mover");
+
+    // The failed fog keeps offering frames after the failure and drops
+    // them; re-attached receivers replay the working set.
+    assert!(r.frames_dropped > 0, "post-failure frames on fog 1 must drop");
+    assert!(r.catchup_bytes > 0, "handover and re-election replay the catalog");
+
+    // Freshness metrics: percentiles are populated and ordered, misses
+    // are bounded by deliveries, goodput is positive over the horizon.
+    assert!(r.staleness_p50_seconds > 0.0);
+    assert!(r.staleness_p99_seconds >= r.staleness_p50_seconds);
+    assert!(r.deadline_misses <= r.stream_deliveries);
+    assert!((0.0..=1.0).contains(&r.deadline_miss_rate()));
+    assert!((0.0..=1.0).contains(&r.drop_rate()));
+    assert!(r.stream_goodput_bytes_per_second() > 0.0);
+}
+
+/// Same seed, same schedule: repeat runs reproduce the report bit for
+/// bit, and the windowed executor matches the sequential oracle at
+/// every worker count even with mid-run fleet mutations.
+#[test]
+fn streaming_runs_are_deterministic_and_thread_invariant() {
+    let seq = run(&streaming_fc(0));
+    let again = run(&streaming_fc(0));
+    assert_eq!(again.total_bytes, seq.total_bytes);
+    assert_eq!(again.events, seq.events);
+    assert_eq!(again.frames_offered, seq.frames_offered);
+    assert_eq!(again.makespan_seconds.to_bits(), seq.makespan_seconds.to_bits());
+
+    for threads in 1..=4 {
+        let r = run(&streaming_fc(threads));
+        assert_eq!(r.total_bytes, seq.total_bytes, "threads={threads}");
+        assert_eq!(r.catchup_bytes, seq.catchup_bytes, "threads={threads}");
+        assert_eq!(r.events, seq.events, "threads={threads}");
+        assert_eq!(r.frames_offered, seq.frames_offered, "threads={threads}");
+        assert_eq!(r.stream_deliveries, seq.stream_deliveries, "threads={threads}");
+        assert_eq!(r.frames_dropped, seq.frames_dropped, "threads={threads}");
+        assert_eq!(r.deadline_misses, seq.deadline_misses, "threads={threads}");
+        assert_eq!(
+            r.staleness_p50_seconds.to_bits(),
+            seq.staleness_p50_seconds.to_bits(),
+            "threads={threads}"
+        );
+        assert_eq!(
+            r.staleness_p99_seconds.to_bits(),
+            seq.staleness_p99_seconds.to_bits(),
+            "threads={threads}"
+        );
+        assert_eq!(
+            r.makespan_seconds.to_bits(),
+            seq.makespan_seconds.to_bits(),
+            "threads={threads}"
+        );
+        for (a, b) in r.fogs.iter().zip(seq.fogs.iter()) {
+            assert_eq!(a.joined, b.joined, "threads={threads} fog={}", a.fog);
+            assert_eq!(a.departed, b.departed, "threads={threads} fog={}", a.fog);
+            assert_eq!(a.offered, b.offered, "threads={threads} fog={}", a.fog);
+            assert_eq!(a.dropped, b.dropped, "threads={threads} fog={}", a.fog);
+        }
+    }
+}
+
+/// Misses shrink as the deadline loosens; an effectively infinite
+/// deadline misses nothing and a near-zero one misses everything.
+#[test]
+fn deadline_misses_are_monotone_in_the_deadline() {
+    let with_deadline = |d: f64| {
+        let mut fc = streaming_fc(0);
+        fc.stream.as_mut().unwrap().deadline = Some(d);
+        run(&fc)
+    };
+    let tight = with_deadline(1e-9);
+    let mid = with_deadline(0.25);
+    let loose = with_deadline(1e6);
+    assert_eq!(tight.deadline_misses, tight.stream_deliveries, "nothing beats 1 ns");
+    assert!(mid.deadline_misses <= tight.deadline_misses);
+    assert_eq!(loose.deadline_misses, 0, "nothing misses a horizon-sized deadline");
+    // The deadline only classifies deliveries; the timeline is shared.
+    assert_eq!(tight.stream_deliveries, loose.stream_deliveries);
+    assert_eq!(tight.total_bytes, loose.total_bytes);
+
+    // And with no deadline at all, the metric stays silent.
+    let mut fc = streaming_fc(0);
+    fc.stream.as_mut().unwrap().deadline = None;
+    let none = run(&fc);
+    assert_eq!(none.deadline_seconds, 0.0);
+    assert_eq!(none.deadline_misses, 0);
+}
+
+/// Diurnal arrivals modulate the Poisson rate over a period; the run
+/// stays seeded-deterministic and the spec name round-trips into the
+/// report.
+#[test]
+fn diurnal_arrivals_stream_deterministically() {
+    let diurnal = |threads: usize| {
+        let mut fc = streaming_fc(threads);
+        fc.stream.as_mut().unwrap().arrivals =
+            ArrivalSpec::Diurnal { rate: 2.0, period: 2.5 };
+        run(&fc)
+    };
+    let a = diurnal(0);
+    let b = diurnal(4);
+    assert_eq!(a.arrivals, "diurnal:2,2.5");
+    assert!(a.frames_offered > 0);
+    assert_eq!(b.frames_offered, a.frames_offered);
+    assert_eq!(b.total_bytes, a.total_bytes);
+    assert_eq!(b.makespan_seconds.to_bits(), a.makespan_seconds.to_bits());
+}
+
+/// Aggregate cell mode streams a 10 000-edge fleet through the same
+/// schedule with macro events only — the steady-state analogue of the
+/// batch scale contract.
+#[test]
+fn aggregate_mode_streams_large_fleets_with_macro_events() {
+    let mut fc = streaming_fc(0);
+    fc.n_edges = 10_000;
+    fc.cell_sim = CellSimMode::Aggregate;
+    let r = run(&fc);
+    assert_eq!(r.n_edges, 10_000);
+    assert!(r.frames_offered > 0);
+    assert!(r.stream_deliveries > 0, "aggregate legs must record stream deliveries");
+    assert!(r.staleness_p50_seconds > 0.0);
+    // ~2499 receivers per cell, yet the timeline holds only macro
+    // events: far fewer events than receivers.
+    assert!(
+        r.events < 10_000,
+        "streaming aggregate event count must not scale with receivers: {}",
+        r.events
+    );
+    let joined: usize = r.fogs.iter().map(|f| f.joined).sum();
+    let departed: usize = r.fogs.iter().map(|f| f.departed).sum();
+    assert_eq!(joined, departed, "re-attachment also balances in aggregate mode");
+}
