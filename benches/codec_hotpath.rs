@@ -1,21 +1,49 @@
 //! JPEG codec microbenchmarks — the baseline pipelines' hot path (Fig 11's
 //! decode slice for PyTorch/DALI) and a §Perf L3 target: DCT, full
-//! encode/decode throughput, Huffman stage, and parallel decode scaling.
+//! encode/decode throughput, Huffman stage, and parallel decode scaling,
+//! plus the `codec::kernels` dispatch layer (scalar vs SIMD backend for
+//! the 8x8 DCT, the color transforms and batched Huffman bit emission)
+//! and the parallel live multi-shard encode (`sim --fogs F
+//! --encode-workers N`) when AOT artifacts are present.
+//!
+//! Besides the printed tables, the run writes `BENCH_codec.json` at the
+//! repo root so the scalar-vs-kernel trajectory is machine-readable
+//! across PRs.
 //!
 //! Run: `cargo bench --bench codec_hotpath`
+//! Env: `RESIDUAL_INR_NO_SIMD=1` pins the *dispatched* kernels to scalar
+//! (the per-backend rows below always measure every compiled backend).
 
 use std::sync::Arc;
 
-use residual_inr::bench_support::{bench, report};
+use residual_inr::bench_support::{bench, report, BenchResult};
+use residual_inr::codec::jpeg::bitio::{BitWriter, ReferenceBitWriter};
 use residual_inr::codec::jpeg::{self, dct};
+use residual_inr::codec::kernels::{self, Backend};
+use residual_inr::coordinator::{run_multi, Method, MultiFogConfig, SimConfig};
 use residual_inr::data::{generate_sequence, Profile};
+use residual_inr::fleet::{RebroadcastPolicy, Topology};
 use residual_inr::pipeline::baseline::{decode_jpeg_batch, JpegPipeline};
+use residual_inr::runtime::Session;
+use residual_inr::util::json::Json;
 use residual_inr::util::rng::Pcg32;
 
-fn main() {
+fn kernel_row(kernel: &str, be: Backend, r: &BenchResult, scalar_mean: f64) -> Json {
+    Json::obj(vec![
+        ("kernel", Json::Str(kernel.to_string())),
+        ("backend", Json::Str(be.name().to_string())),
+        ("mean_seconds", Json::Num(r.stats.mean)),
+        ("p95_seconds", Json::Num(r.stats.p95)),
+        ("iters", Json::Num(r.iters as f64)),
+        ("speedup_vs_scalar", Json::Num(scalar_mean / r.stats.mean)),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
     let seq = generate_sequence(Profile::Uav123, 7, 0);
     let img = &seq.frames[0];
     let px = (img.width * img.height) as f64;
+    let mut kernel_rows: Vec<Json> = Vec::new();
 
     println!("== 8x8 DCT kernel ==");
     let mut rng = Pcg32::seeded(1);
@@ -36,19 +64,153 @@ fn main() {
     });
     report(&r);
 
+    // --- codec::kernels dispatch: every compiled backend vs scalar ----
+    println!("\n== codec::kernels: scalar vs SIMD backends ==");
+    println!("active backend: {}", kernels::active().name());
+    let backends = kernels::available_backends();
+    // 64 random blocks so the loop body dominates the call overhead.
+    let blocks: Vec<[f32; 64]> = (0..64)
+        .map(|i| {
+            let mut b = [0f32; 64];
+            let mut rng = Pcg32::seeded(100 + i);
+            for v in b.iter_mut() {
+                *v = rng.range_f32(-128.0, 128.0);
+            }
+            b
+        })
+        .collect();
+    let mut scalar_mean = 0.0;
+    for &be in &backends {
+        let r = bench(&format!("fdct8x8_on[{}] x64 blocks", be.name()), 50, 1000, || {
+            for b in &blocks {
+                std::hint::black_box(kernels::fdct8x8_on(be, std::hint::black_box(b)));
+            }
+        });
+        report(&r);
+        if be == Backend::Scalar {
+            scalar_mean = r.stats.mean;
+        }
+        kernel_rows.push(kernel_row("fdct8x8", be, &r, scalar_mean));
+    }
+    for &be in &backends {
+        let r = bench(&format!("idct8x8_on[{}] x64 blocks", be.name()), 50, 1000, || {
+            for b in &blocks {
+                std::hint::black_box(kernels::idct8x8_on(be, std::hint::black_box(b)));
+            }
+        });
+        report(&r);
+        if be == Backend::Scalar {
+            scalar_mean = r.stats.mean;
+        }
+        kernel_rows.push(kernel_row("idct8x8", be, &r, scalar_mean));
+    }
+    // Full-frame color transforms over the real test frame.
+    let (w, h) = (img.width, img.height);
+    for &be in &backends {
+        let r = bench(&format!("rgb_to_ycbcr_on[{}] {w}x{h}", be.name()), 5, 100, || {
+            let rgb = std::hint::black_box(&img.data);
+            std::hint::black_box(kernels::rgb_to_ycbcr_on(be, w, h, rgb));
+        });
+        report(&r);
+        if be == Backend::Scalar {
+            scalar_mean = r.stats.mean;
+        }
+        kernel_rows.push(kernel_row("rgb_to_ycbcr", be, &r, scalar_mean));
+    }
+    let (yp, cbp, crp) = kernels::rgb_to_ycbcr(w, h, &img.data);
+    for &be in &backends {
+        let r = bench(&format!("ycbcr_to_rgb_on[{}] {w}x{h}", be.name()), 5, 100, || {
+            std::hint::black_box(kernels::ycbcr_to_rgb_on(
+                be,
+                std::hint::black_box(&yp),
+                std::hint::black_box(&cbp),
+                std::hint::black_box(&crp),
+            ));
+        });
+        report(&r);
+        if be == Backend::Scalar {
+            scalar_mean = r.stats.mean;
+        }
+        kernel_rows.push(kernel_row("ycbcr_to_rgb", be, &r, scalar_mean));
+    }
+
+    // --- batched Huffman bit emission: u64 accumulator vs reference ---
+    println!("\n== bitio: batched u64 accumulator vs per-symbol reference ==");
+    // A representative entropy-coded symbol stream: (code ≤ 16 bits,
+    // magnitude ≤ 11 bits) pairs, the shape `write_component` emits.
+    let mut rng = Pcg32::seeded(9);
+    let symbols: Vec<(u16, u8, u16, u8)> = (0..65_536)
+        .map(|_| {
+            let code_len = 2 + (rng.below(15)) as u8; // 2..=16
+            let code = (rng.next_u32() as u16) & ((1u16 << code_len.min(15)) - 1);
+            let cat = (rng.below(12)) as u8; // 0..=11
+            let bits = if cat == 0 { 0 } else { (rng.next_u32() as u16) & ((1u16 << cat) - 1) };
+            (code, code_len, bits, cat)
+        })
+        .collect();
+    let r_ref = bench("reference: two pushes per symbol", 3, 50, || {
+        let mut w = ReferenceBitWriter::new();
+        for &(code, l, bits, cat) in &symbols {
+            w.write(code as u32, l);
+            if cat > 0 {
+                w.write(bits as u32, cat);
+            }
+        }
+        std::hint::black_box(w.finish());
+    });
+    report(&r_ref);
+    let r_batch = bench("batched: one write_u64 per symbol", 3, 50, || {
+        let mut w = BitWriter::new();
+        for &(code, l, bits, cat) in &symbols {
+            w.write_u64(((code as u64) << cat) | bits as u64, l + cat);
+        }
+        std::hint::black_box(w.finish());
+    });
+    report(&r_batch);
+    println!("{:<44} {:>9.2}x vs reference", "", r_ref.stats.mean / r_batch.stats.mean);
+    let bitio_rows = vec![
+        Json::obj(vec![
+            ("kernel", Json::Str("huffman_emit".to_string())),
+            ("backend", Json::Str("reference".to_string())),
+            ("mean_seconds", Json::Num(r_ref.stats.mean)),
+            ("iters", Json::Num(r_ref.iters as f64)),
+            ("speedup_vs_scalar", Json::Num(1.0)),
+        ]),
+        Json::obj(vec![
+            ("kernel", Json::Str("huffman_emit".to_string())),
+            ("backend", Json::Str("batched_u64".to_string())),
+            ("mean_seconds", Json::Num(r_batch.stats.mean)),
+            ("iters", Json::Num(r_batch.iters as f64)),
+            ("speedup_vs_scalar", Json::Num(r_ref.stats.mean / r_batch.stats.mean)),
+        ]),
+    ];
+
     println!("\n== full-frame encode/decode (128x96) ==");
+    let mut frame_rows: Vec<Json> = Vec::new();
     for q in [50u8, 85] {
         let r = bench(&format!("encode q{q}"), 3, 30, || {
             std::hint::black_box(jpeg::encode(img, q));
         });
         report(&r);
         println!("{:<44} {:>10.1} Mpx/s", "", px / r.stats.mean / 1e6);
+        frame_rows.push(Json::obj(vec![
+            ("op", Json::Str(format!("encode_q{q}"))),
+            ("backend", Json::Str(kernels::active().name().to_string())),
+            ("mean_seconds", Json::Num(r.stats.mean)),
+            ("mpx_per_s", Json::Num(px / r.stats.mean / 1e6)),
+        ]));
         let bytes = jpeg::encode(img, q);
         let r = bench(&format!("decode q{q}"), 3, 30, || {
             std::hint::black_box(jpeg::decode(&bytes).unwrap());
         });
         report(&r);
         println!("{:<44} {:>10.1} Mpx/s", "", px / r.stats.mean / 1e6);
+        frame_rows.push(Json::obj(vec![
+            ("op", Json::Str(format!("decode_q{q}"))),
+            ("backend", Json::Str(kernels::active().name().to_string())),
+            ("mean_seconds", Json::Num(r.stats.mean)),
+            ("mpx_per_s", Json::Num(px / r.stats.mean / 1e6)),
+        ]));
     }
 
     println!("\n== batch decode: PyTorch-like (serial) vs DALI-like (parallel) ==");
@@ -66,4 +228,77 @@ fn main() {
         report(&r);
         println!("{:<44} {:>9.2}x vs serial", "", serial / r.stats.mean);
     }
+
+    // --- parallel live multi-shard encode (needs AOT artifacts) -------
+    let mut multi_rows: Vec<Json> = Vec::new();
+    if Session::open_default().is_ok() {
+        println!("\n== run_multi: live encode scaling (--encode-workers) ==");
+        let cfg = residual_inr::config::ArchConfig::load_default()?;
+        let mut sim = SimConfig::small(Method::ResRapid { direct: false });
+        sim.n_sequences = 2;
+        sim.max_train_frames = Some(4);
+        sim.n_receivers = 2;
+        sim.epochs = 1;
+        sim.pretrain_steps = 10;
+        sim.enc.bg_steps = 40;
+        sim.enc.obj_steps = 40;
+        sim.enc.nerv_steps = 40;
+        let mut parity: Option<u64> = None;
+        for workers in [1usize, 2, 4] {
+            let mut mf = MultiFogConfig::new(4, Topology::Sharded, RebroadcastPolicy::Unicast);
+            mf.encode_workers = workers;
+            let r = run_multi(&cfg, &sim, &mf)?;
+            println!(
+                "{:<44} {:>10.3} s wall  {:>8.2} MB/s  util {:.0}%",
+                format!("4 shards, {} encode worker(s)", r.encode.workers),
+                r.encode.wall_seconds,
+                r.encode.mb_per_s(),
+                100.0 * r.encode.mean_utilization(),
+            );
+            let total: u64 = r.shards.iter().map(|s| s.payload_bytes).sum();
+            match parity {
+                None => parity = Some(total),
+                Some(p) => assert_eq!(p, total, "byte parity across worker counts"),
+            }
+            multi_rows.push(Json::obj(vec![
+                ("encode_workers", Json::Num(r.encode.workers as f64)),
+                ("wall_seconds", Json::Num(r.encode.wall_seconds)),
+                ("mb_per_s", Json::Num(r.encode.mb_per_s())),
+                ("mean_utilization", Json::Num(r.encode.mean_utilization())),
+                ("payload_bytes", Json::Num(total as f64)),
+            ]));
+        }
+    } else {
+        println!("\n(run_multi scaling skipped: AOT artifacts absent — python -m compile.aot)");
+    }
+
+    // Machine-readable scalar-vs-kernel trajectory (BENCH_codec.json at
+    // the repo root; falls back to the current directory).
+    let json = Json::obj(vec![
+        ("bench", Json::Str("codec_hotpath".to_string())),
+        (
+            "meta",
+            Json::obj(vec![(
+                "provenance",
+                Json::Str("generated natively by `cargo bench --bench codec_hotpath`".to_string()),
+            )]),
+        ),
+        ("active_backend", Json::Str(kernels::active().name().to_string())),
+        (
+            "available_backends",
+            Json::Arr(backends.iter().map(|b| Json::Str(b.name().to_string())).collect()),
+        ),
+        ("kernels", Json::Arr(kernel_rows)),
+        ("huffman", Json::Arr(bitio_rows)),
+        ("full_frame", Json::Arr(frame_rows)),
+        ("run_multi", Json::Arr(multi_rows)),
+    ]);
+    let out = residual_inr::config::find_repo_file("Cargo.toml")
+        .ok()
+        .and_then(|p| p.parent().map(|d| d.to_path_buf()))
+        .unwrap_or_else(|| std::path::PathBuf::from("."))
+        .join("BENCH_codec.json");
+    std::fs::write(&out, format!("{json}\n"))?;
+    println!("wrote {}", out.display());
+    Ok(())
 }

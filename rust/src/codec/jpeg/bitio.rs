@@ -1,14 +1,75 @@
 //! MSB-first bit writer/reader for the entropy-coded segment.
+//!
+//! The production [`BitWriter`] packs bits into a `u64` accumulator and
+//! flushes whole bytes, so a batched Huffman emission (`code || magnitude
+//! bits` in one call, see `coder::write_component`) costs one shift/or per
+//! symbol instead of one branch per bit. The original per-bit writer is
+//! retained verbatim as [`ReferenceBitWriter`]: it is the exact-match
+//! oracle the tests diff against, byte for byte.
 
-/// Append-only MSB-first bit writer.
+/// Append-only MSB-first bit writer with a 64-bit accumulator.
 #[derive(Debug, Default)]
 pub struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,   // valid bits live in acc[0, nbits); higher bits are garbage
+    nbits: u32, // always < 8 between calls
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `value`, MSB first. `n ≤ 32`.
+    #[inline]
+    pub fn write(&mut self, value: u32, n: u8) {
+        self.write_u64(value as u64, n);
+    }
+
+    /// Write the low `n` bits of `value`, MSB first. `n ≤ 57` so that the
+    /// accumulator (at most 7 residual bits between calls) cannot overflow.
+    /// Wide enough for a full Huffman code plus magnitude bits in one call.
+    #[inline]
+    pub fn write_u64(&mut self, value: u64, n: u8) {
+        debug_assert!(n <= 57);
+        if n == 0 {
+            return;
+        }
+        let v = value & (u64::MAX >> (64 - n as u32));
+        self.acc = (self.acc << n) | v;
+        self.nbits += n as u32;
+        while self.nbits >= 8 {
+            self.nbits -= 8;
+            self.buf.push((self.acc >> self.nbits) as u8);
+        }
+    }
+
+    /// Pad with 1-bits to a byte boundary and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            let pad = 8 - self.nbits;
+            let byte = ((self.acc << pad) | ((1u64 << pad) - 1)) as u8;
+            self.buf.push(byte);
+        }
+        self.buf
+    }
+
+    /// Bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+}
+
+/// The original per-bit writer, kept verbatim as the exactness oracle for
+/// [`BitWriter`]. Not used on the encode hot path.
+#[derive(Debug, Default)]
+pub struct ReferenceBitWriter {
     buf: Vec<u8>,
     cur: u8,
     nbits: u8,
 }
 
-impl BitWriter {
+impl ReferenceBitWriter {
     pub fn new() -> Self {
         Self::default()
     }
@@ -82,6 +143,7 @@ impl<'a> BitReader<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg32;
 
     #[test]
     fn write_read_roundtrip() {
@@ -122,5 +184,60 @@ mod tests {
         let mut w = BitWriter::new();
         w.write(123, 0);
         assert_eq!(w.bit_len(), 0);
+        assert!(w.finish().is_empty());
+    }
+
+    #[test]
+    fn high_bits_above_n_are_masked() {
+        let mut w = BitWriter::new();
+        w.write(0xFFFF_FFFF, 3); // only the low 3 bits count
+        let mut o = ReferenceBitWriter::new();
+        o.write(0xFFFF_FFFF, 3);
+        assert_eq!(w.finish(), o.finish());
+    }
+
+    /// The accumulator writer must match the per-bit oracle byte-for-byte
+    /// on random streams of (value, width) pairs, including widths > 32
+    /// via `write_u64` split into two oracle writes.
+    #[test]
+    fn matches_reference_writer_exactly() {
+        let mut rng = Pcg32::seeded(0x1b17);
+        for _ in 0..200 {
+            let mut w = BitWriter::new();
+            let mut o = ReferenceBitWriter::new();
+            let n_ops = 1 + (rng.next_u32() % 64) as usize;
+            for _ in 0..n_ops {
+                let n = (rng.next_u32() % 58) as u8; // 0..=57
+                let v =
+                    if n == 0 { 0 } else { rng.next_u64() & (u64::MAX >> (64 - n as u32)) };
+                w.write_u64(v, n);
+                if n > 32 {
+                    o.write((v >> 32) as u32, n - 32);
+                    o.write(v as u32, 32);
+                } else {
+                    o.write(v as u32, n);
+                }
+            }
+            assert_eq!(w.bit_len(), o.bit_len());
+            assert_eq!(w.finish(), o.finish());
+        }
+    }
+
+    /// A batched `code || magnitude` emission equals the two-call form.
+    #[test]
+    fn batched_symbol_equals_split_writes() {
+        let mut rng = Pcg32::seeded(7);
+        let mut w = BitWriter::new();
+        let mut o = ReferenceBitWriter::new();
+        for _ in 0..500 {
+            let l = 1 + (rng.next_u32() % 16) as u8; // code length 1..=16
+            let cat = (rng.next_u32() % 17) as u8; // category 0..=16
+            let code = rng.next_u32() & ((1u32 << l) - 1);
+            let bits = if cat == 0 { 0 } else { rng.next_u32() & ((1u32 << cat) - 1) };
+            w.write_u64(((code as u64) << cat) | bits as u64, l + cat);
+            o.write(code, l);
+            o.write(bits, cat);
+        }
+        assert_eq!(w.finish(), o.finish());
     }
 }

@@ -10,11 +10,13 @@
 use anyhow::{bail, Context, Result};
 
 use super::bitio::{BitReader, BitWriter};
-use super::color::{rgb_to_ycbcr, subsample_420, upsample_420, ycbcr_to_rgb, Plane};
-use super::dct::{fdct8x8, idct8x8};
+use super::color::{subsample_420, upsample_420, Plane};
 use super::huffman::{HuffDecoder, HuffTable, MAX_CODE_LEN};
 use super::quant::{dequantize, quantize, scaled_table, CHROMA_BASE, LUMA_BASE};
 use super::zigzag::{from_zigzag, to_zigzag};
+// DCT and color conversion go through the runtime-dispatched SIMD kernels
+// (bit-identical to the scalar code in `dct`/`color`, see codec::kernels).
+use crate::codec::kernels::{fdct8x8, idct8x8, rgb_to_ycbcr, ycbcr_to_rgb};
 use crate::data::ImageRGB;
 
 const MAGIC: &[u8; 4] = b"RJPG";
@@ -254,20 +256,19 @@ fn count_component(blocks: &[[i16; 64]], dc: &mut [u64], ac: &mut [u64]) {
 }
 
 fn write_component(blocks: &[[i16; 64]], t_dc: &HuffTable, t_ac: &HuffTable, w: &mut BitWriter) {
+    // Batched emission: `code ‖ magnitude` packed into one u64 write per
+    // symbol (≤ 16 code bits + ≤ 17 magnitude bits), instead of two
+    // per-symbol calls into the bit writer.
     let w = std::cell::RefCell::new(w);
     code_component(
         blocks,
         |cat, bits| {
-            let mut w = w.borrow_mut();
             let (c, l) = t_dc.encode(cat);
-            w.write(c as u32, l);
-            w.write(bits, cat);
+            w.borrow_mut().write_u64(((c as u64) << cat) | bits as u64, l + cat);
         },
         |sym, cat, bits| {
-            let mut w = w.borrow_mut();
             let (c, l) = t_ac.encode(sym);
-            w.write(c as u32, l);
-            w.write(bits, cat);
+            w.borrow_mut().write_u64(((c as u64) << cat) | bits as u64, l + cat);
         },
     );
 }

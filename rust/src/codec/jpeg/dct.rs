@@ -36,6 +36,12 @@ fn basis() -> &'static Basis {
     B.get_or_init(Basis::new)
 }
 
+/// The precomputed cosine basis `c[u][x]`, shared with `codec::kernels` so
+/// the SIMD paths use bit-identical coefficients.
+pub(crate) fn basis_c() -> &'static [[f32; 8]; 8] {
+    &basis().c
+}
+
 /// Forward 8×8 DCT-II (separable fast path). `block` is row-major.
 pub fn fdct8x8(block: &[f32; 64]) -> [f32; 64] {
     let b = basis();

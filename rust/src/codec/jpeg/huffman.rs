@@ -344,8 +344,8 @@ mod tests {
         crate::util::propcheck::check("huffman-roundtrip", |rng| {
             let nsyms = 2 + rng.below_usize(100);
             let mut freq = vec![0u64; 256];
-            for s in 0..nsyms {
-                freq[s] = 1 + rng.below(1000) as u64;
+            for f in freq.iter_mut().take(nsyms) {
+                *f = 1 + rng.below(1000) as u64;
             }
             let msg: Vec<u8> = (0..200).map(|_| rng.below(nsyms as u32) as u8).collect();
             let table = HuffTable::from_frequencies(&freq);

@@ -1,0 +1,218 @@
+//! AVX2 kernels (x86_64). Eight f32 lanes per op via `std::arch`.
+//!
+//! Every kernel performs the same multiplies and adds in the same
+//! association order as the scalar code in `jpeg::{dct,color}` — separate
+//! `mul`/`add`, never FMA, accumulators seeded from `+0.0` — so results
+//! are bit-identical to scalar (the parity tests in `kernels::tests`
+//! compare with `==`). The only admitted divergence is NaN handling in
+//! the final clamp (`min`/`max` vs `f32::clamp`), which cannot trigger on
+//! finite planes.
+//!
+//! Safety: every function here requires AVX2; callers in `kernels` only
+//! dispatch after `is_x86_feature_detected!("avx2")` succeeded.
+
+use std::arch::x86_64::*;
+
+/// Forward 8×8 DCT-II: lanes are the eight coefficients `u` of one row.
+///
+/// `c` is the cosine basis `c[u][x]`, `t` its transpose `t[x][u]`.
+///
+/// # Safety
+/// Requires AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn fdct8x8(block: &[f32; 64], c: &[[f32; 8]; 8], t: &[[f32; 8]; 8]) -> [f32; 64] {
+    // Rows first: tmp[y][u] = Σ_x block[y][x] c[u][x], lanes = u.
+    let mut tmp = [0.0f32; 64];
+    for y in 0..8 {
+        let mut acc = _mm256_setzero_ps();
+        for x in 0..8 {
+            let s = _mm256_set1_ps(block[y * 8 + x]);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(s, _mm256_loadu_ps(t[x].as_ptr())));
+        }
+        _mm256_storeu_ps(tmp.as_mut_ptr().add(y * 8), acc);
+    }
+    // Columns: out[v][u] = Σ_y tmp[y][u] c[v][y], lanes = u.
+    let mut out = [0.0f32; 64];
+    for v in 0..8 {
+        let mut acc = _mm256_setzero_ps();
+        for y in 0..8 {
+            let row = _mm256_loadu_ps(tmp.as_ptr().add(y * 8));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(row, _mm256_set1_ps(c[v][y])));
+        }
+        _mm256_storeu_ps(out.as_mut_ptr().add(v * 8), acc);
+    }
+    out
+}
+
+/// Inverse 8×8 DCT: same lane layout as [`fdct8x8`].
+///
+/// # Safety
+/// Requires AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn idct8x8(coef: &[f32; 64], c: &[[f32; 8]; 8], _t: &[[f32; 8]; 8]) -> [f32; 64] {
+    // Columns first: tmp[y][u] = Σ_v coef[v][u] c[v][y], lanes = u.
+    let mut tmp = [0.0f32; 64];
+    for y in 0..8 {
+        let mut acc = _mm256_setzero_ps();
+        for v in 0..8 {
+            let row = _mm256_loadu_ps(coef.as_ptr().add(v * 8));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(row, _mm256_set1_ps(c[v][y])));
+        }
+        _mm256_storeu_ps(tmp.as_mut_ptr().add(y * 8), acc);
+    }
+    // Rows: out[y][x] = Σ_u tmp[y][u] c[u][x], lanes = x.
+    let mut out = [0.0f32; 64];
+    for y in 0..8 {
+        let mut acc = _mm256_setzero_ps();
+        for u in 0..8 {
+            let s = _mm256_set1_ps(tmp[y * 8 + u]);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(s, _mm256_loadu_ps(c[u].as_ptr())));
+        }
+        _mm256_storeu_ps(out.as_mut_ptr().add(y * 8), acc);
+    }
+    out
+}
+
+/// Deinterleave 8 RGB pixels (3 consecutive vectors) into r/g/b vectors.
+/// Index maps verified against the scalar layout in `kernels::tests`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn deinterleave8(v0: __m256, v1: __m256, v2: __m256) -> (__m256, __m256, __m256) {
+    let r = _mm256_blend_ps::<0b1100_0000>(
+        _mm256_blend_ps::<0b0011_1000>(
+            _mm256_permutevar8x32_ps(v0, _mm256_setr_epi32(0, 3, 6, 0, 0, 0, 0, 0)),
+            _mm256_permutevar8x32_ps(v1, _mm256_setr_epi32(0, 0, 0, 1, 4, 7, 0, 0)),
+        ),
+        _mm256_permutevar8x32_ps(v2, _mm256_setr_epi32(0, 0, 0, 0, 0, 0, 2, 5)),
+    );
+    let g = _mm256_blend_ps::<0b1110_0000>(
+        _mm256_blend_ps::<0b0001_1000>(
+            _mm256_permutevar8x32_ps(v0, _mm256_setr_epi32(1, 4, 7, 0, 0, 0, 0, 0)),
+            _mm256_permutevar8x32_ps(v1, _mm256_setr_epi32(0, 0, 0, 2, 5, 0, 0, 0)),
+        ),
+        _mm256_permutevar8x32_ps(v2, _mm256_setr_epi32(0, 0, 0, 0, 0, 0, 3, 6)),
+    );
+    let b = _mm256_blend_ps::<0b1110_0000>(
+        _mm256_blend_ps::<0b0001_1100>(
+            _mm256_permutevar8x32_ps(v0, _mm256_setr_epi32(2, 5, 0, 0, 0, 0, 0, 0)),
+            _mm256_permutevar8x32_ps(v1, _mm256_setr_epi32(0, 0, 0, 3, 6, 0, 0, 0)),
+        ),
+        _mm256_permutevar8x32_ps(v2, _mm256_setr_epi32(0, 0, 0, 0, 0, 1, 4, 7)),
+    );
+    (r, g, b)
+}
+
+/// Interleave r/g/b vectors back into 3 consecutive RGB vectors.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn interleave8(r: __m256, g: __m256, b: __m256) -> (__m256, __m256, __m256) {
+    let o0 = _mm256_blend_ps::<0b0010_0100>(
+        _mm256_blend_ps::<0b1001_0010>(
+            _mm256_permutevar8x32_ps(r, _mm256_setr_epi32(0, 0, 0, 1, 1, 1, 2, 2)),
+            _mm256_permutevar8x32_ps(g, _mm256_setr_epi32(0, 0, 0, 0, 1, 1, 1, 2)),
+        ),
+        _mm256_permutevar8x32_ps(b, _mm256_setr_epi32(0, 0, 0, 0, 0, 1, 1, 1)),
+    );
+    let o1 = _mm256_blend_ps::<0b0010_0100>(
+        _mm256_blend_ps::<0b1001_0010>(
+            _mm256_permutevar8x32_ps(b, _mm256_setr_epi32(2, 2, 2, 3, 3, 3, 4, 4)),
+            _mm256_permutevar8x32_ps(r, _mm256_setr_epi32(3, 3, 3, 3, 4, 4, 4, 5)),
+        ),
+        _mm256_permutevar8x32_ps(g, _mm256_setr_epi32(3, 3, 3, 3, 3, 4, 4, 4)),
+    );
+    let o2 = _mm256_blend_ps::<0b0010_0100>(
+        _mm256_blend_ps::<0b1001_0010>(
+            _mm256_permutevar8x32_ps(g, _mm256_setr_epi32(5, 5, 5, 6, 6, 6, 7, 7)),
+            _mm256_permutevar8x32_ps(b, _mm256_setr_epi32(5, 5, 5, 5, 6, 6, 6, 7)),
+        ),
+        _mm256_permutevar8x32_ps(r, _mm256_setr_epi32(6, 6, 6, 6, 6, 7, 7, 7)),
+    );
+    (o0, o1, o2)
+}
+
+/// Bulk RGB→YCbCr over the leading `8·⌊n/8⌋` pixels; returns how many
+/// pixels were processed (caller finishes the tail with scalar code).
+///
+/// # Safety
+/// Requires AVX2. `y`/`cb`/`cr` must each hold `rgb01.len() / 3` floats.
+#[target_feature(enable = "avx2")]
+pub unsafe fn rgb_to_ycbcr(rgb01: &[f32], y: &mut [f32], cb: &mut [f32], cr: &mut [f32]) -> usize {
+    let n = rgb01.len() / 3;
+    let scale = _mm256_set1_ps(255.0);
+    let c128 = _mm256_set1_ps(128.0);
+    for i in 0..n / 8 {
+        let base = i * 24;
+        let v0 = _mm256_loadu_ps(rgb01.as_ptr().add(base));
+        let v1 = _mm256_loadu_ps(rgb01.as_ptr().add(base + 8));
+        let v2 = _mm256_loadu_ps(rgb01.as_ptr().add(base + 16));
+        let (r, g, b) = deinterleave8(v0, v1, v2);
+        let r = _mm256_mul_ps(r, scale);
+        let g = _mm256_mul_ps(g, scale);
+        let b = _mm256_mul_ps(b, scale);
+        // y = 0.299 r + 0.587 g + 0.114 b
+        let yv = _mm256_add_ps(
+            _mm256_add_ps(
+                _mm256_mul_ps(_mm256_set1_ps(0.299), r),
+                _mm256_mul_ps(_mm256_set1_ps(0.587), g),
+            ),
+            _mm256_mul_ps(_mm256_set1_ps(0.114), b),
+        );
+        // cb = ((128 - 0.168736 r) - 0.331264 g) + 0.5 b
+        let cbv = _mm256_add_ps(
+            _mm256_sub_ps(
+                _mm256_sub_ps(c128, _mm256_mul_ps(_mm256_set1_ps(0.168_736), r)),
+                _mm256_mul_ps(_mm256_set1_ps(0.331_264), g),
+            ),
+            _mm256_mul_ps(_mm256_set1_ps(0.5), b),
+        );
+        // cr = ((128 + 0.5 r) - 0.418688 g) - 0.081312 b
+        let crv = _mm256_sub_ps(
+            _mm256_sub_ps(
+                _mm256_add_ps(c128, _mm256_mul_ps(_mm256_set1_ps(0.5), r)),
+                _mm256_mul_ps(_mm256_set1_ps(0.418_688), g),
+            ),
+            _mm256_mul_ps(_mm256_set1_ps(0.081_312), b),
+        );
+        _mm256_storeu_ps(y.as_mut_ptr().add(i * 8), yv);
+        _mm256_storeu_ps(cb.as_mut_ptr().add(i * 8), cbv);
+        _mm256_storeu_ps(cr.as_mut_ptr().add(i * 8), crv);
+    }
+    n / 8 * 8
+}
+
+/// Bulk YCbCr→RGB over the leading `8·⌊n/8⌋` pixels; returns how many
+/// pixels were processed.
+///
+/// # Safety
+/// Requires AVX2. `rgb` must hold `3 · y.len()` floats.
+#[target_feature(enable = "avx2")]
+pub unsafe fn ycbcr_to_rgb(y: &[f32], cb: &[f32], cr: &[f32], rgb: &mut [f32]) -> usize {
+    let n = y.len();
+    let c128 = _mm256_set1_ps(128.0);
+    let inv = _mm256_set1_ps(255.0);
+    let zero = _mm256_setzero_ps();
+    let one = _mm256_set1_ps(1.0);
+    for i in 0..n / 8 {
+        let yy = _mm256_loadu_ps(y.as_ptr().add(i * 8));
+        let cbv = _mm256_sub_ps(_mm256_loadu_ps(cb.as_ptr().add(i * 8)), c128);
+        let crv = _mm256_sub_ps(_mm256_loadu_ps(cr.as_ptr().add(i * 8)), c128);
+        // r = yy + 1.402 cr
+        let r = _mm256_add_ps(yy, _mm256_mul_ps(_mm256_set1_ps(1.402), crv));
+        // g = (yy - 0.344136 cb) - 0.714136 cr
+        let g = _mm256_sub_ps(
+            _mm256_sub_ps(yy, _mm256_mul_ps(_mm256_set1_ps(0.344_136), cbv)),
+            _mm256_mul_ps(_mm256_set1_ps(0.714_136), crv),
+        );
+        // b = yy + 1.772 cb
+        let b = _mm256_add_ps(yy, _mm256_mul_ps(_mm256_set1_ps(1.772), cbv));
+        let r = _mm256_max_ps(_mm256_min_ps(_mm256_div_ps(r, inv), one), zero);
+        let g = _mm256_max_ps(_mm256_min_ps(_mm256_div_ps(g, inv), one), zero);
+        let b = _mm256_max_ps(_mm256_min_ps(_mm256_div_ps(b, inv), one), zero);
+        let (o0, o1, o2) = interleave8(r, g, b);
+        let base = i * 24;
+        _mm256_storeu_ps(rgb.as_mut_ptr().add(base), o0);
+        _mm256_storeu_ps(rgb.as_mut_ptr().add(base + 8), o1);
+        _mm256_storeu_ps(rgb.as_mut_ptr().add(base + 16), o2);
+    }
+    n / 8 * 8
+}

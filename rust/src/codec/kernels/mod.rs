@@ -1,0 +1,388 @@
+//! Lane-parallel kernels for the measured JPEG hot paths, behind runtime
+//! dispatch.
+//!
+//! Three hot paths are covered (see `benches/codec_hotpath.rs`):
+//!
+//! - **8×8 forward/inverse DCT** — the eight coefficients of a row are
+//!   computed as eight f32 lanes against the transposed cosine basis.
+//! - **`rgb_to_ycbcr` / `ycbcr_to_rgb`** — 8 pixels (AVX2) or 4 pixels
+//!   (NEON) per iteration over the contiguous interleaved plane, with a
+//!   scalar tail for the remainder.
+//! - **Batched Huffman emission** — lives in `jpeg::bitio::BitWriter`
+//!   (u64 accumulator) rather than here; `coder::write_component` packs
+//!   `code ‖ magnitude` into one `write_u64` call per symbol.
+//!
+//! ## Dispatch matrix
+//!
+//! | target | backend | gate |
+//! |---|---|---|
+//! | `x86_64` with AVX2 | [`Backend::Avx2`] | `is_x86_feature_detected!("avx2")` |
+//! | `aarch64` | [`Backend::Neon`] | always (NEON is baseline on aarch64) |
+//! | anything else | [`Backend::Scalar`] | — |
+//!
+//! Setting `RESIDUAL_INR_NO_SIMD=1` in the environment forces
+//! [`Backend::Scalar`] regardless of CPU features (decided once, at first
+//! use). The scalar code in `jpeg::{dct,color}` is retained verbatim and
+//! is the always-compiled oracle.
+//!
+//! ## Bit-exactness
+//!
+//! The ISSUE phrasing says "fused multiply-add", but FMA changes rounding
+//! and would make the emitted bitstream depend on the host CPU. The SIMD
+//! kernels therefore use separate multiply and add in the *same
+//! association order* as the scalar loops, which makes every backend
+//! bit-identical to scalar (exactness tests below compare with `==`; the
+//! only tolerated difference is the sign of exact zeros, which the
+//! accumulators avoid by starting from `+0.0` exactly like the scalar
+//! code). `RESIDUAL_INR_NO_SIMD=1` therefore yields byte-identical
+//! bitstreams, and DCT accuracy is additionally property-tested against
+//! the O(n⁴) reference transform.
+
+use super::jpeg::color::{self, Plane};
+use super::jpeg::dct;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// A dispatchable kernel implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// The verbatim scalar code in `jpeg::{dct,color}` — always compiled.
+    Scalar,
+    /// AVX2 lanes via `std::arch::x86_64` (runtime-detected).
+    Avx2,
+    /// NEON lanes via `std::arch::aarch64` (baseline on aarch64).
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+}
+
+/// Every backend usable on this machine, scalar first. Tests iterate this
+/// to hold each dispatched kernel to the scalar oracle.
+pub fn available_backends() -> Vec<Backend> {
+    let mut v = vec![Backend::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        v.push(Backend::Avx2);
+    }
+    #[cfg(target_arch = "aarch64")]
+    v.push(Backend::Neon);
+    v
+}
+
+/// The backend the dispatching entry points use: the best available one,
+/// unless `RESIDUAL_INR_NO_SIMD=1` forces scalar. Decided once.
+pub fn active() -> Backend {
+    use std::sync::OnceLock;
+    static ACTIVE: OnceLock<Backend> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let forced = std::env::var("RESIDUAL_INR_NO_SIMD")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        if forced {
+            return Backend::Scalar;
+        }
+        *available_backends().last().unwrap_or(&Backend::Scalar)
+    })
+}
+
+/// The cosine basis transposed: `t[x][u] = c[u][x]`, so a row of `t` is
+/// the vector of all eight coefficients for one input sample.
+#[allow(dead_code)] // scalar-only builds dispatch straight to jpeg::dct
+pub(crate) fn basis_t() -> &'static [[f32; 8]; 8] {
+    use std::sync::OnceLock;
+    static T: OnceLock<[[f32; 8]; 8]> = OnceLock::new();
+    T.get_or_init(|| {
+        let c = dct::basis_c();
+        let mut t = [[0.0f32; 8]; 8];
+        for (u, row) in c.iter().enumerate() {
+            for (x, &v) in row.iter().enumerate() {
+                t[x][u] = v;
+            }
+        }
+        t
+    })
+}
+
+/// Forward 8×8 DCT-II on the active backend. Row-major block.
+pub fn fdct8x8(block: &[f32; 64]) -> [f32; 64] {
+    fdct8x8_on(active(), block)
+}
+
+/// Inverse 8×8 DCT on the active backend.
+pub fn idct8x8(coef: &[f32; 64]) -> [f32; 64] {
+    idct8x8_on(active(), coef)
+}
+
+/// Interleaved RGB `[0,1]` → Y/Cb/Cr planes `[0,255]` on the active backend.
+pub fn rgb_to_ycbcr(width: usize, height: usize, rgb01: &[f32]) -> (Plane, Plane, Plane) {
+    rgb_to_ycbcr_on(active(), width, height, rgb01)
+}
+
+/// Y/Cb/Cr planes `[0,255]` → interleaved RGB `[0,1]` on the active backend.
+pub fn ycbcr_to_rgb(y: &Plane, cb: &Plane, cr: &Plane) -> Vec<f32> {
+    ycbcr_to_rgb_on(active(), y, cb, cr)
+}
+
+/// [`fdct8x8`] pinned to one backend (tests, benches).
+pub fn fdct8x8_on(be: Backend, block: &[f32; 64]) -> [f32; 64] {
+    match be {
+        Backend::Scalar => dct::fdct8x8(block),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: Avx2 only enters available_backends()/active() after
+        // is_x86_feature_detected!("avx2") succeeded.
+        Backend::Avx2 => unsafe { avx2::fdct8x8(block, dct::basis_c(), basis_t()) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: NEON is baseline on aarch64 std targets.
+        Backend::Neon => unsafe { neon::fdct8x8(block, dct::basis_c(), basis_t()) },
+        // A backend this target cannot run falls back to scalar.
+        _ => dct::fdct8x8(block),
+    }
+}
+
+/// [`idct8x8`] pinned to one backend (tests, benches).
+pub fn idct8x8_on(be: Backend, coef: &[f32; 64]) -> [f32; 64] {
+    match be {
+        Backend::Scalar => dct::idct8x8(coef),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: see fdct8x8_on.
+        Backend::Avx2 => unsafe { avx2::idct8x8(coef, dct::basis_c(), basis_t()) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: see fdct8x8_on.
+        Backend::Neon => unsafe { neon::idct8x8(coef, dct::basis_c(), basis_t()) },
+        _ => dct::idct8x8(coef),
+    }
+}
+
+/// [`rgb_to_ycbcr`] pinned to one backend (tests, benches).
+pub fn rgb_to_ycbcr_on(
+    be: Backend,
+    width: usize,
+    height: usize,
+    rgb01: &[f32],
+) -> (Plane, Plane, Plane) {
+    assert_eq!(rgb01.len(), width * height * 3);
+    if be == Backend::Scalar {
+        return color::rgb_to_ycbcr(width, height, rgb01);
+    }
+    // SIMD bulk over the leading pixels, then the verbatim scalar tail.
+    let mut y = Plane::zeros(width, height);
+    let mut cb = Plane::zeros(width, height);
+    let mut cr = Plane::zeros(width, height);
+    let done = match be {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: see fdct8x8_on.
+        Backend::Avx2 => unsafe {
+            avx2::rgb_to_ycbcr(rgb01, &mut y.data, &mut cb.data, &mut cr.data)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: see fdct8x8_on.
+        Backend::Neon => unsafe {
+            neon::rgb_to_ycbcr(rgb01, &mut y.data, &mut cb.data, &mut cr.data)
+        },
+        // A backend this target cannot run processes nothing here; the
+        // scalar tail below covers the whole plane.
+        _ => 0,
+    };
+    for i in done..width * height {
+        let r = rgb01[3 * i] * 255.0;
+        let g = rgb01[3 * i + 1] * 255.0;
+        let b = rgb01[3 * i + 2] * 255.0;
+        y.data[i] = 0.299 * r + 0.587 * g + 0.114 * b;
+        cb.data[i] = 128.0 - 0.168_736 * r - 0.331_264 * g + 0.5 * b;
+        cr.data[i] = 128.0 + 0.5 * r - 0.418_688 * g - 0.081_312 * b;
+    }
+    (y, cb, cr)
+}
+
+/// [`ycbcr_to_rgb`] pinned to one backend (tests, benches).
+pub fn ycbcr_to_rgb_on(be: Backend, y: &Plane, cb: &Plane, cr: &Plane) -> Vec<f32> {
+    assert_eq!((y.width, y.height), (cb.width, cb.height));
+    assert_eq!((y.width, y.height), (cr.width, cr.height));
+    let n = y.width * y.height;
+    if be == Backend::Scalar {
+        return color::ycbcr_to_rgb(y, cb, cr);
+    }
+    let mut rgb = vec![0.0f32; n * 3];
+    let done = match be {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: see fdct8x8_on.
+        Backend::Avx2 => unsafe {
+            avx2::ycbcr_to_rgb(&y.data, &cb.data, &cr.data, &mut rgb)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: see fdct8x8_on.
+        Backend::Neon => unsafe {
+            neon::ycbcr_to_rgb(&y.data, &cb.data, &cr.data, &mut rgb)
+        },
+        _ => 0,
+    };
+    for i in done..n {
+        let yy = y.data[i];
+        let cbv = cb.data[i] - 128.0;
+        let crv = cr.data[i] - 128.0;
+        let r = yy + 1.402 * crv;
+        let g = yy - 0.344_136 * cbv - 0.714_136 * crv;
+        let b = yy + 1.772 * cbv;
+        rgb[3 * i] = (r / 255.0).clamp(0.0, 1.0);
+        rgb[3 * i + 1] = (g / 255.0).clamp(0.0, 1.0);
+        rgb[3 * i + 2] = (b / 255.0).clamp(0.0, 1.0);
+    }
+    rgb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_block(seed: u64) -> [f32; 64] {
+        let mut rng = Pcg32::seeded(seed);
+        let mut b = [0.0f32; 64];
+        for v in &mut b {
+            *v = rng.range_f32(-128.0, 128.0);
+        }
+        b
+    }
+
+    /// Blocks that stress edge behavior: constants at the range limits,
+    /// impulses, alternating extremes.
+    fn edge_blocks() -> Vec<[f32; 64]> {
+        let mut blocks = vec![[0.0f32; 64], [128.0; 64], [-128.0; 64], [255.0; 64]];
+        let mut impulse = [0.0f32; 64];
+        impulse[0] = 255.0;
+        impulse[63] = -255.0;
+        blocks.push(impulse);
+        let mut alt = [0.0f32; 64];
+        for (i, v) in alt.iter_mut().enumerate() {
+            *v = if i % 2 == 0 { 128.0 } else { -128.0 };
+        }
+        blocks.push(alt);
+        blocks
+    }
+
+    fn test_images() -> Vec<(usize, usize, Vec<f32>)> {
+        let mut rng = Pcg32::seeded(90);
+        // Widths chosen so n % 8 covers 0 and several nonzero tails.
+        let mut imgs = Vec::new();
+        for (w, h) in [(16, 8), (13, 5), (7, 3), (1, 1), (8, 1)] {
+            let img: Vec<f32> = (0..w * h * 3).map(|_| rng.f32()).collect();
+            imgs.push((w, h, img));
+        }
+        // Edge values: all 0, all 1, alternating channel extremes.
+        imgs.push((9, 4, vec![0.0; 9 * 4 * 3]));
+        imgs.push((9, 4, vec![1.0; 9 * 4 * 3]));
+        imgs.push((10, 2, (0..10 * 2 * 3).map(|i| (i % 2) as f32).collect()));
+        imgs
+    }
+
+    #[test]
+    fn every_backend_matches_scalar_dct_exactly() {
+        for be in available_backends() {
+            let mut blocks = edge_blocks();
+            for seed in 0..16 {
+                blocks.push(rand_block(seed));
+            }
+            for b in &blocks {
+                let want_f = dct::fdct8x8(b);
+                let got_f = fdct8x8_on(be, b);
+                assert_eq!(want_f, got_f, "fdct mismatch on {}", be.name());
+                let want_i = dct::idct8x8(&want_f);
+                let got_i = idct8x8_on(be, &want_f);
+                assert_eq!(want_i, got_i, "idct mismatch on {}", be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn every_backend_matches_scalar_color_exactly() {
+        for be in available_backends() {
+            for (w, h, img) in test_images() {
+                let (sy, scb, scr) = color::rgb_to_ycbcr(w, h, &img);
+                let (ky, kcb, kcr) = rgb_to_ycbcr_on(be, w, h, &img);
+                assert_eq!(sy.data, ky.data, "Y mismatch on {}", be.name());
+                assert_eq!(scb.data, kcb.data, "Cb mismatch on {}", be.name());
+                assert_eq!(scr.data, kcr.data, "Cr mismatch on {}", be.name());
+                let want = color::ycbcr_to_rgb(&sy, &scb, &scr);
+                let got = ycbcr_to_rgb_on(be, &ky, &kcb, &kcr);
+                assert_eq!(want, got, "rgb mismatch on {}", be.name());
+            }
+        }
+    }
+
+    /// Satellite: `idct8x8(fdct8x8(block))` within 1e-3 of identity on
+    /// random and edge-value blocks, for scalar and every dispatched kernel.
+    #[test]
+    fn property_dct_roundtrip_identity_all_backends() {
+        for be in available_backends() {
+            let mut blocks = edge_blocks();
+            for seed in 200..216 {
+                blocks.push(rand_block(seed));
+            }
+            for b in &blocks {
+                let r = idct8x8_on(be, &fdct8x8_on(be, b));
+                for i in 0..64 {
+                    assert!(
+                        (b[i] - r[i]).abs() < 1e-3,
+                        "{}: i={i} {} vs {}",
+                        be.name(),
+                        b[i],
+                        r[i]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Satellite: color roundtrip within quantization tolerance (2/255)
+    /// for every backend, random and edge-value images.
+    #[test]
+    fn property_color_roundtrip_all_backends() {
+        for be in available_backends() {
+            for (w, h, img) in test_images() {
+                let (y, cb, cr) = rgb_to_ycbcr_on(be, w, h, &img);
+                let back = ycbcr_to_rgb_on(be, &y, &cb, &cr);
+                for (a, b) in img.iter().zip(&back) {
+                    assert!((a - b).abs() < 2.0 / 255.0, "{}: {a} vs {b}", be.name());
+                }
+            }
+        }
+    }
+
+    /// The dispatched fdct stays within bounded error of the O(n⁴)
+    /// reference transform (same bound the scalar fast path is held to).
+    #[test]
+    fn dispatched_fdct_matches_reference_bounded() {
+        for be in available_backends() {
+            for seed in 300..308 {
+                let b = rand_block(seed);
+                let fast = fdct8x8_on(be, &b);
+                let slow = dct::fdct8x8_reference(&b);
+                for i in 0..64 {
+                    assert!(
+                        (fast[i] - slow[i]).abs() < 1e-2,
+                        "{}: i={i} {} vs {}",
+                        be.name(),
+                        fast[i],
+                        slow[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn active_backend_is_available() {
+        assert!(available_backends().contains(&active()));
+    }
+}

@@ -1,0 +1,165 @@
+//! NEON kernels (aarch64). Four f32 lanes per op via `std::arch`; the
+//! 8-wide DCT rows are processed as two `float32x4` halves.
+//!
+//! Same contract as the AVX2 module: separate `vmulq`/`vaddq` in the
+//! scalar association order (never `vfmaq`), accumulators seeded from
+//! `+0.0`, so every result is bit-identical to the scalar oracle. The
+//! interleaved color planes use `vld3q_f32`/`vst3q_f32`, which
+//! de/re-interleave 4 RGB pixels per call for free.
+//!
+//! Safety: NEON is baseline on aarch64 std targets, so these kernels are
+//! always callable there; `kernels::available_backends` only offers
+//! `Backend::Neon` on aarch64.
+
+use std::arch::aarch64::*;
+
+/// Forward 8×8 DCT-II: lanes are coefficients `u`, in two halves.
+///
+/// `c` is the cosine basis `c[u][x]`, `t` its transpose `t[x][u]`.
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub unsafe fn fdct8x8(block: &[f32; 64], c: &[[f32; 8]; 8], t: &[[f32; 8]; 8]) -> [f32; 64] {
+    // Rows first: tmp[y][u] = Σ_x block[y][x] c[u][x], lanes = u.
+    let mut tmp = [0.0f32; 64];
+    for y in 0..8 {
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        for x in 0..8 {
+            let s = vdupq_n_f32(block[y * 8 + x]);
+            lo = vaddq_f32(lo, vmulq_f32(s, vld1q_f32(t[x].as_ptr())));
+            hi = vaddq_f32(hi, vmulq_f32(s, vld1q_f32(t[x].as_ptr().add(4))));
+        }
+        vst1q_f32(tmp.as_mut_ptr().add(y * 8), lo);
+        vst1q_f32(tmp.as_mut_ptr().add(y * 8 + 4), hi);
+    }
+    // Columns: out[v][u] = Σ_y tmp[y][u] c[v][y], lanes = u.
+    let mut out = [0.0f32; 64];
+    for v in 0..8 {
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        for y in 0..8 {
+            let s = vdupq_n_f32(c[v][y]);
+            lo = vaddq_f32(lo, vmulq_f32(vld1q_f32(tmp.as_ptr().add(y * 8)), s));
+            hi = vaddq_f32(hi, vmulq_f32(vld1q_f32(tmp.as_ptr().add(y * 8 + 4)), s));
+        }
+        vst1q_f32(out.as_mut_ptr().add(v * 8), lo);
+        vst1q_f32(out.as_mut_ptr().add(v * 8 + 4), hi);
+    }
+    out
+}
+
+/// Inverse 8×8 DCT: same lane layout as [`fdct8x8`].
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub unsafe fn idct8x8(coef: &[f32; 64], c: &[[f32; 8]; 8], _t: &[[f32; 8]; 8]) -> [f32; 64] {
+    // Columns first: tmp[y][u] = Σ_v coef[v][u] c[v][y], lanes = u.
+    let mut tmp = [0.0f32; 64];
+    for y in 0..8 {
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        for v in 0..8 {
+            let s = vdupq_n_f32(c[v][y]);
+            lo = vaddq_f32(lo, vmulq_f32(vld1q_f32(coef.as_ptr().add(v * 8)), s));
+            hi = vaddq_f32(hi, vmulq_f32(vld1q_f32(coef.as_ptr().add(v * 8 + 4)), s));
+        }
+        vst1q_f32(tmp.as_mut_ptr().add(y * 8), lo);
+        vst1q_f32(tmp.as_mut_ptr().add(y * 8 + 4), hi);
+    }
+    // Rows: out[y][x] = Σ_u tmp[y][u] c[u][x], lanes = x.
+    let mut out = [0.0f32; 64];
+    for y in 0..8 {
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        for u in 0..8 {
+            let s = vdupq_n_f32(tmp[y * 8 + u]);
+            lo = vaddq_f32(lo, vmulq_f32(s, vld1q_f32(c[u].as_ptr())));
+            hi = vaddq_f32(hi, vmulq_f32(s, vld1q_f32(c[u].as_ptr().add(4))));
+        }
+        vst1q_f32(out.as_mut_ptr().add(y * 8), lo);
+        vst1q_f32(out.as_mut_ptr().add(y * 8 + 4), hi);
+    }
+    out
+}
+
+/// Bulk RGB→YCbCr over the leading `4·⌊n/4⌋` pixels; returns how many
+/// pixels were processed (caller finishes the tail with scalar code).
+///
+/// # Safety
+/// Requires NEON. `y`/`cb`/`cr` must each hold `rgb01.len() / 3` floats.
+#[target_feature(enable = "neon")]
+pub unsafe fn rgb_to_ycbcr(rgb01: &[f32], y: &mut [f32], cb: &mut [f32], cr: &mut [f32]) -> usize {
+    let n = rgb01.len() / 3;
+    let scale = vdupq_n_f32(255.0);
+    let c128 = vdupq_n_f32(128.0);
+    for i in 0..n / 4 {
+        let px = vld3q_f32(rgb01.as_ptr().add(i * 12));
+        let r = vmulq_f32(px.0, scale);
+        let g = vmulq_f32(px.1, scale);
+        let b = vmulq_f32(px.2, scale);
+        // y = 0.299 r + 0.587 g + 0.114 b
+        let yv = vaddq_f32(
+            vaddq_f32(
+                vmulq_f32(vdupq_n_f32(0.299), r),
+                vmulq_f32(vdupq_n_f32(0.587), g),
+            ),
+            vmulq_f32(vdupq_n_f32(0.114), b),
+        );
+        // cb = ((128 - 0.168736 r) - 0.331264 g) + 0.5 b
+        let cbv = vaddq_f32(
+            vsubq_f32(
+                vsubq_f32(c128, vmulq_f32(vdupq_n_f32(0.168_736), r)),
+                vmulq_f32(vdupq_n_f32(0.331_264), g),
+            ),
+            vmulq_f32(vdupq_n_f32(0.5), b),
+        );
+        // cr = ((128 + 0.5 r) - 0.418688 g) - 0.081312 b
+        let crv = vsubq_f32(
+            vsubq_f32(
+                vaddq_f32(c128, vmulq_f32(vdupq_n_f32(0.5), r)),
+                vmulq_f32(vdupq_n_f32(0.418_688), g),
+            ),
+            vmulq_f32(vdupq_n_f32(0.081_312), b),
+        );
+        vst1q_f32(y.as_mut_ptr().add(i * 4), yv);
+        vst1q_f32(cb.as_mut_ptr().add(i * 4), cbv);
+        vst1q_f32(cr.as_mut_ptr().add(i * 4), crv);
+    }
+    n / 4 * 4
+}
+
+/// Bulk YCbCr→RGB over the leading `4·⌊n/4⌋` pixels; returns how many
+/// pixels were processed.
+///
+/// # Safety
+/// Requires NEON. `rgb` must hold `3 · y.len()` floats.
+#[target_feature(enable = "neon")]
+pub unsafe fn ycbcr_to_rgb(y: &[f32], cb: &[f32], cr: &[f32], rgb: &mut [f32]) -> usize {
+    let n = y.len();
+    let c128 = vdupq_n_f32(128.0);
+    let inv = vdupq_n_f32(255.0);
+    let zero = vdupq_n_f32(0.0);
+    let one = vdupq_n_f32(1.0);
+    for i in 0..n / 4 {
+        let yy = vld1q_f32(y.as_ptr().add(i * 4));
+        let cbv = vsubq_f32(vld1q_f32(cb.as_ptr().add(i * 4)), c128);
+        let crv = vsubq_f32(vld1q_f32(cr.as_ptr().add(i * 4)), c128);
+        // r = yy + 1.402 cr
+        let r = vaddq_f32(yy, vmulq_f32(vdupq_n_f32(1.402), crv));
+        // g = (yy - 0.344136 cb) - 0.714136 cr
+        let g = vsubq_f32(
+            vsubq_f32(yy, vmulq_f32(vdupq_n_f32(0.344_136), cbv)),
+            vmulq_f32(vdupq_n_f32(0.714_136), crv),
+        );
+        // b = yy + 1.772 cb
+        let b = vaddq_f32(yy, vmulq_f32(vdupq_n_f32(1.772), cbv));
+        let r = vmaxq_f32(vminq_f32(vdivq_f32(r, inv), one), zero);
+        let g = vmaxq_f32(vminq_f32(vdivq_f32(g, inv), one), zero);
+        let b = vmaxq_f32(vminq_f32(vdivq_f32(b, inv), one), zero);
+        vst3q_f32(rgb.as_mut_ptr().add(i * 12), float32x4x3_t(r, g, b));
+    }
+    n / 4 * 4
+}

@@ -3,3 +3,4 @@
 //! pixels while INR "encoding" is neural-network training on the fog node.
 
 pub mod jpeg;
+pub mod kernels;

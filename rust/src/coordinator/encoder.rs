@@ -98,6 +98,60 @@ impl EncodeStats {
             self.seconds / self.steps as f64
         }
     }
+
+    /// Encode throughput in MB/s for a payload of `payload_bytes`
+    /// produced over this job's wall time (0.0 when no time elapsed).
+    pub fn mb_per_s(&self, payload_bytes: u64) -> f64 {
+        if self.seconds <= 0.0 {
+            0.0
+        } else {
+            payload_bytes as f64 / 1e6 / self.seconds
+        }
+    }
+}
+
+/// Wall-clock throughput of a (possibly parallel) encode stage — the
+/// whole-stage counterpart of per-job [`EncodeStats`], carried in
+/// `MultiFogReport` and printed by `sim --fogs`.
+#[derive(Debug, Clone)]
+pub struct EncodeThroughput {
+    /// Worker threads (each with its own PJRT session) that ran the stage.
+    pub workers: usize,
+    /// Wall-clock seconds for the whole stage.
+    pub wall_seconds: f64,
+    /// Seconds each worker spent inside encode jobs.
+    pub busy_seconds: Vec<f64>,
+    /// Total INR payload bytes the stage produced.
+    pub payload_bytes: u64,
+}
+
+impl EncodeThroughput {
+    /// Stage throughput in MB of produced payload per wall second.
+    pub fn mb_per_s(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            0.0
+        } else {
+            self.payload_bytes as f64 / 1e6 / self.wall_seconds
+        }
+    }
+
+    /// Per-worker utilization (busy / wall), clamped to [0, 1].
+    pub fn utilization(&self) -> Vec<f64> {
+        self.busy_seconds
+            .iter()
+            .map(|&b| if self.wall_seconds <= 0.0 { 0.0 } else { (b / self.wall_seconds).min(1.0) })
+            .collect()
+    }
+
+    /// Mean of [`EncodeThroughput::utilization`] (0.0 with no workers).
+    pub fn mean_utilization(&self) -> f64 {
+        let u = self.utilization();
+        if u.is_empty() {
+            0.0
+        } else {
+            u.iter().sum::<f64>() / u.len() as f64
+        }
+    }
 }
 
 /// Residual (or direct) encoding of one image.

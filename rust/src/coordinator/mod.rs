@@ -13,7 +13,7 @@ pub mod encoder;
 pub mod fog;
 pub mod sim;
 
-pub use encoder::{EncoderConfig, FogEncoder};
+pub use encoder::{EncodeThroughput, EncoderConfig, FogEncoder};
 pub use fog::{Compressed, FogNode, Method};
 pub use sim::{
     run as run_sim, run_multi, MultiFogConfig, MultiFogReport, ShardReport, SimConfig, SimReport,

@@ -49,7 +49,7 @@ use crate::util::rng::Pcg32;
 use crate::util::{fmt_bytes, Stopwatch};
 
 use super::edge::{ingest, EdgeStore};
-use super::encoder::EncoderConfig;
+use super::encoder::{EncodeThroughput, EncoderConfig};
 use super::fog::{FogNode, Method};
 
 /// Bytes of label metadata per frame (bbox as 4×u16).
@@ -622,6 +622,13 @@ pub struct MultiFogConfig {
     /// fleet-only runs, so the measured pipeline carries no stream
     /// knobs here.
     pub threads: usize,
+    /// Real worker threads for the live shard encode
+    /// (`--encode-workers`; `0` = auto: min(shards, cores)). Each worker
+    /// owns its own PJRT session; shards are claimed off a shared queue
+    /// and merged shard-major, so byte totals stay record-for-record
+    /// identical to the serialized encode for every worker count
+    /// (per-shard RNG salts and NetSim accounting are self-contained).
+    pub encode_workers: usize,
 }
 
 impl MultiFogConfig {
@@ -635,6 +642,7 @@ impl MultiFogConfig {
             joins: Vec::new(),
             cell_sim: CellSimMode::default(),
             threads: 0,
+            encode_workers: 0,
         }
     }
 }
@@ -675,6 +683,9 @@ pub struct MultiFogReport {
     /// diagnostic, not an assert — `auto` + churn on a borderline cell
     /// can legitimately read nonzero, see `expected_cell_bytes`).
     pub byte_parity_mismatch: u64,
+    /// Wall-clock throughput of the (possibly parallel) live shard
+    /// encode: MB/s and per-worker utilization (`--encode-workers`).
+    pub encode: EncodeThroughput,
     // Edge-side measured fine-tune (one receiver trains on every shard).
     pub decode_seconds: f64,
     pub train_seconds: f64,
@@ -741,6 +752,19 @@ impl MultiFogReport {
             self.byte_parity_mismatch
         );
         println!(
+            "encode throughput        : {:.2} MB/s over {} worker(s) ({:.2} s wall)",
+            self.encode.mb_per_s(),
+            self.encode.workers,
+            self.encode.wall_seconds
+        );
+        let util: Vec<String> =
+            self.encode.utilization().iter().map(|u| format!("{:.0}%", 100.0 * u)).collect();
+        println!(
+            "encode worker util       : [{}] (mean {:.0}%)",
+            util.join(", "),
+            100.0 * self.encode.mean_utilization()
+        );
+        println!(
             "decode / train (edge)    : {:.2} s / {:.2} s",
             self.decode_seconds, self.train_seconds
         );
@@ -793,11 +817,33 @@ pub fn run_multi(cfg: &ArchConfig, sim: &SimConfig, mf: &MultiFogConfig) -> Resu
     let map_before = map50_95(&trainer.evaluate(&session, &eval_frames)?);
 
     // --- Encode every shard with the live fog encoder ------------------
-    let fog = FogNode::new(&session, cfg, sim.enc.clone());
-    let mut shards = Vec::with_capacity(mf.n_fogs);
-    for fine in &fine_sets {
-        shards.push(encode_shard(&fog, sim, fine)?);
-    }
+    // Shards are independent (per-shard RNG salts, restarting frame ids
+    // and self-contained NetSim accounting), so they encode in parallel:
+    // one PJRT session per worker, shard indices claimed off a shared
+    // queue, results merged shard-major — byte totals stay
+    // record-for-record identical for every worker count.
+    let encode_workers = match mf.encode_workers {
+        0 => mf
+            .n_fogs
+            .min(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)),
+        w => w.min(mf.n_fogs),
+    };
+    let crew = crate::runtime::session_crew(
+        session.manifest(),
+        encode_workers,
+        mf.n_fogs,
+        |sess, i| {
+            let fog = FogNode::new(sess, cfg, sim.enc.clone());
+            encode_shard(&fog, sim, &fine_sets[i])
+        },
+    )?;
+    let shards = crew.results;
+    let encode = EncodeThroughput {
+        workers: encode_workers,
+        wall_seconds: crew.wall_seconds,
+        busy_seconds: crew.busy_seconds,
+        payload_bytes: shards.iter().map(|s| s.traffic.payload_bytes()).sum(),
+    };
 
     // --- Every receiver ingests every shard; fine-tune one receiver ----
     let mut store = EdgeStore::default();
@@ -862,6 +908,7 @@ pub fn run_multi(cfg: &ArchConfig, sim: &SimConfig, mf: &MultiFogConfig) -> Resu
         fleet,
         expected_cell_bytes: expected,
         byte_parity_mismatch,
+        encode,
         decode_seconds,
         train_seconds,
         n_train_frames,

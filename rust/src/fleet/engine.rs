@@ -344,7 +344,8 @@ fn build_fogs(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> Vec<FogRt> {
                 && nr > 0
                 && nj == 0
                 && fc.fail.is_none()
-                && !fc.handovers.iter().any(|h| h.from == f || h.to == f);
+                && !fc.handovers.iter().any(|h| h.from == f || h.to == f)
+                && !fc.departs.iter().any(|d| d.fog == f);
             let slots = if static_cohort { 0 } else { nr + nj };
             let mut rx_active = vec![true; if static_cohort { 0 } else { nr }];
             rx_active.resize(slots, false);
@@ -456,6 +457,9 @@ fn simulate_sequential(
     for h in &fc.handovers {
         q.push(h.at, Event::Handover { from: h.from, to: h.to });
     }
+    for d in &fc.departs {
+        q.push(d.at, Event::Depart { fog: d.fog });
+    }
     if let Some(fl) = &fc.fail {
         q.push(fl.at, Event::FogFail { fog: fl.fog });
     }
@@ -531,6 +535,9 @@ fn simulate_sequential(
             Event::Handover { from, to } => {
                 handover_receiver(fc, &mut fogs, &mut QRouter::Single(&mut q), &mut cloud_up,
                     &catalog, &ctx, now, from, to);
+            }
+            Event::Depart { fog } => {
+                depart_receiver(&mut fogs[fog]);
             }
             Event::FogFail { fog } => {
                 fog_fail(fc, &mut fogs, &mut QRouter::Single(&mut q), &mut cloud_up, &catalog,
@@ -849,16 +856,18 @@ fn simulate_windowed(
     let mut outbox: Vec<Outgoing> = Vec::new();
     let mut catalog: Vec<CatalogEntry> = Vec::new();
 
-    // Scheduled fleet mutations (churn joins, handovers, failure) are
-    // *global* events: they touch more than one fog's state, so they
-    // never run inside a window. The sorted schedule pins every window
-    // that would cross one of them (join-aware lookahead), and each is
-    // applied at the barrier — same order as the sequential queue (the
-    // stable sort keeps join-before-handover-before-fail on time ties,
+    // Scheduled fleet mutations (churn joins, handovers, departures,
+    // failure) are *global* events: they touch more than one fog's
+    // state, so they never run inside a window. The sorted schedule
+    // pins every window that would cross one of them (join-aware
+    // lookahead), and each is applied at the barrier — same order as
+    // the sequential queue (the stable sort keeps
+    // join-before-handover-before-depart-before-fail on time ties,
     // matching the sequential seeding's FIFO order).
     enum GlobalKind {
         Join { fog: usize, edge: usize },
         Handover { from: usize, to: usize },
+        Depart { fog: usize },
         Fail { fog: usize },
     }
     struct GlobalEvt {
@@ -878,6 +887,9 @@ fn simulate_windowed(
     }
     for h in &fc.handovers {
         globals.push(GlobalEvt { at: h.at, kind: GlobalKind::Handover { from: h.from, to: h.to } });
+    }
+    for d in &fc.departs {
+        globals.push(GlobalEvt { at: d.at, kind: GlobalKind::Depart { fog: d.fog } });
     }
     if let Some(fl) = &fc.fail {
         globals.push(GlobalEvt { at: fl.at, kind: GlobalKind::Fail { fog: fl.fog } });
@@ -950,6 +962,9 @@ fn simulate_windowed(
                 GlobalKind::Handover { from, to } => {
                     handover_receiver(fc, &mut fogs, &mut router, &mut cloud_up, &catalog, &ctx,
                         g.at, from, to);
+                }
+                GlobalKind::Depart { fog } => {
+                    depart_receiver(&mut fogs[fog]);
                 }
                 GlobalKind::Fail { fog } => {
                     fog_fail(fc, &mut fogs, &mut router, &mut cloud_up, &catalog, &ctx, g.at, fog);
@@ -1067,7 +1082,10 @@ fn run_window(
             Event::FrameArrival { fog, frame } => {
                 on_frame_arrival(rt, q, now, fog, frame);
             }
-            Event::ReceiverJoin { .. } | Event::Handover { .. } | Event::FogFail { .. } => {
+            Event::ReceiverJoin { .. }
+            | Event::Handover { .. }
+            | Event::Depart { .. }
+            | Event::FogFail { .. } => {
                 unreachable!("fleet mutations are global events, applied at window barriers")
             }
             Event::Lost { .. } | Event::Nack { .. } | Event::Repair { .. } => {}
@@ -1594,6 +1612,20 @@ fn handover_receiver(
     fogs[from].departed += 1;
     let edge = attach_slot(&mut fogs[to]);
     catch_up(fc, fogs, router, cloud_up, catalog, ctx, now, to, edge);
+}
+
+/// Receiver departure without a destination cell (`--depart fog:t`):
+/// the departure half of [`handover_receiver`] alone. The
+/// highest-indexed active receiver of `fog` leaves the fleet (its
+/// in-flight deliveries void on arrival, same as a handover source);
+/// there is no re-attachment and therefore no catch-up leg.
+fn depart_receiver(rt: &mut FogRt) {
+    let Some(r) = (0..rt.rx_active.len()).rev().find(|&r| rt.rx_active[r]) else {
+        return; // nobody left to leave: the departure is a no-op
+    };
+    rt.rx_active[r] = false;
+    rt.n_active -= 1;
+    rt.departed += 1;
 }
 
 /// Fog failure and re-election: the failed fog stops encoding and
@@ -2505,7 +2537,7 @@ mod tests {
         );
     }
 
-    use crate::fleet::stream::{ArrivalSpec, FailSpec, HandoverSpec, StreamConfig};
+    use crate::fleet::stream::{ArrivalSpec, DepartSpec, FailSpec, HandoverSpec, StreamConfig};
 
     fn stream_fc(m: Method, edges: usize, rate: f64, horizon: f64) -> FleetConfig {
         let mut fc = base_fc(m, edges);
@@ -2579,6 +2611,33 @@ mod tests {
         // The moved receiver's in-flight copies may void; drops are
         // bounded by what was in flight at the handover instant.
         assert!(r.frames_dropped <= r.frames_offered);
+    }
+
+    #[test]
+    fn depart_removes_a_receiver_with_no_catchup() {
+        let m = Method::RapidSingle;
+        let mut fc = stream_fc(m, 6, 4.0, 10.0); // 2 fogs × (1 source + 2 rx)
+        fc.topology = Topology::Sharded;
+        fc.n_fogs = 2;
+        fc.departs = vec![DepartSpec { fog: 0, at: 5.0 }];
+        let shards = || {
+            vec![tiny_shard(m, vec![1000], &[300]), tiny_shard(m, vec![1000], &[400])]
+        };
+        let r = simulate(&fc, shards());
+        assert_eq!(r.fogs[0].departed, 1, "one receiver left cell 0");
+        assert_eq!(r.fogs[0].joined, 0, "a departure has no destination cell");
+        assert_eq!(r.fogs[1].joined, 0);
+        assert_eq!(r.catchup_bytes, 0, "no re-attachment, so no catch-up replay");
+        // A second departure on the same cell drains the other receiver;
+        // a third is a no-op (source slots never depart).
+        let mut twice = fc.clone();
+        twice.departs = vec![
+            DepartSpec { fog: 0, at: 5.0 },
+            DepartSpec { fog: 0, at: 6.0 },
+            DepartSpec { fog: 0, at: 7.0 },
+        ];
+        let r2 = simulate(&twice, shards());
+        assert_eq!(r2.fogs[0].departed, 2, "only the two receivers can leave");
     }
 
     #[test]

@@ -77,6 +77,10 @@ pub enum Event {
     /// `from` departs its cell and joins `to`, catching up from `to`'s
     /// cache (streaming runs only).
     Handover { from: usize, to: usize },
+    /// Device mobility, departure half only: the most recently attached
+    /// active receiver of `fog` leaves the fleet — no destination cell,
+    /// no catch-up leg (streaming runs only).
+    Depart { fog: usize },
     /// Fog failure: `fog` stops encoding and forwarding; its pending
     /// frames drop and its receivers orphan, then re-attach to the
     /// surviving fog with the lowest expected backhaul airtime

@@ -96,6 +96,6 @@ pub use link::Link;
 pub use policy::{CellMode, RebroadcastPolicy};
 pub use report::{FleetReport, FogReport};
 pub use scenario::{FleetConfig, JoinSpec, Topology};
-pub use stream::{ArrivalSpec, FailSpec, HandoverSpec, QuantileSketch, StreamConfig};
+pub use stream::{ArrivalSpec, DepartSpec, FailSpec, HandoverSpec, QuantileSketch, StreamConfig};
 pub use traffic::{model_shard, Blob, ShardTraffic};
 pub use workers::WorkerPool;

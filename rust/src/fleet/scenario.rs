@@ -27,7 +27,7 @@ use crate::data::Profile;
 
 use super::aggregate::CellSimMode;
 use super::policy::RebroadcastPolicy;
-use super::stream::{ArrivalSpec, FailSpec, HandoverSpec, StreamConfig};
+use super::stream::{ArrivalSpec, DepartSpec, FailSpec, HandoverSpec, StreamConfig};
 
 /// Upper bound on total sampled frame arrivals across the fleet
 /// (`mean_rate · horizon · n_fogs`). The streamed catalog and the
@@ -179,6 +179,10 @@ pub struct FleetConfig {
     pub handovers: Vec<HandoverSpec>,
     /// Scheduled fog failure (`--fail`, streaming runs only).
     pub fail: Option<FailSpec>,
+    /// Scheduled receiver departures (`--depart`, streaming runs only):
+    /// the departure half of a handover, with no destination cell and no
+    /// catch-up leg. Empty = nobody leaves.
+    pub departs: Vec<DepartSpec>,
 }
 
 impl FleetConfig {
@@ -218,6 +222,7 @@ impl FleetConfig {
             stream: None,
             handovers: Vec::new(),
             fail: None,
+            departs: Vec::new(),
         }
     }
 
@@ -368,9 +373,11 @@ impl FleetConfig {
                 }
             }
         }
-        if self.stream.is_none() && (!self.handovers.is_empty() || self.fail.is_some()) {
+        if self.stream.is_none()
+            && (!self.handovers.is_empty() || self.fail.is_some() || !self.departs.is_empty())
+        {
             return Err(anyhow!(
-                "--handover and --fail model a long-horizon environment and \
+                "--handover, --fail and --depart model a long-horizon environment and \
                  require streaming mode (--arrivals/--horizon)"
             ));
         }
@@ -388,6 +395,14 @@ impl FleetConfig {
             }
             if !h.at.is_finite() || h.at < 0.0 {
                 return Err(anyhow!("handover time must be finite and >= 0, got {}", h.at));
+            }
+        }
+        for d in &self.departs {
+            if d.fog >= self.n_fogs {
+                return Err(anyhow!("depart targets fog {} of {}", d.fog, self.n_fogs));
+            }
+            if !d.at.is_finite() || d.at < 0.0 {
+                return Err(anyhow!("depart time must be finite and >= 0, got {}", d.at));
             }
         }
         if let Some(fl) = &self.fail {
@@ -621,6 +636,19 @@ mod tests {
         fc.n_edges = 10;
         fc.topology = Topology::SingleFog;
         assert!(fc.validate().is_err(), "failure needs a surviving fog");
+        // Departures also require streaming, an in-range fog, and a
+        // finite non-negative time.
+        let mut fc = mk();
+        fc.departs = vec![DepartSpec { fog: 0, at: 2.0 }];
+        assert!(fc.validate().is_err(), "depart needs streaming");
+        fc.stream = Some(stream(10.0, 5.0));
+        assert!(fc.validate().is_ok());
+        fc.departs = vec![DepartSpec { fog: 4, at: 2.0 }];
+        assert!(fc.validate().is_err(), "depart fog out of range");
+        fc.departs = vec![DepartSpec { fog: 0, at: -1.0 }];
+        assert!(fc.validate().is_err(), "negative depart time");
+        fc.departs = vec![DepartSpec { fog: 0, at: f64::NAN }];
+        assert!(fc.validate().is_err(), "NaN depart time");
     }
 
     #[test]

@@ -18,11 +18,14 @@
 //!   and so enabling streaming never perturbs the link-layer loss
 //!   draws. The process stops at the `--horizon` wall; in-flight work
 //!   drains past it (the makespan may exceed the horizon).
-//! * **Mobility and failure** ([`HandoverSpec`], [`FailSpec`]):
+//! * **Mobility and failure** ([`HandoverSpec`], [`DepartSpec`],
+//!   [`FailSpec`]):
 //!   `--handover from>to:t` moves a receiver between cells mid-run,
 //!   reusing the churn machinery in both directions — a departure on
 //!   one cell, a cache-warm catch-up join on the other — with voided
-//!   in-flight deliveries accounted as drops. `--fail fog:t` kills a
+//!   in-flight deliveries accounted as drops. `--depart fog:t` is the
+//!   departure half alone: the receiver leaves the fleet with no
+//!   destination cell and no catch-up leg. `--fail fog:t` kills a
 //!   fog: its pending frames drop, its receivers orphan and re-attach
 //!   to the surviving fog with the lowest expected backhaul airtime,
 //!   and the weight cache warm-starts their catch-up (content whose
@@ -76,6 +79,16 @@ pub struct HandoverSpec {
     pub at: f64,
 }
 
+/// A scheduled receiver departure (`--depart fog:t`). At `at`, the most
+/// recently attached active receiver of `fog` leaves the fleet entirely —
+/// the departure half of a [`HandoverSpec`] with no destination cell and
+/// therefore no catch-up leg.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DepartSpec {
+    pub fog: usize,
+    pub at: f64,
+}
+
 /// Parse `--fail fog:t` (e.g. `1:30` = fog 1 fails at t = 30 s).
 pub fn parse_fail(s: &str) -> Result<FailSpec, String> {
     let (fog, at) = s
@@ -109,9 +122,37 @@ pub fn parse_handovers(s: &str) -> Result<Vec<HandoverSpec>, String> {
         .collect()
 }
 
+/// Parse `--depart fog:t[,fog:t...]`.
+pub fn parse_departs(s: &str) -> Result<Vec<DepartSpec>, String> {
+    s.split(',')
+        .filter(|part| !part.trim().is_empty())
+        .map(|part| {
+            let part = part.trim();
+            let err = || format!("bad depart spec {part:?} (want fog:t, e.g. 1:30)");
+            let (fog, at) = part.split_once(':').ok_or_else(err)?;
+            let fog = fog.trim().parse::<usize>().map_err(|_| err())?;
+            let at = at.trim().parse::<f64>().map_err(|_| err())?;
+            Ok(DepartSpec { fog, at })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parses_depart_specs() {
+        assert_eq!(
+            parse_departs("1:30,0:45.5").unwrap(),
+            vec![DepartSpec { fog: 1, at: 30.0 }, DepartSpec { fog: 0, at: 45.5 }]
+        );
+        assert_eq!(parse_departs(" 2 : 0.5 ").unwrap(), vec![DepartSpec { fog: 2, at: 0.5 }]);
+        assert_eq!(parse_departs("").unwrap(), vec![]);
+        assert!(parse_departs("30").is_err());
+        assert!(parse_departs("x:30").is_err());
+        assert!(parse_departs("1:x").is_err());
+    }
 
     #[test]
     fn parses_fail_and_handover_specs() {

@@ -99,9 +99,12 @@ fn main() -> Result<()> {
                  \u{20}          --sequences N --epochs N --receivers N --max-frames N [--no-grouping]\n\
                  \u{20}          --fogs F --topology <sharded|hierarchical> --policy P\n\
                  \u{20}          --loss P --churn T1,T2,.. --cell-mode M --threads N\n\
+                 \u{20}          --encode-workers N\n\
                  \u{20}          (F > 1 runs the live encoder per fog shard and reports\n\
                  \u{20}          fleet-wide makespan from a cost model calibrated on the\n\
-                 \u{20}          run; alias: sim)\n\
+                 \u{20}          run; --encode-workers N encodes shards on N threads, one\n\
+                 \u{20}          PJRT session each, default min(shards, cores) — byte\n\
+                 \u{20}          totals identical for any N; alias: sim)\n\
                  fleet      --scenario <paper-10|sharded|hierarchical> --method M --profile P\n\
                  \u{20}          --fogs N --edges N --workers K --sequences N --max-frames N\n\
                  \u{20}          --epochs N --seed S --cache-mb MB --cost <auto|analytical|calibrated>\n\
@@ -109,7 +112,7 @@ fn main() -> Result<()> {
                  \u{20}          --loss P --backhaul-loss P --churn T1,T2,..\n\
                  \u{20}          --cell-mode <exact|aggregate|auto[:threshold]> --threads N\n\
                  \u{20}          --arrivals <poisson:RATE|diurnal:RATE,PERIOD> --horizon S\n\
-                 \u{20}          --deadline S --handover F>G:T,.. --fail F:T\n\
+                 \u{20}          --deadline S --handover F>G:T,.. --fail F:T --depart F:T,..\n\
                  \u{20}          (paper-10 = 1 fog, 10 edge devices; sharded = per-fog shards\n\
                  \u{20}          over mesh backhaul; hierarchical = cloud→fog→edge relay;\n\
                  \u{20}          unicast = legacy byte-parity default, the others share one\n\
@@ -135,7 +138,9 @@ fn main() -> Result<()> {
                  \u{20}          drop rate and stream goodput. --deadline S counts\n\
                  \u{20}          deliveries staler than S as misses. --handover F>G:T moves\n\
                  \u{20}          a receiver between cells mid-run; --fail F:T kills fog F at\n\
-                 \u{20}          T and re-attaches its receivers to the cheapest survivor)\n\
+                 \u{20}          T and re-attaches its receivers to the cheapest survivor;\n\
+                 \u{20}          --depart F:T removes a receiver from fog F at T — a\n\
+                 \u{20}          handover with no destination cell and no catch-up leg)\n\
                  compress   --method M --profile P --max-frames N [--quality Q]\n\
                  commmodel  --devices K --alpha A [--receivers N]\n\
                  info\n\
@@ -177,7 +182,12 @@ fn simulate(args: &Args) -> Result<()> {
             ));
         }
     }
-    for flag in ["arrivals", "horizon", "deadline", "handover", "fail"] {
+    if fogs <= 1 && args.get("encode-workers").is_some() {
+        return Err(anyhow!(
+            "--encode-workers requires --fogs > 1 (the parallel multi-shard encode)"
+        ));
+    }
+    for flag in ["arrivals", "horizon", "deadline", "handover", "fail", "depart"] {
         if args.get(flag).is_some() {
             return Err(anyhow!(
                 "sim runs the live encoder over a finite batch; streaming workloads are \
@@ -198,7 +208,17 @@ fn simulate(args: &Args) -> Result<()> {
         let policy = parse_policy(args)?;
         let (loss, _backhaul_loss, joins) = parse_link_args(args, fogs)?;
         let (cell_sim, threads) = parse_engine_args(args)?;
-        let mf = MultiFogConfig { n_fogs: fogs, topology, policy, loss, joins, cell_sim, threads };
+        let encode_workers = args.get_usize("encode-workers", 0).map_err(|e| anyhow!(e))?;
+        let mf = MultiFogConfig {
+            n_fogs: fogs,
+            topology,
+            policy,
+            loss,
+            joins,
+            cell_sim,
+            threads,
+            encode_workers,
+        };
         println!(
             "# simulate method={} profile={} fogs={} topology={} policy={} loss={} churn={}",
             sim.method.name(),
@@ -333,8 +353,9 @@ fn fleet(args: &Args) -> Result<()> {
     fc.cell_sim = cell_sim;
     fc.threads = threads;
     // Streaming knobs: --arrivals + --horizon switch the run from one
-    // finite batch to a steady-state stream; --deadline, --handover and
-    // --fail ride on top (validate() enforces the dependencies).
+    // finite batch to a steady-state stream; --deadline, --handover,
+    // --fail and --depart ride on top (validate() enforces the
+    // dependencies).
     match (args.get("arrivals"), args.get("horizon")) {
         (Some(spec), Some(_)) => {
             fc.stream = Some(residual_inr::fleet::StreamConfig {
@@ -365,6 +386,9 @@ fn fleet(args: &Args) -> Result<()> {
     }
     if let Some(spec) = args.get("fail") {
         fc.fail = Some(residual_inr::fleet::stream::parse_fail(spec).map_err(|e| anyhow!(e))?);
+    }
+    if let Some(spec) = args.get("depart") {
+        fc.departs = residual_inr::fleet::stream::parse_departs(spec).map_err(|e| anyhow!(e))?;
     }
     let report = residual_inr::fleet::run(&cfg, &fc)?;
     report.print();

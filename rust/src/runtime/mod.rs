@@ -13,6 +13,6 @@ pub mod session;
 pub mod tensor;
 
 pub use manifest::{names, ArtifactSpec, Manifest};
-pub use pool::Pool;
+pub use pool::{session_crew, CrewOutcome, Pool};
 pub use session::Session;
 pub use tensor::HostTensor;

@@ -166,6 +166,87 @@ impl Pool {
     }
 }
 
+/// Outcome of a [`session_crew`] run: per-job results in job order, plus
+/// per-worker busy time for utilization reporting.
+#[derive(Debug)]
+pub struct CrewOutcome<T> {
+    /// One result per job, in job-index order regardless of which worker
+    /// ran it or when it finished.
+    pub results: Vec<T>,
+    /// Seconds each worker spent inside the job closure.
+    pub busy_seconds: Vec<f64>,
+    /// Wall-clock seconds for the whole crew.
+    pub wall_seconds: f64,
+}
+
+/// Run `jobs` jobs across `workers` threads, each owning its own
+/// [`Session`] (the PJRT client is thread-pinned, so sessions cannot be
+/// shared). Workers claim job indices off a shared counter and store
+/// results into per-index slots, so the returned `results` vector is in
+/// deterministic job order — callers that merge per-shard records get the
+/// same stream for every worker count.
+///
+/// The first job error (or a worker's session-init failure) is returned
+/// as `Err` after all workers drain.
+pub fn session_crew<T, F>(
+    manifest: &Manifest,
+    workers: usize,
+    jobs: usize,
+    f: F,
+) -> Result<CrewOutcome<T>>
+where
+    T: Send,
+    F: Fn(&Session, usize) -> Result<T> + Sync,
+{
+    use std::sync::Mutex;
+
+    let workers = workers.clamp(1, jobs.max(1));
+    let sw = crate::util::Stopwatch::start();
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<T>>>> = (0..jobs).map(|_| Mutex::new(None)).collect();
+    let busy_seconds: Vec<f64> = thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let m = manifest.clone();
+            let (next, slots, f) = (&next, &slots, &f);
+            handles.push(scope.spawn(move || {
+                // Each worker builds its session inside its own thread.
+                let session = Session::new(Rc::new(m));
+                let mut busy = 0.0f64;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs {
+                        break;
+                    }
+                    let r = match &session {
+                        Ok(sess) => {
+                            let job_sw = crate::util::Stopwatch::start();
+                            let r = f(sess, i);
+                            busy += job_sw.seconds();
+                            r
+                        }
+                        Err(e) => Err(anyhow!("crew worker {w}: session init failed: {e:#}")),
+                    };
+                    *slots[i].lock().expect("crew slot poisoned") = Some(r);
+                }
+                busy
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("crew worker panicked")).collect()
+    });
+    let wall_seconds = sw.seconds();
+    let results = slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| {
+            slot.into_inner()
+                .expect("crew slot poisoned")
+                .unwrap_or_else(|| panic!("crew job {i} never claimed"))
+        })
+        .collect::<Result<Vec<T>>>()?;
+    Ok(CrewOutcome { results, busy_seconds, wall_seconds })
+}
+
 impl Drop for Pool {
     fn drop(&mut self) {
         for w in &mut self.workers {
@@ -225,5 +306,35 @@ mod tests {
     fn unknown_artifact_is_error_not_panic() {
         let pool = Pool::open_default(1).unwrap();
         assert!(pool.execute("no_such_artifact", vec![]).is_err());
+    }
+
+    #[test]
+    fn session_crew_merges_in_job_order() {
+        let m = Manifest::load_default().unwrap();
+        let out = session_crew(&m, 3, 8, |_s, i| Ok(i * 10)).unwrap();
+        assert_eq!(out.results, (0..8).map(|i| i * 10).collect::<Vec<_>>());
+        assert_eq!(out.busy_seconds.len(), 3);
+        assert!(out.wall_seconds >= 0.0);
+    }
+
+    #[test]
+    fn session_crew_propagates_job_error() {
+        let m = Manifest::load_default().unwrap();
+        let r = session_crew(&m, 2, 4, |_s, i| {
+            if i == 2 {
+                Err(anyhow!("boom"))
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn session_crew_caps_workers_at_jobs() {
+        let m = Manifest::load_default().unwrap();
+        let out = session_crew(&m, 16, 2, |_s, i| Ok(i)).unwrap();
+        assert_eq!(out.results, vec![0, 1]);
+        assert_eq!(out.busy_seconds.len(), 2);
     }
 }

@@ -242,3 +242,44 @@ fn measured_multifog_pipeline_end_to_end() {
     assert!(rl.fleet.repair_bytes > 0, "a lossy run must pay repair");
     assert!(rl.fleet.goodput_ratio() < 1.0);
 }
+
+/// The parallel live encode (`--encode-workers N`) must be a pure
+/// wall-clock optimization: every shard's measured traffic is
+/// record-for-record identical for every worker count (each shard's
+/// encode restarts frame ids at 0 and draws its salts from the shard
+/// seed, so nothing depends on which worker ran it or when).
+#[test]
+fn encode_worker_count_never_changes_bytes() {
+    if Session::open_default().is_err() {
+        eprintln!("skipping: AOT artifacts absent (python -m compile.aot)");
+        return;
+    }
+    let cfg = cfg();
+    let sim = tiny_sim(Method::ResRapid { direct: false });
+    let with_workers = |w: usize| {
+        let mut mf = MultiFogConfig::new(2, Topology::Sharded, RebroadcastPolicy::Unicast);
+        mf.encode_workers = w;
+        run_multi(&cfg, &sim, &mf).unwrap()
+    };
+    let base = with_workers(1);
+    assert_eq!(base.encode.workers, 1);
+    assert!(base.encode.wall_seconds > 0.0);
+    assert!(base.encode.mb_per_s() > 0.0);
+    for w in [2usize, 4] {
+        let r = with_workers(w);
+        assert_eq!(r.encode.workers, w.min(2), "workers clamp to the shard count");
+        assert_eq!(r.encode.busy_seconds.len(), r.encode.workers);
+        assert!((0.0..=1.0).contains(&r.encode.mean_utilization()));
+        assert_eq!(r.shards.len(), base.shards.len());
+        for (a, b) in r.shards.iter().zip(base.shards.iter()) {
+            assert_eq!(a.n_records, b.n_records, "workers={w} shard {}", a.shard);
+            assert_eq!(a.upload_bytes, b.upload_bytes, "workers={w} shard {}", a.shard);
+            assert_eq!(a.payload_bytes, b.payload_bytes, "workers={w} shard {}", a.shard);
+            assert_eq!(a.label_bytes, b.label_bytes, "workers={w} shard {}", a.shard);
+            assert_eq!(a.cell_bytes, b.cell_bytes, "workers={w} shard {}", a.shard);
+        }
+        assert_eq!(r.encode.payload_bytes, base.encode.payload_bytes, "workers={w}");
+        assert_eq!(r.fleet.total_bytes, base.fleet.total_bytes, "workers={w}");
+        assert_eq!(r.byte_parity_mismatch, 0, "workers={w}");
+    }
+}

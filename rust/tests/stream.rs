@@ -21,7 +21,7 @@ use residual_inr::coordinator::{EncoderConfig, Method};
 use residual_inr::costmodel::{Analytical, CostBook, CostModel};
 use residual_inr::data::Profile;
 use residual_inr::fleet::{
-    self, ArrivalSpec, CellSimMode, FailSpec, FleetConfig, FleetReport, HandoverSpec,
+    self, ArrivalSpec, CellSimMode, DepartSpec, FailSpec, FleetConfig, FleetReport, HandoverSpec,
     StreamConfig,
 };
 
@@ -138,6 +138,50 @@ fn streaming_runs_are_deterministic_and_thread_invariant() {
             assert_eq!(a.departed, b.departed, "threads={threads} fog={}", a.fog);
             assert_eq!(a.offered, b.offered, "threads={threads} fog={}", a.fog);
             assert_eq!(a.dropped, b.dropped, "threads={threads} fog={}", a.fog);
+        }
+    }
+}
+
+/// Departures (`--depart fog:t`) are the handover's departure half
+/// alone: the receiver leaves the fleet with no destination cell, so
+/// the join/depart books balance only up to the departure count — and
+/// the windowed executor reproduces the sequential oracle bit for bit.
+#[test]
+fn departures_leave_the_fleet_and_conserve_the_accounts() {
+    let with_departs = |threads: usize| {
+        let mut fc = streaming_fc(threads);
+        fc.departs = vec![DepartSpec { fog: 2, at: 0.5 }, DepartSpec { fog: 3, at: 0.5 }];
+        run(&fc)
+    };
+    let r = with_departs(0);
+    let joined: usize = r.fogs.iter().map(|f| f.joined).sum();
+    let departed: usize = r.fogs.iter().map(|f| f.departed).sum();
+    // Every departure removed a live receiver (49 per cell, so both
+    // specs land); handover + fail-over re-attach everyone else.
+    assert_eq!(
+        departed,
+        joined + 2,
+        "only the two scheduled departures leave without re-attaching"
+    );
+    assert!(r.fogs[2].departed >= 1, "fog 2 lost its departing receiver");
+    assert!(r.fogs[3].departed >= 1, "fog 3 lost its departing receiver");
+
+    // A departed receiver stops hearing deliveries: the departing run
+    // delivers strictly less than the same schedule without departs.
+    let baseline = run(&streaming_fc(0));
+    assert!(r.stream_deliveries < baseline.stream_deliveries);
+
+    // Windowed executors apply departures at barriers in the same
+    // order; the report reproduces bit for bit at every worker count.
+    for threads in 1..=4 {
+        let w = with_departs(threads);
+        assert_eq!(w.total_bytes, r.total_bytes, "threads={threads}");
+        assert_eq!(w.events, r.events, "threads={threads}");
+        assert_eq!(w.stream_deliveries, r.stream_deliveries, "threads={threads}");
+        assert_eq!(w.makespan_seconds.to_bits(), r.makespan_seconds.to_bits(), "threads={threads}");
+        for (a, b) in w.fogs.iter().zip(r.fogs.iter()) {
+            assert_eq!(a.joined, b.joined, "threads={threads} fog={}", a.fog);
+            assert_eq!(a.departed, b.departed, "threads={threads} fog={}", a.fog);
         }
     }
 }
