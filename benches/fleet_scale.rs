@@ -13,7 +13,9 @@
 //! engine wall-clock, event throughput and the aggregate speedup, and a
 //! streaming section (Poisson arrivals over a finite horizon with one
 //! handover and one fog failure) recording staleness percentiles,
-//! deadline-miss/drop rates and goodput.
+//! deadline-miss/drop rates and goodput, and a multi-round delta sweep
+//! (`--delta` off vs on over the streaming fleet) recording the wire
+//! total drop, effective compression ratio and full-snapshot fallbacks.
 //!
 //! This extends Fig 8 from analytical totals to a simulated timeline:
 //! the byte curves reproduce the §4 model (fog+INR grows with slope
@@ -35,8 +37,8 @@ use residual_inr::coordinator::{EncoderConfig, Method};
 use residual_inr::costmodel;
 use residual_inr::data::Profile;
 use residual_inr::fleet::{
-    self, ArrivalSpec, CellSimMode, FailSpec, FleetConfig, FleetReport, HandoverSpec,
-    RebroadcastPolicy, StreamConfig,
+    self, ArrivalSpec, CellSimMode, DeltaConfig, FailSpec, FleetConfig, FleetReport,
+    HandoverSpec, RebroadcastPolicy, StreamConfig,
 };
 use residual_inr::util::fmt_bytes;
 use residual_inr::util::json::Json;
@@ -355,6 +357,7 @@ fn main() -> anyhow::Result<()> {
             arrivals: ArrivalSpec::Poisson { rate: 2.0 },
             horizon: 20.0,
             deadline: Some(0.5),
+            shed: false,
         });
         fc.handovers = vec![HandoverSpec { from: 0, to: 2, at: 5.0 }];
         fc.fail = Some(FailSpec { fog: 1, at: 10.0 });
@@ -387,6 +390,71 @@ fn main() -> anyhow::Result<()> {
             ("goodput_bytes_per_second", Json::Num(r.stream_goodput_bytes_per_second())),
             ("engine_wall_seconds", Json::Num(wall)),
         ]));
+    }
+    t.print();
+
+    // Multi-round delta sweep: the same streaming fleet, where template
+    // slots are re-encoded round after round, with `--delta` off vs on.
+    // From the second round on every cell leg ships a quantized sparse
+    // residual instead of the full snapshot (falling back to full when
+    // churn or eviction invalidates a base), so the wire total drops
+    // while the delivery story stays record-for-record identical — the
+    // rows record the drop, the effective compression ratio and the
+    // fallback count per configuration.
+    println!("\n== delta sweep: streaming sharded 4 fogs, poisson:2 over 20 s ==");
+    let mut t = Table::new(&[
+        "policy", "delta", "total bytes", "vs full", "delta bytes", "ratio", "fallbacks",
+    ]);
+    let mut delta_rows = Vec::new();
+    for policy in [RebroadcastPolicy::Unicast, RebroadcastPolicy::CellMulticast] {
+        let mut full_total = 0u64;
+        for delta in [
+            None,
+            Some(DeltaConfig::default_on()),
+            Some(DeltaConfig { bits: 16, sparsity: 0.75 }),
+        ] {
+            let mut fc = FleetConfig::from_scenario("sharded", method, costs)?;
+            fc.max_frames = Some(frames);
+            fc.encode_workers = workers;
+            fc.policy = policy;
+            fc.delta = delta;
+            fc.stream = Some(StreamConfig {
+                arrivals: ArrivalSpec::Poisson { rate: 2.0 },
+                horizon: 20.0,
+                deadline: None,
+                shed: false,
+            });
+            let r = fleet::simulate(&fc, sweep_shards.clone());
+            if delta.is_none() {
+                full_total = r.total_bytes;
+            }
+            let name = match delta {
+                None => "off".to_string(),
+                Some(dc) => format!("{}b,{:.2}", dc.bits, dc.sparsity),
+            };
+            t.row(&[
+                policy.name().to_string(),
+                name.clone(),
+                fmt_bytes(r.total_bytes),
+                format!("{:.2}x", full_total as f64 / r.total_bytes.max(1) as f64),
+                fmt_bytes(r.delta_bytes),
+                format!("{:.2}", r.delta_compression_ratio()),
+                r.delta_fallbacks.to_string(),
+            ]);
+            delta_rows.push(Json::obj(vec![
+                ("policy", Json::Str(policy.name().to_string())),
+                ("delta", Json::Str(name)),
+                ("total_bytes", Json::Num(r.total_bytes as f64)),
+                ("delta_bytes", Json::Num(r.delta_bytes as f64)),
+                ("delta_transfers", Json::Num(r.delta_transfers as f64)),
+                ("delta_full_equiv_bytes", Json::Num(r.delta_full_equiv_bytes as f64)),
+                ("delta_fallbacks", Json::Num(r.delta_fallbacks as f64)),
+                ("delta_compression_ratio", Json::Num(r.delta_compression_ratio())),
+                ("reduction_vs_full", Json::Num(full_total as f64 / r.total_bytes.max(1) as f64)),
+                ("stream_deliveries", Json::Num(r.stream_deliveries as f64)),
+                ("makespan_seconds", Json::Num(r.makespan_seconds)),
+            ]));
+        }
     }
     t.print();
 
@@ -429,6 +497,7 @@ fn main() -> anyhow::Result<()> {
         ("loss_sweep", Json::Arr(loss_rows)),
         ("scaling_curve", Json::Arr(scaling_rows)),
         ("streaming", Json::Arr(stream_rows)),
+        ("delta_sweep", Json::Arr(delta_rows)),
         ("reduction_vs_jpeg", Json::Arr(reductions)),
     ]);
     let out = residual_inr::config::find_repo_file("Cargo.toml")

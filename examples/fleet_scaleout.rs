@@ -201,6 +201,7 @@ fn main() -> Result<()> {
         arrivals: residual_inr::fleet::ArrivalSpec::Poisson { rate: 2.0 },
         horizon: 20.0,
         deadline: Some(0.5),
+        shed: false,
     });
     fc.handovers = vec![residual_inr::fleet::HandoverSpec { from: 0, to: fogs - 1, at: 5.0 }];
     fc.fail = Some(residual_inr::fleet::FailSpec { fog: 1, at: 10.0 });

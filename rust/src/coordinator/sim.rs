@@ -36,7 +36,8 @@ use crate::costmodel::{Analytical, Calibrated, CostBook, CostModel};
 use crate::data::{generate_dataset, BBox, Dataset, ImageRGB, Profile};
 use crate::fleet::policy::{CellMode, PULL_REQUEST_BYTES};
 use crate::fleet::{
-    CellSimMode, FleetConfig, FleetReport, JoinSpec, RebroadcastPolicy, ShardTraffic, Topology,
+    CellSimMode, DeltaConfig, FleetConfig, FleetReport, JoinSpec, RebroadcastPolicy, ShardTraffic,
+    Topology,
 };
 use crate::inr::Record;
 use crate::metrics::{map50, map50_95, mean_iou};
@@ -629,6 +630,10 @@ pub struct MultiFogConfig {
     /// identical to the serialized encode for every worker count
     /// (per-shard RNG salts and NetSim accounting are self-contained).
     pub encode_workers: usize,
+    /// Residual delta redistribution for the fleet adaptation
+    /// (`--delta [--delta-bits N --delta-sparsity T]`). `None` keeps the
+    /// pre-delta byte books record-for-record.
+    pub delta: Option<DeltaConfig>,
 }
 
 impl MultiFogConfig {
@@ -643,6 +648,7 @@ impl MultiFogConfig {
             cell_sim: CellSimMode::default(),
             threads: 0,
             encode_workers: 0,
+            delta: None,
         }
     }
 }
@@ -742,6 +748,19 @@ impl MultiFogReport {
                 "fleet joiner catch-up    : {} ({} joined)",
                 fmt_bytes(self.fleet.catchup_bytes),
                 self.fleet.joined_receivers
+            );
+        }
+        if self.fleet.delta_bytes > 0 || self.fleet.delta_fallbacks > 0 {
+            println!(
+                "fleet delta bytes        : {} ({} transfers, {} full fallbacks)",
+                fmt_bytes(self.fleet.delta_bytes),
+                self.fleet.delta_transfers,
+                self.fleet.delta_fallbacks
+            );
+            println!(
+                "fleet delta vs full      : {} replaced ({:.1}% of full)",
+                fmt_bytes(self.fleet.delta_full_equiv_bytes),
+                100.0 * self.fleet.delta_compression_ratio()
             );
         }
         println!("fleet makespan (overlap) : {:.2} s", self.fleet.makespan_seconds);
@@ -875,6 +894,7 @@ pub fn run_multi(cfg: &ArchConfig, sim: &SimConfig, mf: &MultiFogConfig) -> Resu
     fleet_cfg.joins = mf.joins.clone();
     fleet_cfg.cell_sim = mf.cell_sim;
     fleet_cfg.threads = mf.threads;
+    fleet_cfg.delta = mf.delta;
     fleet_cfg.validate()?;
     let traffic: Vec<ShardTraffic> = shards.iter().map(|s| s.traffic.clone()).collect();
     let fleet = crate::fleet::simulate(&fleet_cfg, traffic);

@@ -75,6 +75,13 @@ pub struct WeightCache {
     used_bytes: u64,
     clock: u64,
     entries: HashMap<u64, Entry>,
+    /// Base-version tracking per content chain (`--delta`): the snapshot
+    /// hash this fog last materialized for each chain (chains are keyed
+    /// by origin fog). A delta against `base_of(chain)` is decodable
+    /// only while the base blob also still *lives* in the store —
+    /// eviction invalidates eligibility through [`WeightCache::contains`],
+    /// so callers check both before choosing delta over full.
+    bases: HashMap<u64, u64>,
     /// INR weight-blob counters (the paper's cache metrics).
     pub stats: CacheStats,
     /// Counters for every other payload class relayed through the same
@@ -92,9 +99,23 @@ impl WeightCache {
             used_bytes: 0,
             clock: 0,
             entries: HashMap::new(),
+            bases: HashMap::new(),
             stats: CacheStats::default(),
             relay_stats: CacheStats::default(),
         }
+    }
+
+    /// Record that this fog materialized snapshot `hash` as the newest
+    /// version of `chain` — the base the next delta will diff against.
+    pub fn note_base(&mut self, chain: u64, hash: u64) {
+        self.bases.insert(chain, hash);
+    }
+
+    /// The last snapshot hash materialized for `chain`, if any. Callers
+    /// must also check [`WeightCache::contains`] — a noted base whose
+    /// blob was evicted cannot seed a delta decode.
+    pub fn base_of(&self, chain: u64) -> Option<u64> {
+        self.bases.get(&chain).copied()
     }
 
     fn stats_of(&mut self, weights: bool) -> &mut CacheStats {
@@ -266,6 +287,26 @@ mod tests {
         assert_eq!(c.stats.insertions, 1);
         assert_eq!(c.used_bytes(), 500);
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn base_tracking_follows_the_chain_and_eviction_invalidates() {
+        let mut c = WeightCache::new(2000);
+        let (v1, v2) = (blob_hash(b"snap-1"), blob_hash(b"snap-2"));
+        assert_eq!(c.base_of(0), None, "no base before first materialize");
+        c.insert(v1, 1500, true);
+        c.note_base(0, v1);
+        assert_eq!(c.base_of(0), Some(v1));
+        assert_eq!(c.base_of(1), None, "chains are independent");
+        // Delta eligibility = noted base AND blob still resident.
+        assert!(c.base_of(0).is_some_and(|h| c.contains(h)));
+        // The next snapshot replaces the chain base...
+        c.insert(v2, 1500, true); // evicts v1 (capacity 2000)
+        c.note_base(0, v2);
+        assert_eq!(c.base_of(0), Some(v2));
+        // ...and an evicted base no longer qualifies even if still noted.
+        c.note_base(1, v1);
+        assert!(!c.base_of(1).is_some_and(|h| c.contains(h)));
     }
 
     #[test]

@@ -21,7 +21,9 @@ use std::collections::BTreeMap;
 /// Why a transfer was on the medium. Delivered-class bytes feed the
 /// per-tag totals (policy comparisons); repair and control bytes are
 /// the reliability layer's overhead and are accounted apart, so
-/// delivered totals stay loss-invariant.
+/// delivered totals stay loss-invariant. Delta-class bytes are residual
+/// weight updates (`--delta`): real payload, but counted apart from the
+/// delivered per-tag view so full-snapshot byte parity stays checkable.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TxClass {
     /// First-copy payload: the bytes the run set out to move.
@@ -30,6 +32,21 @@ pub enum TxClass {
     Repair,
     /// A control-plane frame (NACK, pull retry): tiny, fixed-size.
     Control,
+    /// A residual weight-delta update standing in for a full snapshot.
+    Delta,
+}
+
+/// Tags whose delivered-class submissions are reclassified as
+/// [`TxClass::Delta`]. Keeping the mapping here (rather than threading a
+/// class through every leg signature) means the reliability layer's
+/// repair re-airs of a delta leg automatically carry delta-sized bytes
+/// in the Repair class, and `--delta off` — which never uses these tags
+/// — leaves every counter untouched.
+fn resolve_class(tag: &str, class: TxClass) -> TxClass {
+    match class {
+        TxClass::Delivered if matches!(tag, "inr-delta" | "backhaul-delta") => TxClass::Delta,
+        c => c,
+    }
 }
 
 /// One FIFO shared medium (a wireless cell or a point-to-point backhaul).
@@ -41,10 +58,12 @@ pub struct Channel {
     bytes_total: u64,
     repair_bytes: u64,
     control_bytes: u64,
+    delta_bytes: u64,
     airtime_total: f64,
     transfers: u64,
     repair_transfers: u64,
     control_transfers: u64,
+    delta_transfers: u64,
     by_tag: BTreeMap<&'static str, u64>,
 }
 
@@ -58,10 +77,12 @@ impl Channel {
             bytes_total: 0,
             repair_bytes: 0,
             control_bytes: 0,
+            delta_bytes: 0,
             airtime_total: 0.0,
             transfers: 0,
             repair_transfers: 0,
             control_transfers: 0,
+            delta_transfers: 0,
             by_tag: BTreeMap::new(),
         }
     }
@@ -96,7 +117,7 @@ impl Channel {
         self.bytes_total += bytes;
         self.airtime_total += self.airtime(bytes);
         self.transfers += 1;
-        match class {
+        match resolve_class(tag, class) {
             TxClass::Delivered => {
                 *self.by_tag.entry(tag).or_insert(0) += bytes;
             }
@@ -107,6 +128,10 @@ impl Channel {
             TxClass::Control => {
                 self.control_bytes += bytes;
                 self.control_transfers += 1;
+            }
+            TxClass::Delta => {
+                self.delta_bytes += bytes;
+                self.delta_transfers += 1;
             }
         }
         finish
@@ -137,7 +162,7 @@ impl Channel {
         self.bytes_total += total_bytes;
         self.airtime_total += airtime;
         self.transfers += transfers;
-        match class {
+        match resolve_class(tag, class) {
             TxClass::Delivered => {
                 *self.by_tag.entry(tag).or_insert(0) += total_bytes;
             }
@@ -148,6 +173,10 @@ impl Channel {
             TxClass::Control => {
                 self.control_bytes += total_bytes;
                 self.control_transfers += transfers;
+            }
+            TxClass::Delta => {
+                self.delta_bytes += total_bytes;
+                self.delta_transfers += transfers;
             }
         }
         finish
@@ -164,11 +193,12 @@ impl Channel {
         self.bytes_total
     }
 
-    /// Delivered-class bytes: raw minus repair minus control. Invariant
-    /// under the loss rate — losing a copy costs repair bytes, never a
-    /// second delivered copy.
+    /// Delivered-class bytes: raw minus repair minus control minus
+    /// delta. Invariant under the loss rate — losing a copy costs repair
+    /// bytes, never a second delivered copy — and invariant under
+    /// `--delta`, whose residual updates land in their own class.
     pub fn delivered_bytes(&self) -> u64 {
-        self.bytes_total - self.repair_bytes - self.control_bytes
+        self.bytes_total - self.repair_bytes - self.control_bytes - self.delta_bytes
     }
 
     /// Bytes retransmitted by the reliability layer (ARQ retries,
@@ -182,12 +212,22 @@ impl Channel {
         self.control_bytes
     }
 
+    /// Residual weight-delta bytes (`--delta` legs standing in for full
+    /// snapshots). Zero whenever delta mode is off.
+    pub fn delta_bytes(&self) -> u64 {
+        self.delta_bytes
+    }
+
     pub fn repair_transfers(&self) -> u64 {
         self.repair_transfers
     }
 
     pub fn control_transfers(&self) -> u64 {
         self.control_transfers
+    }
+
+    pub fn delta_transfers(&self) -> u64 {
+        self.delta_transfers
     }
 
     pub fn airtime_total(&self) -> f64 {
@@ -224,14 +264,16 @@ impl Channel {
         }
     }
 
-    /// Goodput over `[0, horizon]` in bytes/s: delivered-class bytes
-    /// only. `goodput <= raw_throughput`, with equality iff the link
-    /// never repaired.
+    /// Goodput over `[0, horizon]` in bytes/s: delivered- and
+    /// delta-class bytes (both are useful payload; repair and control
+    /// are the overhead). `goodput <= raw_throughput`, with equality iff
+    /// the link never repaired. With delta off this is delivered bytes
+    /// over the horizon, exactly as before.
     pub fn goodput(&self, horizon: f64) -> f64 {
         if horizon <= 0.0 {
             0.0
         } else {
-            self.delivered_bytes() as f64 / horizon
+            (self.delivered_bytes() + self.delta_bytes) as f64 / horizon
         }
     }
 }
@@ -355,6 +397,43 @@ mod tests {
         assert_eq!(c.control_transfers(), 2);
         assert_eq!(c.delivered_bytes(), 0);
         assert_eq!(c.bytes_tagged("x"), 0, "non-delivered classes stay untagged");
+    }
+
+    #[test]
+    fn delta_tags_route_to_the_delta_class() {
+        let mut c = Channel::new(1e6, 0.0);
+        c.transmit(0.0, 1000, "inr-broadcast");
+        c.transmit(0.0, 250, "inr-delta");
+        c.transmit(0.0, 120, "backhaul-delta");
+        // A lost delta copy is re-aired by the reliability layer under
+        // the Repair class at delta size.
+        c.transmit_class(0.0, 250, "arq-repair", TxClass::Repair);
+        assert_eq!(c.bytes_total(), 1620);
+        assert_eq!(c.delta_bytes(), 370);
+        assert_eq!(c.delta_transfers(), 2);
+        assert_eq!(c.delivered_bytes(), 1000, "delta stays out of delivered");
+        assert_eq!(c.bytes_tagged("inr-delta"), 0, "delta stays out of tags");
+        assert_eq!(c.bytes_tagged("inr-broadcast"), 1000);
+        assert_eq!(c.repair_bytes(), 250);
+        // Delta is useful payload: goodput counts it, raw bounds it.
+        assert!((c.goodput(1.0) - 1370.0).abs() < 1e-9);
+        assert!(c.goodput(1.0) <= c.raw_throughput(1.0));
+    }
+
+    #[test]
+    fn aggregate_delta_tags_route_like_exact_ones() {
+        let (n, bytes) = (4u64, 500u64);
+        let mut exact = Channel::new(1e6, 1e-3);
+        for _ in 0..n {
+            exact.transmit(0.0, bytes, "inr-delta");
+        }
+        let mut agg = Channel::new(1e6, 1e-3);
+        let airtime = n as f64 * agg.airtime(bytes);
+        agg.transmit_agg(0.0, n, n * bytes, "inr-delta", TxClass::Delivered, airtime);
+        assert_eq!(exact.delta_bytes(), agg.delta_bytes());
+        assert_eq!(exact.delta_transfers(), agg.delta_transfers());
+        assert_eq!(exact.delivered_bytes(), agg.delivered_bytes());
+        assert_eq!(exact.busy_until().to_bits(), agg.busy_until().to_bits());
     }
 
     #[test]

@@ -102,6 +102,22 @@ struct FogRt {
     /// [`build_fogs`] for the eligibility test). `Some` ⇒ the arrays
     /// are empty and never indexed.
     cohort: Option<CohortCounters>,
+    /// Delta redistribution (`--delta`) origin-side state: per template
+    /// slot, the hash and byte size of the last INR snapshot this fog
+    /// encoded — the base the next snapshot on that slot diffs against.
+    last_inr: HashMap<usize, (u64, u64)>,
+    /// Receiver-cohort base per content chain: the snapshot hash every
+    /// *active* receiver of this cell last held. A delta cell leg is
+    /// decodable only when it diffs against exactly this hash; churn
+    /// (join/handover/fail-over attach) clears the map so the next leg
+    /// per chain falls back to a full snapshot.
+    cell_base: HashMap<u64, u64>,
+    /// Bytes a full-snapshot delivery would have cost where a delta was
+    /// actually sent (the compression-ratio denominator).
+    delta_full_equiv: u64,
+    /// Delta-eligible deliveries that had to fall back to a full
+    /// snapshot (missing/evicted base, churned cohort, catch-up replay).
+    delta_fallbacks: u64,
     /// Fog failure flag (`--fail`): a failed fog drops its pending
     /// frames and forwards nothing.
     failed: bool,
@@ -148,10 +164,39 @@ impl FogRt {
 struct CatalogEntry {
     origin: usize,
     blob: usize,
+    /// Full-snapshot size. Delta resolution happens per destination
+    /// ([`resolve_cell_payload`] / [`resolve_fetch_payload`]); the
+    /// catalog always carries the full blob so fallbacks and catch-up
+    /// replays never depend on a base.
     bytes: u64,
     hash: u64,
     tag: &'static str,
     cacheable: bool,
+    /// Content chain this snapshot belongs to (see [`chain_key`]); 0
+    /// for label pseudo-blobs.
+    chain: u64,
+    /// `--delta`: the previous snapshot on this chain as
+    /// `(base_hash, modeled_delta_bytes)` — present only when a delta
+    /// against it is well-formed *and* strictly smaller than the full
+    /// snapshot, so a fallback count always means "base unavailable".
+    prev: Option<(u64, u64)>,
+}
+
+impl CatalogEntry {
+    /// The label pseudo-blob: control metadata, never cached, never
+    /// delta-encoded.
+    fn labels(origin: usize, blob: usize, bytes: u64) -> CatalogEntry {
+        CatalogEntry {
+            origin,
+            blob,
+            bytes,
+            hash: 0,
+            tag: "labels",
+            cacheable: false,
+            chain: 0,
+            prev: None,
+        }
+    }
 }
 
 /// Immutable per-run facts every delivery leg needs: whether blobs are
@@ -178,6 +223,10 @@ struct SimCtx {
 struct StreamCtx {
     /// Freshness deadline in seconds (0 = no deadline accounting).
     deadline: f64,
+    /// Admission control (`--deadline S,shed`): frames whose estimated
+    /// delivery staleness already exceeds the deadline on arrival are
+    /// shed at the source instead of entering the pipeline.
+    shed: bool,
     /// How many of the newest catalog entries a joiner/handover/orphan
     /// replays: one template cycle fleet-wide. Bounded so catch-up work
     /// stays O(catalog-window), not O(all frames ever streamed).
@@ -302,6 +351,7 @@ pub fn simulate(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> FleetReport {
     // every thread count, and the link-layer loss draws never move.
     let stream_ctx = fc.stream.as_ref().map(|sc| StreamCtx {
         deadline: sc.deadline.unwrap_or(0.0),
+        shed: sc.shed,
         working_set: shards.iter().map(|s| s.blobs.len()).sum::<usize>().max(1),
         arrivals: (0..fc.n_fogs)
             .map(|f| stream::arrival_times(&sc.arrivals, fc.seed, f as u64, sc.horizon))
@@ -381,6 +431,10 @@ fn build_fogs(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> Vec<FogRt> {
                 losses: 0,
                 nacks: 0,
                 retransmissions: 0,
+                last_inr: HashMap::new(),
+                cell_base: HashMap::new(),
+                delta_full_equiv: 0,
+                delta_fallbacks: 0,
                 cohort: static_cohort.then(CohortCounters::default),
                 failed: false,
                 departed: 0,
@@ -480,7 +534,7 @@ fn simulate_sequential(
                 let lb = fogs[f].traffic.label_bytes();
                 let label_id = fogs[f].traffic.blobs.len();
                 deliver(fc, &mut fogs, &mut QRouter::Single(&mut q), &mut cloud_up, &mut catalog,
-                    &ctx, 0.0, f, label_id, lb, 0, "labels", false);
+                    &ctx, 0.0, CatalogEntry::labels(f, label_id, lb));
             }
         }
     }
@@ -496,8 +550,11 @@ fn simulate_sequential(
                     fogs[fog].dropped += 1;
                 } else {
                     let (bytes, hash, tag) = stream_blob(&fogs[fog], blob);
+                    let (chain, prev) = note_chain(fc, &mut fogs[fog], fog, blob, hash, bytes, tag);
+                    let entry =
+                        CatalogEntry { origin: fog, blob, bytes, hash, tag, cacheable: true, chain, prev };
                     deliver(fc, &mut fogs, &mut QRouter::Single(&mut q), &mut cloud_up,
-                        &mut catalog, &ctx, now, fog, blob, bytes, hash, tag, true);
+                        &mut catalog, &ctx, now, entry);
                 }
             }
             Event::EncodeDone { fog, blob } => {
@@ -506,13 +563,16 @@ fn simulate_sequential(
                     let b = &fogs[fog].traffic.blobs[blob];
                     (b.bytes, b.hash, b.tag)
                 };
+                let (chain, prev) = note_chain(fc, &mut fogs[fog], fog, blob, hash, bytes, tag);
+                let entry =
+                    CatalogEntry { origin: fog, blob, bytes, hash, tag, cacheable: true, chain, prev };
                 deliver(fc, &mut fogs, &mut QRouter::Single(&mut q), &mut cloud_up, &mut catalog,
-                    &ctx, now, fog, blob, bytes, hash, tag, true);
+                    &ctx, now, entry);
                 if fogs[fog].remaining == 0 {
                     let lb = fogs[fog].traffic.label_bytes();
                     let label_id = fogs[fog].traffic.blobs.len();
                     deliver(fc, &mut fogs, &mut QRouter::Single(&mut q), &mut cloud_up,
-                        &mut catalog, &ctx, now, fog, label_id, lb, 0, "labels", false);
+                        &mut catalog, &ctx, now, CatalogEntry::labels(fog, label_id, lb));
                 }
             }
             Event::Delivered { fog, edge, origin, blob } => {
@@ -530,7 +590,7 @@ fn simulate_sequential(
                     &catalog, &ctx, now, fog, edge);
             }
             Event::FrameArrival { fog, frame } => {
-                on_frame_arrival(&mut fogs[fog], &mut q, now, fog, frame);
+                on_frame_arrival(fc, &ctx, &mut fogs[fog], &mut q, now, fog, frame);
             }
             Event::Handover { from, to } => {
                 handover_receiver(fc, &mut fogs, &mut QRouter::Single(&mut q), &mut cloud_up,
@@ -562,14 +622,139 @@ fn stream_blob(rt: &FogRt, arrival: usize) -> (u64, u64, &'static str) {
     (b.bytes, hash, b.tag)
 }
 
+/// Content-chain key for delta redistribution: one chain per (origin
+/// fog, template slot). Streamed arrivals cycle their shard's blob
+/// templates, so consecutive snapshots *on the same slot* are the
+/// same model re-encoded — the residual the delta diffs. `MAX_FOGS`
+/// keeps the fog index within 32 bits.
+fn chain_key(origin: usize, slot: usize) -> u64 {
+    ((origin as u64) << 32) | slot as u64
+}
+
+/// Note a freshly encoded INR snapshot on its origin chain and return
+/// `(chain, prev)` for its [`CatalogEntry`]. `prev` is attached only
+/// when `--delta` is on, the previous snapshot on the slot has the same
+/// byte size (same template ⇒ a well-formed residual), and the modeled
+/// delta is strictly smaller than the full snapshot — so every later
+/// fallback genuinely means "base unavailable at the destination".
+/// With `--delta off` this never touches `rt` (state parity).
+fn note_chain(
+    fc: &FleetConfig,
+    rt: &mut FogRt,
+    fog: usize,
+    blob: usize,
+    hash: u64,
+    bytes: u64,
+    tag: &'static str,
+) -> (u64, Option<(u64, u64)>) {
+    let slot = blob % rt.traffic.blobs.len().max(1);
+    let chain = chain_key(fog, slot);
+    let Some(dc) = &fc.delta else {
+        return (chain, None);
+    };
+    if tag != "inr-broadcast" {
+        return (chain, None);
+    }
+    let prev = rt.last_inr.insert(slot, (hash, bytes));
+    let prev = prev.and_then(|(ph, pb)| {
+        let db = dc.modeled_bytes(bytes);
+        (pb == bytes && db < bytes).then_some((ph, db))
+    });
+    (chain, prev)
+}
+
+/// Decide full-vs-delta for one cell leg at fog `rt` and return the
+/// `(bytes, tag)` the leg transmits. A delta rides only when the whole
+/// active cohort holds exactly the entry's base snapshot
+/// (`cell_base[chain] == prev_hash`); otherwise the full snapshot ships
+/// and — if a delta had been eligible — the fallback is counted. Either
+/// way the cohort base advances to this entry's hash, so the next
+/// snapshot on the chain can diff against it. With `--delta off` this
+/// is the identity and touches nothing.
+fn resolve_cell_payload(fc: &FleetConfig, rt: &mut FogRt, e: &CatalogEntry) -> (u64, &'static str) {
+    if fc.delta.is_none() || e.tag != "inr-broadcast" || rt.n_active == 0 {
+        return (e.bytes, e.tag);
+    }
+    let resolved = match e.prev {
+        Some((ph, db)) if rt.cell_base.get(&e.chain) == Some(&ph) => {
+            // Full-equivalent bytes are what the same leg shape would
+            // have delivered at full size: the mode selection below is
+            // exactly the one `cell_leg` recomputes for this payload.
+            let p = rt.cell.loss_rate();
+            let ch = rt.cell.channel();
+            let mode = fc.policy.cell_mode(rt.n_active, db, p, ch.bandwidth, ch.latency);
+            let copies = match mode {
+                CellMode::PerReceiver => rt.n_active as u64,
+                CellMode::SharedNack | CellMode::SharedPull => 1,
+            };
+            rt.delta_full_equiv += copies * e.bytes;
+            (db, "inr-delta")
+        }
+        Some(_) => {
+            rt.delta_fallbacks += 1;
+            (e.bytes, e.tag)
+        }
+        None => (e.bytes, e.tag),
+    };
+    rt.cell_base.insert(e.chain, e.hash);
+    resolved
+}
+
+/// Decide full-vs-delta for one backhaul fetch *into* fog `rt` and
+/// return the `(bytes, tag)` the transfer carries. Delta-eligible iff
+/// the destination's cache both *noted* the entry's base as its chain
+/// head and still *holds* the blob (eviction invalidates); the
+/// reconstructed snapshot is full either way — the cache stores full
+/// bytes, so downstream cell legs and later fetches never depend on
+/// how this copy crossed the backhaul.
+fn resolve_fetch_payload(
+    fc: &FleetConfig,
+    rt: &mut FogRt,
+    e: &CatalogEntry,
+) -> (u64, &'static str) {
+    if fc.delta.is_none() || e.tag != "inr-broadcast" {
+        return (e.bytes, "backhaul");
+    }
+    match e.prev {
+        Some((ph, db))
+            if rt.cache.base_of(e.chain) == Some(ph) && rt.cache.contains(ph) =>
+        {
+            rt.delta_full_equiv += e.bytes;
+            (db, "backhaul-delta")
+        }
+        Some(_) => {
+            rt.delta_fallbacks += 1;
+            (e.bytes, "backhaul")
+        }
+        None => (e.bytes, "backhaul"),
+    }
+}
+
 /// One streamed frame arrives at the fog's source: upload it over the
 /// cell (JPEG methods compress at the source and skip the upload, like
-/// the batch path) and queue the encode. Failed fogs drop the frame.
-fn on_frame_arrival(rt: &mut FogRt, q: &mut EventQueue, now: f64, fog: usize, frame: usize) {
+/// the batch path) and queue the encode. Failed fogs drop the frame;
+/// with `--deadline S,shed`, frames whose estimated delivery staleness
+/// already exceeds the deadline are shed here instead of entering the
+/// pipeline (counted in `frames_dropped`).
+fn on_frame_arrival(
+    fc: &FleetConfig,
+    ctx: &SimCtx,
+    rt: &mut FogRt,
+    q: &mut EventQueue,
+    now: f64,
+    fog: usize,
+    frame: usize,
+) {
     rt.offered += 1;
     if rt.failed || rt.traffic.blobs.is_empty() {
         rt.dropped += 1;
         return;
+    }
+    if let Some(s) = &ctx.stream {
+        if s.shed && s.deadline > 0.0 && estimated_staleness(fc, rt, now, frame) > s.deadline {
+            rt.dropped += 1;
+            return;
+        }
     }
     if matches!(rt.traffic.method, Method::Jpeg { .. }) || rt.traffic.uploads.is_empty() {
         q.push(now, Event::EncodeReady { fog, blob: frame });
@@ -579,6 +764,33 @@ fn on_frame_arrival(rt: &mut FogRt, q: &mut EventQueue, now: f64, fog: usize, fr
     let tx = rt.cell.reliable(q, now, u, "jpeg-upload", fog, NO_EDGE, fog, frame);
     rt.absorb_tx(&tx);
     q.push(tx.finish, Event::EncodeReady { fog, blob: frame });
+}
+
+/// Admission-control estimate of a frame's delivery staleness from the
+/// fog's *current* state: cell queue + upload airtime, encode queue
+/// wait ([`WorkerPool::next_start`], a non-mutating peek) + encode
+/// cost, and one broadcast airtime. Deliberately a lower bound — the
+/// cell and pool can only get busier between now and each stage, and
+/// loss/repair rounds are ignored — so shedding only drops frames that
+/// would certainly miss the deadline. Everything read is fog-local
+/// state, so the windowed executor computes the identical estimate.
+fn estimated_staleness(fc: &FleetConfig, rt: &FogRt, now: f64, frame: usize) -> f64 {
+    let b = &rt.traffic.blobs[frame % rt.traffic.blobs.len()];
+    let cell_free = rt.cell.channel().busy_until().max(now);
+    let upload_done =
+        if matches!(rt.traffic.method, Method::Jpeg { .. }) || rt.traffic.uploads.is_empty() {
+            now
+        } else {
+            let u = rt.traffic.uploads[frame % rt.traffic.uploads.len()];
+            cell_free + rt.cell.airtime(u)
+        };
+    let cost = if b.encode_steps == 0 {
+        fc.costs.jpeg_encode_seconds
+    } else {
+        b.encode_steps as f64 * fc.costs.seconds_per_step
+    };
+    let encode_done = rt.pool.next_start(upload_done) + cost;
+    encode_done + rt.cell.airtime(b.bytes) - now
 }
 
 /// Queue the encode job a ready blob needs on the fog's worker pool.
@@ -705,6 +917,10 @@ fn build_report(fc: &FleetConfig, fogs: &[FogRt], makespan: f64, events: u64) ->
         backhaul_bytes: 0,
         pull_bytes: 0,
         catchup_bytes: 0,
+        delta_bytes: 0,
+        delta_transfers: 0,
+        delta_full_equiv_bytes: 0,
+        delta_fallbacks: 0,
         repair_bytes: 0,
         control_bytes: 0,
         total_bytes: 0,
@@ -740,6 +956,10 @@ fn build_report(fc: &FleetConfig, fogs: &[FogRt], makespan: f64, events: u64) ->
         let backhaul = up.delivered_bytes() + down.delivered_bytes();
         let repair = cell.repair_bytes() + up.repair_bytes() + down.repair_bytes();
         let control = cell.control_bytes() + up.control_bytes() + down.control_bytes();
+        // Delta bytes are their own delivered class on every medium
+        // (excluded from `delivered_bytes()` like repair/control).
+        let delta = cell.delta_bytes() + up.delta_bytes() + down.delta_bytes();
+        let delta_tx = cell.delta_transfers() + up.delta_transfers() + down.delta_transfers();
         report.upload_bytes += cell.bytes_tagged("jpeg-upload");
         report.broadcast_bytes +=
             cell.bytes_tagged("inr-broadcast") + cell.bytes_tagged("jpeg-direct");
@@ -747,6 +967,10 @@ fn build_report(fc: &FleetConfig, fogs: &[FogRt], makespan: f64, events: u64) ->
         report.backhaul_bytes += backhaul;
         report.pull_bytes += cell.bytes_tagged("pull-request");
         report.catchup_bytes += cell.bytes_tagged("catchup");
+        report.delta_bytes += delta;
+        report.delta_transfers += delta_tx;
+        report.delta_full_equiv_bytes += rt.delta_full_equiv;
+        report.delta_fallbacks += rt.delta_fallbacks;
         report.repair_bytes += repair;
         report.control_bytes += control;
         report.lost_frames += rt.losses;
@@ -779,6 +1003,9 @@ fn build_report(fc: &FleetConfig, fogs: &[FogRt], makespan: f64, events: u64) ->
             repair_bytes: repair,
             control_bytes: control,
             catchup_bytes: cell.bytes_tagged("catchup"),
+            delta_bytes: delta,
+            delta_full_equiv_bytes: rt.delta_full_equiv,
+            delta_fallbacks: rt.delta_fallbacks,
             cache: rt.cache.stats,
             cache_blobs: rt.cache.len(),
             cache_used_bytes: rt.cache.used_bytes(),
@@ -807,7 +1034,8 @@ fn build_report(fc: &FleetConfig, fogs: &[FogRt], makespan: f64, events: u64) ->
         + report.label_bytes
         + report.backhaul_bytes
         + report.pull_bytes
-        + report.catchup_bytes;
+        + report.catchup_bytes
+        + report.delta_bytes;
     report
 }
 
@@ -910,14 +1138,7 @@ fn simulate_windowed(
             if fogs[f].traffic.blobs.is_empty() {
                 let lb = fogs[f].traffic.label_bytes();
                 let label_id = fogs[f].traffic.blobs.len();
-                let entry = CatalogEntry {
-                    origin: f,
-                    blob: label_id,
-                    bytes: lb,
-                    hash: 0,
-                    tag: "labels",
-                    cacheable: false,
-                };
+                let entry = CatalogEntry::labels(f, label_id, lb);
                 cell_leg(fc, &ctx, &mut fogs[f], &mut qs[f], 0.0, f, f, label_id, lb, "labels");
                 outbox.push(Outgoing { t_send: 0.0, entry });
             }
@@ -1041,9 +1262,11 @@ fn run_window(
                     rt.dropped += 1;
                 } else {
                     let (bytes, hash, tag) = stream_blob(rt, blob);
-                    cell_leg(fc, ctx, rt, q, now, fog, fog, blob, bytes, tag);
+                    let (chain, prev) = note_chain(fc, rt, fog, blob, hash, bytes, tag);
                     let entry =
-                        CatalogEntry { origin: fog, blob, bytes, hash, tag, cacheable: true };
+                        CatalogEntry { origin: fog, blob, bytes, hash, tag, cacheable: true, chain, prev };
+                    let (db, dtag) = resolve_cell_payload(fc, rt, &entry);
+                    cell_leg(fc, ctx, rt, q, now, fog, fog, blob, db, dtag);
                     outbox.push(Outgoing { t_send: now, entry });
                 }
             }
@@ -1053,22 +1276,17 @@ fn run_window(
                     let b = &rt.traffic.blobs[blob];
                     (b.bytes, b.hash, b.tag)
                 };
-                cell_leg(fc, ctx, rt, q, now, fog, fog, blob, bytes, tag);
-                let entry = CatalogEntry { origin: fog, blob, bytes, hash, tag, cacheable: true };
+                let (chain, prev) = note_chain(fc, rt, fog, blob, hash, bytes, tag);
+                let entry =
+                    CatalogEntry { origin: fog, blob, bytes, hash, tag, cacheable: true, chain, prev };
+                let (db, dtag) = resolve_cell_payload(fc, rt, &entry);
+                cell_leg(fc, ctx, rt, q, now, fog, fog, blob, db, dtag);
                 outbox.push(Outgoing { t_send: now, entry });
                 if rt.remaining == 0 {
                     let lb = rt.traffic.label_bytes();
                     let label_id = rt.traffic.blobs.len();
                     cell_leg(fc, ctx, rt, q, now, fog, fog, label_id, lb, "labels");
-                    let entry = CatalogEntry {
-                        origin: fog,
-                        blob: label_id,
-                        bytes: lb,
-                        hash: 0,
-                        tag: "labels",
-                        cacheable: false,
-                    };
-                    outbox.push(Outgoing { t_send: now, entry });
+                    outbox.push(Outgoing { t_send: now, entry: CatalogEntry::labels(fog, label_id, lb) });
                 }
             }
             Event::Delivered { fog, edge, origin, blob } => {
@@ -1080,7 +1298,7 @@ fn run_window(
                 }
             }
             Event::FrameArrival { fog, frame } => {
-                on_frame_arrival(rt, q, now, fog, frame);
+                on_frame_arrival(fc, ctx, rt, q, now, fog, frame);
             }
             Event::ReceiverJoin { .. }
             | Event::Handover { .. }
@@ -1120,16 +1338,14 @@ fn deliver(
     catalog: &mut Vec<CatalogEntry>,
     ctx: &SimCtx,
     now: f64,
-    origin: usize,
-    blob: usize,
-    bytes: u64,
-    hash: u64,
-    tag: &'static str,
-    cacheable: bool,
+    entry: CatalogEntry,
 ) {
-    let entry = CatalogEntry { origin, blob, bytes, hash, tag, cacheable };
+    let origin = entry.origin;
     catalog.push(entry);
-    cell_leg(fc, ctx, &mut fogs[origin], router.cell(origin), now, origin, origin, blob, bytes, tag);
+    let (db, dtag) = resolve_cell_payload(fc, &mut fogs[origin], &entry);
+    cell_leg(
+        fc, ctx, &mut fogs[origin], router.cell(origin), now, origin, origin, entry.blob, db, dtag,
+    );
     if !ctx.scope_all {
         return;
     }
@@ -1149,12 +1365,12 @@ fn deliver_remote(
     now: f64,
     entry: &CatalogEntry,
 ) {
-    let CatalogEntry { origin, blob, bytes, hash, tag, cacheable } = *entry;
+    let CatalogEntry { origin, blob, bytes, hash, tag, cacheable, .. } = *entry;
     // Stats class: INR weight payloads feed the paper's cache metrics,
     // everything else (the JPEG baseline) feeds the relay counters.
     let weights = tag == "inr-broadcast";
     if cacheable && backhaul_pushes_eagerly(fc, fogs, origin, bytes) {
-        tree_push(fc, fogs, router.backhaul(), cloud_up, now, origin, blob, bytes, hash, weights);
+        tree_push(fc, fogs, router.backhaul(), cloud_up, now, entry);
     }
     if fc.policy.shares_cell_airtime() {
         // One materialization per remote fog (tree-pushed, cached, or a
@@ -1166,7 +1382,8 @@ fn deliver_remote(
             }
             let avail = materialize(fc, fogs, router.backhaul(), cloud_up, now, g, entry);
             let start = if avail > now { avail } else { now };
-            cell_leg(fc, ctx, &mut fogs[g], router.cell(g), start, g, origin, blob, bytes, tag);
+            let (db, dtag) = resolve_cell_payload(fc, &mut fogs[g], entry);
+            cell_leg(fc, ctx, &mut fogs[g], router.cell(g), start, g, origin, blob, db, dtag);
         }
         return;
     }
@@ -1181,9 +1398,13 @@ fn deliver_remote(
             // [`super::aggregate`] accuracy contract.
             let avail = materialize(fc, fogs, router.backhaul(), cloud_up, now, g, entry);
             let start = if avail > now { avail } else { now };
-            cell_leg(fc, ctx, &mut fogs[g], router.cell(g), start, g, origin, blob, bytes, tag);
+            let (db, dtag) = resolve_cell_payload(fc, &mut fogs[g], entry);
+            cell_leg(fc, ctx, &mut fogs[g], router.cell(g), start, g, origin, blob, db, dtag);
             continue;
         }
+        // Resolve the cell payload once per cohort: every receiver of
+        // this leg gets the same full-or-delta copy.
+        let (db, dtag) = resolve_cell_payload(fc, &mut fogs[g], entry);
         for r in 0..fogs[g].rx_active.len() {
             if !fogs[g].rx_active[r] {
                 continue;
@@ -1193,18 +1414,24 @@ fn deliver_remote(
             } else if !cacheable && fogs[g].avail_remote.contains_key(&key) {
                 fogs[g].avail_remote[&key]
             } else {
-                let a = fetch(fc, fogs, router.backhaul(), cloud_up, origin, g, now, blob, bytes);
+                let (fb, ftag) = resolve_fetch_payload(fc, &mut fogs[g], entry);
+                let a = fetch(
+                    fc, fogs, router.backhaul(), cloud_up, origin, g, now, blob, bytes, fb, ftag,
+                );
                 if cacheable {
                     fogs[g].cache.insert(hash, bytes, weights);
+                    if fc.delta.is_some() && weights {
+                        fogs[g].cache.note_base(entry.chain, hash);
+                    }
                 }
                 fogs[g].avail_remote.insert(key, a);
                 a
             };
             let start = if avail > now { avail } else { now };
             let p = fogs[g].cell.loss_rate();
-            let baseline = fogs[g].cell.airtime(bytes) / (1.0 - p);
+            let baseline = fogs[g].cell.airtime(db) / (1.0 - p);
             let q = router.cell(g);
-            let tx = fogs[g].cell.reliable(q, start, bytes, tag, g, r, origin, blob);
+            let tx = fogs[g].cell.reliable(q, start, db, dtag, g, r, origin, blob);
             fogs[g].absorb_tx(&tx);
             fogs[g].airtime_saved += baseline - tx.airtime;
             q.push(tx.finish, Event::Delivered { fog: g, edge: r, origin, blob });
@@ -1311,11 +1538,23 @@ fn materialize(
         return a;
     }
     if e.cacheable && fogs[g].cache.lookup(e.hash, e.bytes, weights) {
+        if fc.delta.is_some() && weights {
+            // The store holds this exact snapshot, so it is a valid
+            // base for the chain's next delta.
+            fogs[g].cache.note_base(e.chain, e.hash);
+        }
         return now;
     }
-    let a = fetch(fc, fogs, q, cloud_up, e.origin, g, now, e.blob, e.bytes);
+    let (fb, ftag) = resolve_fetch_payload(fc, &mut fogs[g], e);
+    let a = fetch(fc, fogs, q, cloud_up, e.origin, g, now, e.blob, e.bytes, fb, ftag);
     if e.cacheable {
+        // The cache always stores the reconstructed *full* snapshot —
+        // a delta transfer decodes against the resident base, so the
+        // store's contents never depend on how the copy crossed.
         fogs[g].cache.insert(e.hash, e.bytes, weights);
+        if fc.delta.is_some() && weights {
+            fogs[g].cache.note_base(e.chain, e.hash);
+        }
     }
     fogs[g].avail_remote.insert(key, a);
     a
@@ -1498,6 +1737,10 @@ fn join_receiver(
 ) {
     fogs[fog].rx_active[edge] = true;
     fogs[fog].n_active += 1;
+    // The cohort now contains a receiver with no delta base: every
+    // chain's next cell leg must ship a full snapshot (which also
+    // re-establishes the base for the legs after it).
+    fogs[fog].cell_base.clear();
     catch_up(fc, fogs, router, cloud_up, catalog, ctx, now, fog, edge);
 }
 
@@ -1523,6 +1766,12 @@ fn catch_up(
         None => 0,
     };
     for e in &catalog[skip..] {
+        // Catch-up replays are always full snapshots: the joiner holds
+        // no base by definition. Count the deliveries a delta would
+        // otherwise have covered as fallbacks.
+        if fc.delta.is_some() && e.prev.is_some() {
+            fogs[fog].delta_fallbacks += 1;
+        }
         let avail = if e.origin == fog {
             Some(now) // locally encoded: the fog holds what it produced
         } else {
@@ -1581,6 +1830,9 @@ fn attach_slot(rt: &mut FogRt) -> usize {
     let edge = rt.rx_active.len();
     rt.rx_active.push(true);
     rt.n_active += 1;
+    // Same churn rule as [`join_receiver`]: a baseless newcomer forces
+    // the next leg per chain back to a full snapshot.
+    rt.cell_base.clear();
     rt.all_rx.push(edge);
     rt.received.push(0);
     rt.last_rx.push(0.0);
@@ -1687,6 +1939,9 @@ fn fog_fail(
             attach_slot(&mut fogs[g]);
         }
         for e in &catalog[skip..] {
+            if fc.delta.is_some() && e.prev.is_some() {
+                fogs[g].delta_fallbacks += 1;
+            }
             let avail = if e.origin == g {
                 Some(now)
             } else {
@@ -1739,19 +1994,21 @@ fn tree_push(
     q: &mut EventQueue,
     cloud_up: &mut HashMap<(usize, usize), f64>,
     now: f64,
-    origin: usize,
-    blob: usize,
-    bytes: u64,
-    hash: u64,
-    weights: bool,
+    e: &CatalogEntry,
 ) {
+    let CatalogEntry { origin, blob, bytes, hash, .. } = *e;
+    let weights = e.tag == "inr-broadcast";
+    let delta_on = fc.delta.is_some() && weights;
     let key = (origin, blob);
     let n = fogs.len();
     match fc.topology {
         Topology::SingleFog => {}
         // Mesh: every hop leaves on the *sender's* uplink, so the
         // per-blob backhaul load spreads across the fleet instead of
-        // serializing on the origin.
+        // serializing on the origin. Each hop resolves full-vs-delta
+        // against the *child's* cache; the child always stores the
+        // reconstructed full snapshot, so it can relay onward whatever
+        // its own children need.
         Topology::Sharded => {
             let mut targets = Vec::new();
             let mut seeded = Vec::new();
@@ -1761,6 +2018,9 @@ fn tree_push(
                     continue;
                 }
                 if fogs[g].cache.lookup(hash, bytes, weights) {
+                    if delta_on {
+                        fogs[g].cache.note_base(e.chain, hash);
+                    }
                     fogs[g].avail_remote.insert(key, now);
                     seeded.push(g);
                 } else {
@@ -1775,17 +2035,24 @@ fn tree_push(
             }
             for hop in link::relay_plan(origin, n, &targets, &seeded, &bw) {
                 let start = avail[&hop.parent];
+                let (fb, ftag) = resolve_fetch_payload(fc, &mut fogs[hop.child], e);
                 let tx = fogs[hop.parent].uplink.reliable(
-                    q, start, bytes, "backhaul", hop.child, NO_EDGE, origin, blob,
+                    q, start, fb, ftag, hop.child, NO_EDGE, origin, blob,
                 );
                 fogs[hop.child].absorb_tx(&tx);
                 fogs[hop.child].cache.insert(hash, bytes, weights);
+                if delta_on {
+                    fogs[hop.child].cache.note_base(e.chain, hash);
+                }
                 fogs[hop.child].avail_remote.insert(key, tx.finish);
                 avail.insert(hop.child, tx.finish);
             }
         }
         // Cloud relay: one uplink (deferred until some fog needs the
-        // blob), then per-fog downlink fan-out.
+        // blob), then per-fog downlink fan-out. The cloud archives full
+        // snapshots (it serves arbitrary late joiners with no base
+        // guarantee), so the uplink always carries the full blob; each
+        // downlink resolves against its fog's cache.
         Topology::Hierarchical => {
             let mut up_done = cloud_up.get(&key).copied();
             for step in 1..n {
@@ -1794,6 +2061,9 @@ fn tree_push(
                     continue;
                 }
                 if fogs[g].cache.lookup(hash, bytes, weights) {
+                    if delta_on {
+                        fogs[g].cache.note_base(e.chain, hash);
+                    }
                     fogs[g].avail_remote.insert(key, now);
                     continue;
                 }
@@ -1810,11 +2080,15 @@ fn tree_push(
                     }
                 };
                 let start = if up > now { up } else { now };
+                let (fb, ftag) = resolve_fetch_payload(fc, &mut fogs[g], e);
                 let tx = fogs[g].downlink.reliable(
-                    q, start, bytes, "backhaul", g, NO_EDGE, origin, blob,
+                    q, start, fb, ftag, g, NO_EDGE, origin, blob,
                 );
                 fogs[g].absorb_tx(&tx);
                 fogs[g].cache.insert(hash, bytes, weights);
+                if delta_on {
+                    fogs[g].cache.note_base(e.chain, hash);
+                }
                 fogs[g].avail_remote.insert(key, tx.finish);
             }
         }
@@ -1822,7 +2096,11 @@ fn tree_push(
 }
 
 /// Move a blob from its origin fog to `dst` over the backhaul (a
-/// point-to-point reliable link transaction).
+/// point-to-point reliable link transaction). `full_bytes` is the full
+/// snapshot size and `(bytes, tag)` the resolved payload the transfer
+/// into `dst` carries ([`resolve_fetch_payload`] — identical with
+/// `--delta off`). The hierarchical cloud uplink always archives the
+/// full snapshot; only the last leg into `dst` can be a delta.
 #[allow(clippy::too_many_arguments)]
 fn fetch(
     fc: &FleetConfig,
@@ -1833,14 +2111,15 @@ fn fetch(
     dst: usize,
     now: f64,
     blob: usize,
+    full_bytes: u64,
     bytes: u64,
+    tag: &'static str,
 ) -> f64 {
     match fc.topology {
         Topology::SingleFog => now,
         // Mesh: a point-to-point copy out of the origin fog's uplink.
         Topology::Sharded => {
-            let tx =
-                fogs[origin].uplink.reliable(q, now, bytes, "backhaul", dst, NO_EDGE, origin, blob);
+            let tx = fogs[origin].uplink.reliable(q, now, bytes, tag, dst, NO_EDGE, origin, blob);
             fogs[dst].absorb_tx(&tx);
             tx.finish
         }
@@ -1851,7 +2130,7 @@ fn fetch(
                 Some(&t) => t,
                 None => {
                     let tx = fogs[origin].uplink.reliable(
-                        q, now, bytes, "backhaul", origin, NO_EDGE, origin, blob,
+                        q, now, full_bytes, "backhaul", origin, NO_EDGE, origin, blob,
                     );
                     fogs[origin].absorb_tx(&tx);
                     cloud_up.insert((origin, blob), tx.finish);
@@ -1859,9 +2138,7 @@ fn fetch(
                 }
             };
             let start = if up_done > now { up_done } else { now };
-            let tx = fogs[dst].downlink.reliable(
-                q, start, bytes, "backhaul", dst, NO_EDGE, origin, blob,
-            );
+            let tx = fogs[dst].downlink.reliable(q, start, bytes, tag, dst, NO_EDGE, origin, blob);
             fogs[dst].absorb_tx(&tx);
             tx.finish
         }
@@ -2545,6 +2822,7 @@ mod tests {
             arrivals: ArrivalSpec::Poisson { rate },
             horizon,
             deadline: None,
+            shed: false,
         });
         fc
     }
@@ -2720,5 +2998,223 @@ mod tests {
         assert!(cohort.fogs[0].trained_at > 0.0);
         assert!(cohort.fogs[0].last_delivery > 0.0);
         assert!(cohort.fogs[0].trained_at > cohort.fogs[0].last_delivery);
+    }
+
+    use crate::fleet::policy::RebroadcastPolicy;
+    use crate::fleet::scenario::DeltaConfig;
+
+    #[test]
+    fn delta_streaming_cuts_cell_bytes_with_identical_delivery_story() {
+        // Streamed arrivals cycle the template slots, so from the second
+        // arrival per slot on, the cohort holds the base and the cell leg
+        // ships the modeled residual. Unicast pins the leg shape
+        // (per-receiver, mode independent of payload size), so the byte
+        // books reconcile exactly: what the delta run saved is precisely
+        // the full-equivalent minus the delta bytes.
+        let m = Method::RapidSingle;
+        let shard = || tiny_shard(m, vec![1000, 2000], &[300, 500]);
+        let mut fc = stream_fc(m, 4, 5.0, 10.0); // 1 source + 3 receivers
+        fc.policy = RebroadcastPolicy::Unicast;
+        let full = simulate(&fc, vec![shard()]);
+        let mut dfc = fc.clone();
+        dfc.delta = Some(DeltaConfig::default_on());
+        let r = simulate(&dfc, vec![shard()]);
+        // Delta changes bytes on the wire, never what is delivered.
+        assert_eq!(r.frames_offered, full.frames_offered);
+        assert_eq!(r.stream_deliveries, full.stream_deliveries);
+        assert_eq!(r.frames_dropped, full.frames_dropped);
+        assert_eq!(r.upload_bytes, full.upload_bytes);
+        assert!(r.delta_bytes > 0, "repeat slots must ship as deltas");
+        assert!(r.delta_transfers > 0);
+        assert_eq!(r.delta_fallbacks, 0, "a static cohort never invalidates its base");
+        assert!(r.delta_full_equiv_bytes > r.delta_bytes, "delta only rides when it wins");
+        assert!(r.delta_compression_ratio() < 1.0);
+        assert!(r.total_bytes < full.total_bytes);
+        // Exact reconciliation: the saved bytes are the full-equivalent
+        // of the delta legs minus what the deltas actually cost.
+        assert_eq!(full.broadcast_bytes, r.broadcast_bytes + r.delta_full_equiv_bytes);
+        assert_eq!(full.total_bytes, r.total_bytes + r.delta_full_equiv_bytes - r.delta_bytes);
+    }
+
+    #[test]
+    fn delta_is_inert_on_batch_runs_and_leaves_no_trace_when_off() {
+        // Batch mode encodes every template slot exactly once, so no
+        // chain ever has a previous snapshot: `--delta on` must be the
+        // identity, and `--delta off` must never touch the delta books —
+        // on every rebroadcast policy.
+        let m = Method::RapidSingle;
+        for policy in RebroadcastPolicy::ALL {
+            let shards = || {
+                vec![tiny_shard(m, vec![1000], &[300]), tiny_shard(m, vec![1000], &[500])]
+            };
+            let mut fc = base_fc(m, 8);
+            fc.topology = Topology::Sharded;
+            fc.n_fogs = 2;
+            fc.policy = policy;
+            let off = simulate(&fc, shards());
+            let mut on_fc = fc.clone();
+            on_fc.delta = Some(DeltaConfig::default_on());
+            let on = simulate(&on_fc, shards());
+            for r in [&off, &on] {
+                assert_eq!(r.delta_bytes, 0, "{policy:?}");
+                assert_eq!(r.delta_transfers, 0, "{policy:?}");
+                assert_eq!(r.delta_full_equiv_bytes, 0, "{policy:?}");
+                assert_eq!(r.delta_fallbacks, 0, "{policy:?}");
+            }
+            assert_eq!(on.total_bytes, off.total_bytes, "{policy:?}");
+            assert_eq!(on.broadcast_bytes, off.broadcast_bytes, "{policy:?}");
+            assert_eq!(on.backhaul_bytes, off.backhaul_bytes, "{policy:?}");
+            assert_eq!(on.events, off.events, "{policy:?}");
+            assert_eq!(
+                on.makespan_seconds.to_bits(),
+                off.makespan_seconds.to_bits(),
+                "{policy:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn churn_invalidates_the_cohort_base_and_counts_fallbacks() {
+        // A handover mid-stream attaches a base-less receiver to fog 1:
+        // the cohort base clears, the next eligible snapshot ships full
+        // (fallback counted), and the chain recovers to delta afterwards.
+        let m = Method::RapidSingle;
+        let mut fc = stream_fc(m, 6, 4.0, 10.0); // 2 fogs × (1 source + 2 rx)
+        fc.topology = Topology::Sharded;
+        fc.n_fogs = 2;
+        fc.delta = Some(DeltaConfig::default_on());
+        fc.handovers = vec![HandoverSpec { from: 0, to: 1, at: 5.0 }];
+        let shards = || {
+            vec![tiny_shard(m, vec![1000], &[300]), tiny_shard(m, vec![1000], &[400])]
+        };
+        let r = simulate(&fc, shards());
+        assert!(r.delta_bytes > 0, "the pre- and post-churn stream still rides deltas");
+        assert!(r.delta_fallbacks > 0, "the invalidated base must fall back to full");
+        // Reconstruction equivalence: the delivery story matches the
+        // same churn schedule with delta off.
+        let mut off = fc.clone();
+        off.delta = None;
+        let o = simulate(&off, shards());
+        assert_eq!(r.stream_deliveries, o.stream_deliveries);
+        assert_eq!(r.frames_dropped, o.frames_dropped);
+        assert_eq!(r.catchup_bytes, o.catchup_bytes, "catch-up replays full snapshots");
+    }
+
+    #[test]
+    fn missing_cache_base_falls_back_to_full_backhaul() {
+        // With no weight cache, a destination fog can never prove it
+        // holds a chain's base: every delta-eligible backhaul fetch must
+        // fall back to the full snapshot — while the cell legs (whose
+        // base lives in the cohort, not the cache) still ride deltas.
+        // The delivery story must match delta-off exactly: a fallback is
+        // an accounting event, never a lost frame.
+        let m = Method::RapidSingle;
+        let shards = || {
+            vec![tiny_shard(m, vec![1000], &[300]), tiny_shard(m, vec![1000], &[400])]
+        };
+        let mut fc = stream_fc(m, 6, 4.0, 10.0);
+        fc.topology = Topology::Sharded;
+        fc.n_fogs = 2;
+        fc.cache_bytes = 0;
+        fc.delta = Some(DeltaConfig::default_on());
+        let r = simulate(&fc, shards());
+        assert!(r.delta_bytes > 0, "cell legs still delta without a cache");
+        assert!(r.delta_fallbacks > 0, "cache-less backhaul fetches fall back");
+        let mut off = fc.clone();
+        off.delta = None;
+        let o = simulate(&off, shards());
+        assert_eq!(r.stream_deliveries, o.stream_deliveries);
+        assert_eq!(r.frames_dropped, o.frames_dropped);
+        assert_eq!(r.frames_offered, o.frames_offered);
+    }
+
+    #[test]
+    fn windowed_delta_and_shed_runs_match_the_sequential_oracle() {
+        // Delta bases and the shed estimator read fog-local state only,
+        // so the windowed executor must reproduce the sequential byte
+        // books bit for bit at every worker count.
+        let m = Method::RapidSingle;
+        let shards = || {
+            vec![
+                tiny_shard(m, vec![1000], &[300]),
+                tiny_shard(m, vec![1000], &[400]),
+                tiny_shard(m, vec![1000], &[500]),
+            ]
+        };
+        let mk = |shed: bool| {
+            let mut fc = stream_fc(m, 9, 4.0, 10.0); // 3 fogs × (1 source + 2 rx)
+            fc.topology = Topology::Sharded;
+            fc.n_fogs = 3;
+            fc.delta = Some(DeltaConfig::default_on());
+            if shed {
+                if let Some(s) = &mut fc.stream {
+                    s.deadline = Some(0.05);
+                    s.shed = true;
+                }
+            }
+            fc
+        };
+        for shed in [false, true] {
+            let seq = simulate(&mk(shed), shards());
+            assert!(seq.delta_bytes > 0, "shed={shed}");
+            for threads in 1..=3 {
+                let mut fc = mk(shed);
+                fc.threads = threads;
+                let w = simulate(&fc, shards());
+                assert_eq!(w.total_bytes, seq.total_bytes, "shed={shed} threads={threads}");
+                assert_eq!(w.delta_bytes, seq.delta_bytes, "shed={shed} threads={threads}");
+                assert_eq!(
+                    w.delta_full_equiv_bytes, seq.delta_full_equiv_bytes,
+                    "shed={shed} threads={threads}"
+                );
+                assert_eq!(
+                    w.delta_fallbacks, seq.delta_fallbacks,
+                    "shed={shed} threads={threads}"
+                );
+                assert_eq!(w.frames_dropped, seq.frames_dropped, "shed={shed} threads={threads}");
+                assert_eq!(w.events, seq.events, "shed={shed} threads={threads}");
+                assert_eq!(
+                    w.makespan_seconds.to_bits(),
+                    seq.makespan_seconds.to_bits(),
+                    "shed={shed} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shed_drops_doomed_frames_on_arrival() {
+        // A deadline tighter than any upload+encode+broadcast chain:
+        // report-only mode delivers everything and misses everything;
+        // shed mode drops every frame at admission, so nothing is
+        // uploaded, encoded or broadcast at all.
+        let m = Method::RapidSingle;
+        let shard = || tiny_shard(m, vec![1000], &[300]);
+        let mut report_only = stream_fc(m, 4, 5.0, 10.0);
+        if let Some(s) = &mut report_only.stream {
+            s.deadline = Some(1e-9);
+        }
+        let r = simulate(&report_only, vec![shard()]);
+        assert!(r.stream_deliveries > 0);
+        assert_eq!(r.deadline_misses, r.stream_deliveries);
+        assert_eq!(r.frames_dropped, 0, "report-only mode never drops");
+
+        let mut shed = report_only.clone();
+        shed.stream.as_mut().unwrap().shed = true;
+        let s = simulate(&shed, vec![shard()]);
+        assert_eq!(s.frames_offered, r.frames_offered, "admission sees the same arrivals");
+        assert_eq!(s.frames_dropped, s.frames_offered, "nothing beats a 1 ns deadline");
+        assert_eq!(s.stream_deliveries, 0);
+        assert_eq!(s.total_bytes, 0, "shed frames never enter the pipeline");
+        assert!(s.total_bytes < r.total_bytes);
+
+        // A loose deadline sheds nothing: admission control only acts on
+        // frames that are already doomed.
+        let mut loose = shed.clone();
+        loose.stream.as_mut().unwrap().deadline = Some(1e6);
+        let l = simulate(&loose, vec![shard()]);
+        assert_eq!(l.frames_dropped, 0);
+        assert_eq!(l.stream_deliveries, r.stream_deliveries);
+        assert_eq!(l.total_bytes, r.total_bytes);
     }
 }

@@ -50,7 +50,14 @@
 //!   cell/backhaul loss rates, receiver churn ([`scenario::JoinSpec`])
 //!   and per-fog backhaul bandwidth overrides; virtual-time prices come
 //!   from a [`crate::costmodel::CostBook`] (calibrated against live
-//!   PJRT timing, or analytical), never from hard-coded constants;
+//!   PJRT timing, or analytical), never from hard-coded constants.
+//!   [`scenario::DeltaConfig`] (`--delta`) turns on residual delta
+//!   redistribution: when a destination provably holds the previous
+//!   snapshot on a content chain, cell and backhaul legs carry a
+//!   quantized sparse residual instead of the full blob, falling back
+//!   to the full snapshot (and counting the fallback) whenever churn,
+//!   failure or cache eviction invalidates the base. `--delta off`
+//!   (the default) is byte-identical to the pre-delta engine;
 //! * [`stream`] — steady-state streaming workloads (`--arrivals`,
 //!   `--horizon`): seeded Poisson / diurnal frame arrival processes per
 //!   fog, device mobility (`--handover`), fog failure with re-election
@@ -95,7 +102,7 @@ pub use events::{Event, EventQueue, QueueKind};
 pub use link::Link;
 pub use policy::{CellMode, RebroadcastPolicy};
 pub use report::{FleetReport, FogReport};
-pub use scenario::{FleetConfig, JoinSpec, Topology};
+pub use scenario::{DeltaConfig, FleetConfig, JoinSpec, Topology};
 pub use stream::{ArrivalSpec, DepartSpec, FailSpec, HandoverSpec, QuantileSketch, StreamConfig};
 pub use traffic::{model_shard, Blob, ShardTraffic};
 pub use workers::WorkerPool;

@@ -40,6 +40,15 @@ pub struct FogReport {
     pub control_bytes: u64,
     /// Catch-up delivery bytes to mid-run joiners.
     pub catchup_bytes: u64,
+    /// `--delta`: residual-update bytes delivered over this fog's links
+    /// (cell legs + backhaul legs into this fog).
+    pub delta_bytes: u64,
+    /// `--delta`: what the same deliveries would have cost as full
+    /// snapshots (this fog's compression-ratio denominator).
+    pub delta_full_equiv_bytes: u64,
+    /// `--delta`: delta-eligible deliveries that fell back to a full
+    /// snapshot (missing/evicted base, churned cohort, catch-up).
+    pub delta_fallbacks: u64,
     pub cache: CacheStats,
     pub cache_blobs: usize,
     pub cache_used_bytes: u64,
@@ -99,9 +108,22 @@ pub struct FleetReport {
     /// Catch-up copies delivered to mid-run joiners (churn traffic,
     /// visible apart from the live broadcast totals).
     pub catchup_bytes: u64,
+    /// `--delta`: residual-update bytes delivered fleet-wide (cell
+    /// `inr-delta` legs + backhaul `backhaul-delta` transfers). Zero
+    /// with `--delta off`.
+    pub delta_bytes: u64,
+    /// `--delta`: delta transfers delivered fleet-wide.
+    pub delta_transfers: u64,
+    /// `--delta`: bytes the delta-carried deliveries would have cost as
+    /// full snapshots — the denominator of
+    /// [`delta_compression_ratio`](Self::delta_compression_ratio).
+    pub delta_full_equiv_bytes: u64,
+    /// `--delta`: delta-eligible deliveries that fell back to full
+    /// snapshots (missing/evicted base, churned cohort, catch-up).
+    pub delta_fallbacks: u64,
     /// Delivered-class total (`upload + broadcast + label + backhaul +
-    /// pull + catchup`); see [`raw_bytes`](Self::raw_bytes) for the
-    /// wire total including repair overhead.
+    /// pull + catchup + delta`); see [`raw_bytes`](Self::raw_bytes) for
+    /// the wire total including repair overhead.
     pub total_bytes: u64,
     // Reliability-layer overhead (the price of loss, accounted apart).
     /// Payload bytes retransmitted (ARQ retries + multicast re-airs).
@@ -174,9 +196,21 @@ impl FleetReport {
     }
 
     /// The byte total the re-broadcast policies are compared on (the
-    /// redistribution term: payload broadcasts + backhaul copies).
+    /// redistribution term: payload broadcasts + backhaul copies +
+    /// the delta updates that replaced either).
     pub fn redistribution_bytes(&self) -> u64 {
-        self.broadcast_bytes + self.backhaul_bytes
+        self.broadcast_bytes + self.backhaul_bytes + self.delta_bytes
+    }
+
+    /// Effective `--delta` compression: delta bytes actually shipped
+    /// per byte of the full snapshots they replaced. 1.0 when no delta
+    /// rode (delta off, or every delivery fell back to full).
+    pub fn delta_compression_ratio(&self) -> f64 {
+        if self.delta_full_equiv_bytes == 0 {
+            1.0
+        } else {
+            self.delta_bytes as f64 / self.delta_full_equiv_bytes as f64
+        }
     }
 
     /// Everything that occupied a medium: delivered traffic plus the
@@ -261,6 +295,24 @@ impl FleetReport {
         if self.catchup_bytes > 0 {
             println!("joiner catch-up bytes    : {}", fmt_bytes(self.catchup_bytes));
         }
+        if self.delta_bytes > 0 || self.delta_fallbacks > 0 {
+            println!(
+                "delta bytes              : {} ({} transfers, {} full fallbacks)",
+                fmt_bytes(self.delta_bytes),
+                self.delta_transfers,
+                self.delta_fallbacks
+            );
+            println!(
+                "delta vs full snapshots  : {} replaced ({:.1}% of full, {:.2}x)",
+                fmt_bytes(self.delta_full_equiv_bytes),
+                100.0 * self.delta_compression_ratio(),
+                if self.delta_bytes > 0 {
+                    self.delta_full_equiv_bytes as f64 / self.delta_bytes as f64
+                } else {
+                    1.0
+                }
+            );
+        }
         println!("total network bytes      : {}", fmt_bytes(self.total_bytes));
         if self.repair_bytes > 0 || self.control_bytes > 0 {
             println!(
@@ -334,7 +386,7 @@ impl FleetReport {
         if self.fogs.len() > 1 {
             let mut t = Table::new(&[
                 "fog", "edges", "frames", "blobs", "queue", "cell", "util", "backhaul",
-                "repair", "cache hit%", "saved", "done (s)",
+                "repair", "delta", "cache hit%", "saved", "done (s)",
             ]);
             for f in &self.fogs {
                 t.row(&[
@@ -357,6 +409,17 @@ impl FleetReport {
                     },
                     fmt_bytes(f.backhaul_bytes),
                     fmt_bytes(f.repair_bytes),
+                    // Per-fog effective compression next to the bytes:
+                    // `0 B` with `--delta off` or no delta delivered.
+                    if f.delta_full_equiv_bytes > 0 {
+                        format!(
+                            "{} ({:.0}%)",
+                            fmt_bytes(f.delta_bytes),
+                            100.0 * f.delta_bytes as f64 / f.delta_full_equiv_bytes as f64
+                        )
+                    } else {
+                        fmt_bytes(f.delta_bytes)
+                    },
                     format!("{:.1}", 100.0 * f.cache.hit_rate()),
                     fmt_bytes(f.cache.bytes_saved),
                     format!("{:.2}", f.trained_at),

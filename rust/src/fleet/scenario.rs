@@ -75,6 +75,42 @@ pub const BACKHAUL_FACTOR: f64 = 10.0;
 /// ≤ 10 copies per reception) and every run finite.
 pub const MAX_LOSS: f64 = 0.9;
 
+/// Residual delta redistribution knobs (`--delta`): when a destination
+/// (receiver cohort, peer-fog cache, or tree child) already holds the
+/// previous snapshot of an origin's weight chain, the engine ships a
+/// quantized residual delta instead of the full blob. Modeled shards
+/// carry zero weights, so the sparsity knob is interpreted as the
+/// *dropped fraction* of residual entries, and the delta payload size
+/// follows [`crate::inr::delta::modeled_delta_bytes`] — capped at the
+/// full size, so delta never loses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeltaConfig {
+    /// Residual quantization width in bits (8, 16, or 32 — mirrors
+    /// [`crate::inr::Bits`]; the wire width per kept residual).
+    pub bits: u32,
+    /// Fraction of residual entries dropped by magnitude-threshold
+    /// sparsification, in `[0, 1]` (`0` = dense residual, `1` = the
+    /// header-only degenerate delta).
+    pub sparsity: f64,
+}
+
+impl DeltaConfig {
+    /// `--delta` with no further flags: 8-bit residuals, half dropped.
+    pub fn default_on() -> DeltaConfig {
+        DeltaConfig { bits: 8, sparsity: 0.5 }
+    }
+
+    /// Bytes per kept residual entry on the wire.
+    pub fn width_bytes(&self) -> u64 {
+        (self.bits / 8) as u64
+    }
+
+    /// Modeled delta payload size against a `full`-byte snapshot.
+    pub fn modeled_bytes(&self, full: u64) -> u64 {
+        crate::inr::delta::modeled_delta_bytes(full, self.width_bytes(), self.sparsity)
+    }
+}
+
 /// One receiver joining its fog cell mid-run (churn): the engine
 /// activates the receiver at `at` seconds of virtual time and replays
 /// everything already delivered from the fog cache as catch-up traffic.
@@ -183,6 +219,10 @@ pub struct FleetConfig {
     /// the departure half of a handover, with no destination cell and no
     /// catch-up leg. Empty = nobody leaves.
     pub departs: Vec<DepartSpec>,
+    /// Residual delta redistribution (`--delta`). `None` (the default)
+    /// ships every blob as a full snapshot — record-for-record identical
+    /// to the pre-delta engine on every policy and topology.
+    pub delta: Option<DeltaConfig>,
 }
 
 impl FleetConfig {
@@ -223,6 +263,7 @@ impl FleetConfig {
             handovers: Vec::new(),
             fail: None,
             departs: Vec::new(),
+            delta: None,
         }
     }
 
@@ -372,6 +413,9 @@ impl FleetConfig {
                     return Err(anyhow!("deadline must be finite and > 0, got {d}"));
                 }
             }
+            if sc.shed && sc.deadline.is_none() {
+                return Err(anyhow!("shed admission control requires a deadline (S,shed)"));
+            }
         }
         if self.stream.is_none()
             && (!self.handovers.is_empty() || self.fail.is_some() || !self.departs.is_empty())
@@ -414,6 +458,14 @@ impl FleetConfig {
             }
             if !fl.at.is_finite() || fl.at < 0.0 {
                 return Err(anyhow!("fail time must be finite and >= 0, got {}", fl.at));
+            }
+        }
+        if let Some(dc) = &self.delta {
+            if !matches!(dc.bits, 8 | 16 | 32) {
+                return Err(anyhow!("delta bits must be 8, 16 or 32, got {}", dc.bits));
+            }
+            if !(0.0..=1.0).contains(&dc.sparsity) {
+                return Err(anyhow!("delta sparsity must be in [0, 1], got {}", dc.sparsity));
             }
         }
         if let Some(bws) = &self.backhaul_bandwidths {
@@ -599,6 +651,7 @@ mod tests {
             arrivals: ArrivalSpec::Poisson { rate },
             horizon,
             deadline: None,
+            shed: false,
         };
         let mut fc = mk();
         fc.stream = Some(stream(10.0, 5.0));
@@ -612,6 +665,12 @@ mod tests {
         fc.stream = Some(StreamConfig { deadline: Some(0.0), ..stream(10.0, 5.0) });
         assert!(fc.validate().is_err(), "zero deadline");
         fc.stream = Some(StreamConfig { deadline: Some(0.5), ..stream(10.0, 5.0) });
+        assert!(fc.validate().is_ok());
+        // Shedding is an admission-control mode *of* the deadline.
+        fc.stream = Some(StreamConfig { shed: true, ..stream(10.0, 5.0) });
+        assert!(fc.validate().is_err(), "shed without deadline");
+        fc.stream =
+            Some(StreamConfig { deadline: Some(0.5), shed: true, ..stream(10.0, 5.0) });
         assert!(fc.validate().is_ok());
         // Mobility and failure require the streaming environment...
         let mut fc = mk();
@@ -649,6 +708,30 @@ mod tests {
         assert!(fc.validate().is_err(), "negative depart time");
         fc.departs = vec![DepartSpec { fog: 0, at: f64::NAN }];
         assert!(fc.validate().is_err(), "NaN depart time");
+    }
+
+    #[test]
+    fn validation_bounds_the_delta_knobs() {
+        let m = Method::RapidSingle;
+        let mut fc = FleetConfig::paper_10(m, book(m));
+        assert!(fc.delta.is_none(), "delta defaults off");
+        fc.delta = Some(DeltaConfig::default_on());
+        assert!(fc.validate().is_ok());
+        assert_eq!(fc.delta.unwrap().bits, 8);
+        assert_eq!(fc.delta.unwrap().width_bytes(), 1);
+        fc.delta = Some(DeltaConfig { bits: 12, sparsity: 0.5 });
+        assert!(fc.validate().is_err(), "odd width");
+        fc.delta = Some(DeltaConfig { bits: 16, sparsity: 1.1 });
+        assert!(fc.validate().is_err(), "sparsity over 1");
+        fc.delta = Some(DeltaConfig { bits: 16, sparsity: -0.1 });
+        assert!(fc.validate().is_err(), "negative sparsity");
+        fc.delta = Some(DeltaConfig { bits: 32, sparsity: 1.0 });
+        assert!(fc.validate().is_ok());
+        // Modeled sizes never exceed the full snapshot.
+        let dc = DeltaConfig { bits: 8, sparsity: 0.0 };
+        assert_eq!(dc.modeled_bytes(10_000), 10_000);
+        let dc = DeltaConfig { bits: 8, sparsity: 0.9 };
+        assert!(dc.modeled_bytes(10_000) < 2_500);
     }
 
     #[test]

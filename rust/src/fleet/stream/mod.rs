@@ -60,6 +60,13 @@ pub struct StreamConfig {
     /// staleness exceeds it counts as a deadline miss. `None` disables
     /// miss accounting (staleness percentiles are always reported).
     pub deadline: Option<f64>,
+    /// Admission control (`--deadline S,shed`): drop a frame *on
+    /// arrival* when its expected delivery staleness (upload + queue
+    /// wait + encode + one cell airtime, estimated from the fog's
+    /// current state) would already miss the deadline — the frame never
+    /// enters the pipeline and counts as `frames_dropped`. Requires a
+    /// deadline; `false` keeps the report-only miss accounting.
+    pub shed: bool,
 }
 
 /// A scheduled fog failure (`--fail fog:t`).
@@ -87,6 +94,22 @@ pub struct HandoverSpec {
 pub struct DepartSpec {
     pub fog: usize,
     pub at: f64,
+}
+
+/// Parse `--deadline S[,shed]` (e.g. `2.5` = report-only miss
+/// accounting, `2.5,shed` = additionally shed doomed frames on
+/// arrival). Returns `(deadline_seconds, shed)`.
+pub fn parse_deadline(s: &str) -> Result<(f64, bool), String> {
+    let err = || format!("bad deadline spec {s:?} (want S or S,shed, e.g. 2.5 or 2.5,shed)");
+    let (secs, shed) = match s.split_once(',') {
+        Some((d, mode)) => match mode.trim() {
+            "shed" => (d, true),
+            _ => return Err(err()),
+        },
+        None => (s, false),
+    };
+    let secs = secs.trim().parse::<f64>().map_err(|_| err())?;
+    Ok((secs, shed))
 }
 
 /// Parse `--fail fog:t` (e.g. `1:30` = fog 1 fails at t = 30 s).
@@ -152,6 +175,17 @@ mod tests {
         assert!(parse_departs("30").is_err());
         assert!(parse_departs("x:30").is_err());
         assert!(parse_departs("1:x").is_err());
+    }
+
+    #[test]
+    fn parses_deadline_specs() {
+        assert_eq!(parse_deadline("2.5").unwrap(), (2.5, false));
+        assert_eq!(parse_deadline("2.5,shed").unwrap(), (2.5, true));
+        assert_eq!(parse_deadline(" 0.75 , shed ").unwrap(), (0.75, true));
+        assert!(parse_deadline("x").is_err());
+        assert!(parse_deadline("2.5,drop").is_err());
+        assert!(parse_deadline("2.5,shed,extra").is_err());
+        assert!(parse_deadline("").is_err());
     }
 
     #[test]

@@ -97,6 +97,16 @@ impl WorkerPool {
         self.last_finish
     }
 
+    /// Earliest start a job arriving at `now` would get — a non-mutating
+    /// peek at the FIFO (the admission-control estimator's view of queue
+    /// wait; [`WorkerPool::schedule`] commits the same answer).
+    pub fn next_start(&self, now: f64) -> f64 {
+        self.free_at
+            .iter()
+            .fold(f64::INFINITY, |m, &t| m.min(t))
+            .max(now)
+    }
+
     /// Mean wait in queue per job.
     pub fn avg_wait_seconds(&self) -> f64 {
         if self.jobs_done == 0 {
@@ -160,6 +170,20 @@ mod tests {
         assert!((p.avg_wait_seconds() - 1.0).abs() < 1e-12);
         assert!((p.utilization(4.0) - 1.0).abs() < 1e-12);
         assert_eq!(p.jobs_done, 2);
+    }
+
+    #[test]
+    fn next_start_peeks_without_mutating() {
+        let mut p = WorkerPool::new(2);
+        assert_eq!(p.next_start(0.5), 0.5); // idle pool: start = now
+        p.schedule(0.0, 2.0);
+        assert_eq!(p.next_start(0.0), 0.0); // second worker still free
+        p.schedule(0.0, 3.0);
+        assert_eq!(p.next_start(0.0), 2.0); // earliest-free worker
+        assert_eq!(p.next_start(2.5), 2.5); // past the backlog
+        // The peek committed nothing: scheduling now gets that start.
+        let (s, _) = p.schedule(0.0, 1.0);
+        assert_eq!(s, 2.0);
     }
 
     #[test]

@@ -1,0 +1,589 @@
+//! ResFed-style residual weight-delta encoding between successive INR
+//! snapshots (the `--delta` redistribution mode).
+//!
+//! A fog that has already aired snapshot `base` to a cohort does not need
+//! to re-air snapshot `next` whole. Both sides quantize `base` on its own
+//! affine grid (deterministically — the integer levels are a pure function
+//! of the weights), the sender transmits the *integer residual*
+//! `d[i] = q_next[i] - q_base[i]` together with `next`'s affine header,
+//! and the receiver reconstructs
+//! `min_next + scale_next · clamp(q_base[i] + d[i], 0, levels)`.
+//!
+//! Because the residual lives in the integer domain and both sides apply
+//! `next`'s header, the reconstruction is **bit-identical** to
+//! `dequantize(quantize(next, bits))` whenever nothing is sparsified away
+//! — [`encode`] enforces this by construction: it decodes its own output
+//! and returns the reconstruction alongside the delta, so a caller can
+//! never ship a delta whose receiver-side weights it has not already
+//! materialized. Magnitude-threshold sparsification (`--delta-sparsity`)
+//! drops residual entries whose value-domain magnitude is below `T`; each
+//! dropped entry leaves the receiver on the base level for that weight,
+//! bounding the per-weight reconstruction error by `T`.
+//!
+//! The residual is packed per tensor at the narrowest of three encodings,
+//! all offset-coded against the residual minimum so the stored integers
+//! are non-negative at the smallest width `w ∈ {1, 2, 4, 8}` that covers
+//! the residual span (never narrower than the `--delta-bits` preference —
+//! losslessness always wins over the knob):
+//!
+//! | encoding | cost (bytes)            | wins when            |
+//! |----------|-------------------------|----------------------|
+//! | dense    | `n·w`                   | most weights moved   |
+//! | index    | `kept·(4 + w)`          | very few moved       |
+//! | bitmap   | `⌈n/8⌉ + kept·w`        | a moderate fraction  |
+//!
+//! `Bits::F32` snapshots delta in the bit-pattern domain (`q = to_bits`),
+//! which keeps the same integer-residual algebra exact for the
+//! passthrough grid.
+
+use anyhow::{bail, Result};
+
+use super::kernels;
+use super::quantize::Bits;
+use super::weights::{Tensor, WeightSet};
+
+/// Serialized overhead of a [`DeltaWeightSet`] envelope: base content
+/// hash (8), grid tag (1), tensor count (4), reserved (3).
+pub const SET_HEADER_BYTES: usize = 16;
+
+/// Serialized per-tensor overhead: encoding (1), width (1), `dmin` (8),
+/// element count (4), `next`'s affine `min` + `scale` (4 + 4).
+pub const TENSOR_HEADER_BYTES: usize = 22;
+
+/// Residual payload layout chosen per tensor (cheapest of the three).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeltaEncoding {
+    /// One offset-coded residual per element.
+    Dense,
+    /// `(u32 index, residual)` pairs for the kept entries only.
+    Index,
+    /// A presence bitmap followed by the kept residuals in order.
+    Bitmap,
+}
+
+/// One tensor's sparsified integer residual against the base snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// `next`'s affine header — reconstruction targets `next`'s grid.
+    pub min: f32,
+    pub scale: f32,
+    /// Offset subtracted from every stored residual (`stored = d - dmin`).
+    pub dmin: i64,
+    /// Bytes per stored residual (1, 2, 4 or 8).
+    pub width: usize,
+    pub encoding: DeltaEncoding,
+    /// Packed little-endian residual payload in the chosen encoding.
+    pub payload: Vec<u8>,
+}
+
+impl DeltaTensor {
+    /// Wire size in bytes (payload + per-tensor header).
+    pub fn byte_size(&self) -> usize {
+        TENSOR_HEADER_BYTES + self.payload.len()
+    }
+}
+
+/// A full residual update: base content hash + per-tensor residuals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaWeightSet {
+    /// [`weights_hash`] of the base snapshot this delta applies to;
+    /// [`decode`] refuses any other base.
+    pub base_hash: u64,
+    pub bits: Bits,
+    pub tensors: Vec<DeltaTensor>,
+}
+
+impl DeltaWeightSet {
+    /// Total wire size in bytes (envelope + tensors).
+    pub fn byte_size(&self) -> usize {
+        SET_HEADER_BYTES + self.tensors.iter().map(|t| t.byte_size()).sum::<usize>()
+    }
+}
+
+/// FNV-1a 64-bit content hash over the f32 bit patterns of a weight set —
+/// the identity a delta is keyed by (same basis/prime as
+/// `fleet::cache::blob_hash`, but over weights rather than packed records
+/// so the inr layer stays fleet-independent).
+pub fn weights_hash(ws: &WeightSet) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for t in &ws.tensors {
+        for &v in &t.data {
+            for b in v.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+    }
+    h
+}
+
+fn grid_levels(bits: Bits) -> Option<f64> {
+    match bits {
+        Bits::B8 => Some(255.0),
+        Bits::B16 => Some(65535.0),
+        Bits::F32 => None,
+    }
+}
+
+fn preferred_width(bits: Bits) -> usize {
+    match bits {
+        Bits::B8 => 1,
+        Bits::B16 => 2,
+        Bits::F32 => 4,
+    }
+}
+
+/// Quantize one tensor to its integer levels on its own affine grid —
+/// the exact arithmetic of `inr::quantize::quantize` (via the shared
+/// [`kernels`] path), so sender and receiver derive identical integers
+/// from identical weights. For `Bits::F32` the "levels" are the raw f32
+/// bit patterns.
+fn tensor_levels(t: &Tensor, bits: Bits) -> (f32, f32, Vec<i64>) {
+    match grid_levels(bits) {
+        None => {
+            let ints = t.data.iter().map(|v| v.to_bits() as i64).collect();
+            (0.0, 1.0, ints)
+        }
+        Some(levels) => {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &v in &t.data {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            if !lo.is_finite() || !hi.is_finite() {
+                lo = 0.0;
+                hi = 0.0;
+            }
+            let span = (hi - lo) as f64;
+            let scale = if span > 0.0 { span / levels } else { 1.0 };
+            let ints = kernels::quantize_levels(&t.data, lo, scale, levels)
+                .into_iter()
+                .map(|q| q as i64)
+                .collect();
+            (lo, scale as f32, ints)
+        }
+    }
+}
+
+fn clamp_level(bits: Bits, q: i64) -> i64 {
+    match bits {
+        Bits::B8 => q.clamp(0, 255),
+        Bits::B16 => q.clamp(0, 65535),
+        Bits::F32 => q.clamp(0, u32::MAX as i64),
+    }
+}
+
+/// Reconstruct one weight from its integer level and `next`'s header —
+/// the same expression `inr::quantize::dequantize` evaluates.
+fn level_value(bits: Bits, min: f32, scale: f32, q: i64) -> f32 {
+    match bits {
+        Bits::F32 => f32::from_bits(q as u32),
+        _ => min + scale * q as f32,
+    }
+}
+
+fn put_le(payload: &mut Vec<u8>, v: u64, width: usize) {
+    payload.extend_from_slice(&v.to_le_bytes()[..width]);
+}
+
+fn get_le(payload: &[u8], off: usize, width: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b[..width].copy_from_slice(&payload[off..off + width]);
+    u64::from_le_bytes(b)
+}
+
+/// Delta-encode `next` against `base` at the given grid, dropping
+/// residuals whose value-domain magnitude is below `threshold`.
+///
+/// Returns the delta **and** the receiver-side reconstruction, which is
+/// produced by decoding the delta that was just built — the lossless
+/// roundtrip invariant `decode(base, encode(base, next)) ==
+/// dequantize(quantize(next))` (at `threshold = 0`) is enforced by
+/// construction rather than promised.
+pub fn encode(
+    base: &WeightSet,
+    next: &WeightSet,
+    bits: Bits,
+    threshold: f32,
+) -> Result<(DeltaWeightSet, WeightSet)> {
+    if base.tensors.len() != next.tensors.len() {
+        bail!(
+            "delta encode: tensor count mismatch ({} base vs {} next)",
+            base.tensors.len(),
+            next.tensors.len()
+        );
+    }
+    let mut tensors = Vec::with_capacity(next.tensors.len());
+    for (bt, nt) in base.tensors.iter().zip(&next.tensors) {
+        if bt.shape != nt.shape {
+            bail!(
+                "delta encode: tensor {} shape mismatch ({:?} vs {:?})",
+                nt.name,
+                bt.shape,
+                nt.shape
+            );
+        }
+        let (_, _, bq) = tensor_levels(bt, bits);
+        let (nmin, nscale, nq) = tensor_levels(nt, bits);
+        let n = nq.len();
+        // Sparsify: keep residuals whose value-domain magnitude clears
+        // the threshold (a zero residual is dropped for free).
+        let mut kept: Vec<(usize, i64)> = Vec::new();
+        for (i, (&qn, &qb)) in nq.iter().zip(&bq).enumerate() {
+            let d = qn - qb;
+            if d == 0 {
+                continue;
+            }
+            let mag = match bits {
+                Bits::F32 => (f32::from_bits(qn as u32) - f32::from_bits(qb as u32)).abs(),
+                _ => (nscale as f64 * d.unsigned_abs() as f64) as f32,
+            };
+            if mag >= threshold {
+                kept.push((i, d));
+            }
+        }
+        // Offset coding over kept ∪ {0}: zero must stay representable
+        // because dense encoding stores the dropped entries too.
+        let (mut dmin, mut dmax) = (0i64, 0i64);
+        for &(_, d) in &kept {
+            dmin = dmin.min(d);
+            dmax = dmax.max(d);
+        }
+        let span = (dmax - dmin) as u64;
+        let covering = [1usize, 2, 4, 8]
+            .into_iter()
+            .find(|&w| w == 8 || span <= (1u64 << (8 * w)) - 1)
+            .unwrap();
+        let width = covering.max(preferred_width(bits));
+        let dense = n * width;
+        let index = kept.len() * (4 + width);
+        let bitmap = n.div_ceil(8) + kept.len() * width;
+        let encoding = if dense <= index && dense <= bitmap {
+            DeltaEncoding::Dense
+        } else if bitmap <= index {
+            DeltaEncoding::Bitmap
+        } else {
+            DeltaEncoding::Index
+        };
+        let mut payload = Vec::new();
+        match encoding {
+            DeltaEncoding::Dense => {
+                payload.reserve(dense);
+                let mut res = vec![0i64; n];
+                for &(i, d) in &kept {
+                    res[i] = d;
+                }
+                for d in res {
+                    put_le(&mut payload, (d - dmin) as u64, width);
+                }
+            }
+            DeltaEncoding::Index => {
+                payload.reserve(index);
+                for &(i, d) in &kept {
+                    put_le(&mut payload, i as u64, 4);
+                    put_le(&mut payload, (d - dmin) as u64, width);
+                }
+            }
+            DeltaEncoding::Bitmap => {
+                payload.reserve(bitmap);
+                let mut bm = vec![0u8; n.div_ceil(8)];
+                for &(i, _) in &kept {
+                    bm[i / 8] |= 1 << (i % 8);
+                }
+                payload.extend_from_slice(&bm);
+                for &(_, d) in &kept {
+                    put_le(&mut payload, (d - dmin) as u64, width);
+                }
+            }
+        }
+        tensors.push(DeltaTensor {
+            name: nt.name.clone(),
+            shape: nt.shape.clone(),
+            min: nmin,
+            scale: nscale,
+            dmin,
+            width,
+            encoding,
+            payload,
+        });
+    }
+    let delta = DeltaWeightSet { base_hash: weights_hash(base), bits, tensors };
+    // Enforced by construction: the reconstruction handed back is what a
+    // receiver holding `base` will decode — never a separate promise.
+    let recon = decode(base, &delta)?;
+    Ok((delta, recon))
+}
+
+/// Apply a delta to the base snapshot it was encoded against. Fails if
+/// `base` is not the snapshot the delta was keyed to (cache eviction /
+/// churned joiner — callers fall back to a full snapshot).
+pub fn decode(base: &WeightSet, delta: &DeltaWeightSet) -> Result<WeightSet> {
+    let have = weights_hash(base);
+    if have != delta.base_hash {
+        bail!(
+            "delta decode: base hash {:#018x} does not match delta base {:#018x}",
+            have,
+            delta.base_hash
+        );
+    }
+    if base.tensors.len() != delta.tensors.len() {
+        bail!(
+            "delta decode: tensor count mismatch ({} base vs {} delta)",
+            base.tensors.len(),
+            delta.tensors.len()
+        );
+    }
+    let mut out = Vec::with_capacity(delta.tensors.len());
+    for (bt, dt) in base.tensors.iter().zip(&delta.tensors) {
+        let (_, _, bq) = tensor_levels(bt, delta.bits);
+        let n = bq.len();
+        let w = dt.width;
+        let mut res = vec![0i64; n];
+        match dt.encoding {
+            DeltaEncoding::Dense => {
+                if dt.payload.len() != n * w {
+                    bail!("delta decode: dense payload size mismatch on {}", dt.name);
+                }
+                for (i, r) in res.iter_mut().enumerate() {
+                    *r = get_le(&dt.payload, i * w, w) as i64 + dt.dmin;
+                }
+            }
+            DeltaEncoding::Index => {
+                let stride = 4 + w;
+                if dt.payload.len() % stride != 0 {
+                    bail!("delta decode: index payload size mismatch on {}", dt.name);
+                }
+                for k in 0..dt.payload.len() / stride {
+                    let i = get_le(&dt.payload, k * stride, 4) as usize;
+                    if i >= n {
+                        bail!("delta decode: residual index {i} out of range on {}", dt.name);
+                    }
+                    res[i] = get_le(&dt.payload, k * stride + 4, w) as i64 + dt.dmin;
+                }
+            }
+            DeltaEncoding::Bitmap => {
+                let head = n.div_ceil(8);
+                let mut pos = head;
+                for (i, r) in res.iter_mut().enumerate() {
+                    if dt.payload[i / 8] & (1 << (i % 8)) != 0 {
+                        if pos + w > dt.payload.len() {
+                            bail!("delta decode: bitmap payload truncated on {}", dt.name);
+                        }
+                        *r = get_le(&dt.payload, pos, w) as i64 + dt.dmin;
+                        pos += w;
+                    }
+                }
+            }
+        }
+        let data = bq
+            .iter()
+            .zip(&res)
+            .map(|(&qb, &d)| level_value(delta.bits, dt.min, dt.scale, clamp_level(delta.bits, qb + d)))
+            .collect();
+        out.push(Tensor::new(dt.name.clone(), dt.shape.clone(), data));
+    }
+    Ok(WeightSet::new(out))
+}
+
+/// Fixed overhead the fleet's shape-only traffic model charges a modeled
+/// delta shard (set envelope + one tensor header).
+pub const MODELED_OVERHEAD_BYTES: u64 = (SET_HEADER_BYTES + TENSOR_HEADER_BYTES) as u64;
+
+/// Closed-form wire size of a delta update for the fleet's *modeled*
+/// traffic (zero-weight records, byte sizes shape-determined): a
+/// `full_bytes`-parameter snapshot whose residual keeps a
+/// `1 - drop_frac` fraction of entries at `width` bytes each, packed at
+/// the cheapest of the three encodings. Capped at `full_bytes` — a delta
+/// that would not beat re-airing the full snapshot is never worth it and
+/// callers fall back.
+pub fn modeled_delta_bytes(full_bytes: u64, width: u64, drop_frac: f64) -> u64 {
+    if full_bytes == 0 {
+        return 0;
+    }
+    let n = full_bytes;
+    let kept = ((n as f64) * (1.0 - drop_frac.clamp(0.0, 1.0))).round() as u64;
+    let dense = n * width;
+    let index = kept * (4 + width);
+    let bitmap = n.div_ceil(8) + kept * width;
+    (MODELED_OVERHEAD_BYTES + dense.min(index).min(bitmap)).min(full_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inr::quantize::{dequantize, quantize};
+    use crate::util::propcheck;
+    use crate::util::rng::Pcg32;
+
+    const ALL_BITS: [Bits; 3] = [Bits::B8, Bits::B16, Bits::F32];
+
+    fn rand_ws(rng: &mut Pcg32, tensors: usize, max_n: usize) -> WeightSet {
+        let ts = (0..tensors)
+            .map(|k| {
+                let n = 1 + rng.below_usize(max_n);
+                let data = (0..n).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+                Tensor::new(format!("t{k}"), vec![n], data)
+            })
+            .collect();
+        WeightSet::new(ts)
+    }
+
+    /// `next` = `base` with a fraction of weights nudged.
+    fn perturb(rng: &mut Pcg32, base: &WeightSet, frac: f64, mag: f32) -> WeightSet {
+        let tensors = base
+            .tensors
+            .iter()
+            .map(|t| {
+                let data = t
+                    .data
+                    .iter()
+                    .map(|&v| {
+                        if (rng.f32() as f64) < frac {
+                            v + rng.range_f32(-mag, mag)
+                        } else {
+                            v
+                        }
+                    })
+                    .collect();
+                Tensor::new(t.name.clone(), t.shape.clone(), data)
+            })
+            .collect();
+        WeightSet::new(tensors)
+    }
+
+    #[test]
+    fn property_lossless_roundtrip_at_zero_threshold() {
+        propcheck::check("delta-lossless", |rng| {
+            let base = rand_ws(rng, 1 + rng.below_usize(3), 80);
+            let next = perturb(rng, &base, 0.5, 0.3);
+            for bits in ALL_BITS {
+                let (delta, recon) = encode(&base, &next, bits, 0.0).unwrap();
+                // The invariant: reconstruction == dequantized(next), exactly.
+                assert_eq!(recon, dequantize(&quantize(&next, bits)), "{bits:?}");
+                // And decode() returns exactly what encode() handed back.
+                assert_eq!(decode(&base, &delta).unwrap(), recon, "{bits:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn property_sparsified_error_bounded_by_threshold() {
+        propcheck::check("delta-sparsity-bound", |rng| {
+            let base = rand_ws(rng, 2, 60);
+            let next = perturb(rng, &base, 0.7, 0.2);
+            let t = rng.range_f32(0.001, 0.1);
+            for bits in ALL_BITS {
+                let (_, recon) = encode(&base, &next, bits, t).unwrap();
+                let full = dequantize(&quantize(&next, bits));
+                for (rt, ft) in recon.tensors.iter().zip(&full.tensors) {
+                    for (a, b) in rt.data.iter().zip(&ft.data) {
+                        // Dropped residuals leave the receiver on the base
+                        // level; the value-domain gap was below t.
+                        assert!((a - b).abs() <= t * (1.0 + 1e-4) + 1e-6, "{bits:?}: {a} vs {b}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn full_sparsity_degenerates_to_base_levels_and_tiny_payload() {
+        let mut rng = Pcg32::seeded(7);
+        let base = rand_ws(&mut rng, 1, 512);
+        let next = perturb(&mut rng, &base, 1.0, 0.05);
+        let (delta, recon) = encode(&base, &next, Bits::B8, f32::INFINITY).unwrap();
+        // Everything dropped: the receiver keeps base levels on next's grid.
+        for dt in &delta.tensors {
+            assert_eq!(dt.encoding, DeltaEncoding::Index);
+            assert!(dt.payload.is_empty());
+        }
+        assert!(delta.byte_size() < quantize(&next, Bits::B8).byte_size());
+        assert_eq!(decode(&base, &delta).unwrap(), recon);
+    }
+
+    #[test]
+    fn small_updates_beat_full_snapshots() {
+        let mut rng = Pcg32::seeded(11);
+        let base = rand_ws(&mut rng, 1, 2048);
+        let next = perturb(&mut rng, &base, 0.02, 0.5);
+        for bits in [Bits::B16, Bits::F32] {
+            let (delta, _) = encode(&base, &next, bits, 0.0).unwrap();
+            let full = quantize(&next, bits).byte_size();
+            assert!(
+                delta.byte_size() < full,
+                "{bits:?}: delta {} vs full {full}",
+                delta.byte_size()
+            );
+        }
+    }
+
+    #[test]
+    fn encoding_choice_tracks_density() {
+        let n = 1024;
+        let base = WeightSet::new(vec![Tensor::new("w", vec![n], vec![0.0; n])]);
+        let mk_next = |moved: usize| {
+            let mut data = vec![0.0f32; n];
+            for (i, v) in data.iter_mut().enumerate().take(moved) {
+                *v = 1.0 + i as f32 * 0.001;
+            }
+            WeightSet::new(vec![Tensor::new("w", vec![n], data)])
+        };
+        let enc_of = |moved: usize| {
+            let (d, _) = encode(&base, &mk_next(moved), Bits::B8, 0.0).unwrap();
+            d.tensors[0].encoding
+        };
+        assert_eq!(enc_of(4), DeltaEncoding::Index);
+        assert_eq!(enc_of(n / 3), DeltaEncoding::Bitmap);
+        assert_eq!(enc_of(n), DeltaEncoding::Dense);
+    }
+
+    #[test]
+    fn wrong_base_is_rejected() {
+        let mut rng = Pcg32::seeded(13);
+        let base = rand_ws(&mut rng, 1, 40);
+        let next = perturb(&mut rng, &base, 0.5, 0.2);
+        let other = perturb(&mut rng, &base, 0.5, 0.2);
+        let (delta, _) = encode(&base, &next, Bits::B8, 0.0).unwrap();
+        assert!(decode(&other, &delta).is_err());
+        assert!(decode(&base, &delta).is_ok());
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let a = WeightSet::new(vec![Tensor::zeros("w", vec![4])]);
+        let b = WeightSet::new(vec![Tensor::zeros("w", vec![5])]);
+        assert!(encode(&a, &b, Bits::B8, 0.0).is_err());
+        let c = WeightSet::new(vec![Tensor::zeros("w", vec![4]), Tensor::zeros("v", vec![1])]);
+        assert!(encode(&a, &c, Bits::B8, 0.0).is_err());
+    }
+
+    #[test]
+    fn weights_hash_is_content_addressed() {
+        let a = WeightSet::new(vec![Tensor::new("w", vec![2], vec![1.0, 2.0])]);
+        let b = WeightSet::new(vec![Tensor::new("w", vec![2], vec![1.0, 2.0])]);
+        let c = WeightSet::new(vec![Tensor::new("w", vec![2], vec![1.0, 2.5])]);
+        assert_eq!(weights_hash(&a), weights_hash(&b));
+        assert_ne!(weights_hash(&a), weights_hash(&c));
+    }
+
+    #[test]
+    fn modeled_bytes_capped_and_monotone_in_sparsity() {
+        let full = 10_000u64;
+        // Denser residuals never cost less than sparser ones.
+        let mut prev = u64::MAX;
+        for drop in [0.0, 0.25, 0.5, 0.9, 1.0] {
+            let b = modeled_delta_bytes(full, 1, drop);
+            assert!(b <= full, "capped at full");
+            assert!(b <= prev, "monotone: drop={drop}");
+            prev = b;
+        }
+        // At drop 0 a same-width dense delta cannot beat the full snapshot.
+        assert_eq!(modeled_delta_bytes(full, 1, 0.0), full);
+        // At drop 0.5 the bitmap encoding wins by ~1.6x.
+        let half = modeled_delta_bytes(full, 1, 0.5);
+        assert!(half < full * 2 / 3, "{half}");
+        assert_eq!(modeled_delta_bytes(0, 1, 0.5), 0);
+    }
+}

@@ -1,0 +1,411 @@
+//! Lane-parallel kernels for the INR weight pack/unpack hot paths, behind
+//! the same runtime dispatch as [`crate::codec::kernels`] (whose
+//! [`Backend`], [`active`] and [`available_backends`] are reused directly,
+//! so `RESIDUAL_INR_NO_SIMD=1` pins this layer to scalar too).
+//!
+//! Two hot loops are covered, both made hotter by `--delta` (delta
+//! encoding quantizes base *and* next on every update):
+//!
+//! - **quantize** (`f32 → integer level`): the affine transform runs in
+//!   f64 like the scalar code — 4 f64 lanes per iteration (AVX2) or two
+//!   2-lane halves (NEON), with the final `as i64`/clamp cast kept scalar
+//!   per lane so saturating/NaN casts match Rust semantics exactly;
+//! - **dequantize** (`packed u8/u16 → f32`): 8 f32 lanes per iteration
+//!   via integer widening + separate multiply-add in the scalar
+//!   association order (`min + scale * v`).
+//!
+//! ## Bit-exactness
+//!
+//! As in `codec::kernels`, no FMA is used and every operation keeps the
+//! scalar association order, so each backend is bit-identical to the
+//! scalar oracle (parity tests compare with `==` on the integer levels
+//! and on `f32::to_bits`). The one nontrivial piece is rounding:
+//! `f64::round` is round-half-away-from-zero, NEON's `vrndaq_f64`
+//! (FRINTA) matches it directly, and AVX2 — which only offers directed /
+//! ties-to-even rounding — emulates it by bumping outward the *exact*
+//! `±0.5` ties that `roundeven` sent toward zero (the tie gap
+//! `x - roundeven(x)` is computed exactly, and the bump is gated on the
+//! sign of `x` because a tie roundeven already sent away from zero —
+//! `1.5 → 2`, `-2.5 → -3` — needs no fix-up; the two rules disagree
+//! only when the even neighbor is the near-zero one).
+
+pub use crate::codec::kernels::{active, available_backends, Backend};
+
+/// Quantize values to integer levels on an affine grid — the exact
+/// arithmetic of the `inr::quantize` scalar loop:
+/// `clamp(round((v - lo) as f64 / scale), 0, levels)`.
+/// Levels fit `u16` for every supported grid (≤ 65535).
+pub fn quantize_levels(vals: &[f32], lo: f32, scale: f64, levels: f64) -> Vec<u16> {
+    quantize_levels_on(active(), vals, lo, scale, levels)
+}
+
+/// [`quantize_levels`] pinned to one backend (tests, benches).
+pub fn quantize_levels_on(be: Backend, vals: &[f32], lo: f32, scale: f64, levels: f64) -> Vec<u16> {
+    let mut out = Vec::with_capacity(vals.len());
+    let done = match be {
+        Backend::Scalar => 0,
+        #[cfg(target_arch = "x86_64")]
+        // Safety: Avx2 only enters available_backends()/active() after
+        // is_x86_feature_detected!("avx2") succeeded.
+        Backend::Avx2 => unsafe { avx2::quantize_levels(vals, lo, scale, levels, &mut out) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: NEON is baseline on aarch64 std targets.
+        Backend::Neon => unsafe { neon::quantize_levels(vals, lo, scale, levels, &mut out) },
+        // A backend this target cannot run processes nothing here; the
+        // scalar tail below covers the whole slice.
+        _ => 0,
+    };
+    scalar_quantize_levels(&vals[done..], lo, scale, levels, &mut out);
+    out
+}
+
+/// Unpack an 8-bit payload back to f32 (`min + scale * v`).
+pub fn dequantize_b8(payload: &[u8], min: f32, scale: f32) -> Vec<f32> {
+    dequantize_b8_on(active(), payload, min, scale)
+}
+
+/// [`dequantize_b8`] pinned to one backend.
+pub fn dequantize_b8_on(be: Backend, payload: &[u8], min: f32, scale: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(payload.len());
+    let done = match be {
+        Backend::Scalar => 0,
+        #[cfg(target_arch = "x86_64")]
+        // Safety: see quantize_levels_on.
+        Backend::Avx2 => unsafe { avx2::dequantize_b8(payload, min, scale, &mut out) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: see quantize_levels_on.
+        Backend::Neon => unsafe { neon::dequantize_b8(payload, min, scale, &mut out) },
+        _ => 0,
+    };
+    for &b in &payload[done..] {
+        out.push(min + scale * b as f32);
+    }
+    out
+}
+
+/// Unpack a little-endian 16-bit payload back to f32 (`min + scale * v`).
+pub fn dequantize_b16(payload: &[u8], min: f32, scale: f32) -> Vec<f32> {
+    dequantize_b16_on(active(), payload, min, scale)
+}
+
+/// [`dequantize_b16`] pinned to one backend. `done` counts elements, not
+/// bytes: the scalar tail starts at byte `2 * done`.
+pub fn dequantize_b16_on(be: Backend, payload: &[u8], min: f32, scale: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(payload.len() / 2);
+    let done = match be {
+        Backend::Scalar => 0,
+        #[cfg(target_arch = "x86_64")]
+        // Safety: see quantize_levels_on.
+        Backend::Avx2 => unsafe { avx2::dequantize_b16(payload, min, scale, &mut out) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: see quantize_levels_on.
+        Backend::Neon => unsafe { neon::dequantize_b16(payload, min, scale, &mut out) },
+        _ => 0,
+    };
+    for c in payload[done * 2..].chunks_exact(2) {
+        let v = u16::from_le_bytes([c[0], c[1]]);
+        out.push(min + scale * v as f32);
+    }
+    out
+}
+
+/// The verbatim scalar loop from `inr::quantize` — the always-compiled
+/// oracle every dispatched backend is held to.
+fn scalar_quantize_levels(vals: &[f32], lo: f32, scale: f64, levels: f64, out: &mut Vec<u16>) {
+    for &v in vals {
+        let q = (((v - lo) as f64 / scale).round() as i64).clamp(0, levels as i64) as u64;
+        out.push(q as u16);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Bulk quantize over the leading `4·⌊n/4⌋` values; returns how many
+    /// were processed (caller finishes the tail with scalar code).
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_levels(
+        vals: &[f32],
+        lo: f32,
+        scale: f64,
+        levels: f64,
+        out: &mut Vec<u16>,
+    ) -> usize {
+        let n = vals.len();
+        let lov = _mm_set1_ps(lo);
+        let sv = _mm256_set1_pd(scale);
+        let half = _mm256_set1_pd(0.5);
+        let neg_half = _mm256_set1_pd(-0.5);
+        let one = _mm256_set1_pd(1.0);
+        let zero = _mm256_setzero_pd();
+        let lim = levels as i64;
+        let mut buf = [0.0f64; 4];
+        for i in 0..n / 4 {
+            let v = _mm_loadu_ps(vals.as_ptr().add(i * 4));
+            let x = _mm256_div_pd(_mm256_cvtps_pd(_mm_sub_ps(v, lov)), sv);
+            // Emulate f64::round (half away from zero): roundeven, then
+            // bump the exact ±0.5 ties that went toward zero back out.
+            // `x - re` is exact at a tie, and the bump is gated on the
+            // sign of `x`: a +0.5 gap on a NEGATIVE input (-49.5 → -50)
+            // or a -0.5 gap on a POSITIVE one (1.5 → 2) means roundeven
+            // already went away from zero and must be left alone.
+            let re = _mm256_round_pd::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(x);
+            let frac = _mm256_sub_pd(x, re);
+            let up = _mm256_and_pd(
+                _mm256_and_pd(
+                    _mm256_cmp_pd::<_CMP_EQ_OQ>(frac, half),
+                    _mm256_cmp_pd::<_CMP_GT_OQ>(x, zero),
+                ),
+                one,
+            );
+            let dn = _mm256_and_pd(
+                _mm256_and_pd(
+                    _mm256_cmp_pd::<_CMP_EQ_OQ>(frac, neg_half),
+                    _mm256_cmp_pd::<_CMP_LT_OQ>(x, zero),
+                ),
+                one,
+            );
+            let r = _mm256_sub_pd(_mm256_add_pd(re, up), dn);
+            _mm256_storeu_pd(buf.as_mut_ptr(), r);
+            // Scalar casts per lane: `as i64` saturates and maps NaN to 0
+            // exactly like the oracle.
+            for &b in &buf {
+                out.push((b as i64).clamp(0, lim) as u64 as u16);
+            }
+        }
+        n / 4 * 4
+    }
+
+    /// Bulk 8-bit dequantize over the leading `8·⌊n/8⌋` bytes; returns
+    /// how many elements were processed.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequantize_b8(payload: &[u8], min: f32, scale: f32, out: &mut Vec<f32>) -> usize {
+        let n = payload.len();
+        let mv = _mm256_set1_ps(min);
+        let sv = _mm256_set1_ps(scale);
+        let mut buf = [0.0f32; 8];
+        for i in 0..n / 8 {
+            let b = _mm_loadl_epi64(payload.as_ptr().add(i * 8) as *const __m128i);
+            let w = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(b));
+            _mm256_storeu_ps(buf.as_mut_ptr(), _mm256_add_ps(mv, _mm256_mul_ps(sv, w)));
+            out.extend_from_slice(&buf);
+        }
+        n / 8 * 8
+    }
+
+    /// Bulk 16-bit dequantize over the leading `8·⌊n/8⌋` elements;
+    /// returns how many elements were processed.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequantize_b16(payload: &[u8], min: f32, scale: f32, out: &mut Vec<f32>) -> usize {
+        let n = payload.len() / 2;
+        let mv = _mm256_set1_ps(min);
+        let sv = _mm256_set1_ps(scale);
+        let mut buf = [0.0f32; 8];
+        for i in 0..n / 8 {
+            let b = _mm_loadu_si128(payload.as_ptr().add(i * 16) as *const __m128i);
+            let w = _mm256_cvtepi32_ps(_mm256_cvtepu16_epi32(b));
+            _mm256_storeu_ps(buf.as_mut_ptr(), _mm256_add_ps(mv, _mm256_mul_ps(sv, w)));
+            out.extend_from_slice(&buf);
+        }
+        n / 8 * 8
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Bulk quantize over the leading `4·⌊n/4⌋` values; returns how many
+    /// were processed.
+    ///
+    /// # Safety
+    /// Requires NEON (baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn quantize_levels(
+        vals: &[f32],
+        lo: f32,
+        scale: f64,
+        levels: f64,
+        out: &mut Vec<u16>,
+    ) -> usize {
+        let n = vals.len();
+        let lov = vdupq_n_f32(lo);
+        let sv = vdupq_n_f64(scale);
+        let lim = levels as i64;
+        let mut buf = [0.0f64; 4];
+        for i in 0..n / 4 {
+            let d = vsubq_f32(vld1q_f32(vals.as_ptr().add(i * 4)), lov);
+            // FRINTA rounds to nearest with ties away from zero — exactly
+            // f64::round, no emulation needed.
+            let lo2 = vrndaq_f64(vdivq_f64(vcvt_f64_f32(vget_low_f32(d)), sv));
+            let hi2 = vrndaq_f64(vdivq_f64(vcvt_high_f64_f32(d), sv));
+            vst1q_f64(buf.as_mut_ptr(), lo2);
+            vst1q_f64(buf.as_mut_ptr().add(2), hi2);
+            for &b in &buf {
+                out.push((b as i64).clamp(0, lim) as u64 as u16);
+            }
+        }
+        n / 4 * 4
+    }
+
+    /// Bulk 8-bit dequantize over the leading `8·⌊n/8⌋` bytes; returns
+    /// how many elements were processed.
+    ///
+    /// # Safety
+    /// Requires NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dequantize_b8(payload: &[u8], min: f32, scale: f32, out: &mut Vec<f32>) -> usize {
+        let n = payload.len();
+        let mv = vdupq_n_f32(min);
+        let sv = vdupq_n_f32(scale);
+        let mut buf = [0.0f32; 8];
+        for i in 0..n / 8 {
+            let w16 = vmovl_u8(vld1_u8(payload.as_ptr().add(i * 8)));
+            let wlo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(w16)));
+            let whi = vcvtq_f32_u32(vmovl_high_u16(w16));
+            vst1q_f32(buf.as_mut_ptr(), vaddq_f32(mv, vmulq_f32(sv, wlo)));
+            vst1q_f32(buf.as_mut_ptr().add(4), vaddq_f32(mv, vmulq_f32(sv, whi)));
+            out.extend_from_slice(&buf);
+        }
+        n / 8 * 8
+    }
+
+    /// Bulk 16-bit dequantize over the leading `8·⌊n/8⌋` elements;
+    /// returns how many elements were processed. The byte load +
+    /// reinterpret is the little-endian `u16::from_le_bytes`.
+    ///
+    /// # Safety
+    /// Requires NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dequantize_b16(payload: &[u8], min: f32, scale: f32, out: &mut Vec<f32>) -> usize {
+        let n = payload.len() / 2;
+        let mv = vdupq_n_f32(min);
+        let sv = vdupq_n_f32(scale);
+        let mut buf = [0.0f32; 8];
+        for i in 0..n / 8 {
+            let w16 = vreinterpretq_u16_u8(vld1q_u8(payload.as_ptr().add(i * 16)));
+            let wlo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(w16)));
+            let whi = vcvtq_f32_u32(vmovl_high_u16(w16));
+            vst1q_f32(buf.as_mut_ptr(), vaddq_f32(mv, vmulq_f32(sv, wlo)));
+            vst1q_f32(buf.as_mut_ptr().add(4), vaddq_f32(mv, vmulq_f32(sv, whi)));
+            out.extend_from_slice(&buf);
+        }
+        n / 8 * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Inputs that stress the rounding and clamping edges: exact .5 ties
+    /// on both sides of even, values below `lo` (clamp to 0), values past
+    /// the top level (clamp to `levels`), non-finite values.
+    fn edge_vals(lo: f32) -> Vec<f32> {
+        let mut v = vec![
+            lo - 3.0, // negative domain -> clamp 0
+            lo - 0.5,
+            lo,
+            lo + 0.5, // tie: roundeven says 0, round says 1
+            lo + 1.5, // tie: both say 2
+            lo + 2.5, // tie: roundeven says 2, round says 3
+            lo + 254.5,
+            lo + 255.0,
+            lo + 70000.0, // past every grid -> clamp levels
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+        ];
+        // Odd tail lengths.
+        v.extend((0..5).map(|i| lo + i as f32 * 0.37));
+        v
+    }
+
+    fn cases() -> Vec<(Vec<f32>, f32, f64, f64)> {
+        let mut rng = Pcg32::seeded(42);
+        let mut cases = Vec::new();
+        for levels in [255.0f64, 65535.0] {
+            // Unit scale with exact ties.
+            cases.push((edge_vals(-2.0), -2.0f32, 1.0f64, levels));
+            // Random spans, lengths covering every tail residue.
+            for n in [0usize, 1, 3, 4, 7, 8, 33, 256, 1000] {
+                let lo = rng.range_f32(-5.0, 0.0);
+                let scale = (rng.range_f32(0.001, 2.0) as f64).max(1e-6);
+                let vals: Vec<f32> =
+                    (0..n).map(|_| rng.range_f32(lo - 1.0, lo + 300.0)).collect();
+                cases.push((vals, lo, scale, levels));
+            }
+        }
+        cases
+    }
+
+    #[test]
+    fn every_backend_matches_scalar_quantize_exactly() {
+        for be in available_backends() {
+            for (vals, lo, scale, levels) in cases() {
+                let want = quantize_levels_on(Backend::Scalar, &vals, lo, scale, levels);
+                let got = quantize_levels_on(be, &vals, lo, scale, levels);
+                assert_eq!(want, got, "quantize mismatch on {}", be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_oracle_is_the_verbatim_formula() {
+        let (vals, lo, scale, levels) = (edge_vals(0.0), 0.0f32, 0.73f64, 255.0f64);
+        let got = quantize_levels_on(Backend::Scalar, &vals, lo, scale, levels);
+        let want: Vec<u16> = vals
+            .iter()
+            .map(|&v| (((v - lo) as f64 / scale).round() as i64).clamp(0, levels as i64) as u16)
+            .collect();
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn every_backend_matches_scalar_dequantize_exactly() {
+        let mut rng = Pcg32::seeded(77);
+        for be in available_backends() {
+            for n in [0usize, 1, 5, 8, 9, 16, 100, 513] {
+                let b8: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+                let b16: Vec<u8> = (0..n * 2).map(|_| rng.below(256) as u8).collect();
+                let (min, scale) = (rng.range_f32(-3.0, 3.0), rng.range_f32(1e-4, 0.5));
+                let want8 = dequantize_b8_on(Backend::Scalar, &b8, min, scale);
+                let got8 = dequantize_b8_on(be, &b8, min, scale);
+                let bits = |v: &Vec<f32>| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&want8), bits(&got8), "b8 mismatch on {}", be.name());
+                let want16 = dequantize_b16_on(Backend::Scalar, &b16, min, scale);
+                let got16 = dequantize_b16_on(be, &b16, min, scale);
+                assert_eq!(bits(&want16), bits(&got16), "b16 mismatch on {}", be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_entry_points_agree_with_active_backend() {
+        let vals: Vec<f32> = (0..37).map(|i| i as f32 * 0.31 - 3.0).collect();
+        assert_eq!(
+            quantize_levels(&vals, -3.0, 0.01, 255.0),
+            quantize_levels_on(active(), &vals, -3.0, 0.01, 255.0)
+        );
+        let payload: Vec<u8> = (0..41).map(|i| (i * 7 % 256) as u8).collect();
+        assert_eq!(
+            dequantize_b8(&payload, 0.5, 0.02),
+            dequantize_b8_on(active(), &payload, 0.5, 0.02)
+        );
+        assert_eq!(
+            dequantize_b16(&payload[..40], 0.5, 0.02),
+            dequantize_b16_on(active(), &payload[..40], 0.5, 0.02)
+        );
+    }
+}

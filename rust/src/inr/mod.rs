@@ -3,11 +3,14 @@
 //! transmitted over the simulated network.
 
 pub mod arch;
+pub mod delta;
+pub mod kernels;
 pub mod pack;
 pub mod quantize;
 pub mod weights;
 
 pub use arch::{MlpArch, NervArch, ObjectBin};
+pub use delta::{weights_hash, DeltaWeightSet};
 pub use pack::Record;
 pub use quantize::{dequantize, quantize, Bits, QuantWeightSet};
 pub use weights::{Tensor, WeightSet};

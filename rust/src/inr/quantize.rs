@@ -8,6 +8,7 @@
 
 use anyhow::{bail, Result};
 
+use super::kernels;
 use super::weights::{Tensor, WeightSet};
 
 /// Quantization width.
@@ -116,14 +117,19 @@ fn quantize_tensor(t: &Tensor, bits: Bits) -> QuantTensor {
     };
     let span = (hi - lo) as f64;
     let scale = if span > 0.0 { span / levels } else { 1.0 };
+    // The affine transform runs on the dispatched kernel path (AVX2 /
+    // NEON / scalar oracle, bit-identical by construction); packing the
+    // integer levels is a cheap narrowing pass.
+    let q = kernels::quantize_levels(&t.data, lo, scale, levels);
     let mut payload = Vec::with_capacity(t.data.len() * bits.bits() / 8);
-    for &v in &t.data {
-        let q = (((v - lo) as f64 / scale).round() as i64).clamp(0, levels as i64) as u64;
-        match bits {
-            Bits::B8 => payload.push(q as u8),
-            Bits::B16 => payload.extend_from_slice(&(q as u16).to_le_bytes()),
-            Bits::F32 => unreachable!(),
+    match bits {
+        Bits::B8 => payload.extend(q.iter().map(|&v| v as u8)),
+        Bits::B16 => {
+            for &v in &q {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
         }
+        Bits::F32 => unreachable!(),
     }
     QuantTensor {
         name: t.name.clone(),
@@ -143,26 +149,15 @@ pub fn dequantize(q: &QuantWeightSet) -> WeightSet {
 }
 
 fn dequantize_tensor(t: &QuantTensor) -> Tensor {
-    let n: usize = t.shape.iter().product();
-    let mut data = Vec::with_capacity(n);
-    match t.bits {
-        Bits::B8 => {
-            for &b in &t.payload {
-                data.push(t.min + t.scale * b as f32);
-            }
-        }
-        Bits::B16 => {
-            for c in t.payload.chunks_exact(2) {
-                let v = u16::from_le_bytes([c[0], c[1]]);
-                data.push(t.min + t.scale * v as f32);
-            }
-        }
-        Bits::F32 => {
-            for c in t.payload.chunks_exact(4) {
-                data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
-            }
-        }
-    }
+    let data = match t.bits {
+        Bits::B8 => kernels::dequantize_b8(&t.payload, t.min, t.scale),
+        Bits::B16 => kernels::dequantize_b16(&t.payload, t.min, t.scale),
+        Bits::F32 => t
+            .payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+    };
     Tensor::new(t.name.clone(), t.shape.clone(), data)
 }
 
@@ -240,6 +235,56 @@ mod tests {
         ]);
         assert_eq!(quantize(&ws, Bits::B8).byte_size(), 110 + 16);
         assert_eq!(quantize(&ws, Bits::B16).byte_size(), 220 + 16);
+    }
+
+    /// The dispatched kernel path is byte-identical to a pinned-scalar
+    /// recomputation — quantized payloads and dequantized f32 bit
+    /// patterns both (the inr half of the codec kernel-parity bar).
+    #[test]
+    fn dispatched_quantize_matches_pinned_scalar() {
+        use crate::inr::kernels::{self, Backend};
+        let data: Vec<f32> = (0..733).map(|i| ((i * 37) % 101) as f32 * 0.11 - 5.0).collect();
+        let ws = ws_from(data);
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in &ws.tensors[0].data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        for bits in [Bits::B8, Bits::B16] {
+            let levels = match bits {
+                Bits::B8 => 255.0f64,
+                _ => 65535.0f64,
+            };
+            let scale = (hi - lo) as f64 / levels;
+            let q = quantize(&ws, bits);
+            let want = kernels::quantize_levels_on(
+                Backend::Scalar,
+                &ws.tensors[0].data,
+                lo,
+                scale,
+                levels,
+            );
+            let mut want_payload = Vec::new();
+            for &v in &want {
+                match bits {
+                    Bits::B8 => want_payload.push(v as u8),
+                    _ => want_payload.extend_from_slice(&v.to_le_bytes()),
+                }
+            }
+            assert_eq!(q.tensors[0].payload, want_payload, "{bits:?} payload");
+            let t = &q.tensors[0];
+            let want_back = match bits {
+                Bits::B8 => kernels::dequantize_b8_on(Backend::Scalar, &t.payload, t.min, t.scale),
+                _ => kernels::dequantize_b16_on(Backend::Scalar, &t.payload, t.min, t.scale),
+            };
+            let got_back = dequantize(&q);
+            let bits_of = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(
+                bits_of(&want_back),
+                bits_of(&got_back.tensors[0].data),
+                "{bits:?} dequant"
+            );
+        }
     }
 
     #[test]

@@ -28,7 +28,9 @@ use residual_inr::coordinator::{
 use residual_inr::costmodel::{self, Analytical, Calibrated, CostModel, CostSource};
 use residual_inr::data::Profile;
 use residual_inr::fleet::scenario::parse_churn;
-use residual_inr::fleet::{CellSimMode, FleetConfig, JoinSpec, RebroadcastPolicy, Topology};
+use residual_inr::fleet::{
+    CellSimMode, DeltaConfig, FleetConfig, JoinSpec, RebroadcastPolicy, Topology,
+};
 use residual_inr::runtime::Session;
 use residual_inr::util::cli::Args;
 use residual_inr::util::fmt_bytes;
@@ -64,6 +66,25 @@ fn parse_engine_args(args: &Args) -> Result<(CellSimMode, usize)> {
     Ok((mode, threads))
 }
 
+/// Parse the residual-delta knobs shared by `fleet` and `sim --fogs`:
+/// `--delta` turns delta redistribution on, `--delta-bits 8|16|32` and
+/// `--delta-sparsity T` tune the residual quantization width and the
+/// dropped fraction (defaults 8 bits, 0.5; `validate()` bounds both).
+fn parse_delta(args: &Args) -> Result<Option<DeltaConfig>> {
+    if !args.has("delta") {
+        for flag in ["delta-bits", "delta-sparsity"] {
+            if args.get(flag).is_some() {
+                return Err(anyhow!("--{flag} requires --delta"));
+            }
+        }
+        return Ok(None);
+    }
+    let mut dc = DeltaConfig::default_on();
+    dc.bits = args.get_usize("delta-bits", dc.bits as usize).map_err(|e| anyhow!(e))? as u32;
+    dc.sparsity = args.get_f64("delta-sparsity", dc.sparsity).map_err(|e| anyhow!(e))?;
+    Ok(Some(dc))
+}
+
 fn parse_method(s: &str, quality: u8) -> Result<Method> {
     Ok(match s {
         "jpeg" => Method::Jpeg { quality },
@@ -81,7 +102,7 @@ fn parse_method(s: &str, quality: u8) -> Result<Method> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::parse_env(&["no-grouping", "full"]).map_err(|e| anyhow!(e))?;
+    let args = Args::parse_env(&["no-grouping", "full", "delta"]).map_err(|e| anyhow!(e))?;
     match args.subcommand.as_deref() {
         Some("simulate") | Some("sim") => simulate(&args),
         Some("fleet") => fleet(&args),
@@ -99,7 +120,7 @@ fn main() -> Result<()> {
                  \u{20}          --sequences N --epochs N --receivers N --max-frames N [--no-grouping]\n\
                  \u{20}          --fogs F --topology <sharded|hierarchical> --policy P\n\
                  \u{20}          --loss P --churn T1,T2,.. --cell-mode M --threads N\n\
-                 \u{20}          --encode-workers N\n\
+                 \u{20}          --encode-workers N [--delta [--delta-bits N --delta-sparsity T]]\n\
                  \u{20}          (F > 1 runs the live encoder per fog shard and reports\n\
                  \u{20}          fleet-wide makespan from a cost model calibrated on the\n\
                  \u{20}          run; --encode-workers N encodes shards on N threads, one\n\
@@ -112,7 +133,8 @@ fn main() -> Result<()> {
                  \u{20}          --loss P --backhaul-loss P --churn T1,T2,..\n\
                  \u{20}          --cell-mode <exact|aggregate|auto[:threshold]> --threads N\n\
                  \u{20}          --arrivals <poisson:RATE|diurnal:RATE,PERIOD> --horizon S\n\
-                 \u{20}          --deadline S --handover F>G:T,.. --fail F:T --depart F:T,..\n\
+                 \u{20}          --deadline S[,shed] --handover F>G:T,.. --fail F:T --depart F:T,..\n\
+                 \u{20}          [--delta [--delta-bits <8|16|32> --delta-sparsity T]]\n\
                  \u{20}          (paper-10 = 1 fog, 10 edge devices; sharded = per-fog shards\n\
                  \u{20}          over mesh backhaul; hierarchical = cloud→fog→edge relay;\n\
                  \u{20}          unicast = legacy byte-parity default, the others share one\n\
@@ -136,11 +158,21 @@ fn main() -> Result<()> {
                  \u{20}          (seeded Poisson or day/night diurnal process) instead of\n\
                  \u{20}          one t=0 batch; the report adds p50/p99 delivery staleness,\n\
                  \u{20}          drop rate and stream goodput. --deadline S counts\n\
-                 \u{20}          deliveries staler than S as misses. --handover F>G:T moves\n\
+                 \u{20}          deliveries staler than S as misses; --deadline S,shed also\n\
+                 \u{20}          drops frames on arrival whose estimated staleness already\n\
+                 \u{20}          misses S (admission control, counted as drops).\n\
+                 \u{20}          --handover F>G:T moves\n\
                  \u{20}          a receiver between cells mid-run; --fail F:T kills fog F at\n\
                  \u{20}          T and re-attaches its receivers to the cheapest survivor;\n\
                  \u{20}          --depart F:T removes a receiver from fog F at T — a\n\
-                 \u{20}          handover with no destination cell and no catch-up leg)\n\
+                 \u{20}          handover with no destination cell and no catch-up leg.\n\
+                 \u{20}          --delta ships a quantized sparse residual instead of the\n\
+                 \u{20}          full snapshot whenever the destination provably holds the\n\
+                 \u{20}          chain's previous snapshot (falls back to full — and counts\n\
+                 \u{20}          it — on churn, failure or cache eviction); --delta-bits\n\
+                 \u{20}          sets the residual width, --delta-sparsity the dropped\n\
+                 \u{20}          fraction. Off by default: byte-identical to the pre-delta\n\
+                 \u{20}          engine on every policy and topology)\n\
                  compress   --method M --profile P --max-frames N [--quality Q]\n\
                  commmodel  --devices K --alpha A [--receivers N]\n\
                  info\n\
@@ -182,6 +214,15 @@ fn simulate(args: &Args) -> Result<()> {
             ));
         }
     }
+    if fogs <= 1
+        && (args.has("delta")
+            || args.get("delta-bits").is_some()
+            || args.get("delta-sparsity").is_some())
+    {
+        return Err(anyhow!(
+            "--delta requires --fogs > 1 (use `fleet --delta` for synthetic runs)"
+        ));
+    }
     if fogs <= 1 && args.get("encode-workers").is_some() {
         return Err(anyhow!(
             "--encode-workers requires --fogs > 1 (the parallel multi-shard encode)"
@@ -209,6 +250,7 @@ fn simulate(args: &Args) -> Result<()> {
         let (loss, _backhaul_loss, joins) = parse_link_args(args, fogs)?;
         let (cell_sim, threads) = parse_engine_args(args)?;
         let encode_workers = args.get_usize("encode-workers", 0).map_err(|e| anyhow!(e))?;
+        let delta = parse_delta(args)?;
         let mf = MultiFogConfig {
             n_fogs: fogs,
             topology,
@@ -218,6 +260,7 @@ fn simulate(args: &Args) -> Result<()> {
             cell_sim,
             threads,
             encode_workers,
+            delta,
         };
         println!(
             "# simulate method={} profile={} fogs={} topology={} policy={} loss={} churn={}",
@@ -261,6 +304,7 @@ fn simulate(args: &Args) -> Result<()> {
             fc.joins = mf.joins.clone();
             fc.cell_sim = mf.cell_sim;
             fc.threads = mf.threads;
+            fc.delta = mf.delta;
             let report = residual_inr::fleet::run(&cfg, &fc)?;
             report.print();
             return Ok(());
@@ -352,20 +396,27 @@ fn fleet(args: &Args) -> Result<()> {
     let (cell_sim, threads) = parse_engine_args(args)?;
     fc.cell_sim = cell_sim;
     fc.threads = threads;
+    fc.delta = parse_delta(args)?;
     // Streaming knobs: --arrivals + --horizon switch the run from one
     // finite batch to a steady-state stream; --deadline, --handover,
     // --fail and --depart ride on top (validate() enforces the
     // dependencies).
     match (args.get("arrivals"), args.get("horizon")) {
         (Some(spec), Some(_)) => {
+            let (deadline, shed) = match args.get("deadline") {
+                Some(d) => {
+                    let (secs, shed) =
+                        residual_inr::fleet::stream::parse_deadline(d).map_err(|e| anyhow!(e))?;
+                    (Some(secs), shed)
+                }
+                None => (None, false),
+            };
             fc.stream = Some(residual_inr::fleet::StreamConfig {
                 arrivals: residual_inr::fleet::ArrivalSpec::from_name(spec)
                     .map_err(|e| anyhow!(e))?,
                 horizon: args.get_f64("horizon", 0.0).map_err(|e| anyhow!(e))?,
-                deadline: match args.get("deadline") {
-                    Some(_) => Some(args.get_f64("deadline", 0.0).map_err(|e| anyhow!(e))?),
-                    None => None,
-                },
+                deadline,
+                shed,
             });
         }
         (Some(_), None) => {

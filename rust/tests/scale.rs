@@ -246,6 +246,7 @@ fn streamed_windowed_runs_are_bit_identical_across_thread_counts() {
             arrivals: residual_inr::fleet::ArrivalSpec::Poisson { rate: 2.0 },
             horizon: 5.0,
             deadline: Some(0.5),
+            shed: false,
         });
         fc.threads = threads;
         fleet::run(&cfg, &fc).unwrap()

@@ -44,6 +44,7 @@ fn streaming_fc(threads: usize) -> FleetConfig {
         arrivals: ArrivalSpec::Poisson { rate: 2.0 },
         horizon: 5.0,
         deadline: Some(0.25),
+        shed: false,
     });
     fc.handovers = vec![HandoverSpec { from: 0, to: 2, at: 1.0 }];
     fc.fail = Some(FailSpec { fog: 1, at: 2.0 });
