@@ -229,10 +229,11 @@ fn main() -> anyhow::Result<()> {
         println!("{:<44} {:>9.2}x vs serial", "", serial / r.stats.mean);
     }
 
-    // --- parallel live multi-shard encode (needs AOT artifacts) -------
+    // --- parallel live multi-shard encode (any backend) ---------------
     let mut multi_rows: Vec<Json> = Vec::new();
-    if Session::open_default().is_ok() {
-        println!("\n== run_multi: live encode scaling (--encode-workers) ==");
+    {
+        let backend = Session::open_default()?.backend_name();
+        println!("\n== run_multi: live encode scaling (--encode-workers, backend={backend}) ==");
         let cfg = residual_inr::config::ArchConfig::load_default()?;
         let mut sim = SimConfig::small(Method::ResRapid { direct: false });
         sim.n_sequences = 2;
@@ -268,8 +269,6 @@ fn main() -> anyhow::Result<()> {
                 ("payload_bytes", Json::Num(total as f64)),
             ]));
         }
-    } else {
-        println!("\n(run_multi scaling skipped: AOT artifacts absent — python -m compile.aot)");
     }
 
     // Machine-readable scalar-vs-kernel trajectory (BENCH_codec.json at

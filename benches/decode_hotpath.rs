@@ -20,8 +20,9 @@ fn main() -> anyhow::Result<()> {
     let cfg = ArchConfig::load_default()?;
     let session = Session::open_default()?;
     // The JPEG stages around these decode paths dispatch through
-    // codec::kernels; record which backend this host runs.
+    // codec::kernels; record which backends this host runs.
     println!("codec kernel backend: {}", residual_inr::codec::kernels::active().name());
+    println!("compute backend: {}", session.backend_name());
     let profile = cfg.rapid(residual_inr::data::Profile::Uav123);
     let mut rng = Pcg32::seeded(3);
 

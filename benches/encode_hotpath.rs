@@ -1,0 +1,302 @@
+//! Native INR training hot path microbenchmarks — the encode-side twin of
+//! `codec_hotpath`: per-backend `inr::nn` kernel throughput (matmul_bias,
+//! accum_outer, adam_update — scalar vs SIMD), a pinned-kernel micro-train
+//! loop whose final weights must be bit-identical across every compiled
+//! backend, and full `MlpNet::train_step` steps/s per Rapid arch bin,
+//! single-thread vs the row-block crew (worker-invariant by contract, so
+//! the threaded weights are asserted bit-equal to the single-thread run).
+//!
+//! Besides the printed tables, the run writes `BENCH_encode.json` at the
+//! repo root so the scalar-vs-SIMD training trajectory is machine-readable
+//! across PRs.
+//!
+//! Run: `cargo bench --bench encode_hotpath`
+//! Env: `RESIDUAL_INR_NO_SIMD=1` pins the *dispatched* kernels to scalar
+//! (the per-backend rows below always measure every compiled backend);
+//! `RESIDUAL_INR_NATIVE_THREADS=N` pins the row-block crew width.
+
+use residual_inr::bench_support::{bench, report, BenchResult};
+use residual_inr::config::ArchConfig;
+use residual_inr::data::Profile;
+use residual_inr::inr::nn::{self, Backend, MlpNet, ROW_BLOCK};
+use residual_inr::training::siren_init;
+use residual_inr::util::json::Json;
+use residual_inr::util::rng::Pcg32;
+
+fn kernel_row(kernel: &str, be: Backend, r: &BenchResult, scalar_mean: f64) -> Json {
+    Json::obj(vec![
+        ("kernel", Json::Str(kernel.to_string())),
+        ("backend", Json::Str(be.name().to_string())),
+        ("mean_seconds", Json::Num(r.stats.mean)),
+        ("p95_seconds", Json::Num(r.stats.p95)),
+        ("iters", Json::Num(r.iters as f64)),
+        ("speedup_vs_scalar", Json::Num(scalar_mean / r.stats.mean)),
+    ])
+}
+
+fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+}
+
+/// Bit patterns of a float slice — equality below means *bit* identity,
+/// not numeric closeness.
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Row-major normalized coordinate grid for a `w`×`h` patch, `(n, 2)`.
+fn grid(w: usize, h: usize) -> Vec<f32> {
+    let mut c = Vec::with_capacity(w * h * 2);
+    for y in 0..h {
+        for x in 0..w {
+            c.push(x as f32 / (w.max(2) - 1) as f32);
+            c.push(y as f32 / (h.max(2) - 1) as f32);
+        }
+    }
+    c
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ArchConfig::load_default()?;
+    let profile = cfg.rapid(Profile::Uav123);
+    let backends = nn::available_backends();
+    println!("active backend: {}", nn::active().name());
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    let mut rng = Pcg32::seeded(11);
+
+    // --- inr::nn kernels: every compiled backend vs scalar --------------
+    // One ROW_BLOCK of the baseline arch's first layer: the exact tile the
+    // train-step inner loop runs thousands of times per frame.
+    let arch = &profile.baseline;
+    let (kd, jd) = (arch.in_dim(), arch.hidden);
+    println!("\n== inr::nn kernels ({kd}->{jd}, {ROW_BLOCK}-row block) ==");
+    let x = randv(&mut rng, ROW_BLOCK * kd);
+    let w = randv(&mut rng, kd * jd);
+    let b = randv(&mut rng, jd);
+    let mut scalar_mean = 0.0;
+    let mut scalar_out: Vec<f32> = Vec::new();
+    for &be in &backends {
+        let mut out = vec![0.0f32; ROW_BLOCK * jd];
+        let r = bench(&format!("matmul_bias_on[{}]", be.name()), 20, 400, || {
+            nn::matmul_bias_on(
+                be,
+                std::hint::black_box(&x),
+                ROW_BLOCK,
+                kd,
+                std::hint::black_box(&w),
+                jd,
+                Some(&b),
+                &mut out,
+            );
+        });
+        report(&r);
+        if be == Backend::Scalar {
+            scalar_mean = r.stats.mean;
+            scalar_out = out.clone();
+        } else {
+            assert_eq!(
+                bits(&out),
+                bits(&scalar_out),
+                "matmul_bias[{}] must match scalar bitwise",
+                be.name()
+            );
+        }
+        kernel_rows.push(kernel_row("matmul_bias", be, &r, scalar_mean));
+    }
+    let dz = randv(&mut rng, ROW_BLOCK * jd);
+    let mut scalar_dw: Vec<f32> = Vec::new();
+    for &be in &backends {
+        let mut dw = vec![0.0f32; kd * jd];
+        let mut db = vec![0.0f32; jd];
+        let r = bench(&format!("accum_outer_on[{}]", be.name()), 20, 400, || {
+            dw.fill(0.0);
+            db.fill(0.0);
+            nn::accum_outer_on(
+                be,
+                std::hint::black_box(&x),
+                ROW_BLOCK,
+                kd,
+                std::hint::black_box(&dz),
+                jd,
+                &mut dw,
+                &mut db,
+            );
+        });
+        report(&r);
+        if be == Backend::Scalar {
+            scalar_mean = r.stats.mean;
+            scalar_dw = dw.clone();
+        } else {
+            assert_eq!(
+                bits(&dw),
+                bits(&scalar_dw),
+                "accum_outer[{}] must match scalar bitwise",
+                be.name()
+            );
+        }
+        kernel_rows.push(kernel_row("accum_outer", be, &r, scalar_mean));
+    }
+    let g = randv(&mut rng, kd * jd);
+    let p0 = randv(&mut rng, kd * jd);
+    let mut scalar_p: Vec<f32> = Vec::new();
+    for &be in &backends {
+        let (mut p, mut m, mut v) = (p0.clone(), vec![0.0f32; kd * jd], vec![0.0f32; kd * jd]);
+        let r = bench(&format!("adam_update_on[{}]", be.name()), 20, 400, || {
+            let g = std::hint::black_box(&g);
+            nn::adam_update_on(be, &mut p, &mut m, &mut v, g, 1e-2, 0.1, 1e-3);
+        });
+        report(&r);
+        if be == Backend::Scalar {
+            scalar_mean = r.stats.mean;
+            scalar_p = p.clone();
+        } else {
+            assert_eq!(
+                bits(&p),
+                bits(&scalar_p),
+                "adam_update[{}] must match scalar bitwise",
+                be.name()
+            );
+        }
+        kernel_rows.push(kernel_row("adam_update", be, &r, scalar_mean));
+    }
+
+    // --- pinned-kernel micro-train: trained bits across backends --------
+    // A 50-step linear fit driven only by the three dispatched kernels —
+    // the end-to-end bit-exactness claim, checked on trained weights
+    // rather than single kernel calls.
+    println!("\n== micro-train (50 steps): trained-weight bits per backend ==");
+    let (tk, tj, tn) = (20usize, 8usize, 512usize);
+    let tx = randv(&mut rng, tn * tk);
+    let ty = randv(&mut rng, tn * tj);
+    let w_init = randv(&mut rng, tk * tj);
+    let b_init = randv(&mut rng, tj);
+    let train = |be: Backend| -> (Vec<f32>, Vec<f32>) {
+        let (mut w, mut bb) = (w_init.clone(), b_init.clone());
+        let (mut mw, mut vw) = (vec![0.0f32; tk * tj], vec![0.0f32; tk * tj]);
+        let (mut mb, mut vb) = (vec![0.0f32; tj], vec![0.0f32; tj]);
+        let mut z = vec![0.0f32; tn * tj];
+        for step in 1..=50 {
+            nn::matmul_bias_on(be, &tx, tn, tk, &w, tj, Some(&bb), &mut z);
+            let dzv: Vec<f32> =
+                z.iter().zip(&ty).map(|(&p, &t)| 2.0 * (p - t) / tn as f32).collect();
+            let mut dw = vec![0.0f32; tk * tj];
+            let mut db = vec![0.0f32; tj];
+            nn::accum_outer_on(be, &tx, tn, tk, &dzv, tj, &mut dw, &mut db);
+            let b1t = 1.0 - nn::ADAM_B1.powf(step as f32);
+            let b2t = 1.0 - nn::ADAM_B2.powf(step as f32);
+            nn::adam_update_on(be, &mut w, &mut mw, &mut vw, &dw, 1e-2, b1t, b2t);
+            nn::adam_update_on(be, &mut bb, &mut mb, &mut vb, &db, 1e-2, b1t, b2t);
+        }
+        (w, bb)
+    };
+    let (w_ref, b_ref) = train(Backend::Scalar);
+    for &be in &backends {
+        let (wt, bt) = train(be);
+        let ok = bits(&wt) == bits(&w_ref) && bits(&bt) == bits(&b_ref);
+        let label = format!("trained bits [{}] vs scalar", be.name());
+        println!("{label:<44} {}", if ok { "identical" } else { "DIVERGED" });
+        assert!(ok, "micro-train weights diverged on {}", be.name());
+    }
+
+    // --- full train step: steps/s per arch bin, crew scaling ------------
+    println!("\n== MlpNet::train_step: steps/s per arch bin ==");
+    let mut step_rows: Vec<Json> = Vec::new();
+    let cases = [
+        ("background", &profile.background, cfg.frame_w, cfg.frame_h),
+        ("baseline", &profile.baseline, cfg.frame_w, cfg.frame_h),
+        (
+            "object bin0",
+            &profile.object_bins[0].arch,
+            profile.object_bins[0].max_side,
+            profile.object_bins[0].max_side,
+        ),
+        (
+            "object bin3",
+            &profile.object_bins[3].arch,
+            profile.object_bins[3].max_side,
+            profile.object_bins[3].max_side,
+        ),
+    ];
+    for (role, arch, pw, ph) in cases {
+        let n = pw * ph;
+        let net = MlpNet::new(arch);
+        let ws = siren_init(&arch.param_shapes(), &mut rng);
+        let params: Vec<&[f32]> = ws.tensors.iter().map(|t| t.data.as_slice()).collect();
+        let zeros: Vec<Vec<f32>> = ws.tensors.iter().map(|t| vec![0.0f32; t.data.len()]).collect();
+        let mv: Vec<&[f32]> = zeros.iter().map(|t| t.as_slice()).collect();
+        let coords = grid(pw, ph);
+        let targets = randv(&mut rng, n * 3);
+        let mask = vec![1.0f32; n];
+        let threaded = nn::default_workers(n);
+        let mut single_mean = 0.0;
+        let mut single_bits: Vec<Vec<u32>> = Vec::new();
+        for workers in [1usize, threaded] {
+            if workers == 1 && threaded == 1 && single_mean > 0.0 {
+                break; // small patches never engage the crew twice
+            }
+            let label =
+                format!("{role} {}x{} ({n} px), {workers} worker(s)", arch.layers, arch.hidden);
+            let mut out = None;
+            let r = bench(&label, 1, 6, || {
+                out = Some(net.train_step(
+                    &params, &mv, &mv, 1.0, &coords, &targets, &mask, n, nn::INR_LR, workers,
+                ));
+            });
+            report(&r);
+            println!("{:<44} {:>10.1} steps/s", "", 1.0 / r.stats.mean);
+            let step_bits: Vec<Vec<u32>> = out
+                .as_ref()
+                .map(|(p, _, _, _)| p.iter().map(|t| bits(t)).collect())
+                .unwrap();
+            if workers == 1 {
+                single_mean = r.stats.mean;
+                single_bits = step_bits;
+            } else {
+                assert_eq!(
+                    step_bits, single_bits,
+                    "{role}: threaded weights must match single-thread bitwise"
+                );
+                println!("{:<44} {:>9.2}x vs single (bits identical)", "", single_mean / r.stats.mean);
+            }
+            step_rows.push(Json::obj(vec![
+                ("arch", Json::Str(role.to_string())),
+                ("pixels", Json::Num(n as f64)),
+                ("workers", Json::Num(workers as f64)),
+                ("mean_seconds", Json::Num(r.stats.mean)),
+                ("steps_per_s", Json::Num(1.0 / r.stats.mean)),
+                ("speedup_vs_single", Json::Num(single_mean / r.stats.mean)),
+            ]));
+        }
+    }
+    println!(
+        "\n(row-block crew: threads split {ROW_BLOCK}-row blocks; partial merge order is\n\
+          fixed, so worker count never changes trained bits)"
+    );
+
+    // Machine-readable trajectory (BENCH_encode.json at the repo root).
+    let json = Json::obj(vec![
+        ("bench", Json::Str("encode_hotpath".to_string())),
+        (
+            "meta",
+            Json::obj(vec![(
+                "provenance",
+                Json::Str("generated natively by `cargo bench --bench encode_hotpath`".to_string()),
+            )]),
+        ),
+        ("active_backend", Json::Str(nn::active().name().to_string())),
+        (
+            "available_backends",
+            Json::Arr(backends.iter().map(|b| Json::Str(b.name().to_string())).collect()),
+        ),
+        ("kernels", Json::Arr(kernel_rows)),
+        ("train_step", Json::Arr(step_rows)),
+    ]);
+    let out = residual_inr::config::find_repo_file("Cargo.toml")
+        .ok()
+        .and_then(|p| p.parent().map(|d| d.to_path_buf()))
+        .unwrap_or_else(|| std::path::PathBuf::from("."))
+        .join("BENCH_encode.json");
+    std::fs::write(&out, format!("{json}\n"))?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

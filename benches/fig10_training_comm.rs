@@ -37,12 +37,11 @@ fn main() -> anyhow::Result<()> {
 
     // TinyDet model size @16-bit for the fog-vs-edge decision. The paper
     // uses YOLOv8-m (98.8 MB); the decision logic is size-parametric.
+    // Shapes come from the config (the manifest-parity test pins them to
+    // the artifacts), so this bench needs no `artifacts/`.
     let model_bytes_16b: f64 = {
-        use residual_inr::runtime::Manifest;
-        let m = Manifest::load_default()?;
-        let spec = m.get(&residual_inr::runtime::names::tinydet_fwd(cfg.detect.batch))?;
         let params: usize =
-            spec.args.iter().take(spec.args.len() - 1).map(|a| a.elements()).sum();
+            cfg.detect_param_shapes().iter().map(|(_, s)| s.iter().product::<usize>()).sum();
         (params * 2) as f64
     };
 

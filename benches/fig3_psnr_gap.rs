@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
     // ---- (b) object vs background PSNR under single-INR encoding ------
     println!("== Fig 3(b): single-INR object vs background PSNR ==");
     let session = Session::open_default()?;
+    println!("(compute backend: {})", session.backend_name());
     let cfg = ArchConfig::load_default()?;
     let enc = FogEncoder::new(&session, &cfg, EncoderConfig::default());
     let mut table = Table::new(&["dataset", "encoder", "PSNR(bg)", "PSNR(obj)", "gap"]);

@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = ArchConfig::load_default()?;
     let session = Session::open_default()?;
+    println!("(compute backend: {})", session.backend_name());
     let rp = cfg.rapid(profile);
     let enc = FogEncoder::new(&session, &cfg, EncoderConfig::default());
     let mut seq = generate_sequence(profile, 55, 0);

@@ -198,6 +198,30 @@ impl ArchConfig {
             .unwrap_or_else(|| self.nerv_bins.last().expect("nonempty nerv bins"))
     }
 
+    /// Ordered TinyDet parameter shapes (mirror of
+    /// `model.detect_param_shapes`): `stages` stride-2 convs from RGB,
+    /// channel-doubling, then a two-layer head over the flattened map.
+    pub fn detect_param_shapes(&self) -> Vec<(String, Vec<usize>)> {
+        let d = &self.detect;
+        let mut shapes = Vec::new();
+        let mut cin = 3usize;
+        let mut c = d.base_channels;
+        for i in 0..d.stages {
+            shapes.push((format!("conv{i}_w"), vec![3, 3, cin, c]));
+            shapes.push((format!("conv{i}_b"), vec![c]));
+            cin = c;
+            c *= 2;
+        }
+        let ds = 1usize << d.stages;
+        let fh = self.frame_h.div_ceil(ds);
+        let fw = self.frame_w.div_ceil(ds);
+        shapes.push(("head_w1".to_string(), vec![fh * fw * cin, d.head_hidden]));
+        shapes.push(("head_b1".to_string(), vec![d.head_hidden]));
+        shapes.push(("head_w2".to_string(), vec![d.head_hidden, 5]));
+        shapes.push(("head_b2".to_string(), vec![5]));
+        shapes
+    }
+
     /// All distinct Rapid MLP archs (for artifact enumeration).
     pub fn all_mlp_archs(&self) -> Vec<&MlpArch> {
         let mut out: Vec<&MlpArch> = Vec::new();

@@ -3,7 +3,9 @@
 //! "Encoding" an image into INR format is training a network to fit it —
 //! the computationally heavy half of the pipeline, which is exactly why
 //! the paper places it on the fog node. All training runs through the
-//! AOT train-step artifacts (fused Adam, one PJRT call per step).
+//! train-step artifact names (fused Adam, one session call per step) —
+//! executed by PJRT over the AOT artifacts or by the native SIMD engine,
+//! whichever backend the session was opened on.
 //!
 //! Encoders provided:
 //! * `encode_rapid` — single-INR baseline (Rapid-INR).
@@ -442,7 +444,7 @@ mod tests {
 
     fn setup() -> (Session, ArchConfig) {
         (
-            Session::open_default().expect("artifacts built"),
+            Session::open_default().expect("auto backend always opens"),
             ArchConfig::load_default().unwrap(),
         )
     }
@@ -497,6 +499,73 @@ mod tests {
         let base_params = profile.baseline.param_count();
         let combined = profile.background.param_count() + bin.arch.param_count();
         assert!(combined < base_params);
+    }
+
+    #[test]
+    fn res_nerv_converges_under_fast_profile() {
+        // Completes the per-method convergence smoke (rapid, res-rapid
+        // and nerv have their own tests above): the background NeRV plus
+        // per-frame object INRs must fit a short sequence on whichever
+        // backend `open_default` resolves to.
+        let (session, cfg) = setup();
+        let mut ec = EncoderConfig::fast();
+        ec.nerv_steps = 60;
+        ec.obj_steps = 40;
+        let enc = FogEncoder::new(&session, &cfg, ec);
+        let mut seq = generate_sequence(Profile::Otb100, 5, 0);
+        seq.frames.truncate(4);
+        seq.boxes.truncate(4);
+        let profile = cfg.rapid(Profile::Otb100);
+        let (bg, frames, stats) = enc.encode_res_nerv(&seq, profile, 6).unwrap();
+        assert_eq!(frames.len(), seq.len());
+        assert!(stats.steps > 0);
+        assert!(stats.train_psnr > 10.0, "bg train psnr {}", stats.train_psnr);
+        assert!(bg.byte_size() > 0);
+        for f in &frames {
+            assert!(f.obj.byte_size() > 0);
+        }
+    }
+
+    #[test]
+    fn native_and_pjrt_encoders_agree() {
+        // Artifact-gated cross-backend check: the two engines share RNG
+        // seeding and the training recipe but not float association
+        // order, so agreement is statistical (both converge, comparable
+        // PSNR) while the byte accounting — quantized payload sizes —
+        // must be identical because shapes and widths match exactly.
+        let Ok(pjrt) = Session::open_pjrt() else {
+            eprintln!("skipping: artifacts/ not built (run python/compile/aot.py)");
+            return;
+        };
+        let native = Session::open_native().unwrap();
+        let cfg = ArchConfig::load_default().unwrap();
+        let seq = generate_sequence(Profile::DacSdc, 11, 0);
+        let img = &seq.frames[0];
+        let arch = &cfg.rapid(Profile::DacSdc).baseline;
+        let mut results = Vec::new();
+        for session in [&pjrt, &native] {
+            let enc = FogEncoder::new(session, &cfg, EncoderConfig::fast());
+            let (ws, stats) = enc.encode_rapid(img, arch, 1).unwrap();
+            let rec =
+                decoder::decode_rapid(session, arch, &ws, img.width, img.height).unwrap();
+            results.push((
+                stats.train_psnr,
+                psnr(img, &rec),
+                quantize(&ws, Bits::B16).byte_size(),
+            ));
+        }
+        let (p_pjrt, d_pjrt, b_pjrt) = results[0];
+        let (p_native, d_native, b_native) = results[1];
+        assert!(p_pjrt > 20.0 && p_native > 20.0, "{p_pjrt} vs {p_native}");
+        assert!(
+            (p_pjrt - p_native).abs() < 3.0,
+            "train psnr diverged: pjrt {p_pjrt:.2} vs native {p_native:.2}"
+        );
+        assert!(
+            (d_pjrt - d_native).abs() < 3.0,
+            "decoded psnr diverged: pjrt {d_pjrt:.2} vs native {d_native:.2}"
+        );
+        assert_eq!(b_pjrt, b_native, "quantized byte accounting must match");
     }
 
     #[test]

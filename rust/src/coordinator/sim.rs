@@ -44,7 +44,7 @@ use crate::metrics::{map50, map50_95, mean_iou};
 use crate::net::{NetSim, NodeId};
 use crate::pipeline::baseline::{decode_jpeg_batch, JpegPipeline};
 use crate::pipeline::group::{decode_batch, StoredImage};
-use crate::runtime::{Pool, Session};
+use crate::runtime::{Pool, Session, SessionSpec};
 use crate::training::DetTrainer;
 use crate::util::rng::Pcg32;
 use crate::util::{fmt_bytes, Stopwatch};
@@ -80,6 +80,9 @@ pub struct SimConfig {
     pub decode_workers: usize,
     /// Cap on fine-tuning frames per shard (CI speed); `None` = all.
     pub max_train_frames: Option<usize>,
+    /// Compute backend every stage runs on (`--backend`): PJRT over the
+    /// AOT artifacts, the artifact-free native SIMD engine, or auto.
+    pub backend: SessionSpec,
 }
 
 impl SimConfig {
@@ -103,6 +106,7 @@ impl SimConfig {
             bandwidth: crate::net::DEFAULT_BANDWIDTH * (128.0 * 96.0) / 230_400.0,
             decode_workers: 1, // PJRT CPU client is internally parallel; >1 worker measured slower (EXPERIMENTS.md §Perf)
             max_train_frames: Some(24),
+            backend: SessionSpec::auto(),
         }
     }
 }
@@ -112,6 +116,8 @@ impl SimConfig {
 pub struct SimReport {
     pub method: String,
     pub grouped: bool,
+    /// Compute backend the run executed on (`"pjrt"` or `"native"`).
+    pub backend: &'static str,
     // Bytes over the wireless medium.
     pub upload_bytes: u64,
     pub broadcast_bytes: u64,
@@ -417,6 +423,9 @@ fn calibrate(
 /// `pull_bytes` when joiners also pull): the analytic check still
 /// covers every static term. Under `unicast` the split is exact without
 /// the engine's help: each joiner receives every set exactly once.
+/// `--delta` legs are likewise netted via the engine's cell-leg
+/// full-equivalent tally (which deliveries ride a residual depends on
+/// the per-destination base state the engine tracks).
 fn expected_cell_bytes(fc: &FleetConfig, shards: &[EncodedShard], fleet: &FleetReport) -> u64 {
     let scope_all = fc.topology != Topology::SingleFog && fc.n_fogs > 1;
     let uploads: u64 = shards.iter().map(|s| s.traffic.upload_bytes()).sum();
@@ -500,13 +509,17 @@ fn expected_cell_bytes(fc: &FleetConfig, shards: &[EncodedShard], fleet: &FleetR
     } else {
         (0..fc.n_fogs).map(|f| sets_over(f, std::slice::from_ref(&shards[f]))).sum()
     };
-    uploads + live + churn + pulls
+    // `--delta`: cell legs that carried a residual instead of the full
+    // snapshot removed exactly their full-size copies from the broadcast
+    // class (delta bytes are accounted apart, like repair) — net the
+    // expectation by the engine's cell-leg full-equivalent tally.
+    (uploads + live + churn + pulls).saturating_sub(fleet.cell_delta_full_equiv_bytes)
 }
 
 /// Run one full single-fog simulation (the paper's testbed).
 pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
-    let session = Session::open_default()?;
-    let pool = Pool::open_default(sim.decode_workers)?;
+    let session = sim.backend.open()?;
+    let pool = Pool::new(sim.backend.clone(), sim.decode_workers)?;
     let mut rng = Pcg32::seeded(sim.seed ^ 0x51);
 
     // --- Partition -----------------------------------------------------
@@ -570,6 +583,7 @@ pub fn run(cfg: &ArchConfig, sim: &SimConfig) -> Result<SimReport> {
     Ok(SimReport {
         method: sim.method.name().to_string(),
         grouped: sim.grouped,
+        backend: session.backend_name(),
         upload_bytes: shard.upload_bytes,
         broadcast_bytes: shard.broadcast_bytes,
         label_bytes: shard.label_bytes,
@@ -676,6 +690,8 @@ pub struct ShardReport {
 pub struct MultiFogReport {
     pub method: String,
     pub topology: &'static str,
+    /// Compute backend the live stages executed on.
+    pub backend: &'static str,
     pub n_fogs: usize,
     pub receivers_per_fog: usize,
     /// Cost book calibrated from the live run (fleet timing source).
@@ -707,8 +723,14 @@ pub struct MultiFogReport {
 impl MultiFogReport {
     pub fn print(&self) {
         println!(
-            "# sim measured multi-fog method={} topology={} policy={} fogs={} receivers/fog={}",
-            self.method, self.topology, self.fleet.policy, self.n_fogs, self.receivers_per_fog
+            "# sim measured multi-fog method={} topology={} policy={} fogs={} \
+             receivers/fog={} backend={}",
+            self.method,
+            self.topology,
+            self.fleet.policy,
+            self.n_fogs,
+            self.receivers_per_fog,
+            self.backend
         );
         let mut t = crate::bench_support::Table::new(&[
             "shard", "frames", "records", "upload", "payload", "cell", "encode (s)", "steps",
@@ -802,8 +824,8 @@ pub fn run_multi(cfg: &ArchConfig, sim: &SimConfig, mf: &MultiFogConfig) -> Resu
     if mf.topology == Topology::SingleFog {
         anyhow::ensure!(mf.n_fogs == 1, "single-fog topology requires --fogs 1");
     }
-    let session = Session::open_default()?;
-    let pool = Pool::open_default(sim.decode_workers)?;
+    let session = sim.backend.open()?;
+    let pool = Pool::new(sim.backend.clone(), sim.decode_workers)?;
     let mut rng = Pcg32::seeded(sim.seed ^ 0x51);
 
     // --- Shard: one generated dataset slice per fog (mirrors the
@@ -838,9 +860,9 @@ pub fn run_multi(cfg: &ArchConfig, sim: &SimConfig, mf: &MultiFogConfig) -> Resu
     // --- Encode every shard with the live fog encoder ------------------
     // Shards are independent (per-shard RNG salts, restarting frame ids
     // and self-contained NetSim accounting), so they encode in parallel:
-    // one PJRT session per worker, shard indices claimed off a shared
-    // queue, results merged shard-major — byte totals stay
-    // record-for-record identical for every worker count.
+    // one session per worker (PJRT or native per `sim.backend`), shard
+    // indices claimed off a shared queue, results merged shard-major —
+    // byte totals stay record-for-record identical for every worker count.
     let encode_workers = match mf.encode_workers {
         0 => mf
             .n_fogs
@@ -848,7 +870,7 @@ pub fn run_multi(cfg: &ArchConfig, sim: &SimConfig, mf: &MultiFogConfig) -> Resu
         w => w.min(mf.n_fogs),
     };
     let crew = crate::runtime::session_crew(
-        session.manifest(),
+        &sim.backend,
         encode_workers,
         mf.n_fogs,
         |sess, i| {
@@ -896,7 +918,16 @@ pub fn run_multi(cfg: &ArchConfig, sim: &SimConfig, mf: &MultiFogConfig) -> Resu
     fleet_cfg.threads = mf.threads;
     fleet_cfg.delta = mf.delta;
     fleet_cfg.validate()?;
-    let traffic: Vec<ShardTraffic> = shards.iter().map(|s| s.traffic.clone()).collect();
+    let mut traffic: Vec<ShardTraffic> = shards.iter().map(|s| s.traffic.clone()).collect();
+    // Measured records carry trained weights, so `--delta` prices real
+    // packed residuals instead of the closed-form model — and the engine
+    // adaptively skips any chain step whose residual loses to the full
+    // snapshot (counted with the fallbacks).
+    if let Some(dc) = &mf.delta {
+        for (t, s) in traffic.iter_mut().zip(&shards) {
+            t.attach_measured_deltas(&s.records, dc);
+        }
+    }
     let fleet = crate::fleet::simulate(&fleet_cfg, traffic);
     let expected = expected_cell_bytes(&fleet_cfg, &shards, &fleet);
     let byte_parity_mismatch = fleet.cell_bytes().abs_diff(expected);
@@ -906,6 +937,7 @@ pub fn run_multi(cfg: &ArchConfig, sim: &SimConfig, mf: &MultiFogConfig) -> Resu
     Ok(MultiFogReport {
         method: sim.method.name().to_string(),
         topology: mf.topology.name(),
+        backend: session.backend_name(),
         n_fogs: mf.n_fogs,
         receivers_per_fog: sim.n_receivers,
         costs,

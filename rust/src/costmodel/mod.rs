@@ -7,18 +7,23 @@
 //! constants in `fleet::scenario`; now every [`crate::fleet::FleetConfig`]
 //! carries a [`CostBook`] resolved through one of two [`CostModel`] impls:
 //!
-//! * [`Calibrated`] — *measures* the costs against the live PJRT session:
-//!   a short background-INR fit times the Adam step, a few TinyDet batches
+//! * [`Calibrated`] — *measures* the costs against a live session (PJRT
+//!   over the AOT artifacts, or the artifact-free native SIMD engine): a
+//!   short background-INR fit times the Adam step, a few TinyDet batches
 //!   time the train step, and real [`crate::codec::jpeg`] encodes time the
 //!   upload leg. `coordinator::sim` goes further and calibrates from the
 //!   run itself (every live encode/fine-tune doubles as a measurement).
 //! * [`Analytical`] — derives the costs from architecture shapes and
 //!   documented throughput constants (the §4 comm-model spirit applied to
-//!   the compute axis), for environments without AOT `artifacts/`.
+//!   the compute axis), kept as the last-resort fallback when even the
+//!   probe fails.
 //!
-//! [`auto`] picks `Calibrated` when a PJRT session can open (artifacts
-//! present) and falls back to `Analytical` otherwise; callers surface the
-//! resulting [`CostSource`] so reports always say where timing came from.
+//! [`auto`] calibrates against whatever backend the given
+//! [`SessionSpec`](crate::runtime::SessionSpec) resolves to — since the
+//! native engine always opens, every machine now gets measured costs —
+//! and falls back to `Analytical` only if the probe itself errors;
+//! callers surface the resulting [`CostSource`] so reports always say
+//! where timing came from.
 
 use anyhow::Result;
 
@@ -28,7 +33,7 @@ use crate::coordinator::{EncoderConfig, FogEncoder, Method};
 use crate::data::{generate_sequence, BBox, ImageRGB, Profile};
 use crate::inr::arch::{MlpArch, NervArch};
 use crate::pipeline::decoder;
-use crate::runtime::Session;
+use crate::runtime::{Session, SessionSpec};
 use crate::training::DetTrainer;
 use crate::util::Stopwatch;
 
@@ -351,18 +356,21 @@ impl CostModel for Calibrated {
     }
 }
 
-/// Calibrate when the AOT artifacts are present, fall back to the
-/// analytical model otherwise. Callers should surface `book.source` so a
-/// fallback is always visible in run output. A probe that fails *despite*
+/// Calibrate against whatever backend `spec` resolves to (the native
+/// engine always opens, so this measures real timings even without
+/// `artifacts/`), falling back to the analytical model only when the
+/// session or probe errors. Callers should surface `book.source` so a
+/// fallback is always visible in run output; a probe that fails *despite*
 /// an open session is a real error, not a missing-artifacts situation —
 /// it is reported on stderr rather than silently swallowed.
 pub fn auto(
+    spec: &SessionSpec,
     cfg: &ArchConfig,
     profile: Profile,
     method: Method,
     enc: &EncoderConfig,
 ) -> CostBook {
-    match Session::open_default() {
+    match spec.open() {
         Ok(session) => match Calibrated::probe(&session, cfg, profile, method, enc) {
             Ok(c) => c.book(),
             Err(e) => {
@@ -373,7 +381,13 @@ pub fn auto(
                 Analytical::new(cfg, profile, method, enc).book()
             }
         },
-        Err(_) => Analytical::new(cfg, profile, method, enc).book(),
+        Err(e) => {
+            eprintln!(
+                "costmodel: session open failed ({e:#}); \
+                 falling back to the analytical model"
+            );
+            Analytical::new(cfg, profile, method, enc).book()
+        }
     }
 }
 
@@ -440,11 +454,10 @@ mod tests {
     }
 
     #[test]
-    fn probe_measures_live_costs_when_artifacts_exist() {
-        let Ok(session) = Session::open_default() else {
-            eprintln!("skipping: AOT artifacts absent (python -m compile.aot)");
-            return;
-        };
+    fn probe_measures_live_costs_on_any_backend() {
+        // `open_default` resolves to PJRT when artifacts exist and the
+        // native engine otherwise — either way the probe must succeed.
+        let session = Session::open_default().unwrap();
         let cfg = cfg();
         let enc = EncoderConfig::fast();
         let c = Calibrated::probe(
@@ -463,14 +476,18 @@ mod tests {
     }
 
     #[test]
-    fn auto_falls_back_to_analytical_without_artifacts() {
+    fn auto_is_calibrated_on_any_machine() {
+        // With the native engine as the floor, auto always measures.
         let cfg = cfg();
         let enc = EncoderConfig::fast();
-        let b = auto(&cfg, Profile::DacSdc, Method::ResRapid { direct: false }, &enc);
-        match Session::open_default() {
-            Ok(_) => assert_eq!(b.source, CostSource::Calibrated),
-            Err(_) => assert_eq!(b.source, CostSource::Analytical),
-        }
+        let b = auto(
+            &SessionSpec::auto(),
+            &cfg,
+            Profile::DacSdc,
+            Method::ResRapid { direct: false },
+            &enc,
+        );
+        assert_eq!(b.source, CostSource::Calibrated);
         assert!(b.seconds_per_step > 0.0);
     }
 }

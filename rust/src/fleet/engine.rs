@@ -115,6 +115,10 @@ struct FogRt {
     /// Bytes a full-snapshot delivery would have cost where a delta was
     /// actually sent (the compression-ratio denominator).
     delta_full_equiv: u64,
+    /// Cell-leg share of `delta_full_equiv` (broadcast copies a delta
+    /// replaced, excluding backhaul) — lets `coordinator::sim` price its
+    /// analytic cell-byte expectation net of the delta savings.
+    cell_delta_full_equiv: u64,
     /// Delta-eligible deliveries that had to fall back to a full
     /// snapshot (missing/evicted base, churned cohort, catch-up replay).
     delta_fallbacks: u64,
@@ -176,9 +180,12 @@ struct CatalogEntry {
     /// for label pseudo-blobs.
     chain: u64,
     /// `--delta`: the previous snapshot on this chain as
-    /// `(base_hash, modeled_delta_bytes)` — present only when a delta
-    /// against it is well-formed *and* strictly smaller than the full
-    /// snapshot, so a fallback count always means "base unavailable".
+    /// `(base_hash, delta_bytes)` — measured packed size when the
+    /// traffic carries real residuals, modeled otherwise. Present only
+    /// when a delta against it is well-formed *and* strictly smaller
+    /// than the full snapshot (see [`note_chain`] for how a measured
+    /// oversize residual is skipped), so a fallback count at delivery
+    /// time always means "base unavailable".
     prev: Option<(u64, u64)>,
 }
 
@@ -434,6 +441,7 @@ fn build_fogs(fc: &FleetConfig, shards: Vec<ShardTraffic>) -> Vec<FogRt> {
                 last_inr: HashMap::new(),
                 cell_base: HashMap::new(),
                 delta_full_equiv: 0,
+                cell_delta_full_equiv: 0,
                 delta_fallbacks: 0,
                 cohort: static_cohort.then(CohortCounters::default),
                 failed: false,
@@ -634,10 +642,16 @@ fn chain_key(origin: usize, slot: usize) -> u64 {
 /// Note a freshly encoded INR snapshot on its origin chain and return
 /// `(chain, prev)` for its [`CatalogEntry`]. `prev` is attached only
 /// when `--delta` is on, the previous snapshot on the slot has the same
-/// byte size (same template ⇒ a well-formed residual), and the modeled
-/// delta is strictly smaller than the full snapshot — so every later
-/// fallback genuinely means "base unavailable at the destination".
-/// With `--delta off` this never touches `rt` (state parity).
+/// byte size (same template ⇒ a well-formed residual), and the delta is
+/// strictly smaller than the full snapshot. The delta size is the blob's
+/// *measured* packed residual when the traffic carries one
+/// ([`crate::fleet::traffic::ShardTraffic::attach_measured_deltas`]);
+/// otherwise the closed-form modeled size. A measured residual that
+/// packs *larger* than the full snapshot overrides a modeled go-ahead —
+/// the adaptive skip — and that override is counted in
+/// `delta_fallbacks`; every other fallback still means "base
+/// unavailable at the destination". With `--delta off` this never
+/// touches `rt` (state parity).
 fn note_chain(
     fc: &FleetConfig,
     rt: &mut FogRt,
@@ -647,7 +661,11 @@ fn note_chain(
     bytes: u64,
     tag: &'static str,
 ) -> (u64, Option<(u64, u64)>) {
-    let slot = blob % rt.traffic.blobs.len().max(1);
+    let idx = blob % rt.traffic.blobs.len().max(1);
+    let tmpl = rt.traffic.blobs.get(idx);
+    // Measured shards group blobs into per-template chains; modeled
+    // shards have no slots and each blob template is its own chain.
+    let slot = tmpl.and_then(|b| b.slot).unwrap_or(idx);
     let chain = chain_key(fog, slot);
     let Some(dc) = &fc.delta else {
         return (chain, None);
@@ -657,8 +675,25 @@ fn note_chain(
     }
     let prev = rt.last_inr.insert(slot, (hash, bytes));
     let prev = prev.and_then(|(ph, pb)| {
-        let db = dc.modeled_bytes(bytes);
-        (pb == bytes && db < bytes).then_some((ph, db))
+        if pb != bytes {
+            return None;
+        }
+        match tmpl.and_then(|b| b.measured_delta) {
+            Some(mb) if mb < bytes => Some((ph, mb)),
+            Some(_) => {
+                // Adaptive skip: the real residual lost to the full
+                // snapshot. Count the override only when the model
+                // would have shipped a delta here.
+                if dc.modeled_bytes(bytes) < bytes {
+                    rt.delta_fallbacks += 1;
+                }
+                None
+            }
+            None => {
+                let db = dc.modeled_bytes(bytes);
+                (db < bytes).then_some((ph, db))
+            }
+        }
     });
     (chain, prev)
 }
@@ -688,6 +723,7 @@ fn resolve_cell_payload(fc: &FleetConfig, rt: &mut FogRt, e: &CatalogEntry) -> (
                 CellMode::SharedNack | CellMode::SharedPull => 1,
             };
             rt.delta_full_equiv += copies * e.bytes;
+            rt.cell_delta_full_equiv += copies * e.bytes;
             (db, "inr-delta")
         }
         Some(_) => {
@@ -920,6 +956,7 @@ fn build_report(fc: &FleetConfig, fogs: &[FogRt], makespan: f64, events: u64) ->
         delta_bytes: 0,
         delta_transfers: 0,
         delta_full_equiv_bytes: 0,
+        cell_delta_full_equiv_bytes: 0,
         delta_fallbacks: 0,
         repair_bytes: 0,
         control_bytes: 0,
@@ -970,6 +1007,7 @@ fn build_report(fc: &FleetConfig, fogs: &[FogRt], makespan: f64, events: u64) ->
         report.delta_bytes += delta;
         report.delta_transfers += delta_tx;
         report.delta_full_equiv_bytes += rt.delta_full_equiv;
+        report.cell_delta_full_equiv_bytes += rt.cell_delta_full_equiv;
         report.delta_fallbacks += rt.delta_fallbacks;
         report.repair_bytes += repair;
         report.control_bytes += control;
@@ -3028,6 +3066,10 @@ mod tests {
         assert!(r.delta_transfers > 0);
         assert_eq!(r.delta_fallbacks, 0, "a static cohort never invalidates its base");
         assert!(r.delta_full_equiv_bytes > r.delta_bytes, "delta only rides when it wins");
+        assert_eq!(
+            r.cell_delta_full_equiv_bytes, r.delta_full_equiv_bytes,
+            "single fog: every delta leg is a cell leg"
+        );
         assert!(r.delta_compression_ratio() < 1.0);
         assert!(r.total_bytes < full.total_bytes);
         // Exact reconciliation: the saved bytes are the full-equivalent
@@ -3071,6 +3113,58 @@ mod tests {
                 "{policy:?}"
             );
         }
+    }
+
+    #[test]
+    fn measured_deltas_ride_slotted_chains_and_oversize_residuals_skip() {
+        // Measured traffic (coordinator::sim with --delta): blobs carry
+        // per-template slots and real packed residual sizes. Three
+        // same-size snapshots on one chain — the second's residual wins
+        // (100 B < 400 B) and ships measured; the third's residual packs
+        // no smaller than full, so even though the closed-form model
+        // would have shipped it, the adaptive skip overrides and counts
+        // with the fallbacks. Per-receiver legs on a 3-receiver cell.
+        let m = Method::RapidSingle;
+        let shard = || {
+            let mut s = tiny_shard(m, vec![1000; 3], &[400, 400, 400]);
+            for b in &mut s.blobs {
+                b.slot = Some(0);
+            }
+            s.blobs[1].measured_delta = Some(100);
+            s.blobs[2].measured_delta = Some(400);
+            s
+        };
+        let fc = base_fc(m, 4); // 1 source + 3 receivers
+        let mut dfc = fc.clone();
+        dfc.delta = Some(DeltaConfig::default_on());
+        assert!(
+            dfc.delta.unwrap().modeled_bytes(400) < 400,
+            "the model must price this chain step as a win for the skip to override"
+        );
+        let full = simulate(&fc, vec![shard()]);
+        let r = simulate(&dfc, vec![shard()]);
+        assert_eq!(r.delta_bytes, 3 * 100, "the measured residual ships at its packed size");
+        assert_eq!(r.delta_transfers, 3);
+        assert_eq!(r.delta_full_equiv_bytes, 3 * 400);
+        assert_eq!(
+            r.cell_delta_full_equiv_bytes, r.delta_full_equiv_bytes,
+            "single-fog batch: every delta leg is a cell leg"
+        );
+        assert_eq!(r.delta_fallbacks, 1, "exactly the oversize-residual override");
+        // Byte reconciliation against the delta-off oracle.
+        assert_eq!(full.broadcast_bytes, r.broadcast_bytes + r.delta_full_equiv_bytes);
+        assert_eq!(full.total_bytes, r.total_bytes + r.delta_full_equiv_bytes - r.delta_bytes);
+        // Without slots the same blobs are three independent chains:
+        // batch mode stays inert (this is the modeled-shard shape).
+        let mut plain = shard();
+        for b in &mut plain.blobs {
+            b.slot = None;
+            b.measured_delta = None;
+        }
+        let inert = simulate(&dfc, vec![plain]);
+        assert_eq!(inert.delta_bytes, 0);
+        assert_eq!(inert.delta_fallbacks, 0);
+        assert_eq!(inert.total_bytes, full.total_bytes);
     }
 
     #[test]
@@ -3165,6 +3259,10 @@ mod tests {
                 assert_eq!(w.delta_bytes, seq.delta_bytes, "shed={shed} threads={threads}");
                 assert_eq!(
                     w.delta_full_equiv_bytes, seq.delta_full_equiv_bytes,
+                    "shed={shed} threads={threads}"
+                );
+                assert_eq!(
+                    w.cell_delta_full_equiv_bytes, seq.cell_delta_full_equiv_bytes,
                     "shed={shed} threads={threads}"
                 );
                 assert_eq!(

@@ -118,8 +118,16 @@ pub struct FleetReport {
     /// full snapshots — the denominator of
     /// [`delta_compression_ratio`](Self::delta_compression_ratio).
     pub delta_full_equiv_bytes: u64,
+    /// `--delta`: the cell-leg share of
+    /// [`delta_full_equiv_bytes`](Self::delta_full_equiv_bytes)
+    /// (broadcast copies a delta replaced, backhaul excluded) —
+    /// `coordinator::sim` subtracts it from the analytic cell-byte
+    /// expectation so byte parity holds with deltas riding.
+    pub cell_delta_full_equiv_bytes: u64,
     /// `--delta`: delta-eligible deliveries that fell back to full
-    /// snapshots (missing/evicted base, churned cohort, catch-up).
+    /// snapshots (missing/evicted base, churned cohort, catch-up), plus
+    /// adaptive skips where the measured residual packed larger than
+    /// the full snapshot the model priced it under.
     pub delta_fallbacks: u64,
     /// Delivered-class total (`upload + broadcast + label + backhaul +
     /// pull + catchup + delta`); see [`raw_bytes`](Self::raw_bytes) for

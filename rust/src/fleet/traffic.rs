@@ -12,15 +12,18 @@
 //! [`ShardTraffic::from_records`] wraps *measured* records instead, which
 //! is how `coordinator::sim` adapts its live run onto the fleet engine.
 
+use std::collections::HashMap;
+
 use crate::codec::jpeg;
 use crate::config::ArchConfig;
 use crate::coordinator::sim::LABEL_BYTES_PER_FRAME;
 use crate::coordinator::{EncoderConfig, Method};
 use crate::data::Dataset;
-use crate::inr::{quantize, Bits, QuantWeightSet, Record, WeightSet};
+use crate::inr::{delta, dequantize, quantize, Bits, QuantWeightSet, Record, WeightSet};
 use crate::runtime::names;
 
 use super::cache::blob_hash;
+use super::scenario::DeltaConfig;
 
 /// One transmission unit as the fleet engine sees it.
 #[derive(Debug, Clone)]
@@ -39,6 +42,18 @@ pub struct Blob {
     pub n_frames: u32,
     /// Byte-accounting tag ("inr-broadcast" or "jpeg-direct").
     pub tag: &'static str,
+    /// Weight-chain slot for `--delta` (set by
+    /// [`ShardTraffic::attach_measured_deltas`]): blobs sharing a slot
+    /// are consecutive snapshots of the same template, so the engine can
+    /// diff them. The engine falls back to the blob index when absent
+    /// (modeled shards, where the blob list itself is the template list).
+    pub slot: Option<usize>,
+    /// Measured packed size of the residual delta against the previous
+    /// snapshot on the same slot ([`crate::inr::delta::encode`] over the
+    /// record's dequantized weights). `None` on chain heads and modeled
+    /// shards — the engine then prices deltas with
+    /// [`crate::fleet::scenario::DeltaConfig::modeled_bytes`].
+    pub measured_delta: Option<u64>,
 }
 
 /// The full over-the-air footprint of one fog shard.
@@ -102,6 +117,54 @@ impl ShardTraffic {
             .collect();
         ShardTraffic { method, n_frames, uploads, blobs }
     }
+
+    /// Measure real residual deltas along the shard's weight chains
+    /// (`--delta` over *measured* records, where trained weight values
+    /// exist). INR records are grouped by template — same variant and
+    /// architecture(s), hence identical tensor shapes — and consecutive
+    /// snapshots per template form one chain: the first record's blob
+    /// index becomes the shared `slot`, and every later snapshot gets
+    /// the packed size of [`crate::inr::delta::encode`] against the
+    /// weights its receiver holds (the previous reconstruction), at the
+    /// configured width and with the magnitude threshold chosen so
+    /// `dc.sparsity` of the residual entries drop. The engine compares
+    /// this measured size against the full snapshot per delivery and
+    /// keeps whichever is cheaper.
+    pub fn attach_measured_deltas(&mut self, records: &[Record], dc: &DeltaConfig) {
+        let bits = match dc.bits {
+            8 => Bits::B8,
+            16 => Bits::B16,
+            _ => Bits::F32,
+        };
+        // template → (slot, weights the receivers currently hold).
+        let mut chains: HashMap<String, (usize, WeightSet)> = HashMap::new();
+        for (i, rec) in records.iter().enumerate().take(self.blobs.len()) {
+            if self.blobs[i].tag != "inr-broadcast" {
+                continue;
+            }
+            let (Some(key), Some(ws)) = (record_template(rec), record_weights(rec)) else {
+                continue;
+            };
+            match chains.get_mut(&key) {
+                Some((slot, base)) => {
+                    self.blobs[i].slot = Some(*slot);
+                    let t = delta::sparsity_threshold(base, &ws, dc.sparsity);
+                    if let Ok((d, recon)) = delta::encode(base, &ws, bits, t) {
+                        self.blobs[i].measured_delta = Some(d.byte_size() as u64);
+                        *base = recon;
+                    } else {
+                        // Shape drift within a template cannot happen by
+                        // construction; keep the chain honest if it does.
+                        *base = ws;
+                    }
+                }
+                None => {
+                    self.blobs[i].slot = Some(i);
+                    chains.insert(key, (i, ws));
+                }
+            }
+        }
+    }
 }
 
 /// Blob metadata for one packed record.
@@ -126,6 +189,45 @@ pub fn blob_from_record(
         ready_after_frame,
         n_frames,
         tag,
+        slot: None,
+        measured_delta: None,
+    }
+}
+
+/// Template identity of an INR record: the weight-chain key two records
+/// must share for one to be a well-formed residual base of the other
+/// (same variant, same architectures ⇒ same tensor shapes and byte
+/// size). JPEG records carry no weights and have no template.
+fn record_template(rec: &Record) -> Option<String> {
+    match rec {
+        Record::SingleImage { arch, .. } => Some(format!("single:{arch}")),
+        Record::ResidualImage { direct, bg_arch, obj_arch, .. } => {
+            Some(format!("residual:{bg_arch}:{obj_arch}:{direct}"))
+        }
+        Record::VideoNet { arch, n_frames, .. } => Some(format!("video:{arch}:{n_frames}")),
+        Record::ObjectPatch { direct, obj_arch, .. } => {
+            Some(format!("object:{obj_arch}:{direct}"))
+        }
+        Record::Jpeg { .. } => None,
+    }
+}
+
+/// The full trained weight snapshot a record transmits, dequantized to
+/// the values a receiver materializes (for `ResidualImage` the
+/// background and object sets concatenate — the template fixes both
+/// architectures, so shapes line up along any chain).
+fn record_weights(rec: &Record) -> Option<WeightSet> {
+    match rec {
+        Record::SingleImage { weights, .. } | Record::VideoNet { weights, .. } => {
+            Some(dequantize(weights))
+        }
+        Record::ResidualImage { bg, obj, .. } => {
+            let mut ws = dequantize(bg);
+            ws.tensors.extend(dequantize(obj).tensors);
+            Some(ws)
+        }
+        Record::ObjectPatch { obj, .. } => Some(dequantize(obj)),
+        Record::Jpeg { .. } => None,
     }
 }
 
@@ -376,6 +478,64 @@ mod tests {
         let t = ShardTraffic::from_records(Method::ResNerv, 5, vec![1; 5], &recs, &enc);
         let ready: Vec<usize> = t.blobs.iter().map(|b| b.ready_after_frame).collect();
         assert_eq!(ready, vec![2, 2, 2, 2, 4]);
+    }
+
+    #[test]
+    fn attach_measured_deltas_builds_template_chains() {
+        use crate::inr::Tensor;
+        use crate::util::rng::Pcg32;
+        let enc = EncoderConfig::fast();
+        let mut rng = Pcg32::seeded(5);
+        let base: Vec<f32> = (0..300).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let drift = |rng: &mut Pcg32, data: &[f32]| -> Vec<f32> {
+            data.iter().map(|&v| v + rng.range_f32(-0.01, 0.01)).collect()
+        };
+        let next = drift(&mut rng, &base);
+        let next2 = drift(&mut rng, &next);
+        let other: Vec<f32> = (0..300).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let ws = |data: Vec<f32>| {
+            WeightSet::new(vec![Tensor::new("w".to_string(), vec![300], data)])
+        };
+        let single = |id: u32, arch: &str, data: Vec<f32>| Record::SingleImage {
+            frame_id: id,
+            arch: arch.to_string(),
+            weights: quantize(&ws(data), Bits::B16),
+        };
+        let recs = vec![
+            single(0, "a", base),
+            Record::Jpeg { frame_id: 1, bytes: vec![3; 90] },
+            single(2, "a", next),
+            single(3, "b", other),
+            single(4, "a", next2),
+        ];
+        let mut t = ShardTraffic::from_records(Method::RapidSingle, 5, vec![], &recs, &enc);
+        t.attach_measured_deltas(&recs, &DeltaConfig::default_on());
+        // Chain heads carry their slot but no delta; JPEG records carry
+        // neither; arch "b" starts its own chain.
+        assert_eq!(t.blobs[0].slot, Some(0));
+        assert_eq!(t.blobs[0].measured_delta, None);
+        assert_eq!(t.blobs[1].slot, None);
+        assert_eq!(t.blobs[1].measured_delta, None);
+        assert_eq!(t.blobs[3].slot, Some(3));
+        assert_eq!(t.blobs[3].measured_delta, None);
+        // Successive snapshots of arch "a" share slot 0 and carry a
+        // measured residual that beats the full snapshot (a small drift
+        // at --delta's 8-bit half-dropped residual must win).
+        for i in [2usize, 4] {
+            assert_eq!(t.blobs[i].slot, Some(0));
+            let md = t.blobs[i].measured_delta.expect("chained snapshot measures a delta");
+            assert!(0 < md && md < t.blobs[i].bytes, "blob {i}: delta {md} vs {}", t.blobs[i].bytes);
+        }
+        // Idempotent shape: re-attaching rebuilds the same chains.
+        let again = {
+            let mut t2 = ShardTraffic::from_records(Method::RapidSingle, 5, vec![], &recs, &enc);
+            t2.attach_measured_deltas(&recs, &DeltaConfig::default_on());
+            t2
+        };
+        for (a, b) in t.blobs.iter().zip(&again.blobs) {
+            assert_eq!(a.slot, b.slot);
+            assert_eq!(a.measured_delta, b.measured_delta);
+        }
     }
 
     #[test]

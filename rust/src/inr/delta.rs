@@ -410,6 +410,33 @@ pub fn modeled_delta_bytes(full_bytes: u64, width: u64, drop_frac: f64) -> u64 {
     (MODELED_OVERHEAD_BYTES + dense.min(index).min(bitmap)).min(full_bytes)
 }
 
+/// Magnitude threshold that drops ~`drop_frac` of the residual entries
+/// between two snapshots — the measured counterpart of the `drop_frac`
+/// knob [`modeled_delta_bytes`] prices in closed form. Returns the
+/// `drop_frac` quantile of the value-domain residual magnitudes, so
+/// [`encode`] (which keeps entries at or above the threshold) drops
+/// roughly that fraction. `0.0` keeps every entry; `>= 1.0` drops all
+/// of them (the header-only degenerate delta).
+pub fn sparsity_threshold(base: &WeightSet, next: &WeightSet, drop_frac: f64) -> f32 {
+    if drop_frac <= 0.0 {
+        return 0.0;
+    }
+    if drop_frac >= 1.0 {
+        return f32::INFINITY;
+    }
+    let mut mags: Vec<f32> = base
+        .tensors
+        .iter()
+        .zip(&next.tensors)
+        .flat_map(|(b, n)| b.data.iter().zip(&n.data).map(|(&bv, &nv)| (nv - bv).abs()))
+        .collect();
+    if mags.is_empty() {
+        return 0.0;
+    }
+    mags.sort_unstable_by(f32::total_cmp);
+    mags[((mags.len() as f64) * drop_frac) as usize]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -451,6 +478,33 @@ mod tests {
             })
             .collect();
         WeightSet::new(tensors)
+    }
+
+    #[test]
+    fn sparsity_threshold_tracks_drop_fraction() {
+        let mut rng = Pcg32::seeded(71);
+        let base = rand_ws(&mut rng, 3, 400);
+        let next = perturb(&mut rng, &base, 1.0, 0.3);
+        let n: usize = base.tensors.iter().map(|t| t.data.len()).sum();
+        assert_eq!(sparsity_threshold(&base, &next, 0.0), 0.0);
+        assert_eq!(sparsity_threshold(&base, &next, 1.0), f32::INFINITY);
+        let dropped_at = |frac: f64| {
+            let t = sparsity_threshold(&base, &next, frac);
+            base.tensors
+                .iter()
+                .zip(&next.tensors)
+                .flat_map(|(b, nx)| b.data.iter().zip(&nx.data))
+                .filter(|(&bv, &nv)| (nv - bv).abs() < t)
+                .count()
+        };
+        for frac in [0.25, 0.5, 0.75] {
+            let d = dropped_at(frac) as f64 / n as f64;
+            assert!((d - frac).abs() < 0.05, "asked to drop {frac}, dropped {d:.3}");
+        }
+        assert!(
+            sparsity_threshold(&base, &next, 0.2) <= sparsity_threshold(&base, &next, 0.8),
+            "threshold must grow with the drop fraction"
+        );
     }
 
     #[test]

@@ -5,6 +5,7 @@
 pub mod arch;
 pub mod delta;
 pub mod kernels;
+pub mod nn;
 pub mod pack;
 pub mod quantize;
 pub mod weights;

@@ -1,0 +1,980 @@
+//! Native MLP compute kernels: the coordinate-MLP (Rapid-INR) forward
+//! pass, backward pass, fused Adam update and masked-MSE loss, implemented
+//! as lane-parallel kernels behind the same runtime-dispatch pattern as
+//! [`crate::codec::kernels`] / [`crate::inr::kernels`].
+//!
+//! Numerics mirror `python/compile/kernels/ref.py` + `model.py` exactly in
+//! *formula* (posenc layout, SIREN sine activations, the
+//! `0.5·(tanh(0.5x)+1)` sigmoid, masked MSE over `max(Σmask,1)·3`, Adam
+//! with bias correction), so a natively trained INR converges like the AOT
+//! artifact — but bit-level agreement is only guaranteed *within* this
+//! module, not against XLA.
+//!
+//! # Dispatch matrix
+//!
+//! | Kernel            | Scalar | AVX2 | NEON |
+//! |-------------------|--------|------|------|
+//! | `matmul_bias`     | ✓      | ✓    | ✓    |
+//! | `accum_outer`     | ✓      | ✓    | ✓    |
+//! | `adam_update`     | ✓      | ✓    | ✓    |
+//!
+//! # Bit-exactness contract
+//!
+//! Every kernel is bit-identical across Scalar/AVX2/NEON and across any
+//! worker count, by construction:
+//!
+//! * SIMD lanes map to *independent* output columns (or elements) — there
+//!   is no cross-lane reduction anywhere. Each output's accumulation chain
+//!   runs in the same fixed order (inner dim ascending for matmuls, row
+//!   ascending for outer-product accumulation) with separate mul + add
+//!   (no FMA contraction), so lane width cannot change results.
+//! * Row-blocked reductions (`dW`, `db`, loss) accumulate per fixed
+//!   [`ROW_BLOCK`]-row block and merge block partials in ascending block
+//!   order on one thread, so the worker count cannot change results.
+//!
+//! `RESIDUAL_INR_NO_SIMD=1` forces the scalar oracle (shared switch with
+//! the codec kernels); `RESIDUAL_INR_NATIVE_THREADS=N` pins the row-block
+//! worker count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::inr::arch::MlpArch;
+
+pub use crate::codec::kernels::{active, available_backends, Backend};
+
+/// Adam hyper-parameters (mirror of `model.py`).
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+/// Learning rate for INR fits (Rapid + NeRV artifacts).
+pub const INR_LR: f32 = 1e-2;
+/// Learning rate for TinyDet fine-tuning.
+pub const DET_LR: f32 = 1e-3;
+
+/// Fixed row-block size of all batched reductions. Part of the numeric
+/// contract: changing it changes trained bits (never results *quality*).
+pub const ROW_BLOCK: usize = 256;
+
+// ---------------------------------------------------------------------------
+// Shared scalar pieces (identical on every backend)
+// ---------------------------------------------------------------------------
+
+/// `0.5·(tanh(0.5·x)+1)` — the exact sigmoid formula of `ref.jax_sigmoid`.
+#[inline]
+pub fn jax_sigmoid(x: f32) -> f32 {
+    0.5 * ((0.5 * x).tanh() + 1.0)
+}
+
+/// NeRF-style positional encoding of one `(rows, d)` coordinate block into
+/// `(rows, d + 2·d·freqs)`: per row `[x.., sin(2^k π x).., cos(2^k π x)..]`
+/// for `k < freqs` (matches `ref.posenc`'s concatenation order).
+pub fn posenc_into(coords: &[f32], rows: usize, d: usize, freqs: usize, out: &mut [f32]) {
+    let od = d + 2 * d * freqs;
+    debug_assert!(coords.len() >= rows * d && out.len() >= rows * od);
+    for r in 0..rows {
+        let c = &coords[r * d..(r + 1) * d];
+        let o = &mut out[r * od..(r + 1) * od];
+        o[..d].copy_from_slice(c);
+        let mut at = d;
+        for k in 0..freqs {
+            let w = (1u32 << k) as f32 * std::f32::consts::PI;
+            for &x in c {
+                o[at] = (w * x).sin();
+                at += 1;
+            }
+            for &x in c {
+                o[at] = (w * x).cos();
+                at += 1;
+            }
+        }
+    }
+}
+
+/// Positional-encoded width of a `d`-dim coordinate.
+pub fn posenc_dim(d: usize, freqs: usize) -> usize {
+    d + 2 * d * freqs
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched kernels
+// ---------------------------------------------------------------------------
+
+/// `out[r][j] = bias[j] + Σ_k x[r][k]·w[k][j]` (row-major everywhere),
+/// accumulated over `k` ascending starting from the bias — one scalar
+/// chain per output, identical on every backend.
+pub fn matmul_bias(
+    x: &[f32],
+    rows: usize,
+    kd: usize,
+    w: &[f32],
+    jd: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    matmul_bias_on(active(), x, rows, kd, w, jd, bias, out)
+}
+
+/// [`matmul_bias`] pinned to a backend (parity tests).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bias_on(
+    be: Backend,
+    x: &[f32],
+    rows: usize,
+    kd: usize,
+    w: &[f32],
+    jd: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    debug_assert!(x.len() >= rows * kd && w.len() >= kd * jd && out.len() >= rows * jd);
+    if let Some(b) = bias {
+        debug_assert!(b.len() >= jd);
+    }
+    for r in 0..rows {
+        let xr = &x[r * kd..(r + 1) * kd];
+        let or = &mut out[r * jd..(r + 1) * jd];
+        let done = match be {
+            Backend::Scalar => 0,
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Avx2 only enters `available_backends()`/`active()`
+            // after `is_x86_feature_detected!("avx2")` succeeded.
+            Backend::Avx2 => unsafe { avx2::matmul_row(xr, w, jd, bias, or) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is baseline on aarch64 std targets.
+            Backend::Neon => unsafe { neon::matmul_row(xr, w, jd, bias, or) },
+            // Foreign backend on this arch: fall through to scalar.
+            #[allow(unreachable_patterns)]
+            _ => 0,
+        };
+        scalar_matmul_row(xr, w, jd, bias, or, done);
+    }
+}
+
+/// The verbatim scalar loop for columns `from..jd` of one output row —
+/// the always-compiled oracle the SIMD paths must match bit-for-bit.
+fn scalar_matmul_row(
+    xr: &[f32],
+    w: &[f32],
+    jd: usize,
+    bias: Option<&[f32]>,
+    or: &mut [f32],
+    from: usize,
+) {
+    for j in from..jd {
+        let mut acc = bias.map_or(0.0, |b| b[j]);
+        for (k, &xk) in xr.iter().enumerate() {
+            acc += xk * w[k * jd + j];
+        }
+        or[j] = acc;
+    }
+}
+
+/// Accumulate the outer-product gradient of one linear layer over a row
+/// block: `dw[k][j] += x[r][k]·dz[r][j]` and `db[j] += dz[r][j]`, rows
+/// ascending. Callers own the block partial; merge partials in block order.
+pub fn accum_outer(
+    x: &[f32],
+    rows: usize,
+    kd: usize,
+    dz: &[f32],
+    jd: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    accum_outer_on(active(), x, rows, kd, dz, jd, dw, db)
+}
+
+/// [`accum_outer`] pinned to a backend (parity tests).
+#[allow(clippy::too_many_arguments)]
+pub fn accum_outer_on(
+    be: Backend,
+    x: &[f32],
+    rows: usize,
+    kd: usize,
+    dz: &[f32],
+    jd: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    debug_assert!(x.len() >= rows * kd && dz.len() >= rows * jd);
+    debug_assert!(dw.len() >= kd * jd && db.len() >= jd);
+    for r in 0..rows {
+        let xr = &x[r * kd..(r + 1) * kd];
+        let dzr = &dz[r * jd..(r + 1) * jd];
+        // db: one scalar chain per column, row-ascending (shared code).
+        for (b, &d) in db.iter_mut().zip(dzr) {
+            *b += d;
+        }
+        for (k, &xk) in xr.iter().enumerate() {
+            let dwk = &mut dw[k * jd..(k + 1) * jd];
+            let done = match be {
+                Backend::Scalar => 0,
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: Avx2 implies a successful runtime AVX2 check.
+                Backend::Avx2 => unsafe { avx2::axpy(xk, dzr, dwk) },
+                #[cfg(target_arch = "aarch64")]
+                // SAFETY: NEON is baseline on aarch64 std targets.
+                Backend::Neon => unsafe { neon::axpy(xk, dzr, dwk) },
+                #[allow(unreachable_patterns)]
+                _ => 0,
+            };
+            for j in done..jd {
+                dwk[j] += xk * dzr[j];
+            }
+        }
+    }
+}
+
+/// One fused Adam update over a flat tensor:
+/// `m = β1·m + (1-β1)·g`, `v = β2·v + ((1-β2)·g)·g`,
+/// `p -= (lr·(m/b1t)) / (sqrt(v/b2t) + ε)` — elementwise, so lane width
+/// cannot change bits; sqrt/div are IEEE-exact on every backend.
+pub fn adam_update(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, b1t: f32, b2t: f32) {
+    adam_update_on(active(), p, m, v, g, lr, b1t, b2t)
+}
+
+/// [`adam_update`] pinned to a backend (parity tests).
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update_on(
+    be: Backend,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    b1t: f32,
+    b2t: f32,
+) {
+    let n = p.len();
+    debug_assert!(m.len() == n && v.len() == n && g.len() == n);
+    let done = match be {
+        Backend::Scalar => 0,
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 implies a successful runtime AVX2 check.
+        Backend::Avx2 => unsafe { avx2::adam(p, m, v, g, lr, b1t, b2t) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 std targets.
+        Backend::Neon => unsafe { neon::adam(p, m, v, g, lr, b1t, b2t) },
+        #[allow(unreachable_patterns)]
+        _ => 0,
+    };
+    scalar_adam(p, m, v, g, lr, b1t, b2t, done);
+}
+
+/// The always-compiled Adam oracle over elements `from..`.
+#[allow(clippy::too_many_arguments)]
+fn scalar_adam(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    b1t: f32,
+    b2t: f32,
+    from: usize,
+) {
+    for i in from..p.len() {
+        let gi = g[i];
+        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * gi;
+        v[i] = ADAM_B2 * v[i] + ((1.0 - ADAM_B2) * gi) * gi;
+        let mhat = m[i] / b1t;
+        let vhat = v[i] / b2t;
+        p[i] -= (lr * mhat) / (vhat.sqrt() + ADAM_EPS);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD backends
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// One matmul output row, 8 columns per lane-group; returns columns done.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_row(
+        xr: &[f32],
+        w: &[f32],
+        jd: usize,
+        bias: Option<&[f32]>,
+        or: &mut [f32],
+    ) -> usize {
+        let chunks = jd / 8;
+        for c in 0..chunks {
+            let j0 = c * 8;
+            let mut acc = match bias {
+                Some(b) => _mm256_loadu_ps(b.as_ptr().add(j0)),
+                None => _mm256_setzero_ps(),
+            };
+            for (k, &xk) in xr.iter().enumerate() {
+                let wv = _mm256_loadu_ps(w.as_ptr().add(k * jd + j0));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(xk), wv));
+            }
+            _mm256_storeu_ps(or.as_mut_ptr().add(j0), acc);
+        }
+        chunks * 8
+    }
+
+    /// `dst[j] += a·src[j]` over the 8-aligned prefix; returns elements done.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(a: f32, src: &[f32], dst: &mut [f32]) -> usize {
+        let n = src.len().min(dst.len());
+        let chunks = n / 8;
+        let av = _mm256_set1_ps(a);
+        for c in 0..chunks {
+            let i = c * 8;
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let s = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(d, _mm256_mul_ps(av, s)));
+        }
+        chunks * 8
+    }
+
+    /// Fused Adam over the 8-aligned prefix; returns elements done.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn adam(
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        b1t: f32,
+        b2t: f32,
+    ) -> usize {
+        use super::{ADAM_B1, ADAM_B2, ADAM_EPS};
+        let chunks = p.len() / 8;
+        let b1 = _mm256_set1_ps(ADAM_B1);
+        let nb1 = _mm256_set1_ps(1.0 - ADAM_B1);
+        let b2 = _mm256_set1_ps(ADAM_B2);
+        let nb2 = _mm256_set1_ps(1.0 - ADAM_B2);
+        let b1tv = _mm256_set1_ps(b1t);
+        let b2tv = _mm256_set1_ps(b2t);
+        let lrv = _mm256_set1_ps(lr);
+        let eps = _mm256_set1_ps(ADAM_EPS);
+        for c in 0..chunks {
+            let i = c * 8;
+            let gv = _mm256_loadu_ps(g.as_ptr().add(i));
+            let mv = _mm256_add_ps(
+                _mm256_mul_ps(b1, _mm256_loadu_ps(m.as_ptr().add(i))),
+                _mm256_mul_ps(nb1, gv),
+            );
+            let vv = _mm256_add_ps(
+                _mm256_mul_ps(b2, _mm256_loadu_ps(v.as_ptr().add(i))),
+                _mm256_mul_ps(_mm256_mul_ps(nb2, gv), gv),
+            );
+            _mm256_storeu_ps(m.as_mut_ptr().add(i), mv);
+            _mm256_storeu_ps(v.as_mut_ptr().add(i), vv);
+            let mhat = _mm256_div_ps(mv, b1tv);
+            let vhat = _mm256_div_ps(vv, b2tv);
+            let upd = _mm256_div_ps(
+                _mm256_mul_ps(lrv, mhat),
+                _mm256_add_ps(_mm256_sqrt_ps(vhat), eps),
+            );
+            let pv = _mm256_sub_ps(_mm256_loadu_ps(p.as_ptr().add(i)), upd);
+            _mm256_storeu_ps(p.as_mut_ptr().add(i), pv);
+        }
+        chunks * 8
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// One matmul output row, 4 columns per lane-group; returns columns
+    /// done. `vmulq`+`vaddq` stay separate — `vfmaq` would fuse the
+    /// rounding step the scalar oracle performs.
+    pub unsafe fn matmul_row(
+        xr: &[f32],
+        w: &[f32],
+        jd: usize,
+        bias: Option<&[f32]>,
+        or: &mut [f32],
+    ) -> usize {
+        let chunks = jd / 4;
+        for c in 0..chunks {
+            let j0 = c * 4;
+            let mut acc = match bias {
+                Some(b) => vld1q_f32(b.as_ptr().add(j0)),
+                None => vdupq_n_f32(0.0),
+            };
+            for (k, &xk) in xr.iter().enumerate() {
+                let wv = vld1q_f32(w.as_ptr().add(k * jd + j0));
+                acc = vaddq_f32(acc, vmulq_f32(vdupq_n_f32(xk), wv));
+            }
+            vst1q_f32(or.as_mut_ptr().add(j0), acc);
+        }
+        chunks * 4
+    }
+
+    /// `dst[j] += a·src[j]` over the 4-aligned prefix; returns elements done.
+    pub unsafe fn axpy(a: f32, src: &[f32], dst: &mut [f32]) -> usize {
+        let n = src.len().min(dst.len());
+        let chunks = n / 4;
+        let av = vdupq_n_f32(a);
+        for c in 0..chunks {
+            let i = c * 4;
+            let d = vld1q_f32(dst.as_ptr().add(i));
+            let s = vld1q_f32(src.as_ptr().add(i));
+            vst1q_f32(dst.as_mut_ptr().add(i), vaddq_f32(d, vmulq_f32(av, s)));
+        }
+        chunks * 4
+    }
+
+    /// Fused Adam over the 4-aligned prefix; returns elements done.
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn adam(
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        b1t: f32,
+        b2t: f32,
+    ) -> usize {
+        use super::{ADAM_B1, ADAM_B2, ADAM_EPS};
+        let chunks = p.len() / 4;
+        let b1 = vdupq_n_f32(ADAM_B1);
+        let nb1 = vdupq_n_f32(1.0 - ADAM_B1);
+        let b2 = vdupq_n_f32(ADAM_B2);
+        let nb2 = vdupq_n_f32(1.0 - ADAM_B2);
+        let b1tv = vdupq_n_f32(b1t);
+        let b2tv = vdupq_n_f32(b2t);
+        let lrv = vdupq_n_f32(lr);
+        let eps = vdupq_n_f32(ADAM_EPS);
+        for c in 0..chunks {
+            let i = c * 4;
+            let gv = vld1q_f32(g.as_ptr().add(i));
+            let mv = vaddq_f32(
+                vmulq_f32(b1, vld1q_f32(m.as_ptr().add(i))),
+                vmulq_f32(nb1, gv),
+            );
+            let vv = vaddq_f32(
+                vmulq_f32(b2, vld1q_f32(v.as_ptr().add(i))),
+                vmulq_f32(vmulq_f32(nb2, gv), gv),
+            );
+            vst1q_f32(m.as_mut_ptr().add(i), mv);
+            vst1q_f32(v.as_mut_ptr().add(i), vv);
+            let mhat = vdivq_f32(mv, b1tv);
+            let vhat = vdivq_f32(vv, b2tv);
+            let upd = vdivq_f32(vmulq_f32(lrv, mhat), vaddq_f32(vsqrtq_f32(vhat), eps));
+            let pv = vsubq_f32(vld1q_f32(p.as_ptr().add(i)), upd);
+            vst1q_f32(p.as_mut_ptr().add(i), pv);
+        }
+        chunks * 4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row-block scheduling (the `session_crew` claim-and-slot idiom, in-process)
+// ---------------------------------------------------------------------------
+
+/// Run `f(block)` for every block index, fanning out across `workers`
+/// scoped threads that claim indices off a shared counter; results come
+/// back in block order regardless of scheduling, so reductions that merge
+/// them sequentially are worker-count-invariant.
+fn run_blocks<T, F>(nblocks: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.clamp(1, nblocks.max(1));
+    if workers <= 1 {
+        return (0..nblocks).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..nblocks).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let (next, slots, f) = (&next, &slots, &f);
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= nblocks {
+                    break;
+                }
+                *slots[i].lock().expect("block slot poisoned") = Some(f(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| {
+            s.into_inner()
+                .expect("block slot poisoned")
+                .unwrap_or_else(|| panic!("block {i} never claimed"))
+        })
+        .collect()
+}
+
+/// Worker count for a batch of `rows` coordinate rows: honors
+/// `RESIDUAL_INR_NATIVE_THREADS`, engages threads only for full-frame-size
+/// batches, and caps at 8 (the encode crew may already be fanned out).
+pub fn default_workers(rows: usize) -> usize {
+    if let Ok(s) = std::env::var("RESIDUAL_INR_NATIVE_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    if rows < 4096 {
+        return 1;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+// ---------------------------------------------------------------------------
+// The coordinate-MLP network
+// ---------------------------------------------------------------------------
+
+/// Gradient partial of one row block: per-layer `dW`/`db` plus the block's
+/// squared-error sum, merged in block order by the caller.
+struct BlockGrads {
+    dw: Vec<Vec<f32>>,
+    db: Vec<Vec<f32>>,
+    se_sum: f32,
+}
+
+/// A Rapid-INR coordinate MLP bound to one [`MlpArch`] shape.
+pub struct MlpNet {
+    /// Per-layer IO widths: `[in_dim, hidden…, 3]`.
+    pub dims: Vec<usize>,
+    pub posenc: usize,
+    pub sigmoid_out: bool,
+}
+
+impl MlpNet {
+    pub fn new(arch: &MlpArch) -> MlpNet {
+        let mut dims = vec![arch.in_dim()];
+        dims.extend(std::iter::repeat(arch.hidden).take(arch.layers - 1));
+        dims.push(3);
+        MlpNet { dims, posenc: arch.posenc, sigmoid_out: arch.sigmoid_out }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// Forward pass over `(n, 2)` coords; returns `(n, 3)` row-major.
+    /// `params` is the flat `[w0, b0, w1, b1, …]` list.
+    pub fn forward(&self, params: &[&[f32]], coords: &[f32], n: usize, workers: usize) -> Vec<f32> {
+        assert_eq!(params.len(), 2 * self.layers(), "param tensor count");
+        let nblocks = n.div_ceil(ROW_BLOCK).max(1);
+        let blocks = run_blocks(nblocks, workers.min(default_cap(n)), |b| {
+            let r0 = b * ROW_BLOCK;
+            let rows = ROW_BLOCK.min(n - r0);
+            self.forward_block(params, &coords[r0 * 2..(r0 + rows) * 2], rows)
+        });
+        let mut out = Vec::with_capacity(n * 3);
+        for blk in blocks {
+            out.extend_from_slice(&blk);
+        }
+        out
+    }
+
+    /// Forward one row block, returning `(rows, 3)`.
+    fn forward_block(&self, params: &[&[f32]], coords: &[f32], rows: usize) -> Vec<f32> {
+        let maxd = *self.dims.iter().max().unwrap();
+        let mut a = vec![0.0f32; rows * maxd];
+        let mut z = vec![0.0f32; rows * maxd];
+        posenc_into(coords, rows, 2, self.posenc, &mut a);
+        let nl = self.layers();
+        for l in 0..nl {
+            let (kd, jd) = (self.dims[l], self.dims[l + 1]);
+            matmul_bias(&a, rows, kd, params[2 * l], jd, Some(params[2 * l + 1]), &mut z);
+            if l < nl - 1 {
+                for (ai, zi) in a[..rows * jd].iter_mut().zip(&z[..rows * jd]) {
+                    *ai = zi.sin();
+                }
+            }
+        }
+        let mut out = z[..rows * 3].to_vec();
+        if self.sigmoid_out {
+            for v in &mut out {
+                *v = jax_sigmoid(*v);
+            }
+        }
+        out
+    }
+
+    /// One fused Adam train step on masked MSE, mirroring the
+    /// `rapid_train` artifact signature: returns `(params', m', v', loss)`
+    /// with tensors in `[w0, b0, …]` order.
+    ///
+    /// `loss = Σ_r mask[r]·Σ_c (pred-target)² / (max(Σ mask, 1)·3)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        params: &[&[f32]],
+        m: &[&[f32]],
+        v: &[&[f32]],
+        step: f32,
+        coords: &[f32],
+        targets: &[f32],
+        mask: &[f32],
+        n: usize,
+        lr: f32,
+        workers: usize,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>, f32) {
+        let nl = self.layers();
+        assert_eq!(params.len(), 2 * nl, "param tensor count");
+        // Σ mask is a sum of exact 0.0/1.0 floats: order-independent.
+        let mask_sum: f32 = mask[..n].iter().sum();
+        let denom = mask_sum.max(1.0) * 3.0;
+
+        // Transposed weights for the dZ@Wᵀ backprop matmuls (layers ≥ 1).
+        let wt: Vec<Vec<f32>> = (1..nl)
+            .map(|l| {
+                let (kd, jd) = (self.dims[l], self.dims[l + 1]);
+                let w = params[2 * l];
+                let mut t = vec![0.0f32; kd * jd];
+                for k in 0..kd {
+                    for j in 0..jd {
+                        t[j * kd + k] = w[k * jd + j];
+                    }
+                }
+                t
+            })
+            .collect();
+
+        let nblocks = n.div_ceil(ROW_BLOCK).max(1);
+        let partials = run_blocks(nblocks, workers.min(default_cap(n)), |b| {
+            let r0 = b * ROW_BLOCK;
+            let rows = ROW_BLOCK.min(n - r0);
+            self.train_block(
+                params,
+                &wt,
+                &coords[r0 * 2..(r0 + rows) * 2],
+                &targets[r0 * 3..(r0 + rows) * 3],
+                &mask[r0..r0 + rows],
+                rows,
+                denom,
+            )
+        });
+
+        // Merge block partials in ascending block order (worker-invariant).
+        let mut dw: Vec<Vec<f32>> =
+            (0..nl).map(|l| vec![0.0f32; self.dims[l] * self.dims[l + 1]]).collect();
+        let mut db: Vec<Vec<f32>> = (0..nl).map(|l| vec![0.0f32; self.dims[l + 1]]).collect();
+        let mut se_sum = 0.0f32;
+        for blk in &partials {
+            for l in 0..nl {
+                for (a, b) in dw[l].iter_mut().zip(&blk.dw[l]) {
+                    *a += b;
+                }
+                for (a, b) in db[l].iter_mut().zip(&blk.db[l]) {
+                    *a += b;
+                }
+            }
+            se_sum += blk.se_sum;
+        }
+        let loss = se_sum / denom;
+
+        // Fused Adam over every tensor, grads in [w0, b0, …] order.
+        let b1t = 1.0 - ADAM_B1.powf(step);
+        let b2t = 1.0 - ADAM_B2.powf(step);
+        let mut new_p: Vec<Vec<f32>> = params.iter().map(|t| t.to_vec()).collect();
+        let mut new_m: Vec<Vec<f32>> = m.iter().map(|t| t.to_vec()).collect();
+        let mut new_v: Vec<Vec<f32>> = v.iter().map(|t| t.to_vec()).collect();
+        for l in 0..nl {
+            for (i, g) in [(2 * l, &dw[l]), (2 * l + 1, &db[l])] {
+                adam_update(&mut new_p[i], &mut new_m[i], &mut new_v[i], g, lr, b1t, b2t);
+            }
+        }
+        (new_p, new_m, new_v, loss)
+    }
+
+    /// Forward + backward over one row block; returns the block's gradient
+    /// partials and squared-error sum.
+    #[allow(clippy::too_many_arguments)]
+    fn train_block(
+        &self,
+        params: &[&[f32]],
+        wt: &[Vec<f32>],
+        coords: &[f32],
+        targets: &[f32],
+        mask: &[f32],
+        rows: usize,
+        denom: f32,
+    ) -> BlockGrads {
+        let nl = self.layers();
+        // Forward, keeping every activation (a) and pre-activation (z).
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl + 1);
+        let mut a0 = vec![0.0f32; rows * self.dims[0]];
+        posenc_into(coords, rows, 2, self.posenc, &mut a0);
+        acts.push(a0);
+        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let (kd, jd) = (self.dims[l], self.dims[l + 1]);
+            let mut z = vec![0.0f32; rows * jd];
+            matmul_bias(&acts[l], rows, kd, params[2 * l], jd, Some(params[2 * l + 1]), &mut z);
+            if l < nl - 1 {
+                acts.push(z.iter().map(|&x| x.sin()).collect());
+            }
+            zs.push(z);
+        }
+
+        // Loss pieces + head gradient.
+        let zl = &zs[nl - 1];
+        let mut se_sum = 0.0f32;
+        let mut dz = vec![0.0f32; rows * 3];
+        for r in 0..rows {
+            let mk = mask[r];
+            let mut se = 0.0f32;
+            for c in 0..3 {
+                let i = r * 3 + c;
+                let pred = if self.sigmoid_out { jax_sigmoid(zl[i]) } else { zl[i] };
+                let diff = pred - targets[i];
+                se += diff * diff;
+                let mut g = ((2.0 * diff) * mk) / denom;
+                if self.sigmoid_out {
+                    g *= pred * (1.0 - pred);
+                }
+                dz[i] = g;
+            }
+            se_sum += se * mk;
+        }
+
+        // Backward through the layers.
+        let mut dw: Vec<Vec<f32>> =
+            (0..nl).map(|l| vec![0.0f32; self.dims[l] * self.dims[l + 1]]).collect();
+        let mut db: Vec<Vec<f32>> = (0..nl).map(|l| vec![0.0f32; self.dims[l + 1]]).collect();
+        for l in (0..nl).rev() {
+            let (kd, jd) = (self.dims[l], self.dims[l + 1]);
+            accum_outer(&acts[l], rows, kd, &dz, jd, &mut dw[l], &mut db[l]);
+            if l > 0 {
+                let mut da = vec![0.0f32; rows * kd];
+                matmul_bias(&dz, rows, jd, &wt[l - 1], kd, None, &mut da);
+                // dz_prev = da ⊙ cos(z_{l-1})  (sine activation derivative).
+                let zprev = &zs[l - 1];
+                for (d, &z) in da.iter_mut().zip(&zprev[..rows * kd]) {
+                    *d *= z.cos();
+                }
+                dz = da;
+            }
+        }
+        BlockGrads { dw, db, se_sum }
+    }
+}
+
+/// Cap fan-out so tiny batches never pay thread overhead.
+fn default_cap(rows: usize) -> usize {
+    if rows < 2 * ROW_BLOCK {
+        1
+    } else {
+        usize::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn matmul_backends_match_scalar_bitwise() {
+        let mut rng = Pcg32::seeded(101);
+        // Random + edge shapes: tails, single row/col, empty.
+        for (rows, kd, jd) in
+            [(17, 26, 12), (1, 3, 3), (8, 26, 8), (5, 1, 1), (0, 4, 4), (33, 10, 28), (3, 24, 3)]
+        {
+            let x = randv(&mut rng, rows * kd);
+            let w = randv(&mut rng, kd * jd);
+            let b = randv(&mut rng, jd);
+            let mut want = vec![0.0f32; rows * jd];
+            matmul_bias_on(Backend::Scalar, &x, rows, kd, &w, jd, Some(&b), &mut want);
+            let mut want_nb = vec![0.0f32; rows * jd];
+            matmul_bias_on(Backend::Scalar, &x, rows, kd, &w, jd, None, &mut want_nb);
+            for &be in available_backends() {
+                let mut got = vec![0.0f32; rows * jd];
+                matmul_bias_on(be, &x, rows, kd, &w, jd, Some(&b), &mut got);
+                assert_eq!(got, want, "{} ({rows}x{kd}x{jd})", be.name());
+                let mut got = vec![0.0f32; rows * jd];
+                matmul_bias_on(be, &x, rows, kd, &w, jd, None, &mut got);
+                assert_eq!(got, want_nb, "{} no-bias ({rows}x{kd}x{jd})", be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn accum_outer_backends_match_scalar_bitwise() {
+        let mut rng = Pcg32::seeded(202);
+        for (rows, kd, jd) in [(19, 26, 12), (1, 2, 5), (7, 9, 3), (0, 3, 3), (40, 8, 24)] {
+            let x = randv(&mut rng, rows * kd);
+            let dz = randv(&mut rng, rows * jd);
+            let mut dw_want = randv(&mut rng, kd * jd); // nonzero start: += semantics
+            let mut db_want = randv(&mut rng, jd);
+            let dw0 = dw_want.clone();
+            let db0 = db_want.clone();
+            accum_outer_on(Backend::Scalar, &x, rows, kd, &dz, jd, &mut dw_want, &mut db_want);
+            for &be in available_backends() {
+                let mut dw = dw0.clone();
+                let mut db = db0.clone();
+                accum_outer_on(be, &x, rows, kd, &dz, jd, &mut dw, &mut db);
+                assert_eq!(dw, dw_want, "{} dw ({rows}x{kd}x{jd})", be.name());
+                assert_eq!(db, db_want, "{} db ({rows}x{kd}x{jd})", be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn adam_backends_match_scalar_bitwise() {
+        let mut rng = Pcg32::seeded(303);
+        for n in [1usize, 7, 8, 9, 64, 101] {
+            let g = randv(&mut rng, n);
+            let p0 = randv(&mut rng, n);
+            let m0 = randv(&mut rng, n).iter().map(|x| x.abs() * 0.1).collect::<Vec<_>>();
+            let v0 = randv(&mut rng, n).iter().map(|x| x.abs() * 0.1).collect::<Vec<_>>();
+            let (b1t, b2t) = (1.0 - ADAM_B1.powf(3.0), 1.0 - ADAM_B2.powf(3.0));
+            let (mut pw, mut mw, mut vw) = (p0.clone(), m0.clone(), v0.clone());
+            adam_update_on(Backend::Scalar, &mut pw, &mut mw, &mut vw, &g, INR_LR, b1t, b2t);
+            for &be in available_backends() {
+                let (mut p, mut m, mut v) = (p0.clone(), m0.clone(), v0.clone());
+                adam_update_on(be, &mut p, &mut m, &mut v, &g, INR_LR, b1t, b2t);
+                assert_eq!(p, pw, "{} p (n={n})", be.name());
+                assert_eq!(m, mw, "{} m (n={n})", be.name());
+                assert_eq!(v, vw, "{} v (n={n})", be.name());
+            }
+        }
+    }
+
+    fn tiny_arch() -> MlpArch {
+        MlpArch { name: "t".into(), layers: 3, hidden: 8, posenc: 2, sigmoid_out: true }
+    }
+
+    fn grid(n_side: usize) -> Vec<f32> {
+        let mut c = Vec::with_capacity(n_side * n_side * 2);
+        for y in 0..n_side {
+            for x in 0..n_side {
+                c.push((x as f32 + 0.5) / n_side as f32);
+                c.push((y as f32 + 0.5) / n_side as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn zero_weights_sigmoid_head_gives_half() {
+        let arch = tiny_arch();
+        let net = MlpNet::new(&arch);
+        let zeros: Vec<Vec<f32>> = arch
+            .param_shapes()
+            .iter()
+            .map(|(_, s)| vec![0.0f32; s.iter().product()])
+            .collect();
+        let refs: Vec<&[f32]> = zeros.iter().map(|t| t.as_slice()).collect();
+        let coords = grid(4);
+        let out = net.forward(&refs, &coords, 16, 1);
+        assert_eq!(out.len(), 48);
+        assert!(out.iter().all(|&v| (v - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn train_step_reduces_loss_and_is_worker_invariant() {
+        let arch = tiny_arch();
+        let net = MlpNet::new(&arch);
+        let shapes = arch.param_shapes();
+        let mut rng = Pcg32::seeded(5);
+        let ws = crate::training::siren_init(&shapes, &mut rng);
+        let mut p: Vec<Vec<f32>> = ws.tensors.iter().map(|t| t.data.clone()).collect();
+        let mut m: Vec<Vec<f32>> =
+            shapes.iter().map(|(_, s)| vec![0.0f32; s.iter().product()]).collect();
+        let mut v = m.clone();
+        let side = 24; // > ROW_BLOCK rows so threading engages
+        let n = side * side;
+        let coords = grid(side);
+        let targets: Vec<f32> =
+            (0..n * 3).map(|i| 0.5 + 0.3 * ((i as f32) * 0.01).sin()).collect();
+        let mask = vec![1.0f32; n];
+        let mut first = None;
+        let mut last = 0.0;
+        for step in 1..=60 {
+            let pr: Vec<&[f32]> = p.iter().map(|t| t.as_slice()).collect();
+            let mr: Vec<&[f32]> = m.iter().map(|t| t.as_slice()).collect();
+            let vr: Vec<&[f32]> = v.iter().map(|t| t.as_slice()).collect();
+            if step == 1 {
+                // Worker-count invariance: 1 vs 4 workers, identical bits.
+                let one = net.train_step(
+                    &pr, &mr, &vr, 1.0, &coords, &targets, &mask, n, INR_LR, 1,
+                );
+                let four = net.train_step(
+                    &pr, &mr, &vr, 1.0, &coords, &targets, &mask, n, INR_LR, 4,
+                );
+                assert_eq!(one.0, four.0);
+                assert_eq!(one.3, four.3);
+            }
+            let (np, nm, nv, loss) = net.train_step(
+                &pr, &mr, &vr, step as f32, &coords, &targets, &mask, n, INR_LR, 2,
+            );
+            p = np;
+            m = nm;
+            v = nv;
+            last = loss;
+            first.get_or_insert(loss);
+        }
+        let first = first.unwrap();
+        assert!(last < first * 0.5, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn masked_rows_do_not_contribute() {
+        // Padded rows (mask 0, zero coords) must not change grads vs. a
+        // tighter batch with the same real rows.
+        let arch = MlpArch { name: "t".into(), layers: 2, hidden: 6, posenc: 1, sigmoid_out: false };
+        let net = MlpNet::new(&arch);
+        let shapes = arch.param_shapes();
+        let mut rng = Pcg32::seeded(9);
+        let ws = crate::training::siren_init(&shapes, &mut rng);
+        let p: Vec<&[f32]> = ws.tensors.iter().map(|t| t.data.as_slice()).collect();
+        let zeros: Vec<Vec<f32>> =
+            shapes.iter().map(|(_, s)| vec![0.0f32; s.iter().product()]).collect();
+        let z: Vec<&[f32]> = zeros.iter().map(|t| t.as_slice()).collect();
+        let n_real = 9;
+        let coords = grid(3);
+        let targets: Vec<f32> = (0..n_real * 3).map(|i| (i as f32) * 0.01).collect();
+
+        let mask = vec![1.0f32; n_real];
+        let tight =
+            net.train_step(&p, &z, &z, 1.0, &coords, &targets, &mask, n_real, INR_LR, 1);
+
+        let n_pad = 16;
+        let mut coords_p = coords.clone();
+        coords_p.resize(n_pad * 2, 0.0);
+        let mut targets_p = targets.clone();
+        targets_p.resize(n_pad * 3, 0.0);
+        let mut mask_p = mask.clone();
+        mask_p.resize(n_pad, 0.0);
+        let padded =
+            net.train_step(&p, &z, &z, 1.0, &coords_p, &targets_p, &mask_p, n_pad, INR_LR, 1);
+        assert_eq!(tight.0, padded.0, "padded rows leaked into gradients");
+        assert_eq!(tight.3, padded.3, "padded rows leaked into the loss");
+    }
+
+    #[test]
+    fn posenc_layout_matches_reference() {
+        // ref.posenc: [x, y, sin(πx), sin(πy), cos(πx), cos(πy), sin(2πx), …]
+        let coords = [0.25f32, 0.75];
+        let mut out = vec![0.0f32; posenc_dim(2, 2)];
+        posenc_into(&coords, 1, 2, 2, &mut out);
+        let pi = std::f32::consts::PI;
+        let want = [
+            0.25,
+            0.75,
+            (pi * 0.25).sin(),
+            (pi * 0.75).sin(),
+            (pi * 0.25).cos(),
+            (pi * 0.75).cos(),
+            (2.0 * pi * 0.25).sin(),
+            (2.0 * pi * 0.75).sin(),
+            (2.0 * pi * 0.25).cos(),
+            (2.0 * pi * 0.75).cos(),
+        ];
+        assert_eq!(out, want);
+    }
+}

@@ -14,15 +14,18 @@
 //!
 //! The crate is the **Layer-3 rust coordinator** of a three-layer stack
 //! (see DESIGN.md): all numeric compute (INR encode/decode train steps,
-//! detection backbone) is AOT-compiled from JAX + Pallas to HLO and
-//! executed through the PJRT CPU client ([`runtime`]); Python never runs
+//! detection backbone) runs through [`runtime`] behind a backend switch —
+//! either AOT-compiled JAX/Pallas HLO executed by the PJRT CPU client, or
+//! the pure-Rust SIMD engine ([`inr::nn`] + `runtime::native`) that needs
+//! no artifacts at all (`--backend auto|native|pjrt`); Python never runs
 //! at request time.
 //!
 //! Module map:
 //! * [`data`] — synthetic UAV-video datasets (DAC-SDC/UAV123/OTB100 stand-ins)
 //! * [`codec`] — from-scratch baseline JPEG
-//! * [`inr`] — INR weight containers, 8/16-bit quantization, wire format
-//! * [`runtime`] — PJRT artifact registry + executor
+//! * [`inr`] — INR weight containers, 8/16-bit quantization, wire format,
+//!   and the native SIMD training kernels ([`inr::nn`])
+//! * [`runtime`] — artifact registry + executor (PJRT or native backend)
 //! * [`coordinator`] — fog node & edge devices (the paper's system);
 //!   `sim` runs the measured pipeline single-fog or sharded across F fog
 //!   cells (`sim --fogs F --topology sharded`)
@@ -35,8 +38,8 @@
 //!   per fog, and pluggable re-broadcast policies (unicast /
 //!   cell-multicast / multicast-tree / receiver-pull / auto)
 //! * [`costmodel`] — virtual-time prices for the fleet engine: a
-//!   `Calibrated` model measured against the live PJRT session, with an
-//!   `Analytical` fallback (shape-derived) when `artifacts/` are absent
+//!   `Calibrated` model measured against the live session (PJRT or
+//!   native), with a shape-derived `Analytical` model on request
 //! * [`commmodel`] — §4 analytical communication model
 //! * [`training`] — on-device detection fine-tuning driver
 //! * [`metrics`] — PSNR / entropy / mAP / stats

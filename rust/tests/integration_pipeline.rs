@@ -1,8 +1,7 @@
-//! Cross-module integration tests: the full fog→edge→train pipeline over
-//! the AOT artifacts, the wire format end to end, and pipeline/metric
-//! invariants that span multiple modules.
-
-use std::sync::Arc;
+//! Cross-module integration tests: the full fog→edge→train pipeline on
+//! the auto backend (PJRT over the AOT artifacts when present, the
+//! native SIMD engine otherwise), the wire format end to end, and
+//! pipeline/metric invariants that span multiple modules.
 
 use residual_inr::codec::jpeg;
 use residual_inr::config::ArchConfig;
